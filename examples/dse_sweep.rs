@@ -1,0 +1,51 @@
+//! DSE example: sweep replication factors and frequencies for one
+//! accelerator, check device fit, and print the area-throughput Pareto
+//! frontier — the §I workflow ("exploring a multitude of solutions that
+//! differ in the replication of accelerators, the clock frequencies of
+//! the frequency islands, and the tiles' placement").
+//!
+//!   cargo run --release --example dse_sweep [accel]
+
+use vespa::dse::{pareto_front, sweep_replication, SweepParams};
+use vespa::report::Table;
+use vespa::resources::XC7V2000T;
+
+fn main() -> vespa::Result<()> {
+    let accel = std::env::args().nth(1).unwrap_or_else(|| "gsm".into());
+    let mut p = SweepParams::quick(&accel);
+    p.accel_mhz = vec![25, 50];
+    p.placements = vec![true, false];
+    p.window = 8_000_000_000;
+    p.warmup = 1_000_000_000;
+
+    println!("sweeping {accel}: K in {:?}, f in {:?} MHz, A1/A2 placement ...", p.replications, p.accel_mhz);
+    let pts = sweep_replication(&p)?;
+
+    let costs: Vec<(f64, f64)> = pts
+        .iter()
+        .map(|pt| (pt.area.lut as f64, pt.throughput_mbs))
+        .collect();
+    let front = pareto_front(&costs);
+
+    let mut t = Table::new(
+        format!("DSE: {accel} area vs throughput"),
+        &["K", "MHz", "place", "LUT", "DSP", "% of 2000T", "MB/s", "pareto"],
+    );
+    for (i, pt) in pts.iter().enumerate() {
+        let pct = pt.area.percent_of(&XC7V2000T)[0];
+        t.row(&[
+            pt.replicas.to_string(),
+            pt.accel_mhz.to_string(),
+            if pt.near_mem { "A1" } else { "A2" }.into(),
+            pt.area.lut.to_string(),
+            pt.area.dsp.to_string(),
+            format!("{pct:.2}%"),
+            format!("{:.2}", pt.throughput_mbs),
+            if front.contains(&i) { "*" } else { "" }.into(),
+        ]);
+    }
+    println!("{}", t.render());
+    println!("{} points, {} on the Pareto frontier", pts.len(), front.len());
+    assert!(!front.is_empty());
+    Ok(())
+}

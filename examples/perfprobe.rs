@@ -1,0 +1,23 @@
+//! Profiling workload for the §Perf pass: the paper SoC fully saturated
+//! (11 TGs, NoC@100MHz) for 30 ms of simulated time. Use with:
+//!
+//!   cargo build --release --example perfprobe
+//!   perf record ./target/release/examples/perfprobe && perf report
+
+fn main() {
+    let cfg = vespa::config::presets::paper_soc(("dfadd", 1), ("dfadd", 1));
+    let mut soc =
+        vespa::sim::Soc::build(cfg, Box::new(vespa::runtime::RefCompute::new())).unwrap();
+    soc.host_set_tg_active(11);
+    let t0 = std::time::Instant::now();
+    soc.run_for(30_000_000_000);
+    let wall = t0.elapsed().as_secs_f64();
+    let router_cycles = soc.islands[0].cycles * 48;
+    println!(
+        "edges {} flits {} | {:.2} M edges/s, {:.2} M router-cycles/s",
+        soc.edges,
+        soc.fabric.total_flits(),
+        soc.edges as f64 / wall / 1e6,
+        router_cycles as f64 / wall / 1e6
+    );
+}

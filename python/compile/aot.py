@@ -1,0 +1,98 @@
+"""AOT bridge: lower every accelerator invocation to HLO *text*.
+
+HLO text (not ``XlaComputation.serialize()``) is the interchange format:
+jax >= 0.5 emits HloModuleProto with 64-bit instruction ids, which the
+``xla`` crate's bundled xla_extension 0.5.1 rejects (``proto.id() <=
+INT_MAX``); the text parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/gen_hlo.py.
+
+Outputs, per accelerator:
+  artifacts/<name>.hlo.txt  — the lowered module
+plus a single artifacts/manifest.txt describing each module's I/O
+geometry in a line format the Rust runtime parses without a JSON dep:
+
+  module <name> file=<name>.hlo.txt
+  input <name> <index> dtype=<f32|s32> shape=<d0xd1>
+  output <name> <index> dtype=<f32|s32> shape=<d0xd1>
+
+Usage: python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .model import INVOCATIONS
+
+_DTYPE_NAMES = {"float32": "f32", "int32": "s32"}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR -> XlaComputation -> HLO text (return_tuple=True).
+
+    ``print_large_constants=True`` is load-bearing: the default printer
+    elides arrays above a size threshold as ``{...}``, which the xla-crate
+    runtime's (older) HLO parser silently reads as zeros — observed as the
+    adpcm step table turning into 89 zeros.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def lower_invocation(name: str):
+    fn, specs = INVOCATIONS[name]
+    return jax.jit(fn).lower(*specs)
+
+
+def describe_io(name: str):
+    """Manifest lines for one module: declared inputs + traced outputs."""
+    fn, specs = INVOCATIONS[name]
+    out = jax.eval_shape(fn, *specs)
+    lines = []
+    for i, s in enumerate(specs):
+        dt = _DTYPE_NAMES[str(s.dtype)]
+        shape = "x".join(str(d) for d in s.shape)
+        lines.append(f"input {name} {i} dtype={dt} shape={shape}")
+    for i, s in enumerate(out):
+        dt = _DTYPE_NAMES[str(s.dtype)]
+        shape = "x".join(str(d) for d in s.shape)
+        lines.append(f"output {name} {i} dtype={dt} shape={shape}")
+    return lines
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out-dir", default="../artifacts")
+    parser.add_argument(
+        "--only", default=None, help="comma-separated subset of accelerators"
+    )
+    args = parser.parse_args()
+
+    names = sorted(INVOCATIONS)
+    if args.only:
+        names = [n for n in names if n in set(args.only.split(","))]
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = []
+    for name in names:
+        lowered = lower_invocation(name)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest.append(f"module {name} file={name}.hlo.txt")
+        manifest.extend(describe_io(name))
+        print(f"lowered {name}: {len(text)} chars -> {path}")
+
+    with open(os.path.join(args.out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    print(f"manifest: {len(manifest)} lines, {len(names)} modules")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+"""Layer-1 Pallas kernels for the five CHStone accelerators.
+
+Each module exposes a ``<name>_block`` function: the fixed-shape
+"accelerator invocation" that processes one DMA block, implemented as a
+Pallas kernel (``interpret=True`` — the CPU PJRT plugin cannot execute
+Mosaic custom-calls; see /opt/xla-example/README.md).
+
+Block shapes are 8x128-aligned so the same kernels would tile cleanly for
+VMEM on a real TPU. The CHStone accelerators are streaming math pipelines
+(no matmul hot-spot), so the kernels target the VPU: element-wise lanes of
+128, sublane-multiples of 8.
+"""
+
+from .adpcm import adpcm_block, ADPCM_BLOCK_SHAPE
+from .dfadd import dfadd_block, DF_BLOCK_SHAPE
+from .dfmul import dfmul_block
+from .dfsin import dfsin_block
+from .gsm import gsm_block, GSM_FRAME_SHAPE
+
+__all__ = [
+    "adpcm_block",
+    "dfadd_block",
+    "dfmul_block",
+    "dfsin_block",
+    "gsm_block",
+    "ADPCM_BLOCK_SHAPE",
+    "DF_BLOCK_SHAPE",
+    "GSM_FRAME_SHAPE",
+]

@@ -1,0 +1,32 @@
+"""CHStone ``dfadd`` — software-emulated IEEE-754 double addition.
+
+The HLS accelerator streams pairs of doubles and emits their sum. The
+Pallas stand-in performs the same element-wise addition over one DMA block.
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation): the CHStone kernel
+emulates *double* arithmetic in integer ops because the target fabric has
+no FPU; on TPU the natural analogue is native f32 VPU arithmetic, so the
+block dtype is float32 and numerics are validated against a float64 oracle
+cast to f32.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# One accelerator invocation = one (8, 128) f32 block per operand: 4 KiB
+# in each of two input streams, 4 KiB out. 8x128 is the base VPU tile.
+DF_BLOCK_SHAPE = (8, 128)
+
+
+def _dfadd_kernel(a_ref, b_ref, o_ref):
+    o_ref[...] = a_ref[...] + b_ref[...]
+
+
+def dfadd_block(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Element-wise double-add over one DMA block (f32, (8, 128))."""
+    return pl.pallas_call(
+        _dfadd_kernel,
+        out_shape=jax.ShapeDtypeStruct(DF_BLOCK_SHAPE, jnp.float32),
+        interpret=True,
+    )(a, b)

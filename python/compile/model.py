@@ -1,0 +1,108 @@
+"""Layer-2 JAX compute graphs: one "accelerator invocation" per CHStone
+accelerator, calling the Layer-1 Pallas kernels.
+
+Each ``<name>_invocation`` is the function AOT-lowered to an HLO artifact
+(see aot.py) and executed from the Rust simulator every time the modelled
+accelerator finishes a DMA input block. Shapes are static — one artifact
+per accelerator variant, as on the FPGA where each HLS accelerator has a
+fixed streaming interface.
+"""
+
+from typing import Callable, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import (
+    ADPCM_BLOCK_SHAPE,
+    DF_BLOCK_SHAPE,
+    GSM_FRAME_SHAPE,
+    adpcm_block,
+    dfadd_block,
+    dfmul_block,
+    dfsin_block,
+    gsm_block,
+)
+
+GSM_ORDER = 8
+
+
+def dfadd_invocation(a: jax.Array, b: jax.Array) -> Tuple[jax.Array]:
+    """dfadd: two f32 (8,128) input streams -> one sum stream."""
+    return (dfadd_block(a, b),)
+
+
+def dfmul_invocation(a: jax.Array, b: jax.Array) -> Tuple[jax.Array]:
+    """dfmul: two f32 (8,128) input streams -> one product stream."""
+    return (dfmul_block(a, b),)
+
+
+def dfsin_invocation(x: jax.Array) -> Tuple[jax.Array]:
+    """dfsin: one f32 (8,128) input stream -> sin(x)."""
+    return (dfsin_block(x),)
+
+
+def adpcm_invocation(x: jax.Array) -> Tuple[jax.Array]:
+    """adpcm: one int32 (64,128) PCM block -> 4-bit codes (one per i32)."""
+    return (adpcm_block(x),)
+
+
+def _gsm_reflection(acf: jax.Array) -> jax.Array:
+    """Levinson-Durbin on the kernel's autocorrelation lags.
+
+    The short (order-8) sequential recursion is control-dominated, so it
+    stays in the L2 graph rather than the Pallas kernel — mirroring the
+    HLS design where the MAC array is unrolled hardware and the recursion
+    is a small FSM.
+    """
+    r = acf[:9, :]
+    silent = r[0, :] <= 0.0
+    err = jnp.where(silent, 1.0, r[0, :])
+    a = jnp.zeros((GSM_ORDER + 1, acf.shape[1]), dtype=jnp.float32)
+    a = a.at[0, :].set(1.0)
+    refl_rows: List[jax.Array] = []
+    for i in range(1, GSM_ORDER + 1):
+        acc = r[i, :]
+        for j in range(1, i):
+            acc = acc + a[j, :] * r[i - j, :]
+        k = jnp.where(silent | (err <= 0.0), 0.0, -acc / jnp.where(err > 0, err, 1.0))
+        k = jnp.clip(k, -1.0, 1.0)
+        refl_rows.append(k)
+        a_new = a
+        for j in range(1, i):
+            a_new = a_new.at[j, :].set(a[j, :] + k * a[i - j, :])
+        a_new = a_new.at[i, :].set(k)
+        a = a_new
+        err = err * (1.0 - k * k)
+    return jnp.stack(refl_rows, axis=0)
+
+
+def gsm_invocation(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """gsm LPC: one (160,128) frame block -> (acf (16,128), refl (8,128))."""
+    acf = gsm_block(x)
+    refl = _gsm_reflection(acf)
+    return acf, refl
+
+
+# ---------------------------------------------------------------------------
+# Artifact registry: name -> (fn, example input specs).
+# The Rust runtime reads the same geometry from artifacts/manifest.txt.
+# ---------------------------------------------------------------------------
+
+def _spec(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+INVOCATIONS: Dict[str, Tuple[Callable, List[jax.ShapeDtypeStruct]]] = {
+    "dfadd": (
+        dfadd_invocation,
+        [_spec(DF_BLOCK_SHAPE, jnp.float32), _spec(DF_BLOCK_SHAPE, jnp.float32)],
+    ),
+    "dfmul": (
+        dfmul_invocation,
+        [_spec(DF_BLOCK_SHAPE, jnp.float32), _spec(DF_BLOCK_SHAPE, jnp.float32)],
+    ),
+    "dfsin": (dfsin_invocation, [_spec(DF_BLOCK_SHAPE, jnp.float32)]),
+    "adpcm": (adpcm_invocation, [_spec(ADPCM_BLOCK_SHAPE, jnp.int32)]),
+    "gsm": (gsm_invocation, [_spec(GSM_FRAME_SHAPE, jnp.float32)]),
+}

@@ -1,0 +1,71 @@
+"""AOT pipeline tests: lowering, HLO-text properties, manifest format."""
+
+import pathlib
+
+import pytest
+
+from compile import aot, model
+
+
+class TestLowering:
+    @pytest.mark.parametrize("name", sorted(model.INVOCATIONS))
+    def test_lowers_to_hlo_text(self, name):
+        text = aot.to_hlo_text(aot.lower_invocation(name))
+        assert "ENTRY" in text
+        assert "HloModule" in text
+
+    def test_adpcm_hlo_keeps_large_constants(self):
+        """Regression: the default printer elides the 89-entry step table
+        to `{...}`, which the xla-crate's older HLO parser silently reads
+        as zeros (every ADPCM code came out 7/15)."""
+        text = aot.to_hlo_text(aot.lower_invocation("adpcm"))
+        assert "7, 8, 9, 10, 11" in text, "step table must be printed in full"
+        assert "-1, -1, -1, -1, 2, 4, 6, 8" in text, "index table too"
+
+    def test_hlo_is_tupled(self):
+        # aot lowers with return_tuple=True; the rust loader untuples.
+        text = aot.to_hlo_text(aot.lower_invocation("dfadd"))
+        assert "tuple(" in text
+
+
+class TestManifest:
+    def test_describe_io_format(self):
+        lines = aot.describe_io("gsm")
+        assert lines[0] == "input gsm 0 dtype=f32 shape=160x128"
+        assert "output gsm 0 dtype=f32 shape=16x128" in lines
+        assert "output gsm 1 dtype=f32 shape=8x128" in lines
+
+    def test_describe_io_adpcm_int(self):
+        lines = aot.describe_io("adpcm")
+        assert lines[0] == "input adpcm 0 dtype=s32 shape=64x128"
+
+    @pytest.mark.parametrize("name", sorted(model.INVOCATIONS))
+    def test_io_lines_cover_all_streams(self, name):
+        fn, specs = model.INVOCATIONS[name]
+        lines = aot.describe_io(name)
+        inputs = [l for l in lines if l.startswith("input")]
+        assert len(inputs) == len(specs)
+
+
+class TestArtifactsOnDisk:
+    """Validate the checked-out artifacts directory when present."""
+
+    @property
+    def art_dir(self):
+        return pathlib.Path(__file__).resolve().parents[2] / "artifacts"
+
+    def test_manifest_matches_models(self):
+        man = self.art_dir / "manifest.txt"
+        if not man.exists():
+            pytest.skip("run `make artifacts` first")
+        text = man.read_text()
+        for name in model.INVOCATIONS:
+            assert f"module {name} file={name}.hlo.txt" in text
+            assert (self.art_dir / f"{name}.hlo.txt").exists()
+
+    def test_artifacts_contain_full_constants(self):
+        f = self.art_dir / "adpcm.hlo.txt"
+        if not f.exists():
+            pytest.skip("run `make artifacts` first")
+        text = f.read_text()
+        assert "{...}" not in text, "elided constants would break the rust runtime"

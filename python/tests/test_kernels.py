@@ -1,0 +1,240 @@
+"""Kernel-vs-oracle correctness: the CORE numerics signal.
+
+Every Pallas kernel is checked against its independent ref.py oracle on
+fixed seeds, edge values, and hypothesis-generated inputs.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    ADPCM_BLOCK_SHAPE,
+    DF_BLOCK_SHAPE,
+    GSM_FRAME_SHAPE,
+    adpcm_block,
+    dfadd_block,
+    dfmul_block,
+    dfsin_block,
+    gsm_block,
+)
+from compile.kernels import ref
+
+RNG = np.random.default_rng(0xC0FFEE)
+
+
+def _rand_f32(shape, lo=-1e3, hi=1e3, rng=RNG):
+    return rng.uniform(lo, hi, size=shape).astype(np.float32)
+
+
+# ---------------------------------------------------------------- dfadd ---
+
+
+class TestDfadd:
+    def test_matches_oracle(self):
+        a = _rand_f32(DF_BLOCK_SHAPE)
+        b = _rand_f32(DF_BLOCK_SHAPE)
+        np.testing.assert_allclose(
+            np.asarray(dfadd_block(a, b)), ref.dfadd_ref(a, b), rtol=1e-6
+        )
+
+    def test_zeros(self):
+        z = np.zeros(DF_BLOCK_SHAPE, np.float32)
+        np.testing.assert_array_equal(np.asarray(dfadd_block(z, z)), z)
+
+    def test_negatives_cancel(self):
+        a = _rand_f32(DF_BLOCK_SHAPE)
+        out = np.asarray(dfadd_block(a, -a))
+        np.testing.assert_allclose(out, np.zeros(DF_BLOCK_SHAPE), atol=1e-6)
+
+    def test_inf_propagates(self):
+        a = np.full(DF_BLOCK_SHAPE, np.inf, np.float32)
+        b = np.ones(DF_BLOCK_SHAPE, np.float32)
+        assert np.all(np.isinf(np.asarray(dfadd_block(a, b))))
+
+    @settings(max_examples=20, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1), scale=st.sampled_from([1e-3, 1.0, 1e6]))
+    def test_hypothesis_sweep(self, seed, scale):
+        rng = np.random.default_rng(seed)
+        a = _rand_f32(DF_BLOCK_SHAPE, -scale, scale, rng)
+        b = _rand_f32(DF_BLOCK_SHAPE, -scale, scale, rng)
+        np.testing.assert_allclose(
+            np.asarray(dfadd_block(a, b)), ref.dfadd_ref(a, b), rtol=1e-5, atol=1e-6 * scale
+        )
+
+
+# ---------------------------------------------------------------- dfmul ---
+
+
+class TestDfmul:
+    def test_matches_oracle(self):
+        a = _rand_f32(DF_BLOCK_SHAPE)
+        b = _rand_f32(DF_BLOCK_SHAPE)
+        np.testing.assert_allclose(
+            np.asarray(dfmul_block(a, b)), ref.dfmul_ref(a, b), rtol=1e-6
+        )
+
+    def test_identity(self):
+        a = _rand_f32(DF_BLOCK_SHAPE)
+        one = np.ones(DF_BLOCK_SHAPE, np.float32)
+        np.testing.assert_allclose(np.asarray(dfmul_block(a, one)), a, rtol=1e-7)
+
+    def test_zero_annihilates(self):
+        a = _rand_f32(DF_BLOCK_SHAPE)
+        z = np.zeros(DF_BLOCK_SHAPE, np.float32)
+        np.testing.assert_array_equal(
+            np.asarray(dfmul_block(a, z)), np.zeros(DF_BLOCK_SHAPE, np.float32)
+        )
+
+    def test_sign_rules(self):
+        a = np.full(DF_BLOCK_SHAPE, -2.0, np.float32)
+        b = np.full(DF_BLOCK_SHAPE, 3.0, np.float32)
+        np.testing.assert_allclose(
+            np.asarray(dfmul_block(a, b)), np.full(DF_BLOCK_SHAPE, -6.0), rtol=0
+        )
+
+    @settings(max_examples=20, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1))
+    def test_hypothesis_sweep(self, seed):
+        rng = np.random.default_rng(seed)
+        a = _rand_f32(DF_BLOCK_SHAPE, rng=rng)
+        b = _rand_f32(DF_BLOCK_SHAPE, rng=rng)
+        np.testing.assert_allclose(
+            np.asarray(dfmul_block(a, b)), ref.dfmul_ref(a, b), rtol=1e-5
+        )
+
+
+# ---------------------------------------------------------------- dfsin ---
+
+
+class TestDfsin:
+    def test_matches_oracle_primary_range(self):
+        x = _rand_f32(DF_BLOCK_SHAPE, -np.pi, np.pi)
+        np.testing.assert_allclose(
+            np.asarray(dfsin_block(x)), ref.dfsin_ref(x), rtol=1e-4, atol=1e-6
+        )
+
+    def test_matches_oracle_wide_range(self):
+        # Range reduction over several periods.
+        x = _rand_f32(DF_BLOCK_SHAPE, -50.0, 50.0)
+        np.testing.assert_allclose(
+            np.asarray(dfsin_block(x)), ref.dfsin_ref(x), rtol=1e-3, atol=1e-5
+        )
+
+    def test_zeros(self):
+        z = np.zeros(DF_BLOCK_SHAPE, np.float32)
+        np.testing.assert_allclose(np.asarray(dfsin_block(z)), z, atol=1e-7)
+
+    def test_odd_symmetry(self):
+        x = _rand_f32(DF_BLOCK_SHAPE, -10.0, 10.0)
+        np.testing.assert_allclose(
+            np.asarray(dfsin_block(x)), -np.asarray(dfsin_block(-x)), atol=1e-6
+        )
+
+    def test_special_angles(self):
+        x = np.zeros(DF_BLOCK_SHAPE, np.float32)
+        x[0, 0] = np.pi / 2
+        x[0, 1] = -np.pi / 2
+        x[0, 2] = np.pi
+        out = np.asarray(dfsin_block(x))
+        assert abs(out[0, 0] - 1.0) < 1e-6
+        assert abs(out[0, 1] + 1.0) < 1e-6
+        assert abs(out[0, 2]) < 1e-5
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        seed=st.integers(0, 2**31 - 1),
+        span=st.sampled_from([0.1, 3.14, 20.0]),
+    )
+    def test_hypothesis_sweep(self, seed, span):
+        rng = np.random.default_rng(seed)
+        x = _rand_f32(DF_BLOCK_SHAPE, -span, span, rng)
+        np.testing.assert_allclose(
+            np.asarray(dfsin_block(x)), ref.dfsin_ref(x), rtol=1e-3, atol=1e-5
+        )
+
+
+# ---------------------------------------------------------------- adpcm ---
+
+
+class TestAdpcm:
+    def test_matches_oracle(self):
+        x = RNG.integers(-32768, 32768, size=ADPCM_BLOCK_SHAPE).astype(np.int32)
+        np.testing.assert_array_equal(np.asarray(adpcm_block(x)), ref.adpcm_ref(x))
+
+    def test_silence_encodes_zero(self):
+        z = np.zeros(ADPCM_BLOCK_SHAPE, np.int32)
+        np.testing.assert_array_equal(np.asarray(adpcm_block(z)), ref.adpcm_ref(z))
+
+    def test_codes_are_4bit(self):
+        x = RNG.integers(-32768, 32768, size=ADPCM_BLOCK_SHAPE).astype(np.int32)
+        out = np.asarray(adpcm_block(x))
+        assert out.min() >= 0 and out.max() <= 15
+
+    def test_full_scale_step(self):
+        x = np.zeros(ADPCM_BLOCK_SHAPE, np.int32)
+        x[0, :] = 32767
+        x[1, :] = -32768
+        np.testing.assert_array_equal(np.asarray(adpcm_block(x)), ref.adpcm_ref(x))
+
+    def test_ramp(self):
+        t = np.arange(ADPCM_BLOCK_SHAPE[0], dtype=np.int32)[:, None]
+        x = np.broadcast_to(t * 257 - 8000, ADPCM_BLOCK_SHAPE).astype(np.int32).copy()
+        np.testing.assert_array_equal(np.asarray(adpcm_block(x)), ref.adpcm_ref(x))
+
+    def test_sine_wave_input(self):
+        t = np.arange(ADPCM_BLOCK_SHAPE[0])[:, None]
+        c = np.arange(ADPCM_BLOCK_SHAPE[1])[None, :]
+        x = (10000 * np.sin(0.1 * t + 0.05 * c)).astype(np.int32)
+        np.testing.assert_array_equal(np.asarray(adpcm_block(x)), ref.adpcm_ref(x))
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1), amp=st.sampled_from([5, 500, 32767]))
+    def test_hypothesis_sweep(self, seed, amp):
+        rng = np.random.default_rng(seed)
+        x = rng.integers(-amp - 1, amp + 1, size=ADPCM_BLOCK_SHAPE).astype(np.int32)
+        np.testing.assert_array_equal(np.asarray(adpcm_block(x)), ref.adpcm_ref(x))
+
+
+# ------------------------------------------------------------------ gsm ---
+
+
+class TestGsmAcf:
+    def test_matches_oracle(self):
+        x = _rand_f32(GSM_FRAME_SHAPE, -1.0, 1.0)
+        np.testing.assert_allclose(
+            np.asarray(gsm_block(x)), ref.gsm_acf_ref(x), rtol=1e-4, atol=1e-4
+        )
+
+    def test_lag0_is_energy(self):
+        x = _rand_f32(GSM_FRAME_SHAPE, -1.0, 1.0)
+        out = np.asarray(gsm_block(x))
+        np.testing.assert_allclose(
+            out[0, :], np.sum(x.astype(np.float64) ** 2, axis=0), rtol=1e-4
+        )
+
+    def test_padding_rows_zero(self):
+        x = _rand_f32(GSM_FRAME_SHAPE, -1.0, 1.0)
+        out = np.asarray(gsm_block(x))
+        np.testing.assert_array_equal(out[9:, :], np.zeros_like(out[9:, :]))
+
+    def test_constant_signal(self):
+        x = np.ones(GSM_FRAME_SHAPE, np.float32)
+        out = np.asarray(gsm_block(x))
+        n = GSM_FRAME_SHAPE[0]
+        for k in range(9):
+            np.testing.assert_allclose(out[k, :], float(n - k), rtol=1e-6)
+
+    def test_acf_peak_at_lag0(self):
+        x = _rand_f32(GSM_FRAME_SHAPE, -1.0, 1.0)
+        out = np.asarray(gsm_block(x))
+        assert np.all(out[0, :] >= np.abs(out[1:9, :]).max(axis=0) - 1e-3)
+
+    @settings(max_examples=15, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1))
+    def test_hypothesis_sweep(self, seed):
+        rng = np.random.default_rng(seed)
+        x = _rand_f32(GSM_FRAME_SHAPE, -4.0, 4.0, rng)
+        np.testing.assert_allclose(
+            np.asarray(gsm_block(x)), ref.gsm_acf_ref(x), rtol=1e-3, atol=1e-3
+        )

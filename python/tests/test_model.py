@@ -1,0 +1,89 @@
+"""Layer-2 model shape/semantics tests + Levinson-Durbin vs oracle."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import GSM_FRAME_SHAPE, ref
+
+
+class TestInvocationRegistry:
+    def test_all_five_accelerators_present(self):
+        assert sorted(model.INVOCATIONS) == [
+            "adpcm",
+            "dfadd",
+            "dfmul",
+            "dfsin",
+            "gsm",
+        ]
+
+    @pytest.mark.parametrize("name", sorted(model.INVOCATIONS))
+    def test_shapes_are_8x128_aligned(self, name):
+        _, specs = model.INVOCATIONS[name]
+        for s in specs:
+            assert s.shape[0] % 8 == 0, f"{name} sublane {s.shape}"
+            assert s.shape[1] == 128, f"{name} lane {s.shape}"
+
+    @pytest.mark.parametrize("name", sorted(model.INVOCATIONS))
+    def test_invocations_run_and_match_declared_output(self, name):
+        import jax
+
+        fn, specs = model.INVOCATIONS[name]
+        rng = np.random.default_rng(7)
+        args = []
+        for s in specs:
+            if str(s.dtype) == "int32":
+                args.append(rng.integers(-32768, 32768, s.shape).astype(np.int32))
+            else:
+                args.append(rng.uniform(-1, 1, s.shape).astype(np.float32))
+        out = fn(*args)
+        declared = jax.eval_shape(fn, *specs)
+        assert len(out) == len(declared)
+        for got, d in zip(out, declared):
+            assert got.shape == d.shape
+            assert got.dtype == d.dtype
+
+
+class TestGsmReflection:
+    def _frame(self, seed=3, scale=1.0):
+        rng = np.random.default_rng(seed)
+        return (scale * rng.uniform(-1, 1, GSM_FRAME_SHAPE)).astype(np.float32)
+
+    def test_matches_levinson_oracle(self):
+        x = self._frame()
+        acf, refl = model.gsm_invocation(x)
+        want = ref.gsm_reflection_ref(np.asarray(acf))
+        np.testing.assert_allclose(np.asarray(refl), want, rtol=1e-3, atol=1e-4)
+
+    def test_reflection_coeffs_stable(self):
+        x = self._frame(seed=11)
+        _, refl = model.gsm_invocation(x)
+        assert np.all(np.abs(np.asarray(refl)) <= 1.0 + 1e-6)
+
+    def test_silent_frame_zero_coeffs(self):
+        z = np.zeros(GSM_FRAME_SHAPE, np.float32)
+        _, refl = model.gsm_invocation(z)
+        np.testing.assert_array_equal(np.asarray(refl), np.zeros((8, 128), np.float32))
+
+    def test_strong_ar1_signal_first_coeff(self):
+        # x[t] = rho * x[t-1] + eps  ->  k1 ~ -rho for small eps.
+        rng = np.random.default_rng(5)
+        rho = 0.9
+        n, c = GSM_FRAME_SHAPE
+        x = np.zeros((n, c), np.float64)
+        eps = rng.normal(0, 0.05, (n, c))
+        for t in range(1, n):
+            x[t] = rho * x[t - 1] + eps[t]
+        _, refl = model.gsm_invocation(x.astype(np.float32))
+        k1 = np.asarray(refl)[0, :]
+        assert np.mean(np.abs(k1 + rho)) < 0.1
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1))
+    def test_hypothesis_sweep(self, seed):
+        rng = np.random.default_rng(seed)
+        x = rng.uniform(-2, 2, GSM_FRAME_SHAPE).astype(np.float32)
+        acf, refl = model.gsm_invocation(x)
+        want = ref.gsm_reflection_ref(np.asarray(acf))
+        np.testing.assert_allclose(np.asarray(refl), want, rtol=5e-3, atol=5e-4)

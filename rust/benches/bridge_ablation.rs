@@ -1,0 +1,68 @@
+//! Ablation: MRA scaling efficiency vs. the AXI-bridge/DMA serialization
+//! cost (the design choice DESIGN.md calls out).
+//!
+//! Sweeps the per-burst grant-switch overhead and reports the 4x
+//! replication efficiency of the memory-bound dfmul: at zero cost
+//! replication is ~linear; at the calibrated cost it lands on the
+//! paper's ~3.0x; beyond it the shared path dominates.
+
+use vespa::bench_harness::{bench_args, Bench};
+use vespa::config::presets::{paper_soc, A1_POS};
+use vespa::experiments::run_until_invocations;
+use vespa::report::Table;
+use vespa::runtime::RefCompute;
+use vespa::sim::{stage_inputs_for, Soc, ThroughputProbe};
+
+fn measure(accel: &str, k: usize, switch_cycles: u64, inv: u64) -> f64 {
+    let mut cfg = paper_soc((accel, k), ("dfadd", 1));
+    cfg.bridge.switch_cycles = switch_cycles;
+    let mut soc = Soc::build(cfg, Box::new(RefCompute::new())).unwrap();
+    let tile = soc.cfg.node_of(A1_POS.0, A1_POS.1);
+    stage_inputs_for(&mut soc, tile, 1);
+    soc.mra_mut(tile).functional_every_invocation = false;
+    run_until_invocations(&mut soc, tile, k as u64, 400_000_000_000);
+    let probe = ThroughputProbe::begin(&soc, tile);
+    run_until_invocations(&mut soc, tile, inv, 2_000_000_000_000);
+    probe.mbs(&soc)
+}
+
+fn main() {
+    let (quick, _) = bench_args();
+    let inv = if quick { 4 } else { 12 };
+    let costs: &[u64] = if quick { &[0, 60, 120] } else { &[0, 20, 40, 60, 90, 120] };
+
+    let bench = Bench::new(0, 1);
+    let mut rows = Vec::new();
+    let r = bench.run("bridge_ablation/dfmul-sweep", |_| {
+        rows.clear();
+        for &c in costs {
+            let t1 = measure("dfmul", 1, c, inv);
+            let t4 = measure("dfmul", 4, c, inv * 4);
+            rows.push((c, t1, t4, t4 / t1));
+        }
+    });
+
+    let mut t = Table::new(
+        "AXI bridge ablation — dfmul 4x efficiency vs DMA serialization",
+        &["switch cycles", "1x MB/s", "4x MB/s", "4x scaling"],
+    );
+    for &(c, t1, t4, eff) in &rows {
+        t.row(&[
+            c.to_string(),
+            format!("{t1:.2}"),
+            format!("{t4:.2}"),
+            format!("{eff:.2}x"),
+        ]);
+    }
+    println!("{}", t.render());
+    println!("{}", r.report());
+
+    // Shape: scaling decreases monotonically (within noise) with cost,
+    // near-linear at zero.
+    assert!(rows.first().unwrap().3 > 3.6, "zero-cost ~linear");
+    assert!(
+        rows.last().unwrap().3 < rows.first().unwrap().3 - 0.4,
+        "serialization cost must bite at 4x"
+    );
+    println!("bridge_ablation bench OK");
+}

@@ -1,0 +1,20 @@
+//! Bench: regenerate Fig. 2 (the SoC floorplan) and time the
+//! floorplanner + resource model.
+
+use vespa::bench_harness::Bench;
+use vespa::experiments::fig2;
+use vespa::resources::XC7V2000T;
+
+fn main() {
+    let bench = Bench::new(3, 20);
+    let r = bench.run("fig2/floorplan", |_| fig2::run().expect("fig2"));
+    let (rendered, fp) = fig2::run().unwrap();
+    println!("{rendered}");
+    println!("{}", r.report());
+
+    assert!(fp.fits, "the paper instance must fit the Virtex-7 2000T");
+    let p = fp.total.percent_of(&XC7V2000T);
+    // The full 16-tile SoC uses a modest fraction of the 2000T.
+    assert!(p[0] < 40.0, "LUT {:.1}%", p[0]);
+    println!("fig2 bench OK");
+}

@@ -1,0 +1,65 @@
+//! Bench: regenerate Fig. 3 — throughput of 4x adpcm (compute-bound) and
+//! 4x dfmul (memory-bound) in A2 vs. active TG cores, NoC at 10 MHz.
+//!
+//!   cargo bench --bench fig3            full 12-point sweeps
+//!   cargo bench --bench fig3 -- --quick 4 points per curve
+
+use vespa::bench_harness::{bench_args, Bench};
+use vespa::experiments::fig3;
+use vespa::report::Table;
+
+fn main() {
+    let (quick, _) = bench_args();
+    // adpcm 4x completes one invocation per ~5.9 ms in steady state: its
+    // window must stay long even in --quick or the measurement quantizes
+    // to a handful of invocations.
+    let (warm, win, adpcm_warm, adpcm_win) = if quick {
+        (2_000_000_000u64, 10_000_000_000u64, 40_000_000_000u64, 60_000_000_000u64)
+    } else {
+        (2_000_000_000, 30_000_000_000, 40_000_000_000, 60_000_000_000)
+    };
+    let tg_points: Vec<usize> = if quick {
+        vec![0, 4, 7, 11]
+    } else {
+        (0..=11).collect()
+    };
+
+    let bench = Bench::new(0, 1);
+    let mut rows = Vec::new();
+    let r = bench.run("fig3/sweep", |_| {
+        rows.clear();
+        for &tg in &tg_points {
+            let a = fig3::measure_point("adpcm", 4, tg, adpcm_warm, adpcm_win).unwrap();
+            let d = fig3::measure_point("dfmul", 4, tg, warm, win).unwrap();
+            rows.push((tg, a.thr_mbs, d.thr_mbs));
+        }
+    });
+
+    let mut t = Table::new(
+        "Fig. 3 — A2 throughput vs active TGs (NoC@10MHz)",
+        &["TGs", "adpcm 4x MB/s", "dfmul 4x MB/s"],
+    );
+    for &(tg, a, d) in &rows {
+        t.row(&[tg.to_string(), format!("{a:.2}"), format!("{d:.2}")]);
+    }
+    println!("{}", t.render());
+    println!("{}", r.report());
+
+    // Shape assertions.
+    let first = rows.first().unwrap();
+    let last = rows.last().unwrap();
+    assert!(
+        last.2 < first.2 * 0.5,
+        "dfmul must collapse under TG pressure: {:.2} -> {:.2}",
+        first.2,
+        last.2
+    );
+    let mid = rows.iter().find(|r| r.0 == 4).unwrap();
+    assert!(
+        mid.1 > first.1 * 0.75,
+        "adpcm must hold through moderate TG pressure: {:.2} -> {:.2}",
+        first.1,
+        mid.1
+    );
+    println!("fig3 bench OK");
+}

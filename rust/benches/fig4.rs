@@ -1,0 +1,30 @@
+//! Bench: regenerate Fig. 4 — memory incoming traffic while stepping
+//! island frequencies at run time.
+
+use vespa::bench_harness::{bench_args, Bench};
+use vespa::experiments::fig4;
+use vespa::report::plot;
+
+fn main() {
+    let (quick, _) = bench_args();
+    let phase = if quick { 10_000_000_000 } else { 30_000_000_000 };
+
+    let bench = Bench::new(0, 1);
+    let mut result = None;
+    let r = bench.run("fig4/schedule-run", |_| {
+        result = Some(fig4::run(phase, 1_000_000_000).expect("fig4"));
+    });
+    let res = result.unwrap();
+    println!("{}", fig4::render_table(&res).render());
+    println!("{}", plot(&[&res.pkts_rate], 70, 14));
+    println!("{}", r.report());
+
+    // Shape: accel steps negligible, TG/NoC steps dominant.
+    let accel_delta = (res.phase_mpkts[2] - res.phase_mpkts[0]).abs();
+    let tg_delta = res.phase_mpkts[4] - res.phase_mpkts[2];
+    assert!(
+        tg_delta > 3.0 * accel_delta.max(1e-3),
+        "TG/NoC must dominate: accel delta {accel_delta:.3}, tg delta {tg_delta:.3}"
+    );
+    println!("fig4 bench OK");
+}

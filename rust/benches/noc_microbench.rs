@@ -1,0 +1,52 @@
+//! Microbench: raw simulator performance on the NoC hot path —
+//! router-cycles per second under TG saturation (the §Perf L3 metric).
+
+use vespa::bench_harness::{bench_args, Bench};
+use vespa::config::presets::paper_soc;
+use vespa::runtime::RefCompute;
+use vespa::sim::Soc;
+
+fn main() {
+    let (quick, _) = bench_args();
+    let sim_ms = if quick { 5 } else { 20 };
+
+    let bench = Bench::new(1, if quick { 3 } else { 5 });
+
+    // Saturated: all TGs on, NoC at 100 MHz.
+    let r = bench.run("noc/saturated-11tg", |_| {
+        let cfg = paper_soc(("dfadd", 1), ("dfadd", 1));
+        let mut soc = Soc::build(cfg, Box::new(RefCompute::new())).unwrap();
+        soc.host_set_tg_active(11);
+        soc.run_for(sim_ms * 1_000_000_000);
+        (soc.edges, soc.fabric.total_flits())
+    });
+    println!("{}", r.report());
+
+    // Compute the engine metrics from one instrumented run.
+    let cfg = paper_soc(("dfadd", 1), ("dfadd", 1));
+    let mut soc = Soc::build(cfg, Box::new(RefCompute::new())).unwrap();
+    soc.host_set_tg_active(11);
+    let t0 = std::time::Instant::now();
+    soc.run_for(sim_ms * 1_000_000_000);
+    let wall = t0.elapsed().as_secs_f64();
+    // Router-cycles: NoC island cycles x routers (48 = 16 nodes x 3 planes).
+    let router_cycles = soc.islands[0].cycles * 48;
+    println!(
+        "engine: {:.2} M edges/s, {:.2} M router-cycles/s, {:.2} M flits/s (sim {} ms in {:.2} s wall)",
+        soc.edges as f64 / wall / 1e6,
+        router_cycles as f64 / wall / 1e6,
+        soc.fabric.total_flits() as f64 / wall / 1e6,
+        sim_ms,
+        wall
+    );
+
+    // Idle SoC (engine overhead floor).
+    let r2 = bench.run("noc/idle", |_| {
+        let cfg = paper_soc(("dfadd", 1), ("dfadd", 1));
+        let mut soc = Soc::build(cfg, Box::new(RefCompute::new())).unwrap();
+        soc.run_for(sim_ms * 1_000_000_000);
+        soc.edges
+    });
+    println!("{}", r2.report());
+    println!("noc_microbench OK");
+}

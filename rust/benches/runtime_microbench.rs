@@ -1,0 +1,65 @@
+//! Microbench: PJRT invocation latency per accelerator (the §Perf L1/L2
+//! metric) vs. the native reference backend.
+//!
+//! Requires `make artifacts`; exits cleanly with a notice otherwise.
+
+use vespa::bench_harness::{bench_args, Bench};
+use vespa::mem::Block;
+use vespa::report::Table;
+use vespa::runtime::{AccelCompute, DType, Manifest, PjrtCompute, RefCompute};
+use vespa::util::SplitMix64;
+
+fn main() {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.txt").exists() {
+        println!("runtime_microbench: artifacts/ missing — run `make artifacts` first (skipped)");
+        return;
+    }
+    let (quick, iters) = bench_args();
+    let iters = iters.unwrap_or(if quick { 20 } else { 100 });
+
+    let manifest = Manifest::load(&dir).unwrap();
+    let mut pjrt = PjrtCompute::from_manifest(manifest.clone()).unwrap();
+    let mut refc = RefCompute::new();
+    let mut rng = SplitMix64::new(99);
+
+    let mut t = Table::new(
+        "PJRT invocation latency per accelerator block",
+        &["accel", "bytes in", "pjrt us", "native us", "pjrt MB/s"],
+    );
+    let bench = Bench::new(3, iters);
+    for (name, spec) in &manifest.modules {
+        let inputs: Vec<Block> = spec
+            .inputs
+            .iter()
+            .map(|ts| match ts.dtype {
+                DType::F32 => {
+                    Block::F32((0..ts.elems()).map(|_| rng.range_f32(-1.0, 1.0)).collect())
+                }
+                DType::S32 => Block::I32(
+                    (0..ts.elems())
+                        .map(|_| rng.range_i64(-32768, 32767) as i32)
+                        .collect(),
+                ),
+            })
+            .collect();
+        let refs: Vec<&Block> = inputs.iter().collect();
+
+        let rp = bench.run(&format!("pjrt/{name}"), |_| {
+            pjrt.invoke(name, &refs).unwrap()
+        });
+        let rn = bench.run(&format!("native/{name}"), |_| {
+            refc.invoke(name, &refs).unwrap()
+        });
+        let mbs = spec.bytes_in() as f64 / rp.mean.as_secs_f64() / 1e6;
+        t.row(&[
+            name.clone(),
+            spec.bytes_in().to_string(),
+            format!("{:.1}", rp.mean.as_secs_f64() * 1e6),
+            format!("{:.1}", rn.mean.as_secs_f64() * 1e6),
+            format!("{mbs:.0}"),
+        ]);
+    }
+    println!("{}", t.render());
+    println!("runtime_microbench OK ({} PJRT invocations)", pjrt.invocations);
+}

@@ -1,0 +1,39 @@
+//! Bench: regenerate Table I (area + throughput of 1x/2x/4x MRA tiles).
+//!
+//!   cargo bench --bench table1            full table (15 simulations)
+//!   cargo bench --bench table1 -- --quick smaller measurement windows
+
+use vespa::bench_harness::{bench_args, Bench};
+use vespa::experiments::table1;
+
+fn main() {
+    let (quick, _) = bench_args();
+    let inv = if quick { 3 } else { 8 };
+
+    let bench = Bench::new(0, 1);
+    let mut table = None;
+    let r = bench.run("table1/full-reproduction", |_| {
+        let (t, rows) = table1::run(inv).expect("table1");
+        table = Some((t, rows));
+    });
+    let (t, rows) = table.unwrap();
+    println!("{}", t.render());
+    let (r2, r4) = table1::average_increments(&rows);
+    println!("Average throughput increment: 2x = {r2:.2}x, 4x = {r4:.2}x (paper: 1.92x / 3.58x)");
+    println!("{}", r.report());
+
+    // Shape assertions (who wins, by what factor).
+    assert!((1.6..=2.2).contains(&r2), "2x increment {r2:.2}");
+    assert!((3.0..=4.0).contains(&r4), "4x increment {r4:.2}");
+    for chunk in rows.chunks(3) {
+        let base = &chunk[0];
+        assert!(
+            (base.thr_mbs - base.paper_thr_mbs).abs() / base.paper_thr_mbs < 0.15,
+            "{} baseline off: {:.2} vs {:.2}",
+            base.accel,
+            base.thr_mbs,
+            base.paper_thr_mbs
+        );
+    }
+    println!("table1 bench OK");
+}

@@ -1,0 +1,15 @@
+//! AXI4-Stream channel models and the multi-replica accelerator bridge.
+//!
+//! An ESP accelerator exposes four AXI4-Stream interfaces — read control
+//! (*rdCtrl*), write control (*wrCtrl*), read data (*rdData*), write data
+//! (*wrData*). Vespa's MRA tile (paper contribution 1) instantiates `K`
+//! replicas and multiplexes their streams into the tile's four
+//! NoC-facing streams through the [`bridge::AxiBridge`], which is the
+//! architectural point where replication contention (and hence Table I's
+//! sub-linear throughput scaling) arises.
+
+pub mod bridge;
+pub mod stream;
+
+pub use bridge::{AxiBridge, BridgeParams, BridgeStats};
+pub use stream::{AxiStream, StreamBeat};

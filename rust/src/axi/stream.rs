@@ -1,0 +1,132 @@
+//! AXI4-Stream channel: a bounded valid/ready FIFO of beats.
+//!
+//! A beat is one transfer on the stream — for the control streams a DMA
+//! descriptor, for the data streams one 32-bit word. The FIFO capacity
+//! models the skid/packing buffers of the tile; `try_push`/`pop` are the
+//! valid/ready handshake.
+
+use std::collections::VecDeque;
+
+/// One stream transfer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StreamBeat {
+    /// Replica that produced/owns the beat (demux key on rdData).
+    pub replica: u8,
+    /// Descriptor or data word identifier; semantics are per-stream and
+    /// owned by the MRA tile logic (e.g. burst tag for ctrl beats).
+    pub payload: u64,
+    /// TLAST marker (end of burst/descriptor).
+    pub last: bool,
+}
+
+/// A bounded AXI4-Stream FIFO.
+#[derive(Debug, Clone)]
+pub struct AxiStream {
+    cap: usize,
+    q: VecDeque<StreamBeat>,
+    /// Total beats accepted (TVALID & TREADY count).
+    pub beats: u64,
+    /// Cycles a producer presented a beat but the FIFO was full
+    /// (TVALID & !TREADY) — recorded by callers via `note_stall`.
+    pub stall_beats: u64,
+}
+
+impl AxiStream {
+    pub fn new(cap: usize) -> Self {
+        assert!(cap > 0);
+        Self {
+            cap,
+            q: VecDeque::with_capacity(cap),
+            beats: 0,
+            stall_beats: 0,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    pub fn len(&self) -> usize {
+        self.q.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.q.is_empty()
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.q.len() >= self.cap
+    }
+
+    /// TVALID/TREADY handshake: accepts the beat iff space is available.
+    pub fn try_push(&mut self, beat: StreamBeat) -> bool {
+        if self.is_full() {
+            self.stall_beats += 1;
+            false
+        } else {
+            self.q.push_back(beat);
+            self.beats += 1;
+            true
+        }
+    }
+
+    pub fn peek(&self) -> Option<&StreamBeat> {
+        self.q.front()
+    }
+
+    pub fn pop(&mut self) -> Option<StreamBeat> {
+        self.q.pop_front()
+    }
+
+    pub fn note_stall(&mut self) {
+        self.stall_beats += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn beat(replica: u8, payload: u64) -> StreamBeat {
+        StreamBeat {
+            replica,
+            payload,
+            last: false,
+        }
+    }
+
+    #[test]
+    fn handshake_accepts_until_full() {
+        let mut s = AxiStream::new(2);
+        assert!(s.try_push(beat(0, 1)));
+        assert!(s.try_push(beat(0, 2)));
+        assert!(!s.try_push(beat(0, 3)));
+        assert_eq!(s.beats, 2);
+        assert_eq!(s.stall_beats, 1);
+    }
+
+    #[test]
+    fn fifo_order() {
+        let mut s = AxiStream::new(4);
+        for i in 0..4 {
+            s.try_push(beat(0, i));
+        }
+        for i in 0..4 {
+            assert_eq!(s.pop().unwrap().payload, i);
+        }
+        assert!(s.pop().is_none());
+    }
+
+    #[test]
+    fn last_marker_carried() {
+        let mut s = AxiStream::new(2);
+        s.try_push(StreamBeat {
+            replica: 3,
+            payload: 9,
+            last: true,
+        });
+        let b = s.pop().unwrap();
+        assert!(b.last);
+        assert_eq!(b.replica, 3);
+    }
+}

@@ -1,0 +1,120 @@
+//! Micro/macro benchmark harness (offline stand-in for criterion).
+//!
+//! Wall-clock measurement with warmup, configurable iteration counts,
+//! and mean/median/min/max reporting. Bench binaries (`rust/benches/`,
+//! `harness = false`) use [`Bench`] for timing sections and print the
+//! paper-reproduction tables through [`crate::report`].
+
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub median: Duration,
+    pub min: Duration,
+    pub max: Duration,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<40} {:>6} iters  mean {:>12?}  median {:>12?}  min {:>12?}  max {:>12?}",
+            self.name, self.iters, self.mean, self.median, self.min, self.max
+        )
+    }
+
+    /// Throughput in ops/s given `ops` per iteration.
+    pub fn ops_per_sec(&self, ops: f64) -> f64 {
+        ops / self.mean.as_secs_f64()
+    }
+}
+
+/// The harness.
+#[derive(Debug, Clone)]
+pub struct Bench {
+    pub warmup_iters: usize,
+    pub iters: usize,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self {
+            warmup_iters: 2,
+            iters: 10,
+        }
+    }
+}
+
+impl Bench {
+    pub fn new(warmup_iters: usize, iters: usize) -> Self {
+        Self {
+            warmup_iters,
+            iters,
+        }
+    }
+
+    /// Benchmark `f`, which receives the iteration index.
+    pub fn run<T>(&self, name: &str, mut f: impl FnMut(usize) -> T) -> BenchResult {
+        for i in 0..self.warmup_iters {
+            std::hint::black_box(f(i));
+        }
+        let mut times = Vec::with_capacity(self.iters);
+        for i in 0..self.iters {
+            let t0 = Instant::now();
+            std::hint::black_box(f(i));
+            times.push(t0.elapsed());
+        }
+        times.sort();
+        let sum: Duration = times.iter().sum();
+        BenchResult {
+            name: name.to_string(),
+            iters: self.iters,
+            mean: sum / self.iters as u32,
+            median: times[self.iters / 2],
+            min: times[0],
+            max: times[self.iters - 1],
+        }
+    }
+}
+
+/// Parse `--quick` / `--iters N` style bench CLI args.
+pub fn bench_args() -> (bool, Option<usize>) {
+    let args: Vec<String> = std::env::args().collect();
+    let quick = args.iter().any(|a| a == "--quick");
+    let iters = args
+        .iter()
+        .position(|a| a == "--iters")
+        .and_then(|i| args.get(i + 1))
+        .and_then(|s| s.parse().ok());
+    (quick, iters)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let b = Bench::new(1, 5);
+        let r = b.run("spin", |_| {
+            let mut x = 0u64;
+            for i in 0..10_000 {
+                x = x.wrapping_add(i);
+            }
+            x
+        });
+        assert_eq!(r.iters, 5);
+        assert!(r.min <= r.median && r.median <= r.max);
+        assert!(r.mean.as_nanos() > 0);
+    }
+
+    #[test]
+    fn report_contains_name() {
+        let b = Bench::new(0, 3);
+        let r = b.run("named", |_| 1);
+        assert!(r.report().contains("named"));
+    }
+}

@@ -1,0 +1,119 @@
+//! Minimal CLI argument parsing (offline stand-in for clap): subcommand
+//! plus `--key value` / `--flag` options, with typed getters and a usage
+//! renderer.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context};
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw args (excluding argv[0]).
+    pub fn parse_from<I: IntoIterator<Item = String>>(raw: I) -> crate::Result<Self> {
+        let mut out = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                if name.is_empty() {
+                    bail!("bare `--` not supported");
+                }
+                // `--key value` when the next token is not an option;
+                // `--flag` otherwise.
+                match it.peek() {
+                    Some(v) if !v.starts_with("--") => {
+                        out.options.insert(name.to_string(), it.next().unwrap());
+                    }
+                    _ => out.flags.push(name.to_string()),
+                }
+            } else if out.subcommand.is_none() {
+                out.subcommand = Some(a);
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Parse from the process arguments.
+    pub fn from_env() -> crate::Result<Self> {
+        Self::parse_from(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(String::as_str)
+    }
+
+    pub fn opt_u64(&self, name: &str, default: u64) -> crate::Result<u64> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .with_context(|| format!("--{name} must be an integer, got {v:?}")),
+        }
+    }
+
+    pub fn opt_usize(&self, name: &str, default: usize) -> crate::Result<usize> {
+        Ok(self.opt_u64(name, default as u64)? as usize)
+    }
+
+    pub fn opt_str(&self, name: &str, default: &str) -> String {
+        self.opt(name).unwrap_or(default).to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse_from(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse("fig3 --accel dfmul --replicas 4 --quick");
+        assert_eq!(a.subcommand.as_deref(), Some("fig3"));
+        assert_eq!(a.opt("accel"), Some("dfmul"));
+        assert_eq!(a.opt_u64("replicas", 1).unwrap(), 4);
+        assert!(a.flag("quick"));
+        assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn positional_args() {
+        let a = parse("run config.toml extra");
+        assert_eq!(a.subcommand.as_deref(), Some("run"));
+        assert_eq!(a.positional, vec!["config.toml", "extra"]);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("x");
+        assert_eq!(a.opt_u64("n", 7).unwrap(), 7);
+        assert_eq!(a.opt_str("s", "d"), "d");
+    }
+
+    #[test]
+    fn bad_int_rejected() {
+        let a = parse("x --n abc");
+        assert!(a.opt_u64("n", 0).is_err());
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = parse("x --verbose");
+        assert!(a.flag("verbose"));
+    }
+}

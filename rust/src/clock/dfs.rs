@@ -1,0 +1,242 @@
+//! DFS actuators.
+//!
+//! [`DualMmcmActuator`] is the paper's glitch-free design: a master and a
+//! slave MMCM plus an output mux. A frequency request reprograms the
+//! *slave* while the master keeps driving the island; when the slave
+//! locks, the mux swaps roles. The island's clock therefore never stops —
+//! it merely changes period at the swap instant.
+//!
+//! [`SingleMmcmActuator`] is the naive baseline §II-B warns about: one
+//! MMCM whose output is held low for the entire reconfiguration, gating
+//! the island's clock. It exists for the `dfs_ablation` bench, which
+//! measures exactly how many island cycles the naive design loses.
+
+use crate::util::time::{Freq, Ps};
+
+use super::mmcm::Mmcm;
+
+/// Common interface of the two actuator designs.
+pub trait DfsActuator {
+    /// Request a new output frequency at time `now`.
+    ///
+    /// Returns the time at which the new frequency takes effect. Requests
+    /// made while a previous one is still in flight supersede it.
+    fn request(&mut self, target: Freq, now: Ps) -> Ps;
+
+    /// Advance internal FSM state to `now`.
+    fn tick(&mut self, now: Ps);
+
+    /// Output frequency at `now`; `None` means the clock is gated
+    /// (dead output — only the naive actuator ever returns this).
+    fn output(&self, now: Ps) -> Option<Freq>;
+
+    /// True while a frequency change is still in flight.
+    fn busy(&self, now: Ps) -> bool;
+
+    /// Total dead-clock time accumulated so far (ablation metric).
+    fn dead_time(&self) -> Ps;
+}
+
+/// FSM states of the dual-MMCM actuator.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum DualState {
+    /// Master drives the output; slave idle.
+    Idle,
+    /// Slave reprogramming; master still drives. Swap at `swap_at`.
+    Reprogramming { swap_at: Ps },
+}
+
+/// The paper's glitch-free dual-MMCM DFS actuator.
+#[derive(Debug, Clone)]
+pub struct DualMmcmActuator {
+    master: Mmcm,
+    slave: Mmcm,
+    state: DualState,
+    /// Number of completed frequency switches.
+    switches: u64,
+}
+
+impl DualMmcmActuator {
+    pub fn new(initial: Freq) -> Self {
+        Self {
+            master: Mmcm::new(initial),
+            slave: Mmcm::new(initial),
+            state: DualState::Idle,
+            switches: 0,
+        }
+    }
+
+    /// Override MMCM timings (tests / sensitivity studies).
+    pub fn with_timings(initial: Freq, reconfig: Ps, lock: Ps) -> Self {
+        Self {
+            master: Mmcm::with_timings(initial, reconfig, lock),
+            slave: Mmcm::with_timings(initial, reconfig, lock),
+            state: DualState::Idle,
+            switches: 0,
+        }
+    }
+
+    pub fn switches(&self) -> u64 {
+        self.switches
+    }
+
+    /// The latency of one frequency change (request -> effect).
+    pub fn switch_latency(&self) -> Ps {
+        self.slave.reconfig_latency()
+    }
+}
+
+impl DfsActuator for DualMmcmActuator {
+    fn request(&mut self, target: Freq, now: Ps) -> Ps {
+        // Fold any pending swap first so a rapid re-request chains
+        // correctly off the *current* master.
+        self.tick(now);
+        let swap_at = self.slave.start_reconfig(target, now);
+        self.state = DualState::Reprogramming { swap_at };
+        swap_at
+    }
+
+    fn tick(&mut self, now: Ps) {
+        self.master.tick(now);
+        self.slave.tick(now);
+        if let DualState::Reprogramming { swap_at } = self.state {
+            if now >= swap_at {
+                // Slave locked: swap roles. Output glitch-free retimes to
+                // the new period from `swap_at`.
+                core::mem::swap(&mut self.master, &mut self.slave);
+                self.state = DualState::Idle;
+                self.switches += 1;
+            }
+        }
+    }
+
+    fn output(&self, now: Ps) -> Option<Freq> {
+        match self.state {
+            DualState::Idle => self.master.output(now),
+            DualState::Reprogramming { swap_at } => {
+                if now >= swap_at {
+                    // Swap is due but tick() hasn't run yet: the slave's
+                    // (locked) frequency is already driving the mux.
+                    self.slave.output(now)
+                } else {
+                    self.master.output(now)
+                }
+            }
+        }
+    }
+
+    fn busy(&self, now: Ps) -> bool {
+        matches!(self.state, DualState::Reprogramming { swap_at } if now < swap_at)
+    }
+
+    fn dead_time(&self) -> Ps {
+        // The mux always selects a locked MMCM: never dead.
+        0
+    }
+}
+
+/// Naive single-MMCM actuator: reconfiguration gates the island clock.
+#[derive(Debug, Clone)]
+pub struct SingleMmcmActuator {
+    mmcm: Mmcm,
+}
+
+impl SingleMmcmActuator {
+    pub fn new(initial: Freq) -> Self {
+        Self {
+            mmcm: Mmcm::new(initial),
+        }
+    }
+
+    pub fn with_timings(initial: Freq, reconfig: Ps, lock: Ps) -> Self {
+        Self {
+            mmcm: Mmcm::with_timings(initial, reconfig, lock),
+        }
+    }
+}
+
+impl DfsActuator for SingleMmcmActuator {
+    fn request(&mut self, target: Freq, now: Ps) -> Ps {
+        self.mmcm.start_reconfig(target, now)
+    }
+
+    fn tick(&mut self, now: Ps) {
+        self.mmcm.tick(now);
+    }
+
+    fn output(&self, now: Ps) -> Option<Freq> {
+        self.mmcm.output(now)
+    }
+
+    fn busy(&self, now: Ps) -> bool {
+        self.mmcm.output(now).is_none()
+    }
+
+    fn dead_time(&self) -> Ps {
+        self.mmcm.dead_time()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dual_keeps_clock_alive_during_reconfig() {
+        let mut a = DualMmcmActuator::with_timings(Freq::mhz(50), 1_000, 9_000);
+        let eff = a.request(Freq::mhz(100), 0);
+        assert_eq!(eff, 10_000);
+        // Mid-reconfig the OLD frequency still drives the island.
+        assert_eq!(a.output(5_000), Some(Freq::mhz(50)));
+        assert!(a.busy(5_000));
+        a.tick(10_000);
+        assert_eq!(a.output(10_000), Some(Freq::mhz(100)));
+        assert!(!a.busy(10_000));
+        assert_eq!(a.dead_time(), 0);
+        assert_eq!(a.switches(), 1);
+    }
+
+    #[test]
+    fn single_gates_clock_during_reconfig() {
+        let mut a = SingleMmcmActuator::with_timings(Freq::mhz(50), 1_000, 9_000);
+        a.request(Freq::mhz(100), 0);
+        assert_eq!(a.output(5_000), None); // dead clock!
+        a.tick(10_000);
+        assert_eq!(a.output(10_000), Some(Freq::mhz(100)));
+        assert_eq!(a.dead_time(), 10_000);
+    }
+
+    #[test]
+    fn dual_back_to_back_requests() {
+        let mut a = DualMmcmActuator::with_timings(Freq::mhz(10), 1_000, 1_000);
+        a.request(Freq::mhz(20), 0);
+        a.tick(2_000); // swap to 20 MHz
+        assert_eq!(a.output(2_000), Some(Freq::mhz(20)));
+        let eff = a.request(Freq::mhz(30), 2_000);
+        assert_eq!(eff, 4_000);
+        assert_eq!(a.output(3_000), Some(Freq::mhz(20)));
+        a.tick(4_000);
+        assert_eq!(a.output(4_000), Some(Freq::mhz(30)));
+        assert_eq!(a.switches(), 2);
+    }
+
+    #[test]
+    fn dual_supersede_mid_flight() {
+        let mut a = DualMmcmActuator::with_timings(Freq::mhz(10), 1_000, 1_000);
+        a.request(Freq::mhz(20), 0);
+        // Supersede before the swap: final frequency must be 40.
+        a.request(Freq::mhz(40), 1_000);
+        a.tick(3_000);
+        assert_eq!(a.output(3_000), Some(Freq::mhz(40)));
+        // Clock was alive the whole time.
+        assert_eq!(a.dead_time(), 0);
+    }
+
+    #[test]
+    fn output_at_exact_swap_instant_without_tick() {
+        let mut a = DualMmcmActuator::with_timings(Freq::mhz(10), 500, 500);
+        a.request(Freq::mhz(80), 0);
+        // No tick() at 1_000, but output must already be the new freq.
+        assert_eq!(a.output(1_000), Some(Freq::mhz(80)));
+    }
+}

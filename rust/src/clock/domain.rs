@@ -1,0 +1,250 @@
+//! Frequency islands as clock domains driven by fixed clocks or DFS
+//! actuators, plus the edge arithmetic the simulation engine uses.
+
+use crate::util::time::{Freq, Ps};
+
+use super::dfs::{DfsActuator, DualMmcmActuator};
+
+/// Index of a frequency island in the SoC.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct IslandId(pub usize);
+
+/// Clock source of an island.
+#[derive(Debug, Clone)]
+pub enum ClockSource {
+    /// Fixed frequency wired at design time.
+    Fixed(Freq),
+    /// Run-time reprogrammable dual-MMCM DFS actuator.
+    Dfs(DualMmcmActuator),
+}
+
+/// One frequency island's clock domain state.
+///
+/// The engine advances each island edge-by-edge: [`next_edge`] returns
+/// the time of the next rising edge strictly after `now`, honouring any
+/// in-flight DFS retiming (a frequency change re-phases the clock at the
+/// actuator's swap instant).
+#[derive(Debug, Clone)]
+pub struct ClockDomain {
+    pub id: IslandId,
+    pub name: String,
+    source: ClockSource,
+    /// Time of the most recent rising edge (phase reference).
+    last_edge: Ps,
+    /// Cycle counter (edges delivered).
+    pub cycles: u64,
+    /// Frequency bounds for run-time requests (from config).
+    pub min: Freq,
+    pub max: Freq,
+    pub step_mhz: u64,
+}
+
+impl ClockDomain {
+    pub fn fixed(id: IslandId, name: impl Into<String>, freq: Freq) -> Self {
+        Self {
+            id,
+            name: name.into(),
+            source: ClockSource::Fixed(freq),
+            last_edge: 0,
+            cycles: 0,
+            min: freq,
+            max: freq,
+            step_mhz: 5,
+        }
+    }
+
+    pub fn dfs(
+        id: IslandId,
+        name: impl Into<String>,
+        initial: Freq,
+        min: Freq,
+        max: Freq,
+        step_mhz: u64,
+    ) -> Self {
+        Self {
+            id,
+            name: name.into(),
+            source: ClockSource::Dfs(DualMmcmActuator::new(initial)),
+            last_edge: 0,
+            cycles: 0,
+            min,
+            max,
+            step_mhz,
+        }
+    }
+
+    /// DFS-capable islands accept run-time frequency requests.
+    pub fn has_dfs(&self) -> bool {
+        matches!(self.source, ClockSource::Dfs(_))
+    }
+
+    /// Current output frequency at `now`.
+    pub fn freq(&self, now: Ps) -> Freq {
+        match &self.source {
+            ClockSource::Fixed(f) => *f,
+            ClockSource::Dfs(a) => a
+                .output(now)
+                .expect("dual-MMCM actuator output is never dead"),
+        }
+    }
+
+    /// Current period at `now`.
+    pub fn period(&self, now: Ps) -> Ps {
+        self.freq(now).period_ps()
+    }
+
+    /// Request a frequency change. Returns `Err` if the island is fixed
+    /// or the frequency violates the island's configured range/step.
+    /// On success returns the time the change takes effect.
+    pub fn request_freq(&mut self, target: Freq, now: Ps) -> Result<Ps, FreqError> {
+        if target < self.min || target > self.max {
+            return Err(FreqError::OutOfRange {
+                target,
+                min: self.min,
+                max: self.max,
+            });
+        }
+        if self.step_mhz > 0 && (target.as_mhz() - self.min.as_mhz()) % self.step_mhz != 0 {
+            return Err(FreqError::OffGrid {
+                target,
+                step_mhz: self.step_mhz,
+            });
+        }
+        match &mut self.source {
+            ClockSource::Fixed(_) => Err(FreqError::NoDfs),
+            ClockSource::Dfs(a) => Ok(a.request(target, now)),
+        }
+    }
+
+    /// Advance actuator FSM state to `now`.
+    pub fn tick_actuator(&mut self, now: Ps) {
+        if let ClockSource::Dfs(a) = &mut self.source {
+            a.tick(now);
+        }
+    }
+
+    /// Time of the next rising edge strictly after `now`.
+    ///
+    /// The phase reference is the last delivered edge; if the period
+    /// changed since (DFS swap), the next edge lands one *new* period
+    /// after the later of (last edge, swap time) — matching the BUFGMUX
+    /// behaviour of re-phasing on the first post-swap edge.
+    pub fn next_edge(&self, now: Ps) -> Ps {
+        let p = self.period(now);
+        if now < self.last_edge {
+            return self.last_edge;
+        }
+        // Smallest last_edge + k*p strictly after `now`. After a DFS swap
+        // the new period re-anchors at the last delivered edge (first
+        // post-swap edge re-phases, as a BUFGMUX output would).
+        let k = (now - self.last_edge) / p + 1;
+        self.last_edge + k * p
+    }
+
+    /// Record that the engine delivered the edge at `t`.
+    pub fn edge_delivered(&mut self, t: Ps) {
+        debug_assert!(t >= self.last_edge);
+        self.last_edge = t;
+        self.cycles += 1;
+        self.tick_actuator(t);
+    }
+
+    /// Dead-clock time (0 for fixed and dual-MMCM islands).
+    pub fn dead_time(&self) -> Ps {
+        match &self.source {
+            ClockSource::Fixed(_) => 0,
+            ClockSource::Dfs(a) => a.dead_time(),
+        }
+    }
+}
+
+/// Errors from run-time frequency requests.
+#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+pub enum FreqError {
+    #[error("island has no DFS actuator (fixed clock)")]
+    NoDfs,
+    #[error("target {target} outside island range [{min}, {max}]")]
+    OutOfRange { target: Freq, min: Freq, max: Freq },
+    #[error("target {target} not on the {step_mhz}MHz step grid")]
+    OffGrid { target: Freq, step_mhz: u64 },
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fixed_domain_edges() {
+        let mut d = ClockDomain::fixed(IslandId(0), "noc", Freq::mhz(100));
+        assert_eq!(d.next_edge(0), 10_000);
+        d.edge_delivered(10_000);
+        assert_eq!(d.next_edge(10_000), 20_000);
+        assert_eq!(d.cycles, 1);
+    }
+
+    #[test]
+    fn fixed_domain_rejects_dfs_request() {
+        let mut d = ClockDomain::fixed(IslandId(0), "noc", Freq::mhz(100));
+        assert_eq!(
+            d.request_freq(Freq::mhz(100), 0).unwrap_err(),
+            FreqError::NoDfs
+        );
+    }
+
+    #[test]
+    fn dfs_domain_range_checks() {
+        let mut d = ClockDomain::dfs(
+            IslandId(1),
+            "a1",
+            Freq::mhz(50),
+            Freq::mhz(10),
+            Freq::mhz(50),
+            5,
+        );
+        assert!(matches!(
+            d.request_freq(Freq::mhz(60), 0),
+            Err(FreqError::OutOfRange { .. })
+        ));
+        assert!(matches!(
+            d.request_freq(Freq::mhz(12), 0),
+            Err(FreqError::OffGrid { .. })
+        ));
+        assert!(d.request_freq(Freq::mhz(30), 0).is_ok());
+    }
+
+    #[test]
+    fn dfs_retimes_edges_after_switch() {
+        let mut d = ClockDomain::dfs(
+            IslandId(1),
+            "a1",
+            Freq::mhz(10), // 100 000 ps period
+            Freq::mhz(10),
+            Freq::mhz(100),
+            5,
+        );
+        let eff = d.request_freq(Freq::mhz(100), 0).unwrap();
+        // Until the actuator swaps, edges run at 10 MHz.
+        let mut t = 0;
+        while t < eff {
+            let e = d.next_edge(t);
+            assert_eq!(e - t, 100_000, "old period before swap");
+            d.edge_delivered(e);
+            t = e;
+        }
+        // After the swap the period is 10 000 ps.
+        let e = d.next_edge(t);
+        assert_eq!(e - t, 10_000, "new period after swap at {t}");
+    }
+
+    #[test]
+    fn cycle_count_monotonic() {
+        let mut d = ClockDomain::fixed(IslandId(0), "x", Freq::mhz(50));
+        let mut t = 0;
+        for i in 1..=100 {
+            t = d.next_edge(t);
+            d.edge_delivered(t);
+            assert_eq!(d.cycles, i);
+        }
+        assert_eq!(t, 100 * 20_000);
+    }
+}

@@ -1,0 +1,160 @@
+//! Behavioural model of an AMD 7-series MMCM (mixed-mode clock manager).
+//!
+//! Two properties matter to the paper:
+//!
+//! 1. Reprogramming the M/D dividers goes through the dynamic
+//!    reconfiguration port (DRP) and takes a fixed programming time, after
+//!    which the PLL re-locks (`MMCM_LOCK_TIME_PS`).
+//! 2. **While reconfiguring, the output clock stays low** — the
+//!    clock-gating effect §II-B describes. A naive single-MMCM DFS
+//!    actuator therefore freezes its whole island for the reconfiguration
+//!    window; Vespa's dual-MMCM actuator hides it.
+
+use crate::util::time::{Freq, Ps};
+
+/// DRP programming sequence duration. ~23 DRP writes at the 50 MHz DRP
+/// clock plus FSM overhead; 1 us is representative for 7-series.
+pub const MMCM_RECONFIG_TIME_PS: Ps = 1_000_000;
+
+/// Post-programming lock time. 7-series datasheet worst case is ~100 us;
+/// typical observed lock for small M/D changes is tens of us. We use
+/// 10 us so benches run quickly; the value is configurable per actuator.
+pub const MMCM_LOCK_TIME_PS: Ps = 10_000_000;
+
+/// MMCM operating state.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MmcmState {
+    /// Output clock running at the contained frequency.
+    Locked(Freq),
+    /// DRP programming + lock in progress; output is held LOW until
+    /// `done_at`. The target frequency takes effect at `done_at`.
+    Reconfiguring { target: Freq, done_at: Ps },
+}
+
+/// One MMCM instance.
+#[derive(Debug, Clone)]
+pub struct Mmcm {
+    state: MmcmState,
+    reconfig_time: Ps,
+    lock_time: Ps,
+    /// Total picoseconds spent with the output dead (for the ablation).
+    dead_time: Ps,
+}
+
+impl Mmcm {
+    /// A locked MMCM outputting `freq`, with default 7-series timings.
+    pub fn new(freq: Freq) -> Self {
+        Self::with_timings(freq, MMCM_RECONFIG_TIME_PS, MMCM_LOCK_TIME_PS)
+    }
+
+    /// Override reconfiguration/lock durations (tests, sensitivity benches).
+    pub fn with_timings(freq: Freq, reconfig_time: Ps, lock_time: Ps) -> Self {
+        Self {
+            state: MmcmState::Locked(freq),
+            reconfig_time,
+            lock_time,
+            dead_time: 0,
+        }
+    }
+
+    pub fn state(&self) -> MmcmState {
+        self.state
+    }
+
+    /// Begin DRP reprogramming to `target` at time `now`. Returns the
+    /// completion (re-lock) time. Reprogramming an already-reconfiguring
+    /// MMCM restarts the sequence (as the hardware FSM would).
+    pub fn start_reconfig(&mut self, target: Freq, now: Ps) -> Ps {
+        // Account any residual dead time from an aborted reconfiguration.
+        if let MmcmState::Reconfiguring { done_at, .. } = self.state {
+            let started = done_at - self.reconfig_time - self.lock_time;
+            self.dead_time += now.saturating_sub(started);
+        }
+        let done_at = now + self.reconfig_time + self.lock_time;
+        self.state = MmcmState::Reconfiguring { target, done_at };
+        done_at
+    }
+
+    /// Advance internal state to `now` (completes a pending reconfig).
+    pub fn tick(&mut self, now: Ps) {
+        if let MmcmState::Reconfiguring { target, done_at } = self.state {
+            if now >= done_at {
+                self.dead_time += self.reconfig_time + self.lock_time;
+                self.state = MmcmState::Locked(target);
+            }
+        }
+    }
+
+    /// Output frequency at `now`, or `None` while the output is dead.
+    pub fn output(&self, now: Ps) -> Option<Freq> {
+        match self.state {
+            MmcmState::Locked(f) => Some(f),
+            MmcmState::Reconfiguring { target, done_at } => {
+                if now >= done_at {
+                    Some(target)
+                } else {
+                    None
+                }
+            }
+        }
+    }
+
+    /// Whether the MMCM is locked (output valid) at `now`.
+    pub fn locked(&self, now: Ps) -> bool {
+        self.output(now).is_some()
+    }
+
+    /// Total dead-output time accumulated by completed reconfigurations.
+    pub fn dead_time(&self) -> Ps {
+        self.dead_time
+    }
+
+    pub fn reconfig_latency(&self) -> Ps {
+        self.reconfig_time + self.lock_time
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn locked_output() {
+        let m = Mmcm::new(Freq::mhz(50));
+        assert_eq!(m.output(0), Some(Freq::mhz(50)));
+        assert!(m.locked(123));
+    }
+
+    #[test]
+    fn output_dead_during_reconfig() {
+        let mut m = Mmcm::with_timings(Freq::mhz(50), 1_000, 9_000);
+        let done = m.start_reconfig(Freq::mhz(100), 100);
+        assert_eq!(done, 100 + 10_000);
+        assert_eq!(m.output(100), None);
+        assert_eq!(m.output(done - 1), None);
+        assert_eq!(m.output(done), Some(Freq::mhz(100)));
+    }
+
+    #[test]
+    fn tick_completes_and_counts_dead_time() {
+        let mut m = Mmcm::with_timings(Freq::mhz(20), 2_000, 8_000);
+        m.start_reconfig(Freq::mhz(40), 0);
+        m.tick(5_000);
+        assert_eq!(m.output(5_000), None);
+        m.tick(10_000);
+        assert_eq!(m.state(), MmcmState::Locked(Freq::mhz(40)));
+        assert_eq!(m.dead_time(), 10_000);
+    }
+
+    #[test]
+    fn restart_reconfig_accumulates_dead_time() {
+        let mut m = Mmcm::with_timings(Freq::mhz(20), 1_000, 1_000);
+        m.start_reconfig(Freq::mhz(40), 0);
+        // Abort at t=1500 by reprogramming to a third frequency.
+        m.start_reconfig(Freq::mhz(60), 1_500);
+        m.tick(3_500);
+        assert_eq!(m.output(3_500), Some(Freq::mhz(60)));
+        // 1500 aborted + 2000 completed.
+        assert_eq!(m.dead_time(), 3_500);
+    }
+}

@@ -1,0 +1,19 @@
+//! Clocking subsystem: frequency islands, MMCM models, DFS actuators,
+//! and clock-domain-crossing resynchronizers.
+//!
+//! This is the paper's contribution 2. Every tile and NoC router belongs
+//! to a *frequency island*; each island's clock is either fixed or driven
+//! by a [`dfs::DualMmcmActuator`] that reprograms one of two MMCMs while
+//! the other keeps the output clock alive, then swaps — so the island
+//! never sees a dead clock (unlike the naive single-MMCM approach, whose
+//! clock-gating effect [`mmcm::Mmcm`] also models for the ablation bench).
+
+pub mod dfs;
+pub mod domain;
+pub mod mmcm;
+pub mod resync;
+
+pub use dfs::{DfsActuator, DualMmcmActuator, SingleMmcmActuator};
+pub use domain::{ClockDomain, IslandId};
+pub use mmcm::{Mmcm, MmcmState, MMCM_LOCK_TIME_PS, MMCM_RECONFIG_TIME_PS};
+pub use resync::cdc_delay;

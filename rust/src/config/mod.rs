@@ -1,0 +1,11 @@
+//! SoC configuration: the design-time description a Vespa user writes —
+//! grid size, tile placement, accelerator replication factors (the MRA
+//! design parameter), frequency islands and their DFS ranges — plus the
+//! loader for the on-disk TOML format and the paper's preset instance.
+
+pub mod presets;
+pub mod soc;
+pub mod toml;
+
+pub use presets::paper_soc;
+pub use soc::{BridgeCfg, IslandSpec, NocParams, SocConfig, TileKind, TileSpec};

@@ -1,0 +1,154 @@
+//! The paper's experimental SoC instance (§III), built programmatically.
+//!
+//! A 4-by-4 grid with a CVA6 CPU tile, a DDR MEM tile, an auxiliary I/O
+//! tile, eleven TG tiles (dfadd-like memory-bound requesters) and two
+//! accelerator tiles: A1 close to MEM, A2 far from it. Five frequency
+//! islands: NoC+MEM (DFS 10-100 MHz), A1, A2, TG, CPU+I/O (each DFS
+//! 10-50 MHz), all on a 5 MHz step grid.
+
+use super::soc::{BridgeCfg, IslandSpec, NocParams, SocConfig, TileKind, TileSpec};
+use crate::mem::MemParams;
+use crate::tiles::DmaParams;
+
+/// Island indices of the paper preset.
+pub const ISL_NOC: usize = 0;
+pub const ISL_A1: usize = 1;
+pub const ISL_A2: usize = 2;
+pub const ISL_TG: usize = 3;
+pub const ISL_CPU: usize = 4;
+
+/// Grid positions of the named tiles.
+pub const MEM_POS: (u16, u16) = (0, 0);
+pub const CPU_POS: (u16, u16) = (1, 0);
+pub const IO_POS: (u16, u16) = (2, 0);
+/// A1 is adjacent to MEM (1 hop).
+pub const A1_POS: (u16, u16) = (0, 1);
+/// A2 is the far corner (6 hops).
+pub const A2_POS: (u16, u16) = (3, 3);
+
+/// Build the paper's 4x4 SoC with the given accelerators in A1 and A2.
+///
+/// `a1`/`a2` are (accelerator name, replication factor). The eleven
+/// remaining tiles become TGs.
+pub fn paper_soc(a1: (&str, usize), a2: (&str, usize)) -> SocConfig {
+    let islands = vec![
+        IslandSpec {
+            name: "noc-mem".into(),
+            freq_mhz: 100,
+            dfs: true,
+            min_mhz: 10,
+            max_mhz: 100,
+            step_mhz: 5,
+        },
+        IslandSpec {
+            name: "a1".into(),
+            freq_mhz: 50,
+            dfs: true,
+            min_mhz: 10,
+            max_mhz: 50,
+            step_mhz: 5,
+        },
+        IslandSpec {
+            name: "a2".into(),
+            freq_mhz: 50,
+            dfs: true,
+            min_mhz: 10,
+            max_mhz: 50,
+            step_mhz: 5,
+        },
+        IslandSpec {
+            name: "tg".into(),
+            freq_mhz: 50,
+            dfs: true,
+            min_mhz: 10,
+            max_mhz: 50,
+            step_mhz: 5,
+        },
+        IslandSpec {
+            name: "cpu-io".into(),
+            freq_mhz: 50,
+            dfs: true,
+            min_mhz: 10,
+            max_mhz: 50,
+            step_mhz: 5,
+        },
+    ];
+
+    let mut tiles = Vec::new();
+    for y in 0..4u16 {
+        for x in 0..4u16 {
+            let (kind, island) = if (x, y) == MEM_POS {
+                (TileKind::Mem, ISL_NOC)
+            } else if (x, y) == CPU_POS {
+                (TileKind::Cpu, ISL_CPU)
+            } else if (x, y) == IO_POS {
+                (TileKind::Io, ISL_CPU)
+            } else if (x, y) == A1_POS {
+                (
+                    TileKind::Accel {
+                        accel: a1.0.into(),
+                        replicas: a1.1,
+                    },
+                    ISL_A1,
+                )
+            } else if (x, y) == A2_POS {
+                (
+                    TileKind::Accel {
+                        accel: a2.0.into(),
+                        replicas: a2.1,
+                    },
+                    ISL_A2,
+                )
+            } else {
+                (TileKind::Tg, ISL_TG)
+            };
+            tiles.push(TileSpec { x, y, kind, island });
+        }
+    }
+
+    SocConfig {
+        name: format!("paper-4x4-{}x{}-{}x{}", a1.0, a1.1, a2.0, a2.1),
+        width: 4,
+        height: 4,
+        seed: 0xE5B,
+        tiles,
+        islands,
+        noc: NocParams::default(),
+        mem: MemParams::default(),
+        dma: DmaParams::default(),
+        bridge: BridgeCfg::default(),
+        cpu_poll_interval: 0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_soc_validates() {
+        let cfg = paper_soc(("dfsin", 1), ("gsm", 1));
+        cfg.validate().unwrap();
+        assert_eq!(cfg.tiles.len(), 16);
+        assert_eq!(cfg.islands.len(), 5);
+    }
+
+    #[test]
+    fn eleven_tgs() {
+        let cfg = paper_soc(("adpcm", 4), ("dfmul", 4));
+        let tgs = cfg.tiles_where(|k| *k == TileKind::Tg);
+        assert_eq!(tgs.len(), 11);
+    }
+
+    #[test]
+    fn a1_near_a2_far() {
+        let cfg = paper_soc(("dfadd", 1), ("dfadd", 1));
+        let mesh = crate::noc::Mesh::new(4, 4);
+        let mem = mesh.node(MEM_POS.0, MEM_POS.1);
+        let a1 = mesh.node(A1_POS.0, A1_POS.1);
+        let a2 = mesh.node(A2_POS.0, A2_POS.1);
+        assert_eq!(mesh.hops(mem, a1), 1);
+        assert!(mesh.hops(mem, a2) >= 5);
+        drop(cfg);
+    }
+}

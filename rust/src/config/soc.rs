@@ -1,0 +1,405 @@
+//! The SoC description types, validation, and TOML loading.
+
+use anyhow::{bail, Context};
+
+use crate::mem::MemParams;
+use crate::tiles::DmaParams;
+use crate::util::time::Freq;
+
+use super::toml::{self, View};
+
+/// What a tile is.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum TileKind {
+    Cpu,
+    Mem,
+    Io,
+    /// Traffic generator (memory-bound requester; dfadd-like).
+    Tg,
+    /// Multi-replica accelerator tile.
+    Accel { accel: String, replicas: usize },
+}
+
+/// One tile of the grid.
+#[derive(Debug, Clone)]
+pub struct TileSpec {
+    pub x: u16,
+    pub y: u16,
+    pub kind: TileKind,
+    /// Frequency island index (into `SocConfig::islands`).
+    pub island: usize,
+}
+
+/// One frequency island.
+#[derive(Debug, Clone)]
+pub struct IslandSpec {
+    pub name: String,
+    /// Initial (or fixed) frequency.
+    pub freq_mhz: u64,
+    /// Whether a DFS actuator drives this island.
+    pub dfs: bool,
+    pub min_mhz: u64,
+    pub max_mhz: u64,
+    pub step_mhz: u64,
+}
+
+/// NoC microarchitecture parameters.
+#[derive(Debug, Clone)]
+pub struct NocParams {
+    /// Input/link FIFO depth in flits.
+    pub fifo_depth: usize,
+    /// Router pipeline depth in cycles.
+    pub pipeline: u64,
+    /// Synchronizer stages at island boundaries.
+    pub sync_stages: u64,
+    /// Island the routers (and MEM controller) belong to.
+    pub island: usize,
+}
+
+impl Default for NocParams {
+    fn default() -> Self {
+        Self {
+            fifo_depth: 4,
+            pipeline: 2,
+            sync_stages: 2,
+            island: 0,
+        }
+    }
+}
+
+/// MRA bridge parameters (see [`crate::axi::BridgeParams`]).
+#[derive(Debug, Clone)]
+pub struct BridgeCfg {
+    pub replica_fifo_depth: usize,
+    pub tile_fifo_depth: usize,
+    pub switch_cycles: u64,
+}
+
+impl Default for BridgeCfg {
+    fn default() -> Self {
+        Self {
+            replica_fifo_depth: 8,
+            tile_fifo_depth: 16,
+            // Per-burst grant/setup serialization of the tile's shared
+            // DMA path (descriptor setup + TLB + channel arbitration in
+            // ESP's single-engine tile DMA). Calibrated so the shared
+            // path binds at K=4 for the memory-bound accelerators, as
+            // Table I reports (dfadd/dfmul cap at ~26 MB/s), while K=1
+            // and compute-bound tiles are unaffected.
+            switch_cycles: 60,
+        }
+    }
+}
+
+/// The complete SoC description.
+#[derive(Debug, Clone)]
+pub struct SocConfig {
+    pub name: String,
+    pub width: u16,
+    pub height: u16,
+    pub seed: u64,
+    pub tiles: Vec<TileSpec>,
+    pub islands: Vec<IslandSpec>,
+    pub noc: NocParams,
+    pub mem: MemParams,
+    pub dma: DmaParams,
+    pub bridge: BridgeCfg,
+    /// CPU monitor-poll interval in CPU cycles (0 = off).
+    pub cpu_poll_interval: u32,
+}
+
+impl SocConfig {
+    /// Grid position -> linear node index.
+    pub fn node_of(&self, x: u16, y: u16) -> usize {
+        (y * self.width + x) as usize
+    }
+
+    /// The MEM tile's spec (validated unique).
+    pub fn mem_tile(&self) -> &TileSpec {
+        self.tiles
+            .iter()
+            .find(|t| t.kind == TileKind::Mem)
+            .expect("validated config has a MEM tile")
+    }
+
+    /// Indices of tiles of a given predicate.
+    pub fn tiles_where(&self, pred: impl Fn(&TileKind) -> bool) -> Vec<usize> {
+        self.tiles
+            .iter()
+            .enumerate()
+            .filter(|(_, t)| pred(&t.kind))
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Validate structural invariants. Called by the SoC builder.
+    pub fn validate(&self) -> crate::Result<()> {
+        if self.width == 0 || self.height == 0 {
+            bail!("empty grid");
+        }
+        if self.tiles.len() != (self.width as usize) * (self.height as usize) {
+            bail!(
+                "{} tiles for a {}x{} grid (need {})",
+                self.tiles.len(),
+                self.width,
+                self.height,
+                self.width * self.height
+            );
+        }
+        let mut seen = vec![false; self.tiles.len()];
+        for t in &self.tiles {
+            if t.x >= self.width || t.y >= self.height {
+                bail!("tile at ({}, {}) outside {}x{} grid", t.x, t.y, self.width, self.height);
+            }
+            let n = self.node_of(t.x, t.y);
+            if seen[n] {
+                bail!("duplicate tile at ({}, {})", t.x, t.y);
+            }
+            seen[n] = true;
+            if t.island >= self.islands.len() {
+                bail!("tile at ({}, {}) references island {} of {}", t.x, t.y, t.island, self.islands.len());
+            }
+            if let TileKind::Accel { accel, replicas } = &t.kind {
+                if *replicas == 0 || *replicas > 16 {
+                    bail!("tile at ({}, {}): replication {replicas} out of [1, 16]", t.x, t.y);
+                }
+                crate::tiles::AccelTiming::lookup(accel)
+                    .with_context(|| format!("tile at ({}, {})", t.x, t.y))?;
+            }
+        }
+        let mems = self.tiles.iter().filter(|t| t.kind == TileKind::Mem).count();
+        if mems != 1 {
+            bail!("need exactly one MEM tile, found {mems}");
+        }
+        if self.noc.island >= self.islands.len() {
+            bail!("NoC island {} out of range", self.noc.island);
+        }
+        for isl in &self.islands {
+            if isl.min_mhz == 0 || isl.max_mhz < isl.min_mhz {
+                bail!("island {}: bad range [{}, {}]", isl.name, isl.min_mhz, isl.max_mhz);
+            }
+            if isl.freq_mhz < isl.min_mhz || isl.freq_mhz > isl.max_mhz {
+                bail!("island {}: initial {} outside range", isl.name, isl.freq_mhz);
+            }
+            if isl.step_mhz == 0 {
+                bail!("island {}: zero step", isl.name);
+            }
+        }
+        if self.noc.pipeline == 0 {
+            bail!("router pipeline must be >= 1");
+        }
+        Ok(())
+    }
+
+    /// Initial frequency of an island.
+    pub fn island_freq(&self, i: usize) -> Freq {
+        Freq::mhz(self.islands[i].freq_mhz)
+    }
+
+    /// Load from a TOML file.
+    pub fn load(path: impl AsRef<std::path::Path>) -> crate::Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading {}", path.as_ref().display()))?;
+        Self::from_toml(&text)
+    }
+
+    /// Parse from TOML text.
+    pub fn from_toml(text: &str) -> crate::Result<Self> {
+        let doc = toml::parse(text)?;
+
+        let soc_t = doc.table("soc");
+        let soc = View::new(&soc_t, "[soc]");
+        let name = soc.str_or("name", "vespa-soc")?;
+        let width = soc.int_or("width", 4)? as u16;
+        let height = soc.int_or("height", 4)? as u16;
+        let seed = soc.int_or("seed", 0xC0FFEE)? as u64;
+        let cpu_poll_interval = soc.int_or("cpu_poll_interval", 0)? as u32;
+
+        let mut islands = Vec::new();
+        for (i, t) in doc.array("island").iter().enumerate() {
+            let v = View::new(t, format!("[[island]] #{i}"));
+            let freq_mhz = v.int("freq_mhz")? as u64;
+            islands.push(IslandSpec {
+                name: v.str_or("name", &format!("island{i}"))?,
+                freq_mhz,
+                dfs: v.bool_or("dfs", false)?,
+                min_mhz: v.int_or("min_mhz", freq_mhz as i64)? as u64,
+                max_mhz: v.int_or("max_mhz", freq_mhz as i64)? as u64,
+                step_mhz: v.int_or("step_mhz", 5)? as u64,
+            });
+        }
+
+        let mut tiles = Vec::new();
+        for (i, t) in doc.array("tile").iter().enumerate() {
+            let v = View::new(t, format!("[[tile]] #{i}"));
+            let pos = t
+                .get("pos")
+                .and_then(|p| p.as_array())
+                .with_context(|| format!("[[tile]] #{i}: missing pos = [x, y]"))?;
+            if pos.len() != 2 {
+                bail!("[[tile]] #{i}: pos must be [x, y]");
+            }
+            let x = pos[0].as_int().context("pos.x")? as u16;
+            let y = pos[1].as_int().context("pos.y")? as u16;
+            let kind = match v.str("kind")?.as_str() {
+                "cpu" => TileKind::Cpu,
+                "mem" => TileKind::Mem,
+                "io" => TileKind::Io,
+                "tg" => TileKind::Tg,
+                "accel" => TileKind::Accel {
+                    accel: v.str("accel")?,
+                    replicas: v.int_or("replicas", 1)? as usize,
+                },
+                other => bail!("[[tile]] #{i}: unknown kind {other:?}"),
+            };
+            tiles.push(TileSpec {
+                x,
+                y,
+                kind,
+                island: v.int("island")? as usize,
+            });
+        }
+
+        let noc_t = doc.table("noc");
+        let noc_v = View::new(&noc_t, "[noc]");
+        let noc = NocParams {
+            fifo_depth: noc_v.int_or("fifo_depth", 4)? as usize,
+            pipeline: noc_v.int_or("pipeline", 2)? as u64,
+            sync_stages: noc_v.int_or("sync_stages", 2)? as u64,
+            island: noc_v.int_or("island", 0)? as usize,
+        };
+
+        let mem_t = doc.table("mem");
+        let mem_v = View::new(&mem_t, "[mem]");
+        let mem = MemParams {
+            access_cycles: mem_v.int_or("access_cycles", 12)? as u64,
+            queue_depth: mem_v.int_or("queue_depth", 64)? as usize,
+        };
+
+        let dma_t = doc.table("dma");
+        let dma_v = View::new(&dma_t, "[dma]");
+        let dma = DmaParams {
+            burst_beats: dma_v.int_or("burst_beats", 16)? as u16,
+            max_outstanding: dma_v.int_or("max_outstanding", 4)? as usize,
+        };
+
+        let br_t = doc.table("bridge");
+        let br_v = View::new(&br_t, "[bridge]");
+        let bridge = BridgeCfg {
+            replica_fifo_depth: br_v.int_or("replica_fifo_depth", 8)? as usize,
+            tile_fifo_depth: br_v.int_or("tile_fifo_depth", 16)? as usize,
+            switch_cycles: br_v.int_or("switch_cycles", 12)? as u64,
+        };
+
+        let cfg = Self {
+            name,
+            width,
+            height,
+            seed,
+            tiles,
+            islands,
+            noc,
+            mem,
+            dma,
+            bridge,
+            cpu_poll_interval,
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MINI: &str = r#"
+[soc]
+name = "mini"
+width = 2
+height = 1
+
+[[island]]
+name = "noc"
+freq_mhz = 100
+min_mhz = 10
+max_mhz = 100
+dfs = true
+
+[[island]]
+name = "acc"
+freq_mhz = 50
+min_mhz = 10
+max_mhz = 50
+
+[[tile]]
+kind = "mem"
+pos = [0, 0]
+island = 0
+
+[[tile]]
+kind = "accel"
+accel = "dfmul"
+replicas = 2
+pos = [1, 0]
+island = 1
+"#;
+
+    #[test]
+    fn parses_minimal_config() {
+        let cfg = SocConfig::from_toml(MINI).unwrap();
+        assert_eq!(cfg.name, "mini");
+        assert_eq!(cfg.tiles.len(), 2);
+        assert_eq!(
+            cfg.tiles[1].kind,
+            TileKind::Accel {
+                accel: "dfmul".into(),
+                replicas: 2
+            }
+        );
+        assert!(cfg.islands[0].dfs);
+        assert_eq!(cfg.mem_tile().x, 0);
+    }
+
+    #[test]
+    fn rejects_wrong_tile_count() {
+        let bad = MINI.replace("width = 2", "width = 3");
+        assert!(SocConfig::from_toml(&bad).is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_accel() {
+        let bad = MINI.replace("accel = \"dfmul\"", "accel = \"nope\"");
+        assert!(SocConfig::from_toml(&bad).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_island_reference() {
+        let bad = MINI.replace("island = 1", "island = 7");
+        assert!(SocConfig::from_toml(&bad).is_err());
+    }
+
+    #[test]
+    fn rejects_duplicate_position() {
+        let bad = MINI.replace("pos = [1, 0]", "pos = [0, 0]");
+        assert!(SocConfig::from_toml(&bad).is_err());
+    }
+
+    #[test]
+    fn rejects_two_mem_tiles() {
+        let bad = MINI.replace("kind = \"accel\"", "kind = \"mem\"");
+        assert!(SocConfig::from_toml(&bad).is_err());
+    }
+
+    #[test]
+    fn rejects_initial_freq_outside_range() {
+        let bad = MINI.replace("freq_mhz = 50", "freq_mhz = 80");
+        assert!(SocConfig::from_toml(&bad).is_err());
+    }
+
+    #[test]
+    fn rejects_zero_replicas() {
+        let bad = MINI.replace("replicas = 2", "replicas = 0");
+        assert!(SocConfig::from_toml(&bad).is_err());
+    }
+}

@@ -1,0 +1,367 @@
+//! A TOML-subset parser (offline stand-in for `toml` + `serde`).
+//!
+//! Supports the constructs the SoC configuration files use:
+//!
+//! * `[section]` tables and `[[section]]` arrays-of-tables,
+//! * `key = value` with strings (`"..."`), integers, floats, booleans,
+//!   and homogeneous arrays of those,
+//! * `#` comments and blank lines.
+//!
+//! Unsupported TOML (dotted keys, inline tables, multi-line strings,
+//! datetimes) is rejected with a line-numbered error.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context};
+
+/// A parsed value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_array(&self) -> Option<&[Value]> {
+        match self {
+            Value::Array(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// One table of key/value pairs.
+pub type Table = BTreeMap<String, Value>;
+
+/// Parse result: singleton tables and arrays-of-tables.
+#[derive(Debug, Clone, Default)]
+pub struct Document {
+    pub tables: BTreeMap<String, Table>,
+    pub arrays: BTreeMap<String, Vec<Table>>,
+}
+
+impl Document {
+    /// Singleton table by name (empty table if absent).
+    pub fn table(&self, name: &str) -> Table {
+        self.tables.get(name).cloned().unwrap_or_default()
+    }
+
+    /// Array-of-tables by name (empty if absent).
+    pub fn array(&self, name: &str) -> Vec<Table> {
+        self.arrays.get(name).cloned().unwrap_or_default()
+    }
+}
+
+/// Typed getters over a [`Table`] with good error messages.
+pub struct View<'a> {
+    pub table: &'a Table,
+    pub ctx: String,
+}
+
+impl<'a> View<'a> {
+    pub fn new(table: &'a Table, ctx: impl Into<String>) -> Self {
+        Self {
+            table,
+            ctx: ctx.into(),
+        }
+    }
+
+    fn want(&self, key: &str) -> crate::Result<&Value> {
+        self.table
+            .get(key)
+            .with_context(|| format!("{}: missing key {key:?}", self.ctx))
+    }
+
+    pub fn str(&self, key: &str) -> crate::Result<String> {
+        Ok(self
+            .want(key)?
+            .as_str()
+            .with_context(|| format!("{}: {key:?} must be a string", self.ctx))?
+            .to_string())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> crate::Result<String> {
+        match self.table.get(key) {
+            None => Ok(default.to_string()),
+            Some(v) => Ok(v
+                .as_str()
+                .with_context(|| format!("{}: {key:?} must be a string", self.ctx))?
+                .to_string()),
+        }
+    }
+
+    pub fn int(&self, key: &str) -> crate::Result<i64> {
+        self.want(key)?
+            .as_int()
+            .with_context(|| format!("{}: {key:?} must be an integer", self.ctx))
+    }
+
+    pub fn int_or(&self, key: &str, default: i64) -> crate::Result<i64> {
+        match self.table.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .as_int()
+                .with_context(|| format!("{}: {key:?} must be an integer", self.ctx)),
+        }
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> crate::Result<bool> {
+        match self.table.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .as_bool()
+                .with_context(|| format!("{}: {key:?} must be a boolean", self.ctx)),
+        }
+    }
+
+    pub fn float_or(&self, key: &str, default: f64) -> crate::Result<f64> {
+        match self.table.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .as_float()
+                .with_context(|| format!("{}: {key:?} must be a number", self.ctx)),
+        }
+    }
+}
+
+/// Parse a document.
+pub fn parse(text: &str) -> crate::Result<Document> {
+    let mut doc = Document::default();
+    // Current insertion target.
+    enum Target {
+        None,
+        Table(String),
+        Array(String),
+    }
+    let mut target = Target::None;
+
+    for (ln, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        let err = || format!("line {}: {raw:?}", ln + 1);
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(inner) = line.strip_prefix("[[").and_then(|s| s.strip_suffix("]]")) {
+            let name = inner.trim().to_string();
+            if name.is_empty() {
+                bail!("{}: empty table name", err());
+            }
+            doc.arrays.entry(name.clone()).or_default().push(Table::new());
+            target = Target::Array(name);
+        } else if let Some(inner) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+            let name = inner.trim().to_string();
+            if name.is_empty() {
+                bail!("{}: empty table name", err());
+            }
+            if doc.tables.contains_key(&name) {
+                bail!("{}: duplicate table [{name}]", err());
+            }
+            doc.tables.insert(name.clone(), Table::new());
+            target = Target::Table(name);
+        } else {
+            let (key, val) = line
+                .split_once('=')
+                .with_context(|| format!("{}: expected key = value", err()))?;
+            let key = key.trim().to_string();
+            if key.is_empty() {
+                bail!("{}: empty key", err());
+            }
+            let value = parse_value(val.trim()).with_context(err)?;
+            let table = match &target {
+                Target::None => bail!("{}: key outside any [section]", err()),
+                Target::Table(name) => doc.tables.get_mut(name).unwrap(),
+                Target::Array(name) => doc.arrays.get_mut(name).unwrap().last_mut().unwrap(),
+            };
+            if table.insert(key.clone(), value).is_some() {
+                bail!("{}: duplicate key {key:?}", err());
+            }
+        }
+    }
+    Ok(doc)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // A `#` outside a string starts a comment.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> crate::Result<Value> {
+    if s.is_empty() {
+        bail!("empty value");
+    }
+    if let Some(inner) = s.strip_prefix('"') {
+        let inner = inner
+            .strip_suffix('"')
+            .context("unterminated string")?;
+        if inner.contains('"') {
+            bail!("embedded quotes not supported");
+        }
+        return Ok(Value::Str(inner.to_string()));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner.strip_suffix(']').context("unterminated array")?;
+        let inner = inner.trim();
+        if inner.is_empty() {
+            return Ok(Value::Array(vec![]));
+        }
+        let items = split_array(inner)?
+            .into_iter()
+            .map(|item| parse_value(item.trim()))
+            .collect::<crate::Result<Vec<_>>>()?;
+        return Ok(Value::Array(items));
+    }
+    if let Ok(i) = s.replace('_', "").parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    bail!("cannot parse value {s:?}")
+}
+
+/// Split a flat array body on commas (no nested arrays in our subset).
+fn split_array(s: &str) -> crate::Result<Vec<&str>> {
+    if s.contains('[') {
+        bail!("nested arrays not supported");
+    }
+    Ok(s.split(',').collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let doc = parse(
+            r#"
+# SoC description
+[soc]
+name = "vespa4x4"   # inline comment
+width = 4
+seed = 0xxx_invalid_is_not_here
+"#
+            .replace("seed = 0xxx_invalid_is_not_here", "seed = 1_000")
+            .as_str(),
+        )
+        .unwrap();
+        let t = doc.table("soc");
+        assert_eq!(t["name"], Value::Str("vespa4x4".into()));
+        assert_eq!(t["width"], Value::Int(4));
+        assert_eq!(t["seed"], Value::Int(1000));
+    }
+
+    #[test]
+    fn arrays_of_tables() {
+        let doc = parse(
+            r#"
+[[tile]]
+kind = "cpu"
+pos = [0, 0]
+[[tile]]
+kind = "mem"
+pos = [3, 0]
+"#,
+        )
+        .unwrap();
+        let tiles = doc.array("tile");
+        assert_eq!(tiles.len(), 2);
+        assert_eq!(tiles[1]["kind"], Value::Str("mem".into()));
+        let pos = tiles[1]["pos"].as_array().unwrap();
+        assert_eq!(pos[0].as_int(), Some(3));
+    }
+
+    #[test]
+    fn value_types() {
+        let doc = parse("[x]\na = true\nb = 1.5\nc = [\"p\", \"q\"]\n").unwrap();
+        let t = doc.table("x");
+        assert_eq!(t["a"].as_bool(), Some(true));
+        assert_eq!(t["b"].as_float(), Some(1.5));
+        assert_eq!(t["c"].as_array().unwrap()[1].as_str(), Some("q"));
+    }
+
+    #[test]
+    fn rejects_key_outside_section() {
+        assert!(parse("a = 1\n").is_err());
+    }
+
+    #[test]
+    fn rejects_duplicate_key() {
+        assert!(parse("[x]\na = 1\na = 2\n").is_err());
+    }
+
+    #[test]
+    fn rejects_duplicate_table() {
+        assert!(parse("[x]\n[x]\n").is_err());
+    }
+
+    #[test]
+    fn rejects_garbage_value() {
+        assert!(parse("[x]\na = @@\n").is_err());
+        assert!(parse("[x]\na = \"unterminated\n").is_err());
+    }
+
+    #[test]
+    fn hash_inside_string_not_comment() {
+        let doc = parse("[x]\na = \"b#c\"\n").unwrap();
+        assert_eq!(doc.table("x")["a"].as_str(), Some("b#c"));
+    }
+
+    #[test]
+    fn view_typed_getters() {
+        let doc = parse("[x]\nn = 3\ns = \"hi\"\n").unwrap();
+        let t = doc.table("x");
+        let v = View::new(&t, "[x]");
+        assert_eq!(v.int("n").unwrap(), 3);
+        assert_eq!(v.str("s").unwrap(), "hi");
+        assert_eq!(v.int_or("missing", 7).unwrap(), 7);
+        assert!(v.int("s").is_err());
+        assert!(v.str("missing").is_err());
+    }
+}

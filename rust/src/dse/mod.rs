@@ -1,0 +1,11 @@
+//! Design-space exploration: sweep MRA replication factors, island
+//! frequencies and placements; evaluate each point with the analytic
+//! area model plus (optionally) a short simulation; report the Pareto
+//! frontier of area vs. throughput — the workflow the paper's abstract
+//! promises ("effectively exploring a multitude of solutions").
+
+pub mod pareto;
+pub mod sweep;
+
+pub use pareto::pareto_front;
+pub use sweep::{sweep_replication, DsePoint, SweepParams};

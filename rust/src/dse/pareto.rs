@@ -1,0 +1,70 @@
+//! Pareto filtering for (cost, benefit) design points.
+
+/// Indices of the Pareto-optimal points for (minimize cost, maximize
+/// benefit). Stable order (by cost ascending).
+pub fn pareto_front(points: &[(f64, f64)]) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..points.len()).collect();
+    idx.sort_by(|&a, &b| {
+        points[a]
+            .0
+            .partial_cmp(&points[b].0)
+            .unwrap()
+            .then(points[b].1.partial_cmp(&points[a].1).unwrap())
+    });
+    let mut front = Vec::new();
+    let mut best = f64::NEG_INFINITY;
+    for i in idx {
+        if points[i].1 > best {
+            front.push(i);
+            best = points[i].1;
+        }
+    }
+    front
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::forall;
+
+    #[test]
+    fn simple_front() {
+        // (cost, benefit)
+        let pts = [(1.0, 1.0), (2.0, 3.0), (3.0, 2.0), (4.0, 4.0)];
+        let f = pareto_front(&pts);
+        assert_eq!(f, vec![0, 1, 3]); // (3.0, 2.0) dominated by (2.0, 3.0)
+    }
+
+    #[test]
+    fn single_point() {
+        assert_eq!(pareto_front(&[(5.0, 5.0)]), vec![0]);
+    }
+
+    #[test]
+    fn prop_front_members_not_dominated() {
+        forall(
+            0xDA7E,
+            200,
+            |r| {
+                let n = r.next_below(20) as usize + 1;
+                (0..n)
+                    .map(|_| (r.next_f64() * 100.0, r.next_f64() * 100.0))
+                    .collect::<Vec<_>>()
+            },
+            |pts| {
+                let front = pareto_front(pts);
+                assert!(!front.is_empty());
+                for &i in &front {
+                    for (j, q) in pts.iter().enumerate() {
+                        if i == j {
+                            continue;
+                        }
+                        let dominated =
+                            q.0 <= pts[i].0 && q.1 >= pts[i].1 && (q.0 < pts[i].0 || q.1 > pts[i].1);
+                        assert!(!dominated, "front point {i} dominated by {j}");
+                    }
+                }
+            },
+        );
+    }
+}

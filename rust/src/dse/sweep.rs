@@ -1,0 +1,134 @@
+//! Replication / frequency / placement sweeps.
+
+use crate::config::presets::{paper_soc, A1_POS, A2_POS};
+use crate::resources::{mra_area, AccelArea, Utilization, XC7V2000T};
+use crate::runtime::RefCompute;
+use crate::sim::{stage_inputs_for, Soc, ThroughputProbe};
+use crate::util::Ps;
+
+/// One evaluated design point.
+#[derive(Debug, Clone)]
+pub struct DsePoint {
+    pub accel: String,
+    pub replicas: usize,
+    pub accel_mhz: u64,
+    pub noc_mhz: u64,
+    pub near_mem: bool,
+    pub area: Utilization,
+    pub throughput_mbs: f64,
+}
+
+/// Sweep parameters.
+#[derive(Debug, Clone)]
+pub struct SweepParams {
+    pub accel: String,
+    pub replications: Vec<usize>,
+    pub accel_mhz: Vec<u64>,
+    pub noc_mhz: Vec<u64>,
+    pub placements: Vec<bool>, // true = A1 (near MEM), false = A2
+    /// Simulated measurement window per point.
+    pub window: Ps,
+    /// Warmup before the window.
+    pub warmup: Ps,
+}
+
+impl SweepParams {
+    /// A quick default sweep for `accel`.
+    pub fn quick(accel: &str) -> Self {
+        Self {
+            accel: accel.to_string(),
+            replications: vec![1, 2, 4],
+            accel_mhz: vec![50],
+            noc_mhz: vec![100],
+            placements: vec![true],
+            window: 20_000_000_000, // 20 ms
+            warmup: 2_000_000_000,
+        }
+    }
+}
+
+/// Evaluate one design point by simulation (TGs off, as Table I).
+pub fn evaluate_point(
+    accel: &str,
+    replicas: usize,
+    accel_mhz: u64,
+    noc_mhz: u64,
+    near_mem: bool,
+    warmup: Ps,
+    window: Ps,
+) -> crate::Result<DsePoint> {
+    let (a1, a2) = if near_mem {
+        ((accel, replicas), ("dfadd", 1))
+    } else {
+        (("dfadd", 1), (accel, replicas))
+    };
+    let mut cfg = paper_soc(a1, a2);
+    cfg.islands[0].freq_mhz = noc_mhz;
+    let isl = if near_mem { 1 } else { 2 };
+    cfg.islands[isl].freq_mhz = accel_mhz;
+    let mut soc = Soc::build(cfg, Box::new(RefCompute::new()))?;
+    let pos = if near_mem { A1_POS } else { A2_POS };
+    let tile = soc.cfg.node_of(pos.0, pos.1);
+    stage_inputs_for(&mut soc, tile, 1);
+    soc.mra_mut(tile).functional_every_invocation = false;
+
+    // Scale the measurement to the accelerator's invocation time so slow
+    // accelerators (gsm: ~18 ms, adpcm: ~23 ms per invocation at 50 MHz)
+    // still complete several invocations in the window.
+    let inv_ps = soc.mra(tile).timing.compute_cycles * 1_000_000 / accel_mhz.max(1);
+    let warmup = warmup.max(2 * inv_ps);
+    let window = window.max(8 * inv_ps / replicas as u64 + inv_ps);
+
+    soc.run_for(warmup);
+    let probe = ThroughputProbe::begin(&soc, tile);
+    soc.run_for(window);
+    let throughput_mbs = probe.mbs(&soc);
+
+    let area = mra_area(&AccelArea::lookup(accel)?, replicas);
+    Ok(DsePoint {
+        accel: accel.to_string(),
+        replicas,
+        accel_mhz,
+        noc_mhz,
+        near_mem,
+        area,
+        throughput_mbs,
+    })
+}
+
+/// Run a full sweep.
+pub fn sweep_replication(p: &SweepParams) -> crate::Result<Vec<DsePoint>> {
+    let mut out = Vec::new();
+    for &k in &p.replications {
+        for &am in &p.accel_mhz {
+            for &nm in &p.noc_mhz {
+                for &near in &p.placements {
+                    out.push(evaluate_point(
+                        &p.accel, k, am, nm, near, p.warmup, p.window,
+                    )?);
+                }
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Utilization check of a point against the paper's device.
+pub fn fits_device(pt: &DsePoint) -> bool {
+    pt.area.fits(&XC7V2000T.capacity)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn evaluate_single_point_quickly() {
+        // Short window: just prove the plumbing works end to end.
+        let pt = evaluate_point("dfmul", 2, 50, 100, true, 500_000_000, 4_000_000_000).unwrap();
+        assert_eq!(pt.replicas, 2);
+        assert!(pt.throughput_mbs > 0.5, "thr {}", pt.throughput_mbs);
+        assert!(fits_device(&pt));
+        assert!(pt.area.lut > 11_000);
+    }
+}

@@ -1,0 +1,34 @@
+//! Fig. 2: the FPGA floorplan of the paper's SoC instance —
+//! CPU, MEM, I/O, eleven TGs, A1 = dfsin, A2 = gsm.
+
+use crate::config::presets::paper_soc;
+use crate::config::SocConfig;
+use crate::resources::{Floorplan, XC7V2000T};
+
+/// The paper's Fig. 2 instance.
+pub fn fig2_config() -> SocConfig {
+    paper_soc(("dfsin", 1), ("gsm", 1))
+}
+
+/// Compute and render the floorplan.
+pub fn run() -> crate::Result<(String, Floorplan)> {
+    let cfg = fig2_config();
+    let fp = Floorplan::compute(&cfg, &XC7V2000T)?;
+    let rendered = fp.render(&cfg);
+    Ok((rendered, fp))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig2_renders_and_fits() {
+        let (s, fp) = run().unwrap();
+        assert!(fp.fits);
+        assert!(s.contains("dfsin"));
+        assert!(s.contains("gsm"));
+        // 11 TG cells in the grid.
+        assert_eq!(s.matches("TG").count(), 11, "{s}");
+    }
+}

@@ -1,0 +1,132 @@
+//! Table I: FPGA resource utilization and throughput of baseline and
+//! 2x/4x multi-replica accelerator tiles.
+//!
+//! Setup per the paper (§III-A): accelerator in A1 (adjacent to MEM),
+//! NoC+MEM island at 100 MHz, accelerator island at 50 MHz, all TGs
+//! disabled — best-case throughput.
+
+use crate::config::presets::{paper_soc, A1_POS};
+use crate::report::Table;
+use crate::resources::{mra_area, AccelArea, Utilization};
+use crate::runtime::RefCompute;
+use crate::sim::{stage_inputs_for, Soc, ThroughputProbe};
+
+use super::run_until_invocations;
+
+/// Paper throughput values (MB/s) for comparison: (accel, [1x, 2x, 4x]).
+pub const PAPER_THR: [(&str, [f64; 3]); 5] = [
+    ("adpcm", [1.40, 2.76, 5.41]),
+    ("dfadd", [9.22, 16.88, 26.06]),
+    ("dfmul", [8.70, 15.07, 26.06]),
+    ("dfsin", [0.33, 0.65, 1.24]),
+    ("gsm", [4.61, 8.90, 16.67]),
+];
+
+/// One measured row.
+#[derive(Debug, Clone)]
+pub struct Row {
+    pub accel: String,
+    pub k: usize,
+    pub area: Utilization,
+    pub thr_mbs: f64,
+    pub paper_thr_mbs: f64,
+}
+
+/// Measure the throughput of `accel` at replication `k` (A1 placement).
+pub fn measure_throughput(accel: &str, k: usize, invocations: u64) -> crate::Result<f64> {
+    let cfg = paper_soc((accel, k), ("dfadd", 1));
+    let mut soc = Soc::build(cfg, Box::new(RefCompute::new()))?;
+    let tile = soc.cfg.node_of(A1_POS.0, A1_POS.1);
+    stage_inputs_for(&mut soc, tile, 1);
+    soc.mra_mut(tile).functional_every_invocation = false;
+
+    // Warm up: let the first invocations fill the pipeline.
+    run_until_invocations(&mut soc, tile, k as u64, 400_000_000_000);
+    let probe = ThroughputProbe::begin(&soc, tile);
+    run_until_invocations(&mut soc, tile, invocations, 2_000_000_000_000);
+    Ok(probe.mbs(&soc))
+}
+
+/// Run the full Table I reproduction. `invocations` controls the
+/// measurement window (larger = tighter estimates).
+pub fn run(invocations: u64) -> crate::Result<(Table, Vec<Row>)> {
+    let mut rows = Vec::new();
+    for (accel, paper) in PAPER_THR {
+        let area_db = AccelArea::lookup(accel)?;
+        for (ki, &k) in [1usize, 2, 4].iter().enumerate() {
+            let thr = measure_throughput(accel, k, invocations * k as u64)?;
+            rows.push(Row {
+                accel: accel.to_string(),
+                k,
+                area: mra_area(&area_db, k),
+                thr_mbs: thr,
+                paper_thr_mbs: paper[ki],
+            });
+        }
+    }
+
+    let mut t = Table::new(
+        "Table I — FPGA resources and throughput of 1x/2x/4x MRA tiles",
+        &[
+            "accel", "K", "LUT", "FF", "BRAM", "DSP", "thr MB/s", "paper MB/s", "ratio",
+        ],
+    );
+    for r in &rows {
+        t.row(&[
+            r.accel.clone(),
+            r.k.to_string(),
+            r.area.lut.to_string(),
+            r.area.ff.to_string(),
+            r.area.bram.to_string(),
+            r.area.dsp.to_string(),
+            format!("{:.2}", r.thr_mbs),
+            format!("{:.2}", r.paper_thr_mbs),
+            format!("{:.2}", r.thr_mbs / r.paper_thr_mbs),
+        ]);
+    }
+    Ok((t, rows))
+}
+
+/// Average throughput increments vs. baseline (the table's "Incr." row).
+pub fn average_increments(rows: &[Row]) -> (f64, f64) {
+    let mut r2 = 0.0;
+    let mut r4 = 0.0;
+    let mut n = 0.0;
+    for chunk in rows.chunks(3) {
+        let base = chunk[0].thr_mbs;
+        if base > 0.0 {
+            r2 += chunk[1].thr_mbs / base;
+            r4 += chunk[2].thr_mbs / base;
+            n += 1.0;
+        }
+    }
+    (r2 / n, r4 / n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The headline calibration check: simulated 1x dfmul throughput in
+    /// the Table I scenario lands near the paper's 8.70 MB/s.
+    #[test]
+    fn dfmul_baseline_near_paper() {
+        let thr = measure_throughput("dfmul", 1, 6).unwrap();
+        assert!(
+            (thr - 8.70).abs() / 8.70 < 0.15,
+            "dfmul 1x: {thr:.2} MB/s vs paper 8.70"
+        );
+    }
+
+    /// Replication must scale throughput: 2x strictly faster than 1x.
+    #[test]
+    fn replication_scales_dfadd() {
+        let t1 = measure_throughput("dfadd", 1, 4).unwrap();
+        let t2 = measure_throughput("dfadd", 2, 8).unwrap();
+        let ratio = t2 / t1;
+        assert!(
+            (1.5..=2.1).contains(&ratio),
+            "2x/1x ratio {ratio:.2} (t1 {t1:.2}, t2 {t2:.2})"
+        );
+    }
+}

@@ -1,0 +1,46 @@
+//! # Vespa-Sim
+//!
+//! A prototype-based framework to design scalable heterogeneous SoCs with
+//! fine-grained DFS — a full-system reproduction of Montanaro, Galimberti &
+//! Zoni (ICCD 2024).
+//!
+//! The crate models a tile-based heterogeneous SoC (ESP-style) at cycle
+//! level and implements the paper's three contributions as first-class
+//! features:
+//!
+//! 1. **Multi-replica accelerator (MRA) tiles** — [`tiles::mra`] +
+//!    [`axi::bridge`]: `K` replicas of a third-party accelerator share one
+//!    NoC node behind an AXI4-Stream bridge.
+//! 2. **Configurable-DFS frequency islands** — [`clock`]: every tile and
+//!    router belongs to a frequency island driven by a fixed clock or a
+//!    glitch-free dual-MMCM DFS actuator, reprogrammable at run time
+//!    through memory-mapped frequency registers.
+//! 3. **Run-time monitoring** — [`monitor`]: per-accelerator hardware
+//!    counters (execution time, packets in/out, round-trip time) exposed
+//!    over MMIO to both the CPU tile and the host.
+//!
+//! Accelerator datapaths execute *real* compute: JAX/Pallas kernels are
+//! AOT-lowered at build time to HLO text and executed from the simulator's
+//! hot path through the PJRT CPU client ([`runtime`]). Python never runs at
+//! simulation time.
+
+pub mod axi;
+pub mod bench_harness;
+pub mod cli;
+pub mod clock;
+pub mod config;
+pub mod dse;
+pub mod experiments;
+pub mod mem;
+pub mod monitor;
+pub mod noc;
+pub mod policy;
+pub mod report;
+pub mod resources;
+pub mod runtime;
+pub mod sim;
+pub mod tiles;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

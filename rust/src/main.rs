@@ -1,0 +1,284 @@
+//! `vespa` — the framework launcher.
+//!
+//! Subcommands:
+//!   run <config.toml>   simulate a SoC described by a config file
+//!   table1              reproduce Table I (area + throughput, 1x/2x/4x)
+//!   fig2 | floorplan    reproduce Fig. 2 (floorplan)
+//!   fig3                reproduce Fig. 3 (throughput vs TG pressure)
+//!   fig4                reproduce Fig. 4 (memory traffic vs DFS)
+//!   dse                 replication/frequency design-space sweep
+//!   validate <config>   parse + validate a config file
+//!   accels              list the accelerator DB
+//!   artifacts-check     load artifacts and cross-check PJRT vs native
+//!
+//! Global options: --artifacts <dir> to use the PJRT backend where
+//! applicable; experiments default to the native reference backend.
+
+use vespa::cli::Args;
+use vespa::config::SocConfig;
+use vespa::dse::{pareto_front, sweep_replication, SweepParams};
+use vespa::experiments::{fig2, fig3, fig4, table1};
+use vespa::mem::Block;
+use vespa::report::{plot, Table};
+use vespa::resources::AccelArea;
+use vespa::runtime::{AccelCompute, Manifest, PjrtCompute, RefCompute};
+use vespa::sim::{stage_inputs_for, Soc};
+use vespa::tiles::AccelTiming;
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            std::process::exit(2);
+        }
+    };
+    let code = match dispatch(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn usage() {
+    eprintln!(
+        "usage: vespa <run|table1|fig2|fig3|fig4|dse|validate|accels|artifacts-check> [options]\n\
+         options:\n\
+           --invocations N     Table I measurement window (default 6)\n\
+           --window-ms N       Fig. 3 window per point (default 10)\n\
+           --phase-ms N        Fig. 4 phase length (default 30)\n\
+           --accel NAME        DSE target accelerator (default dfmul)\n\
+           --artifacts DIR     use the PJRT backend from DIR\n\
+           --duration-ms N     `run` duration (default 10)\n\
+           --tg N              `run`: active TG count (default 0)"
+    );
+}
+
+fn backend(args: &Args) -> vespa::Result<Box<dyn AccelCompute>> {
+    match args.opt("artifacts") {
+        Some(dir) => Ok(Box::new(PjrtCompute::load(dir)?)),
+        None => Ok(Box::new(RefCompute::new())),
+    }
+}
+
+fn dispatch(args: &Args) -> vespa::Result<()> {
+    match args.subcommand.as_deref() {
+        Some("run") => cmd_run(args),
+        Some("table1") => {
+            let inv = args.opt_u64("invocations", 6)?;
+            let (t, rows) = table1::run(inv)?;
+            println!("{}", t.render());
+            let (r2, r4) = table1::average_increments(&rows);
+            println!("Average throughput increment: 2x = {r2:.2}x, 4x = {r4:.2}x");
+            println!("(paper: 2x = 1.92x, 4x = 3.58x)");
+            Ok(())
+        }
+        Some("fig2") | Some("floorplan") => {
+            let (s, _) = fig2::run()?;
+            println!("{s}");
+            Ok(())
+        }
+        Some("fig3") => {
+            let win = args.opt_u64("window-ms", 60)? * 1_000_000_000;
+            // Warmup covers the slowest pipeline fill (adpcm 4x: ~23 ms
+            // per replica invocation at 50 MHz).
+            let warm = args.opt_u64("warmup-ms", 30)? * 1_000_000_000;
+            let (t, adpcm, dfmul) = fig3::run(warm, win)?;
+            println!("{}", t.render());
+            let mut sa = vespa::monitor::TimeSeries::new("adpcm4x");
+            let mut sd = vespa::monitor::TimeSeries::new("dfmul4x");
+            for p in &adpcm {
+                sa.push(p.tg_active as u64 * 1_000_000, p.thr_mbs);
+            }
+            for p in &dfmul {
+                sd.push(p.tg_active as u64 * 1_000_000, p.thr_mbs);
+            }
+            println!("{}", plot(&[&sa, &sd], 60, 16));
+            Ok(())
+        }
+        Some("fig4") => {
+            let phase = args.opt_u64("phase-ms", 30)? * 1_000_000_000;
+            let r = fig4::run(phase, 1_000_000_000)?;
+            println!("{}", fig4::render_table(&r).render());
+            println!("{}", plot(&[&r.pkts_rate], 70, 14));
+            Ok(())
+        }
+        Some("dse") => cmd_dse(args),
+        Some("validate") => {
+            let path = args
+                .positional
+                .first()
+                .ok_or_else(|| anyhow::anyhow!("validate: missing config path"))?;
+            let cfg = SocConfig::load(path)?;
+            println!(
+                "OK: {} — {}x{} grid, {} tiles, {} islands",
+                cfg.name,
+                cfg.width,
+                cfg.height,
+                cfg.tiles.len(),
+                cfg.islands.len()
+            );
+            Ok(())
+        }
+        Some("accels") => {
+            let mut t = Table::new(
+                "Accelerator DB (CHStone via HLS)",
+                &["name", "LUT", "FF", "BRAM", "DSP", "MB/s @50MHz", "class"],
+            );
+            for a in AccelArea::db() {
+                let timing = AccelTiming::lookup(a.name)?;
+                t.row(&[
+                    a.name.to_string(),
+                    a.baseline_tile.lut.to_string(),
+                    a.baseline_tile.ff.to_string(),
+                    a.baseline_tile.bram.to_string(),
+                    a.baseline_tile.dsp.to_string(),
+                    format!("{:.2}", timing.ideal_throughput_mbs(50)),
+                    if timing.memory_bound {
+                        "memory-bound".into()
+                    } else {
+                        "compute-bound".into()
+                    },
+                ]);
+            }
+            println!("{}", t.render());
+            Ok(())
+        }
+        Some("artifacts-check") => cmd_artifacts_check(args),
+        _ => {
+            usage();
+            Ok(())
+        }
+    }
+}
+
+fn cmd_run(args: &Args) -> vespa::Result<()> {
+    let path = args
+        .positional
+        .first()
+        .ok_or_else(|| anyhow::anyhow!("run: missing config path"))?;
+    let cfg = SocConfig::load(path)?;
+    let mut soc = Soc::build(cfg, backend(args)?)?;
+    for tile in soc.mra_tiles() {
+        stage_inputs_for(&mut soc, tile, 1);
+    }
+    soc.host_set_tg_active(args.opt_usize("tg", 0)?);
+    let dur = args.opt_u64("duration-ms", 10)? * 1_000_000_000;
+    soc.run_for(dur);
+
+    let mut t = Table::new(
+        format!("run {} for {} ms", soc.cfg.name, dur / 1_000_000_000),
+        &["tile", "kind", "inv", "pkts_in", "pkts_out", "rtt_ns", "exec_cycles"],
+    );
+    for (i, tile) in soc.tiles.iter().enumerate() {
+        let c = soc.mon.tile(i);
+        if c.pkts_in + c.pkts_out + c.invocations == 0 {
+            continue;
+        }
+        t.row(&[
+            i.to_string(),
+            tile.kind_name().to_string(),
+            c.invocations.to_string(),
+            c.pkts_in.to_string(),
+            c.pkts_out.to_string(),
+            format!("{:.0}", c.rtt_mean() / 1e3),
+            c.exec_cycles.to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "mem: {} pkts in, {} data beats; NoC flits {}; backend {}",
+        soc.mon.mem_pkts_in,
+        soc.mon.mem_beats_in,
+        soc.fabric.total_flits(),
+        soc.compute.backend(),
+    );
+    Ok(())
+}
+
+fn cmd_dse(args: &Args) -> vespa::Result<()> {
+    let accel = args.opt_str("accel", "dfmul");
+    let mut p = SweepParams::quick(&accel);
+    if args.flag("wide") {
+        p.accel_mhz = vec![25, 50];
+        p.noc_mhz = vec![50, 100];
+        p.placements = vec![true, false];
+    }
+    if args.flag("quick") {
+        p.window = 4_000_000_000;
+        p.warmup = 500_000_000;
+    }
+    let pts = sweep_replication(&p)?;
+    let mut t = Table::new(
+        format!("DSE — {accel}"),
+        &["K", "accel MHz", "NoC MHz", "near", "LUT", "DSP", "MB/s", "pareto"],
+    );
+    let costs: Vec<(f64, f64)> = pts
+        .iter()
+        .map(|pt| (pt.area.lut as f64, pt.throughput_mbs))
+        .collect();
+    let front = pareto_front(&costs);
+    for (i, pt) in pts.iter().enumerate() {
+        t.row(&[
+            pt.replicas.to_string(),
+            pt.accel_mhz.to_string(),
+            pt.noc_mhz.to_string(),
+            if pt.near_mem { "A1" } else { "A2" }.to_string(),
+            pt.area.lut.to_string(),
+            pt.area.dsp.to_string(),
+            format!("{:.2}", pt.throughput_mbs),
+            if front.contains(&i) { "*" } else { "" }.to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_artifacts_check(args: &Args) -> vespa::Result<()> {
+    let dir = args.opt_str("artifacts", "artifacts");
+    let manifest = Manifest::load(&dir)?;
+    println!("manifest: {} modules from {dir}", manifest.modules.len());
+    let mut pjrt = PjrtCompute::from_manifest(manifest.clone())?;
+    let mut refc = RefCompute::new();
+    let mut rng = vespa::util::SplitMix64::new(7);
+
+    for (name, spec) in &manifest.modules {
+        let inputs: Vec<Block> = spec
+            .inputs
+            .iter()
+            .map(|ts| match ts.dtype {
+                vespa::runtime::DType::F32 => {
+                    Block::F32((0..ts.elems()).map(|_| rng.range_f32(-1.0, 1.0)).collect())
+                }
+                vespa::runtime::DType::S32 => Block::I32(
+                    (0..ts.elems())
+                        .map(|_| rng.range_i64(-32768, 32767) as i32)
+                        .collect(),
+                ),
+            })
+            .collect();
+        let refs: Vec<&Block> = inputs.iter().collect();
+        let a = pjrt.invoke(name, &refs)?;
+        let b = refc.invoke(name, &refs)?;
+        let mut max_err = 0f64;
+        for (x, y) in a.iter().zip(&b) {
+            match (x, y) {
+                (Block::F32(u), Block::F32(v)) => {
+                    for (p, q) in u.iter().zip(v) {
+                        max_err = max_err.max((p - q).abs() as f64);
+                    }
+                }
+                (Block::I32(u), Block::I32(v)) => {
+                    anyhow::ensure!(u == v, "{name}: integer outputs differ");
+                }
+                _ => anyhow::bail!("{name}: output dtype mismatch"),
+            }
+        }
+        println!("  {name}: PJRT vs native max |err| = {max_err:.2e}  OK");
+    }
+    println!("artifacts-check OK ({} PJRT invocations)", pjrt.invocations);
+    Ok(())
+}

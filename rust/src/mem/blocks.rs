@@ -1,0 +1,139 @@
+//! Functional data blocks.
+//!
+//! The NoC timing model moves flits; the *numbers* an accelerator
+//! consumes and produces live here. A [`Block`] is one accelerator-stream
+//! buffer (f32 or i32 words); DMA messages reference blocks by id, the
+//! MRA tile hands them to the PJRT executable, and results come back as
+//! new blocks. The store is free-listed so steady-state simulation does
+//! not allocate.
+
+/// Handle to a block in the store.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct BlockId(pub u32);
+
+/// A typed buffer of words (one AXI stream's worth of data).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Block {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl Block {
+    /// Number of 32-bit words.
+    pub fn words(&self) -> usize {
+        match self {
+            Block::F32(v) => v.len(),
+            Block::I32(v) => v.len(),
+        }
+    }
+
+    /// Size in bytes.
+    pub fn bytes(&self) -> usize {
+        self.words() * 4
+    }
+
+    pub fn as_f32(&self) -> Option<&[f32]> {
+        match self {
+            Block::F32(v) => Some(v),
+            Block::I32(_) => None,
+        }
+    }
+
+    pub fn as_i32(&self) -> Option<&[i32]> {
+        match self {
+            Block::I32(v) => Some(v),
+            Block::F32(_) => None,
+        }
+    }
+}
+
+/// Free-listed arena of blocks.
+#[derive(Debug, Default)]
+pub struct BlockStore {
+    slots: Vec<Option<Block>>,
+    free: Vec<u32>,
+    live: usize,
+}
+
+impl BlockStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn insert(&mut self, b: Block) -> BlockId {
+        self.live += 1;
+        if let Some(i) = self.free.pop() {
+            self.slots[i as usize] = Some(b);
+            BlockId(i)
+        } else {
+            self.slots.push(Some(b));
+            BlockId((self.slots.len() - 1) as u32)
+        }
+    }
+
+    pub fn get(&self, id: BlockId) -> &Block {
+        self.slots[id.0 as usize]
+            .as_ref()
+            .expect("use of released block")
+    }
+
+    pub fn get_mut(&mut self, id: BlockId) -> &mut Block {
+        self.slots[id.0 as usize]
+            .as_mut()
+            .expect("use of released block")
+    }
+
+    pub fn release(&mut self, id: BlockId) {
+        assert!(
+            self.slots[id.0 as usize].take().is_some(),
+            "double release of block {id:?}"
+        );
+        self.free.push(id.0);
+        self.live -= 1;
+    }
+
+    pub fn live(&self) -> usize {
+        self.live
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn insert_get_release() {
+        let mut s = BlockStore::new();
+        let id = s.insert(Block::F32(vec![1.0, 2.0]));
+        assert_eq!(s.get(id).words(), 2);
+        assert_eq!(s.get(id).bytes(), 8);
+        s.release(id);
+        assert_eq!(s.live(), 0);
+    }
+
+    #[test]
+    fn slots_reused() {
+        let mut s = BlockStore::new();
+        let a = s.insert(Block::I32(vec![1]));
+        s.release(a);
+        let b = s.insert(Block::I32(vec![2]));
+        assert_eq!(a.0, b.0);
+        assert_eq!(s.get(b).as_i32().unwrap(), &[2]);
+    }
+
+    #[test]
+    #[should_panic(expected = "double release")]
+    fn double_release_panics() {
+        let mut s = BlockStore::new();
+        let a = s.insert(Block::I32(vec![1]));
+        s.release(a);
+        s.release(a);
+    }
+
+    #[test]
+    fn typed_accessors() {
+        let b = Block::F32(vec![1.5]);
+        assert!(b.as_f32().is_some());
+        assert!(b.as_i32().is_none());
+    }
+}

@@ -1,0 +1,250 @@
+//! DDR memory-controller timing model.
+//!
+//! The MEM tile terminates DMA requests from the whole SoC. The model is
+//! a single-channel controller: a bounded request queue, a fixed access
+//! latency (row activation + CAS, folded into one constant), and a data
+//! bus that produces one beat per controller cycle. The controller runs
+//! at the NoC island's clock (as in the paper, where the NoC interconnect
+//! and memory controller share a frequency island) — which is exactly why
+//! running the NoC island at 10 MHz caps deliverable bandwidth at
+//! 4 B x 10 MHz = 40 MB/s and produces Fig. 3's memory-bound collapse.
+//!
+//! Requests are served in arrival order (the NoC's round-robin fairness
+//! upstream already interleaves requesters), one burst occupying the bus
+//! for its full beat count — so concurrent requesters share bandwidth
+//! approximately fairly, the property Fig. 3 and Fig. 4 rely on.
+
+use std::collections::VecDeque;
+
+use crate::util::Ps;
+
+/// Controller parameters.
+#[derive(Debug, Clone)]
+pub struct MemParams {
+    /// Fixed service latency in controller cycles (activation + CAS +
+    /// controller pipeline). ESP's MIG path is ~20-30 cycles.
+    pub access_cycles: u64,
+    /// Request queue depth; requests beyond this are back-pressured into
+    /// the NoC (the ejection FIFO stops draining).
+    pub queue_depth: usize,
+}
+
+impl Default for MemParams {
+    fn default() -> Self {
+        Self {
+            // Per-burst overhead: controller pipeline + (amortized) row
+            // activation. 12 cycles over a 16-beat burst ~= the ~55-60%
+            // streaming efficiency of a MIG-class controller.
+            access_cycles: 12,
+            // Deep enough to absorb every requester's outstanding bursts
+            // (11 TGs x 4 + 4 replicas x 4): service order then follows
+            // arrival order and closed-loop bandwidth sharing becomes
+            // proportional to each requester's outstanding budget — the
+            // fairness Figs. 3-4 rely on.
+            queue_depth: 64,
+        }
+    }
+}
+
+/// A DMA burst enqueued at the controller.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MemRequest {
+    pub addr: u64,
+    pub beats: u16,
+    pub is_write: bool,
+    /// Opaque routing info echoed in the response (source node, tag).
+    pub src: u16,
+    pub tag: u32,
+    /// Functional payload reference for reads (block to serve data from)
+    /// — carried through untouched.
+    pub block: u32,
+    pub offset: u32,
+}
+
+/// A completed burst ready to be packetized back into the NoC.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MemResponse {
+    pub req: MemRequest,
+    /// Completion time (last beat leaves the controller).
+    pub done_at: Ps,
+}
+
+/// Controller statistics (Fig. 4's "incoming packets to memory" counter
+/// lives at the MEM tile NI; these are internal-quality counters).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct MemStats {
+    pub reads: u64,
+    pub writes: u64,
+    pub beats: u64,
+    /// Cycles the data bus was busy.
+    pub busy_cycles: u64,
+    /// Peak queue occupancy observed.
+    pub peak_queue: usize,
+}
+
+/// The controller.
+#[derive(Debug)]
+pub struct MemController {
+    params: MemParams,
+    queue: VecDeque<(Ps, MemRequest)>, // (arrival, request)
+    /// Time the data bus becomes free.
+    bus_free_at: Ps,
+    done: VecDeque<MemResponse>,
+    pub stats: MemStats,
+}
+
+impl MemController {
+    pub fn new(params: MemParams) -> Self {
+        Self {
+            params,
+            queue: VecDeque::new(),
+            bus_free_at: 0,
+            done: VecDeque::new(),
+            stats: MemStats::default(),
+        }
+    }
+
+    /// Whether a new request can be accepted (queue not full).
+    pub fn can_accept(&self) -> bool {
+        self.queue.len() < self.params.queue_depth
+    }
+
+    /// Enqueue a request arriving at `now`.
+    pub fn accept(&mut self, req: MemRequest, now: Ps) {
+        assert!(self.can_accept(), "mem queue overflow");
+        self.queue.push_back((now, req));
+        self.stats.peak_queue = self.stats.peak_queue.max(self.queue.len());
+    }
+
+    /// One controller cycle at `now` with the island's current `period`.
+    /// Starts at most one burst per cycle; completed bursts move to the
+    /// response queue.
+    pub fn tick(&mut self, now: Ps, period: Ps) {
+        if let Some(&(_arrival, req)) = self.queue.front() {
+            // The burst can start once the bus is free and the fixed
+            // access latency has elapsed from *service start* (modelled
+            // as: completion = max(now, bus_free) + access + beats).
+            if self.bus_free_at <= now {
+                self.queue.pop_front();
+                let start = now + self.params.access_cycles * period;
+                let done_at = start + req.beats as u64 * period;
+                self.bus_free_at = done_at;
+                self.stats.beats += req.beats as u64;
+                self.stats.busy_cycles += self.params.access_cycles + req.beats as u64;
+                if req.is_write {
+                    self.stats.writes += 1;
+                } else {
+                    self.stats.reads += 1;
+                }
+                self.done.push_back(MemResponse { req, done_at });
+            }
+        }
+    }
+
+    /// Pop a response whose data has fully left the controller by `now`.
+    pub fn pop_done(&mut self, now: Ps) -> Option<MemResponse> {
+        match self.done.front() {
+            Some(r) if r.done_at <= now => self.done.pop_front(),
+            _ => None,
+        }
+    }
+
+    pub fn queued(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn pending_responses(&self) -> usize {
+        self.done.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(beats: u16, tag: u32) -> MemRequest {
+        MemRequest {
+            addr: 0x1000,
+            beats,
+            is_write: false,
+            src: 3,
+            tag,
+            block: 0,
+            offset: 0,
+        }
+    }
+
+    #[test]
+    fn single_burst_latency() {
+        let mut m = MemController::new(MemParams {
+            access_cycles: 10,
+            queue_depth: 4,
+        });
+        let period = 10_000; // 100 MHz
+        m.accept(req(16, 1), 0);
+        m.tick(0, period);
+        // done = 0 + (10 + 16) * 10_000
+        assert!(m.pop_done(259_999).is_none());
+        let r = m.pop_done(260_000).unwrap();
+        assert_eq!(r.req.tag, 1);
+        assert_eq!(m.stats.reads, 1);
+        assert_eq!(m.stats.beats, 16);
+    }
+
+    #[test]
+    fn bursts_serialize_on_bus() {
+        let mut m = MemController::new(MemParams {
+            access_cycles: 0,
+            queue_depth: 4,
+        });
+        let period = 10_000;
+        m.accept(req(4, 1), 0);
+        m.accept(req(4, 2), 0);
+        m.tick(0, period); // burst 1: done at 40_000
+        m.tick(10_000, period); // bus busy, nothing starts
+        assert_eq!(m.pending_responses(), 1);
+        m.tick(40_000, period); // burst 2: done at 80_000
+        let r1 = m.pop_done(40_000).unwrap();
+        assert_eq!(r1.req.tag, 1);
+        let r2 = m.pop_done(80_000).unwrap();
+        assert_eq!(r2.req.tag, 2);
+    }
+
+    #[test]
+    fn queue_backpressure() {
+        let mut m = MemController::new(MemParams {
+            access_cycles: 0,
+            queue_depth: 2,
+        });
+        m.accept(req(1, 1), 0);
+        m.accept(req(1, 2), 0);
+        assert!(!m.can_accept());
+    }
+
+    #[test]
+    fn slower_clock_slower_service() {
+        // Same burst at 100 MHz vs 10 MHz: 10x the service time — the
+        // Fig. 3/4 mechanism in miniature.
+        for (period, expect) in [(10_000u64, 200_000u64), (100_000, 2_000_000)] {
+            let mut m = MemController::new(MemParams {
+                access_cycles: 4,
+                queue_depth: 4,
+            });
+            m.accept(req(16, 9), 0);
+            m.tick(0, period);
+            assert!(m.pop_done(expect - 1).is_none());
+            assert!(m.pop_done(expect).is_some());
+        }
+    }
+
+    #[test]
+    fn write_counted_separately() {
+        let mut m = MemController::new(MemParams::default());
+        let mut w = req(8, 5);
+        w.is_write = true;
+        m.accept(w, 0);
+        m.tick(0, 10_000);
+        assert_eq!(m.stats.writes, 1);
+        assert_eq!(m.stats.reads, 0);
+    }
+}

@@ -1,0 +1,9 @@
+//! Memory subsystem: the functional backing store ([`BlockStore`]) and
+//! the DDR controller timing model ([`MemController`]) that lives in the
+//! MEM tile.
+
+pub mod blocks;
+pub mod ddr;
+
+pub use blocks::{Block, BlockId, BlockStore};
+pub use ddr::{MemController, MemParams, MemRequest, MemResponse, MemStats};

@@ -1,0 +1,207 @@
+//! Per-accelerator-tile hardware counters.
+
+use crate::util::Ps;
+
+/// Selectable statistics (§II-C: up to four per accelerator).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum CounterSel {
+    ExecTime = 0,
+    PktsIn = 1,
+    PktsOut = 2,
+    RoundTrip = 3,
+}
+
+/// Counter block of one accelerator tile.
+#[derive(Debug, Clone, Default)]
+pub struct AccelCounters {
+    /// Enable mask (bit per [`CounterSel`]). Disabled counters hold.
+    pub enable: u8,
+    /// Execution time in island-clock cycles. Auto-resets when the tile
+    /// starts a computation, stops when it completes.
+    pub exec_cycles: u64,
+    /// Wall-clock span of the last/current computation (ps), to convert
+    /// cycle counts under DFS into time.
+    pub exec_start: Ps,
+    pub exec_end: Ps,
+    /// Whether a computation is in flight (exec counter running).
+    pub running: bool,
+    /// NoC packets into the tile (manually reset).
+    pub pkts_in: u64,
+    /// NoC packets out of the tile (manually reset).
+    pub pkts_out: u64,
+    /// Sum of DMA read round-trip times (ps) and completed round-trips.
+    pub rtt_sum: u64,
+    pub rtt_count: u64,
+    /// Completed accelerator invocations (drives throughput readouts).
+    pub invocations: u64,
+}
+
+impl AccelCounters {
+    pub fn new() -> Self {
+        Self {
+            enable: 0x0F, // all four statistics enabled by default
+            ..Self::default()
+        }
+    }
+
+    fn enabled(&self, sel: CounterSel) -> bool {
+        self.enable & (1 << sel as u8) != 0
+    }
+
+    /// Computation started: auto-reset and run the exec-time counter.
+    pub fn on_start(&mut self, now: Ps) {
+        if self.enabled(CounterSel::ExecTime) {
+            self.exec_cycles = 0;
+            self.exec_start = now;
+            self.exec_end = now;
+            self.running = true;
+        }
+    }
+
+    /// One island-clock cycle elapsed while computing.
+    pub fn on_exec_cycle(&mut self) {
+        if self.running {
+            self.exec_cycles += 1;
+        }
+    }
+
+    /// Computation completed: stop the exec-time counter.
+    pub fn on_complete(&mut self, now: Ps) {
+        if self.running {
+            self.exec_end = now;
+            self.running = false;
+        }
+    }
+
+    /// One accelerator invocation (replica block computation) finished.
+    pub fn on_invocation(&mut self) {
+        self.invocations += 1;
+    }
+
+    pub fn on_pkt_in(&mut self) {
+        if self.enabled(CounterSel::PktsIn) {
+            self.pkts_in += 1;
+        }
+    }
+
+    pub fn on_pkt_out(&mut self) {
+        if self.enabled(CounterSel::PktsOut) {
+            self.pkts_out += 1;
+        }
+    }
+
+    /// A DMA read round-trip completed (request issue -> data arrival).
+    pub fn on_round_trip(&mut self, rtt: Ps) {
+        if self.enabled(CounterSel::RoundTrip) {
+            self.rtt_sum += rtt;
+            self.rtt_count += 1;
+        }
+    }
+
+    /// Manual reset (CTRL bit 1): clears the manually-reset counters
+    /// (§II-C — all but exec time, which auto-resets).
+    pub fn manual_reset(&mut self) {
+        self.pkts_in = 0;
+        self.pkts_out = 0;
+        self.rtt_sum = 0;
+        self.rtt_count = 0;
+        self.invocations = 0;
+    }
+
+    /// Mean round-trip time in ps (0 when no samples).
+    pub fn rtt_mean(&self) -> f64 {
+        if self.rtt_count == 0 {
+            0.0
+        } else {
+            self.rtt_sum as f64 / self.rtt_count as f64
+        }
+    }
+}
+
+/// All monitor blocks of the SoC, indexed by tile.
+#[derive(Debug, Default)]
+pub struct MonitorFile {
+    pub tiles: Vec<AccelCounters>,
+    /// Packets delivered to the MEM tile (Fig. 4's incoming-traffic
+    /// counter), kept at SoC scope because the MEM tile is unique.
+    pub mem_pkts_in: u64,
+    /// Data beats delivered to the MEM tile.
+    pub mem_beats_in: u64,
+}
+
+impl MonitorFile {
+    pub fn new(tiles: usize) -> Self {
+        Self {
+            tiles: (0..tiles).map(|_| AccelCounters::new()).collect(),
+            mem_pkts_in: 0,
+            mem_beats_in: 0,
+        }
+    }
+
+    pub fn tile(&self, i: usize) -> &AccelCounters {
+        &self.tiles[i]
+    }
+
+    pub fn tile_mut(&mut self, i: usize) -> &mut AccelCounters {
+        &mut self.tiles[i]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exec_time_auto_resets_on_start() {
+        let mut c = AccelCounters::new();
+        c.on_start(1000);
+        for _ in 0..5 {
+            c.on_exec_cycle();
+        }
+        c.on_complete(6000);
+        c.on_invocation();
+        assert_eq!(c.exec_cycles, 5);
+        assert_eq!(c.invocations, 1);
+        c.on_start(7000);
+        assert_eq!(c.exec_cycles, 0, "auto reset");
+        assert!(c.running);
+    }
+
+    #[test]
+    fn disabled_counters_hold() {
+        let mut c = AccelCounters::new();
+        c.enable = 0; // everything off
+        c.on_pkt_in();
+        c.on_round_trip(100);
+        c.on_start(0);
+        c.on_exec_cycle();
+        assert_eq!(c.pkts_in, 0);
+        assert_eq!(c.rtt_count, 0);
+        assert_eq!(c.exec_cycles, 0);
+    }
+
+    #[test]
+    fn manual_reset_spares_exec_time() {
+        let mut c = AccelCounters::new();
+        c.on_start(0);
+        c.on_exec_cycle();
+        c.on_pkt_in();
+        c.on_pkt_out();
+        c.on_round_trip(500);
+        c.manual_reset();
+        assert_eq!(c.pkts_in, 0);
+        assert_eq!(c.pkts_out, 0);
+        assert_eq!(c.rtt_count, 0);
+        assert_eq!(c.exec_cycles, 1, "exec time is auto-reset only");
+    }
+
+    #[test]
+    fn rtt_mean() {
+        let mut c = AccelCounters::new();
+        assert_eq!(c.rtt_mean(), 0.0);
+        c.on_round_trip(100);
+        c.on_round_trip(300);
+        assert_eq!(c.rtt_mean(), 200.0);
+    }
+}

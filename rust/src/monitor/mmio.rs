@@ -1,0 +1,131 @@
+//! Memory map of the monitoring and frequency registers.
+//!
+//! ```text
+//! 0x6000_0000 + island*0x10 + 0x0   FREQ   (R/W, MHz)
+//! 0x6000_0000 + island*0x10 + 0x8   BUSY   (R, DFS actuator in flight)
+//! 0x8000_0000 + tile*0x100  + 0x00  CTRL   (bit0 enable-mask write strobe,
+//!                                           bit1 manual counter reset)
+//! 0x8000_0000 + tile*0x100  + 0x08  EXEC_TIME   (island cycles)
+//! 0x8000_0000 + tile*0x100  + 0x10  PKTS_IN
+//! 0x8000_0000 + tile*0x100  + 0x18  PKTS_OUT
+//! 0x8000_0000 + tile*0x100  + 0x20  RTT_SUM     (ps)
+//! 0x8000_0000 + tile*0x100  + 0x28  RTT_CNT
+//! 0x8000_0000 + tile*0x100  + 0x30  INVOCATIONS
+//! ```
+
+/// Base of the frequency-register block (owned by the I/O tile).
+pub const FREQ_BASE: u64 = 0x6000_0000;
+/// Stride between islands' register pairs.
+pub const FREQ_STRIDE: u64 = 0x10;
+/// Base of the per-tile monitor blocks.
+pub const MONITOR_BASE: u64 = 0x8000_0000;
+/// Stride between tiles' monitor blocks.
+pub const TILE_STRIDE: u64 = 0x100;
+
+/// Registers within a tile's monitor block.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CounterReg {
+    Ctrl,
+    ExecTime,
+    PktsIn,
+    PktsOut,
+    RttSum,
+    RttCnt,
+    Invocations,
+}
+
+/// Decoded MMIO target.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MmioTarget {
+    IslandFreq(usize),
+    IslandBusy(usize),
+    Counter(usize, CounterReg),
+    Invalid,
+}
+
+/// Address of an island's FREQ register.
+pub fn island_freq_addr(island: usize) -> u64 {
+    FREQ_BASE + island as u64 * FREQ_STRIDE
+}
+
+/// Address of a tile counter register.
+pub fn counter_addr(tile: usize, reg: CounterReg) -> u64 {
+    let off = match reg {
+        CounterReg::Ctrl => 0x00,
+        CounterReg::ExecTime => 0x08,
+        CounterReg::PktsIn => 0x10,
+        CounterReg::PktsOut => 0x18,
+        CounterReg::RttSum => 0x20,
+        CounterReg::RttCnt => 0x28,
+        CounterReg::Invocations => 0x30,
+    };
+    MONITOR_BASE + tile as u64 * TILE_STRIDE + off
+}
+
+/// Decode an MMIO address.
+pub fn decode(addr: u64) -> MmioTarget {
+    if (FREQ_BASE..MONITOR_BASE).contains(&addr) {
+        let off = addr - FREQ_BASE;
+        let island = (off / FREQ_STRIDE) as usize;
+        match off % FREQ_STRIDE {
+            0x0 => MmioTarget::IslandFreq(island),
+            0x8 => MmioTarget::IslandBusy(island),
+            _ => MmioTarget::Invalid,
+        }
+    } else if addr >= MONITOR_BASE {
+        let off = addr - MONITOR_BASE;
+        let tile = (off / TILE_STRIDE) as usize;
+        let reg = match off % TILE_STRIDE {
+            0x00 => CounterReg::Ctrl,
+            0x08 => CounterReg::ExecTime,
+            0x10 => CounterReg::PktsIn,
+            0x18 => CounterReg::PktsOut,
+            0x20 => CounterReg::RttSum,
+            0x28 => CounterReg::RttCnt,
+            0x30 => CounterReg::Invocations,
+            _ => return MmioTarget::Invalid,
+        };
+        MmioTarget::Counter(tile, reg)
+    } else {
+        MmioTarget::Invalid
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_freq() {
+        for island in 0..8 {
+            assert_eq!(
+                decode(island_freq_addr(island)),
+                MmioTarget::IslandFreq(island)
+            );
+            assert_eq!(
+                decode(island_freq_addr(island) + 8),
+                MmioTarget::IslandBusy(island)
+            );
+        }
+    }
+
+    #[test]
+    fn roundtrip_counters() {
+        use CounterReg::*;
+        for tile in [0usize, 3, 15] {
+            for reg in [Ctrl, ExecTime, PktsIn, PktsOut, RttSum, RttCnt, Invocations] {
+                assert_eq!(
+                    decode(counter_addr(tile, reg)),
+                    MmioTarget::Counter(tile, reg)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn invalid_addresses() {
+        assert_eq!(decode(0x1000), MmioTarget::Invalid);
+        assert_eq!(decode(FREQ_BASE + 0xC), MmioTarget::Invalid);
+        assert_eq!(decode(MONITOR_BASE + 0x48), MmioTarget::Invalid);
+    }
+}

@@ -1,0 +1,19 @@
+//! Run-time monitoring infrastructure (paper contribution 3).
+//!
+//! Each accelerator tile carries four selectively-enabled hardware
+//! counters — execution time, incoming packets, outgoing packets, and
+//! DMA round-trip time — exposed as memory-mapped registers reachable
+//! both from software on the SoC's CPU tile and from the host through
+//! the I/O tile (the proFPGA USB-serial path on the real system).
+//!
+//! The execution-time counter resets automatically when the accelerator
+//! starts computing and stops when it completes; the other three are
+//! reset manually through the CTRL register (§II-C).
+
+pub mod counters;
+pub mod mmio;
+pub mod sampler;
+
+pub use counters::{AccelCounters, CounterSel, MonitorFile};
+pub use mmio::{decode, CounterReg, MmioTarget, FREQ_BASE, MONITOR_BASE, TILE_STRIDE};
+pub use sampler::{Sample, Sampler, TimeSeries};

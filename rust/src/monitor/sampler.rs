@@ -1,0 +1,145 @@
+//! Host-side periodic sampling of monitor counters into time series —
+//! the mechanism behind Fig. 4's traffic-vs-time plot.
+
+use crate::util::Ps;
+
+/// One sampled point.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Sample {
+    pub t: Ps,
+    pub value: f64,
+}
+
+/// A named time series.
+#[derive(Debug, Clone, Default)]
+pub struct TimeSeries {
+    pub name: String,
+    pub samples: Vec<Sample>,
+}
+
+impl TimeSeries {
+    pub fn new(name: impl Into<String>) -> Self {
+        Self {
+            name: name.into(),
+            samples: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, t: Ps, value: f64) {
+        self.samples.push(Sample { t, value });
+    }
+
+    /// Convert a cumulative-counter series into a rate series
+    /// (delta value / delta time, per second).
+    pub fn to_rate(&self) -> TimeSeries {
+        let mut out = TimeSeries::new(format!("{}_rate", self.name));
+        for w in self.samples.windows(2) {
+            let dt = (w[1].t - w[0].t) as f64 / 1e12; // ps -> s
+            if dt > 0.0 {
+                out.push(w[1].t, (w[1].value - w[0].value) / dt);
+            }
+        }
+        out
+    }
+
+    pub fn max(&self) -> f64 {
+        self.samples.iter().map(|s| s.value).fold(f64::MIN, f64::max)
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.samples.iter().map(|s| s.value).sum::<f64>() / self.samples.len() as f64
+    }
+
+    /// Mean of the samples with `t` in `[lo, hi)`.
+    pub fn mean_in(&self, lo: Ps, hi: Ps) -> f64 {
+        let vals: Vec<f64> = self
+            .samples
+            .iter()
+            .filter(|s| s.t >= lo && s.t < hi)
+            .map(|s| s.value)
+            .collect();
+        if vals.is_empty() {
+            0.0
+        } else {
+            vals.iter().sum::<f64>() / vals.len() as f64
+        }
+    }
+}
+
+/// Periodic sampler: fires every `interval` ps and records counters
+/// selected by a closure over the SoC state.
+#[derive(Debug)]
+pub struct Sampler {
+    pub interval: Ps,
+    next_at: Ps,
+    pub series: Vec<TimeSeries>,
+}
+
+impl Sampler {
+    pub fn new(interval: Ps, names: &[&str]) -> Self {
+        Self {
+            interval,
+            next_at: 0,
+            series: names.iter().map(|n| TimeSeries::new(*n)).collect(),
+        }
+    }
+
+    /// Whether a sample is due at `now`.
+    pub fn due(&self, now: Ps) -> bool {
+        now >= self.next_at
+    }
+
+    /// Record one sample row (values aligned with the configured names).
+    pub fn record(&mut self, now: Ps, values: &[f64]) {
+        debug_assert_eq!(values.len(), self.series.len());
+        for (s, &v) in self.series.iter_mut().zip(values) {
+            s.push(now, v);
+        }
+        self.next_at = now + self.interval;
+    }
+
+    pub fn series(&self, name: &str) -> Option<&TimeSeries> {
+        self.series.iter().find(|s| s.name == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rate_conversion() {
+        let mut ts = TimeSeries::new("pkts");
+        // 1000 packets per ms => 1e6 pkt/s.
+        ts.push(0, 0.0);
+        ts.push(1_000_000_000, 1000.0);
+        ts.push(2_000_000_000, 2000.0);
+        let rate = ts.to_rate();
+        assert_eq!(rate.samples.len(), 2);
+        assert!((rate.samples[0].value - 1e6).abs() < 1.0);
+    }
+
+    #[test]
+    fn sampler_cadence() {
+        let mut s = Sampler::new(100, &["a"]);
+        assert!(s.due(0));
+        s.record(0, &[1.0]);
+        assert!(!s.due(99));
+        assert!(s.due(100));
+        s.record(100, &[2.0]);
+        assert_eq!(s.series("a").unwrap().samples.len(), 2);
+    }
+
+    #[test]
+    fn windowed_mean() {
+        let mut ts = TimeSeries::new("x");
+        for i in 0..10 {
+            ts.push(i * 10, i as f64);
+        }
+        assert_eq!(ts.mean_in(0, 50), 2.0); // samples 0..4
+        assert_eq!(ts.mean_in(50, 100), 7.0); // samples 5..9
+    }
+}

@@ -1,0 +1,150 @@
+//! Link FIFOs: the buffered channels between routers, and between routers
+//! and tile network interfaces.
+//!
+//! Every entry carries a `ready_at` timestamp. Producers stamp flits with
+//! the time the downstream consumer may first observe them:
+//!
+//! * same frequency island — one router pipeline delay;
+//! * across islands — the resynchronizer latency ([`crate::clock::cdc_delay`]).
+//!
+//! Consumers only pop entries whose `ready_at` has passed, which yields
+//! registered (edge-to-edge) semantics without a two-phase tick.
+
+use std::collections::VecDeque;
+
+use super::packet::Flit;
+use crate::util::Ps;
+
+/// Index of a link FIFO in the fabric's arena.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct LinkId(pub u32);
+
+/// A bounded FIFO of timed flits.
+#[derive(Debug, Clone)]
+pub struct LinkFifo {
+    cap: usize,
+    q: VecDeque<(Ps, Flit)>,
+    /// Total flits ever pushed (stats).
+    pub pushed: u64,
+}
+
+impl LinkFifo {
+    pub fn new(cap: usize) -> Self {
+        assert!(cap > 0);
+        Self {
+            cap,
+            q: VecDeque::with_capacity(cap),
+            pushed: 0,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    pub fn len(&self) -> usize {
+        self.q.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.q.is_empty()
+    }
+
+    /// Space check — models the upstream credit counter.
+    pub fn can_push(&self) -> bool {
+        self.q.len() < self.cap
+    }
+
+    /// Push a flit that becomes visible at `ready_at`. Panics if full
+    /// (callers must check `can_push`, as hardware checks credits).
+    pub fn push(&mut self, flit: Flit, ready_at: Ps) {
+        assert!(self.can_push(), "link overflow: credit protocol violated");
+        debug_assert!(
+            self.q.back().map_or(true, |(t, _)| *t <= ready_at),
+            "FIFO ordering violated"
+        );
+        self.q.push_back((ready_at, flit));
+        self.pushed += 1;
+    }
+
+    /// Head flit if it is visible at `now`.
+    pub fn peek(&self, now: Ps) -> Option<&Flit> {
+        match self.q.front() {
+            Some((t, f)) if *t <= now => Some(f),
+            _ => None,
+        }
+    }
+
+    /// Pop the head flit if visible at `now`.
+    pub fn pop(&mut self, now: Ps) -> Option<Flit> {
+        if self.peek(now).is_some() {
+            self.q.pop_front().map(|(_, f)| f)
+        } else {
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::noc::packet::PacketId;
+    use crate::noc::topology::NodeId;
+
+    fn flit(seq: u16) -> Flit {
+        Flit {
+            packet: PacketId(0),
+            seq,
+            len: 4,
+            dst: NodeId(3),
+        }
+    }
+
+    #[test]
+    fn respects_ready_time() {
+        let mut l = LinkFifo::new(4);
+        l.push(flit(0), 100);
+        assert!(l.peek(99).is_none());
+        assert!(l.peek(100).is_some());
+        assert_eq!(l.pop(100).unwrap().seq, 0);
+    }
+
+    #[test]
+    fn capacity_enforced() {
+        let mut l = LinkFifo::new(2);
+        l.push(flit(0), 0);
+        l.push(flit(1), 0);
+        assert!(!l.can_push());
+    }
+
+    #[test]
+    #[should_panic(expected = "credit protocol violated")]
+    fn overflow_panics() {
+        let mut l = LinkFifo::new(1);
+        l.push(flit(0), 0);
+        l.push(flit(1), 0);
+    }
+
+    #[test]
+    fn fifo_order_preserved() {
+        let mut l = LinkFifo::new(4);
+        for i in 0..4 {
+            l.push(flit(i), (i as u64) * 10);
+        }
+        for i in 0..4 {
+            assert_eq!(l.pop(1000).unwrap().seq, i);
+        }
+        assert!(l.is_empty());
+    }
+
+    #[test]
+    fn head_blocks_until_ready_even_if_later_entries_exist() {
+        let mut l = LinkFifo::new(4);
+        l.push(flit(0), 50);
+        // Later flits cannot overtake the head.
+        l.push(flit(1), 60);
+        assert!(l.pop(40).is_none());
+        assert_eq!(l.pop(55).unwrap().seq, 0);
+        assert!(l.pop(55).is_none());
+    }
+}

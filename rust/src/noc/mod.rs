@@ -1,0 +1,21 @@
+//! Network-on-chip substrate: a 2D-mesh, input-buffered, wormhole-routed
+//! interconnect modelled after ESP's multi-plane NoC.
+//!
+//! The paper's SoCs attach one tile per NoC node of a 4-by-4 mesh; the
+//! NoC (plus memory controller) forms its own frequency island, so flits
+//! crossing from a tile into the NoC pass a resynchronizer (handled by the
+//! link FIFOs' ready-time stamps, see [`link`]).
+//!
+//! Planes: like ESP, the NoC is physically replicated into independent
+//! planes to keep message classes from deadlocking each other — plane 0
+//! carries DMA requests, plane 1 DMA responses, plane 2 MMIO/config.
+
+pub mod link;
+pub mod packet;
+pub mod router;
+pub mod topology;
+
+pub use link::{LinkFifo, LinkId};
+pub use packet::{Flit, FlitKind, Msg, Packet, PacketArena, PacketId, Plane, NUM_PLANES};
+pub use router::{ClockView, OutputRef, Router, RouterStats};
+pub use topology::{Mesh, NodeId, Port, NUM_PORTS};

@@ -1,0 +1,305 @@
+//! Packets, flits, and message payloads.
+//!
+//! The hot loop moves [`Flit`]s — small `Copy` values carrying a packet
+//! index — while full [`Packet`] descriptors live in a free-listed
+//! [`PacketArena`]. DMA payload *data* never rides in flits: blocks of
+//! real numbers live in [`crate::mem::BlockStore`] and messages reference
+//! them by id, so the functional datapath (PJRT kernels) and the timing
+//! datapath (flits) stay coherent without per-flit allocation.
+
+use super::topology::NodeId;
+use crate::mem::BlockId;
+
+/// Physical NoC plane (independent sub-network, as in ESP's 6-plane NoC).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[repr(usize)]
+pub enum Plane {
+    /// DMA read/write requests (tile -> MEM).
+    Request = 0,
+    /// DMA responses (MEM -> tile).
+    Response = 1,
+    /// MMIO / configuration traffic.
+    Config = 2,
+}
+
+pub const NUM_PLANES: usize = 3;
+
+impl Plane {
+    pub fn index(self) -> usize {
+        self as usize
+    }
+
+    pub fn from_index(i: usize) -> Plane {
+        [Plane::Request, Plane::Response, Plane::Config][i]
+    }
+}
+
+/// Message payloads. One message = one packet.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Msg {
+    /// DMA read burst request: `beats` data words starting at `addr`.
+    /// `tag` routes the response back to the issuing DMA engine/replica.
+    MemRead { addr: u64, beats: u16, tag: u32 },
+    /// DMA write burst: data carried as `beats` payload flits; the
+    /// functional content is `block[offset..offset+beats]`.
+    MemWrite {
+        addr: u64,
+        beats: u16,
+        tag: u32,
+        block: BlockId,
+        offset: u32,
+    },
+    /// Read response carrying `beats` data words.
+    MemReadResp {
+        beats: u16,
+        tag: u32,
+        block: BlockId,
+        offset: u32,
+    },
+    /// Write acknowledgement.
+    MemWriteAck { tag: u32 },
+    /// MMIO register write (CPU/host -> any tile or frequency register).
+    MmioWrite { addr: u64, value: u64 },
+    /// MMIO register read request.
+    MmioRead { addr: u64, tag: u32 },
+    /// MMIO read response.
+    MmioResp { value: u64, tag: u32 },
+}
+
+impl Msg {
+    /// Payload beats carried by the packet body (on top of the header).
+    pub fn payload_beats(&self) -> u16 {
+        match self {
+            Msg::MemWrite { beats, .. } | Msg::MemReadResp { beats, .. } => *beats,
+            _ => 0,
+        }
+    }
+
+    /// The plane this message class travels on.
+    pub fn plane(&self) -> Plane {
+        match self {
+            Msg::MemRead { .. } | Msg::MemWrite { .. } => Plane::Request,
+            Msg::MemReadResp { .. } | Msg::MemWriteAck { .. } => Plane::Response,
+            Msg::MmioWrite { .. } | Msg::MmioRead { .. } | Msg::MmioResp { .. } => Plane::Config,
+        }
+    }
+}
+
+/// Index of a live packet in the arena.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct PacketId(pub u32);
+
+/// A packet in flight: header metadata + payload length.
+#[derive(Debug, Clone)]
+pub struct Packet {
+    pub src: NodeId,
+    pub dst: NodeId,
+    pub msg: Msg,
+    /// Total flits: 1 header + payload beats (ESP-style single-flit
+    /// header carrying route info; tail is the last payload flit, or the
+    /// header itself for header-only packets).
+    pub len_flits: u16,
+    /// Injection timestamp (for NoC latency stats).
+    pub injected_at: crate::util::Ps,
+    /// Generation counter to catch stale ids in debug builds.
+    pub gen: u32,
+}
+
+/// One flow-control unit. `Copy`, 16 bytes, moved by value in the hot loop.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Flit {
+    pub packet: PacketId,
+    /// 0-based position within the packet.
+    pub seq: u16,
+    /// Total packet length (replicated so routers need no arena lookup
+    /// for wormhole bookkeeping).
+    pub len: u16,
+    pub dst: NodeId,
+}
+
+/// Flit position classification.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FlitKind {
+    Head,
+    Body,
+    Tail,
+    /// Single-flit packet (header only).
+    HeadTail,
+}
+
+impl Flit {
+    pub fn kind(&self) -> FlitKind {
+        let last = self.seq + 1 == self.len;
+        match (self.seq == 0, last) {
+            (true, true) => FlitKind::HeadTail,
+            (true, false) => FlitKind::Head,
+            (false, true) => FlitKind::Tail,
+            (false, false) => FlitKind::Body,
+        }
+    }
+
+    pub fn is_head(&self) -> bool {
+        self.seq == 0
+    }
+
+    pub fn is_tail(&self) -> bool {
+        self.seq + 1 == self.len
+    }
+}
+
+/// Free-listed arena of live packets (no allocation in the hot loop once
+/// warmed up).
+#[derive(Debug, Default)]
+pub struct PacketArena {
+    slots: Vec<Packet>,
+    free: Vec<u32>,
+    live: usize,
+    /// Monotonic allocation counter (stats; also feeds `gen`).
+    allocated: u64,
+}
+
+impl PacketArena {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Allocate a packet; returns its id. `len_flits` is derived from the
+    /// message payload (1 header + payload beats).
+    pub fn alloc(
+        &mut self,
+        src: NodeId,
+        dst: NodeId,
+        msg: Msg,
+        injected_at: crate::util::Ps,
+    ) -> PacketId {
+        let len_flits = 1 + msg.payload_beats();
+        self.allocated += 1;
+        self.live += 1;
+        let gen = self.allocated as u32;
+        let pkt = Packet {
+            src,
+            dst,
+            msg,
+            len_flits,
+            injected_at,
+            gen,
+        };
+        if let Some(idx) = self.free.pop() {
+            self.slots[idx as usize] = pkt;
+            PacketId(idx)
+        } else {
+            self.slots.push(pkt);
+            PacketId((self.slots.len() - 1) as u32)
+        }
+    }
+
+    pub fn get(&self, id: PacketId) -> &Packet {
+        &self.slots[id.0 as usize]
+    }
+
+    /// Release a packet (after ejection at its destination).
+    pub fn release(&mut self, id: PacketId) {
+        self.live -= 1;
+        self.free.push(id.0);
+    }
+
+    pub fn live(&self) -> usize {
+        self.live
+    }
+
+    pub fn allocated(&self) -> u64 {
+        self.allocated
+    }
+
+    /// Build the `seq`-th flit of packet `id`.
+    pub fn flit(&self, id: PacketId, seq: u16) -> Flit {
+        let p = self.get(id);
+        debug_assert!(seq < p.len_flits);
+        Flit {
+            packet: id,
+            seq,
+            len: p.len_flits,
+            dst: p.dst,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk_arena() -> (PacketArena, PacketId) {
+        let mut a = PacketArena::new();
+        let id = a.alloc(
+            NodeId(0),
+            NodeId(5),
+            Msg::MemReadResp {
+                beats: 16,
+                tag: 7,
+                block: BlockId(1),
+                offset: 0,
+            },
+            100,
+        );
+        (a, id)
+    }
+
+    #[test]
+    fn packet_length_includes_header() {
+        let (a, id) = mk_arena();
+        assert_eq!(a.get(id).len_flits, 17);
+    }
+
+    #[test]
+    fn flit_kinds() {
+        let (a, id) = mk_arena();
+        assert_eq!(a.flit(id, 0).kind(), FlitKind::Head);
+        assert_eq!(a.flit(id, 8).kind(), FlitKind::Body);
+        assert_eq!(a.flit(id, 16).kind(), FlitKind::Tail);
+
+        let mut a2 = PacketArena::new();
+        let single = a2.alloc(
+            NodeId(0),
+            NodeId(1),
+            Msg::MemRead {
+                addr: 0,
+                beats: 16,
+                tag: 0,
+            },
+            0,
+        );
+        assert_eq!(a2.flit(single, 0).kind(), FlitKind::HeadTail);
+    }
+
+    #[test]
+    fn arena_reuses_slots() {
+        let (mut a, id) = mk_arena();
+        let first_idx = id.0;
+        a.release(id);
+        assert_eq!(a.live(), 0);
+        let id2 = a.alloc(
+            NodeId(1),
+            NodeId(2),
+            Msg::MemWriteAck { tag: 1 },
+            5,
+        );
+        assert_eq!(id2.0, first_idx, "slot reused");
+        assert_eq!(a.live(), 1);
+        assert_eq!(a.allocated(), 2);
+    }
+
+    #[test]
+    fn planes_by_message_class() {
+        assert_eq!(
+            Msg::MemRead {
+                addr: 0,
+                beats: 1,
+                tag: 0
+            }
+            .plane(),
+            Plane::Request
+        );
+        assert_eq!(Msg::MemWriteAck { tag: 0 }.plane(), Plane::Response);
+        assert_eq!(Msg::MmioRead { addr: 0, tag: 0 }.plane(), Plane::Config);
+    }
+}

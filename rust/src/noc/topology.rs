@@ -1,0 +1,198 @@
+//! Mesh topology: node coordinates, ports, and XY dimension-order routing.
+
+/// A NoC node (one per tile). `id = y * width + x`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct NodeId(pub u16);
+
+impl NodeId {
+    pub fn index(self) -> usize {
+        self.0 as usize
+    }
+}
+
+/// Router ports. `Local` attaches the tile's network interface.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[repr(usize)]
+pub enum Port {
+    North = 0,
+    South = 1,
+    East = 2,
+    West = 3,
+    Local = 4,
+}
+
+pub const NUM_PORTS: usize = 5;
+
+pub const ALL_PORTS: [Port; NUM_PORTS] =
+    [Port::North, Port::South, Port::East, Port::West, Port::Local];
+
+impl Port {
+    pub fn index(self) -> usize {
+        self as usize
+    }
+
+    pub fn from_index(i: usize) -> Port {
+        ALL_PORTS[i]
+    }
+
+    /// The port on the neighbouring router that faces back at us.
+    pub fn opposite(self) -> Port {
+        match self {
+            Port::North => Port::South,
+            Port::South => Port::North,
+            Port::East => Port::West,
+            Port::West => Port::East,
+            Port::Local => Port::Local,
+        }
+    }
+}
+
+/// A `width x height` 2D mesh.
+#[derive(Debug, Clone)]
+pub struct Mesh {
+    pub width: u16,
+    pub height: u16,
+}
+
+impl Mesh {
+    pub fn new(width: u16, height: u16) -> Self {
+        assert!(width > 0 && height > 0);
+        Self { width, height }
+    }
+
+    pub fn nodes(&self) -> usize {
+        self.width as usize * self.height as usize
+    }
+
+    pub fn node(&self, x: u16, y: u16) -> NodeId {
+        debug_assert!(x < self.width && y < self.height);
+        NodeId(y * self.width + x)
+    }
+
+    pub fn coords(&self, n: NodeId) -> (u16, u16) {
+        (n.0 % self.width, n.0 / self.width)
+    }
+
+    /// Neighbour of `n` through `port`, if it exists.
+    pub fn neighbor(&self, n: NodeId, port: Port) -> Option<NodeId> {
+        let (x, y) = self.coords(n);
+        match port {
+            Port::North => (y > 0).then(|| self.node(x, y - 1)),
+            Port::South => (y + 1 < self.height).then(|| self.node(x, y + 1)),
+            Port::East => (x + 1 < self.width).then(|| self.node(x + 1, y)),
+            Port::West => (x > 0).then(|| self.node(x - 1, y)),
+            Port::Local => None,
+        }
+    }
+
+    /// XY dimension-order routing: the output port at `here` for a packet
+    /// headed to `dst`. X first, then Y; `Local` when arrived.
+    pub fn route_xy(&self, here: NodeId, dst: NodeId) -> Port {
+        let (hx, hy) = self.coords(here);
+        let (dx, dy) = self.coords(dst);
+        if dx > hx {
+            Port::East
+        } else if dx < hx {
+            Port::West
+        } else if dy > hy {
+            Port::South
+        } else if dy < hy {
+            Port::North
+        } else {
+            Port::Local
+        }
+    }
+
+    /// Manhattan hop distance.
+    pub fn hops(&self, a: NodeId, b: NodeId) -> u16 {
+        let (ax, ay) = self.coords(a);
+        let (bx, by) = self.coords(b);
+        ax.abs_diff(bx) + ay.abs_diff(by)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::forall;
+
+    #[test]
+    fn coords_roundtrip() {
+        let m = Mesh::new(4, 4);
+        for y in 0..4 {
+            for x in 0..4 {
+                let n = m.node(x, y);
+                assert_eq!(m.coords(n), (x, y));
+            }
+        }
+    }
+
+    #[test]
+    fn neighbors_edge_cases() {
+        let m = Mesh::new(4, 4);
+        let nw = m.node(0, 0);
+        assert_eq!(m.neighbor(nw, Port::North), None);
+        assert_eq!(m.neighbor(nw, Port::West), None);
+        assert_eq!(m.neighbor(nw, Port::East), Some(m.node(1, 0)));
+        assert_eq!(m.neighbor(nw, Port::South), Some(m.node(0, 1)));
+        let se = m.node(3, 3);
+        assert_eq!(m.neighbor(se, Port::South), None);
+        assert_eq!(m.neighbor(se, Port::East), None);
+    }
+
+    #[test]
+    fn neighbor_port_symmetry() {
+        let m = Mesh::new(5, 3);
+        for n in 0..m.nodes() {
+            let n = NodeId(n as u16);
+            for p in [Port::North, Port::South, Port::East, Port::West] {
+                if let Some(nb) = m.neighbor(n, p) {
+                    assert_eq!(m.neighbor(nb, p.opposite()), Some(n));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn xy_routes_x_first() {
+        let m = Mesh::new(4, 4);
+        assert_eq!(m.route_xy(m.node(0, 0), m.node(3, 2)), Port::East);
+        assert_eq!(m.route_xy(m.node(3, 0), m.node(3, 2)), Port::South);
+        assert_eq!(m.route_xy(m.node(2, 2), m.node(0, 2)), Port::West);
+        assert_eq!(m.route_xy(m.node(2, 2), m.node(2, 0)), Port::North);
+        assert_eq!(m.route_xy(m.node(1, 1), m.node(1, 1)), Port::Local);
+    }
+
+    #[test]
+    fn prop_xy_terminates_and_matches_hops() {
+        // Following route_xy from any src reaches dst in exactly
+        // hops(src,dst) steps (XY is minimal and deadlock-free).
+        forall(
+            0x10C,
+            300,
+            |r| {
+                let w = (r.next_below(6) + 1) as u16;
+                let h = (r.next_below(6) + 1) as u16;
+                let m = Mesh::new(w, h);
+                let a = NodeId(r.next_below(m.nodes() as u64) as u16);
+                let b = NodeId(r.next_below(m.nodes() as u64) as u16);
+                (m, a, b)
+            },
+            |(m, a, b)| {
+                let mut here = *a;
+                let mut steps = 0;
+                loop {
+                    let p = m.route_xy(here, *b);
+                    if p == Port::Local {
+                        break;
+                    }
+                    here = m.neighbor(here, p).expect("route into the void");
+                    steps += 1;
+                    assert!(steps <= m.nodes() as u16, "routing loop");
+                }
+                assert_eq!(here, *b);
+                assert_eq!(steps, m.hops(*a, *b));
+            },
+        );
+    }
+}

@@ -1,0 +1,146 @@
+//! Per-island energy accounting — the metric fine-grained DFS exists to
+//! optimize (the paper motivates Vespa with run-time optimization and
+//! cites run-time power monitoring [7]; this is the corresponding
+//! framework feature).
+//!
+//! Model: dynamic energy per island = `C_eff x cycles` with the cycle
+//! count taken from the clock domains (dynamic power scales with f, so
+//! energy scales with delivered cycles at fixed voltage — FPGAs do not
+//! scale voltage with DFS), plus leakage proportional to wall time and
+//! the island's configured-logic share. `C_eff` per island is derived
+//! from the floorplan's LUT+FF counts (switching capacitance tracks
+//! utilized logic).
+
+use crate::config::{SocConfig, TileKind};
+use crate::resources::{mra_area, AccelArea, Utilization};
+use crate::sim::Soc;
+use crate::util::Ps;
+
+/// Energy model coefficients (relative units; absolute calibration would
+/// need the board's power rails, which the paper does not report either).
+#[derive(Debug, Clone)]
+pub struct EnergyModel {
+    /// Dynamic energy per (kLUT-equivalent x cycle).
+    pub dyn_per_klut_cycle: f64,
+    /// Leakage power per kLUT-equivalent (energy per second).
+    pub leak_per_klut_s: f64,
+}
+
+impl Default for EnergyModel {
+    fn default() -> Self {
+        Self {
+            dyn_per_klut_cycle: 1.0,
+            leak_per_klut_s: 2.0e6,
+        }
+    }
+}
+
+/// Energy report for one run window.
+#[derive(Debug, Clone)]
+pub struct EnergyReport {
+    /// Per-island (name, kLUT-equivalent, cycles, energy).
+    pub islands: Vec<(String, f64, u64, f64)>,
+    pub total: f64,
+    pub wall: Ps,
+}
+
+/// kLUT-equivalent switching weight of each island (LUT + FF/2 of the
+/// tiles it contains; routers weigh on the NoC island).
+pub fn island_weights(cfg: &SocConfig) -> crate::Result<Vec<f64>> {
+    let mut w = vec![0f64; cfg.islands.len()];
+    for t in &cfg.tiles {
+        let u: Utilization = match &t.kind {
+            TileKind::Accel { accel, replicas } => mra_area(&AccelArea::lookup(accel)?, *replicas),
+            TileKind::Cpu => Utilization::new(55_000, 42_000, 40, 27),
+            TileKind::Mem => Utilization::new(18_000, 16_000, 24, 0),
+            TileKind::Io => Utilization::new(9_000, 9_500, 8, 0),
+            TileKind::Tg => Utilization::new(6_700, 9_300, 2, 0),
+        };
+        w[t.island] += (u.lut as f64 + u.ff as f64 / 2.0) / 1000.0;
+    }
+    // NoC routers (3 planes x nodes) charge the NoC island.
+    w[cfg.noc.island] += cfg.tiles.len() as f64 * 3.0;
+    Ok(w)
+}
+
+/// Compute the energy spent so far on `soc` under `model`.
+pub fn energy_report(soc: &Soc, model: &EnergyModel) -> crate::Result<EnergyReport> {
+    let weights = island_weights(&soc.cfg)?;
+    let wall = soc.now;
+    let mut islands = Vec::new();
+    let mut total = 0.0;
+    for (i, d) in soc.islands.iter().enumerate() {
+        let dynamic = model.dyn_per_klut_cycle * weights[i] * d.cycles as f64;
+        let leak = model.leak_per_klut_s * weights[i] * wall as f64 / 1e12;
+        let e = dynamic + leak;
+        total += e;
+        islands.push((d.name.clone(), weights[i], d.cycles, e));
+    }
+    Ok(EnergyReport {
+        islands,
+        total,
+        wall,
+    })
+}
+
+/// Energy per completed invocation on `tile` — the run-time
+/// optimization objective a DFS policy can minimize.
+pub fn energy_per_invocation(soc: &Soc, tile: usize, model: &EnergyModel) -> crate::Result<f64> {
+    let inv = soc
+        .host_read_counter(tile, crate::monitor::CounterReg::Invocations)
+        .max(1);
+    Ok(energy_report(soc, model)?.total / inv as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets::{paper_soc, ISL_NOC, ISL_TG};
+    use crate::runtime::RefCompute;
+    use crate::sim::Soc;
+
+    #[test]
+    fn weights_cover_all_islands() {
+        let cfg = paper_soc(("dfmul", 4), ("gsm", 1));
+        let w = island_weights(&cfg).unwrap();
+        assert_eq!(w.len(), 5);
+        assert!(w.iter().all(|&x| x > 0.0), "{w:?}");
+        // The TG island holds 11 tiles: heaviest after CPU+IO/NoC.
+        assert!(w[ISL_TG] > w[1], "{w:?}");
+    }
+
+    #[test]
+    fn slower_clock_costs_less_energy() {
+        let run = |noc_mhz: u64| -> f64 {
+            let mut cfg = paper_soc(("dfadd", 1), ("dfadd", 1));
+            cfg.islands[ISL_NOC].freq_mhz = noc_mhz;
+            let mut soc = Soc::build(cfg, Box::new(RefCompute::new())).unwrap();
+            soc.host_set_tg_active(4);
+            soc.run_for(5_000_000_000);
+            energy_report(&soc, &EnergyModel::default()).unwrap().total
+        };
+        let fast = run(100);
+        let slow = run(20);
+        assert!(
+            slow < fast * 0.9,
+            "NoC at 20 MHz must spend less: {slow:.0} vs {fast:.0}"
+        );
+    }
+
+    #[test]
+    fn energy_per_invocation_tradeoff_visible() {
+        // dfmul 2x at accel 50 vs 10 MHz: the slow island saves island
+        // energy but invocations take 5x longer (leakage + other islands
+        // keep burning) — the classic race-to-idle tension the metric
+        // exposes. We only assert the metric is finite and positive.
+        let mut cfg = paper_soc(("dfmul", 2), ("dfadd", 1));
+        cfg.islands[1].freq_mhz = 50;
+        let mut soc = Soc::build(cfg, Box::new(RefCompute::new())).unwrap();
+        let a1 = soc.cfg.node_of(crate::config::presets::A1_POS.0, crate::config::presets::A1_POS.1);
+        crate::sim::stage_inputs_for(&mut soc, a1, 1);
+        soc.mra_mut(a1).functional_every_invocation = false;
+        soc.run_for(3_000_000_000);
+        let epi = energy_per_invocation(&soc, a1, &EnergyModel::default()).unwrap();
+        assert!(epi.is_finite() && epi > 0.0);
+    }
+}

@@ -1,0 +1,48 @@
+//! Run-time DFS policies.
+//!
+//! The monitoring infrastructure exists "to support run-time optimization
+//! policies and design space exploration" (§II-C). Two policies ship:
+//!
+//! * [`StaticSchedule`] — the timed frequency program Fig. 4 uses
+//!   (stepping island clocks at fixed instants);
+//! * [`ReactiveDfs`] — the run-time optimizer the paper motivates:
+//!   boosts the NoC island when observed DMA round-trip times degrade,
+//!   and relaxes it when the interconnect is under-utilized.
+
+pub mod energy;
+pub mod reactive;
+pub mod static_schedule;
+
+pub use energy::{energy_per_invocation, energy_report, EnergyModel, EnergyReport};
+pub use reactive::ReactiveDfs;
+pub use static_schedule::StaticSchedule;
+
+use crate::sim::Soc;
+use crate::util::Ps;
+
+/// A run-time DFS policy driven by sampled monitor state.
+pub trait DfsPolicy {
+    /// Called at each policy interval; may issue frequency requests.
+    fn on_sample(&mut self, soc: &mut Soc, now: Ps);
+
+    fn name(&self) -> &'static str;
+}
+
+/// Drive a policy over a simulation run: invokes `policy.on_sample`
+/// every `interval` ps while advancing the SoC to `t_end`.
+pub fn run_with_policy(
+    soc: &mut Soc,
+    policy: &mut dyn DfsPolicy,
+    interval: Ps,
+    t_end: Ps,
+) {
+    let mut next = soc.now + interval;
+    while soc.now < t_end {
+        let target = next.min(t_end);
+        soc.run_until(target);
+        if soc.now >= next {
+            policy.on_sample(soc, soc.now);
+            next += interval;
+        }
+    }
+}

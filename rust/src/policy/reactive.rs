@@ -1,0 +1,136 @@
+//! Reactive DFS: the run-time optimization the paper's monitoring
+//! infrastructure is built to enable.
+//!
+//! Control law (hysteresis bang-bang on observed round-trip time):
+//! every interval, read the mean DMA RTT of the watched accelerator
+//! tiles since the last sample. If it exceeds `rtt_high_ns`, step the
+//! NoC island frequency up; if it is below `rtt_low_ns`, step down
+//! (saving power on an under-utilized interconnect, cf. [7] in the
+//! paper). Counters are read exactly as the CPU/host would read them —
+//! through the monitor file.
+
+use crate::monitor::CounterReg;
+use crate::sim::Soc;
+use crate::util::Ps;
+
+use super::DfsPolicy;
+
+/// The reactive policy.
+#[derive(Debug, Clone)]
+pub struct ReactiveDfs {
+    /// Island to actuate (the NoC+MEM island in the paper preset).
+    pub island: usize,
+    /// Accelerator tiles whose RTT is watched.
+    pub watch_tiles: Vec<usize>,
+    pub rtt_high_ns: f64,
+    pub rtt_low_ns: f64,
+    pub step_mhz: u64,
+    /// Last cumulative (sum, count) per watched tile.
+    last: Vec<(u64, u64)>,
+    /// Decisions taken: (time, new MHz).
+    pub actions: Vec<(Ps, u64)>,
+}
+
+impl ReactiveDfs {
+    pub fn new(island: usize, watch_tiles: Vec<usize>, rtt_high_ns: f64, rtt_low_ns: f64) -> Self {
+        let n = watch_tiles.len();
+        Self {
+            island,
+            watch_tiles,
+            rtt_high_ns,
+            rtt_low_ns,
+            step_mhz: 10,
+            last: vec![(0, 0); n],
+            actions: Vec::new(),
+        }
+    }
+
+    /// Mean RTT (ns) across watched tiles since the previous sample.
+    fn window_rtt_ns(&mut self, soc: &Soc) -> Option<f64> {
+        let mut dsum = 0u64;
+        let mut dcnt = 0u64;
+        for (i, &t) in self.watch_tiles.iter().enumerate() {
+            let sum = soc.host_read_counter(t, CounterReg::RttSum);
+            let cnt = soc.host_read_counter(t, CounterReg::RttCnt);
+            dsum += sum - self.last[i].0;
+            dcnt += cnt - self.last[i].1;
+            self.last[i] = (sum, cnt);
+        }
+        (dcnt > 0).then(|| dsum as f64 / dcnt as f64 / 1e3)
+    }
+}
+
+impl DfsPolicy for ReactiveDfs {
+    fn on_sample(&mut self, soc: &mut Soc, now: Ps) {
+        let Some(rtt) = self.window_rtt_ns(soc) else {
+            return;
+        };
+        let cur = soc.islands[self.island].freq(now).as_mhz();
+        let (min, max) = (
+            soc.islands[self.island].min.as_mhz(),
+            soc.islands[self.island].max.as_mhz(),
+        );
+        let target = if rtt > self.rtt_high_ns && cur < max {
+            (cur + self.step_mhz).min(max)
+        } else if rtt < self.rtt_low_ns && cur > min {
+            cur.saturating_sub(self.step_mhz).max(min)
+        } else {
+            return;
+        };
+        if target != cur && soc.host_write_freq(self.island, target).is_ok() {
+            self.actions.push((now, target));
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "reactive-rtt"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets::{paper_soc, A2_POS};
+    use crate::policy::run_with_policy;
+    use crate::runtime::RefCompute;
+    use crate::sim::{stage_inputs_for, Soc};
+
+    /// Under heavy TG load at a slow NoC clock, RTTs blow up and the
+    /// policy must boost the NoC island.
+    #[test]
+    fn boosts_noc_under_congestion() {
+        let cfg = paper_soc(("dfmul", 4), ("dfmul", 4));
+        let mut soc = Soc::build(cfg, Box::new(RefCompute::new())).unwrap();
+        let a2 = soc.cfg.node_of(A2_POS.0, A2_POS.1);
+        stage_inputs_for(&mut soc, a2, 1);
+        soc.mra_mut(a2).functional_every_invocation = false;
+        soc.host_write_freq(0, 10).unwrap(); // slow NoC
+        soc.host_set_tg_active(11);
+        soc.run_until(30_000_000); // let the DFS swap + traffic build
+
+        let mut pol = ReactiveDfs::new(0, vec![a2], 2_000.0, 100.0);
+        run_with_policy(&mut soc, &mut pol, 50_000_000, 500_000_000);
+        assert!(
+            !pol.actions.is_empty(),
+            "policy should have boosted the NoC island"
+        );
+        let last = pol.actions.last().unwrap().1;
+        assert!(last > 10, "frequency raised from 10 MHz, got {last}");
+    }
+
+    /// With no traffic at all, the policy steps the NoC island down.
+    #[test]
+    fn relaxes_idle_noc() {
+        let cfg = paper_soc(("dfadd", 1), ("dfadd", 1));
+        let mut soc = Soc::build(cfg, Box::new(RefCompute::new())).unwrap();
+        let a2 = soc.cfg.node_of(A2_POS.0, A2_POS.1);
+        stage_inputs_for(&mut soc, a2, 1);
+        soc.mra_mut(a2).functional_every_invocation = false;
+        // NoC at 100 MHz, one lazy accelerator: RTTs are far below the
+        // relax threshold, so the policy steps the island down.
+        let mut pol = ReactiveDfs::new(0, vec![a2], 100_000.0, 20_000.0);
+        run_with_policy(&mut soc, &mut pol, 100_000_000, 2_000_000_000);
+        assert!(!pol.actions.is_empty(), "policy should relax the NoC");
+        assert!(pol.actions.iter().all(|&(_, f)| f < 100));
+    }
+}

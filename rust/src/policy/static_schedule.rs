@@ -1,0 +1,84 @@
+//! Timed frequency program (the Fig. 4 experiment driver).
+
+use crate::sim::Soc;
+use crate::util::Ps;
+
+use super::DfsPolicy;
+
+/// A list of `(time, island, MHz)` steps applied as simulation time
+/// passes them.
+#[derive(Debug, Clone, Default)]
+pub struct StaticSchedule {
+    steps: Vec<(Ps, usize, u64)>,
+    next: usize,
+    /// Steps that were rejected by the island (range/grid violations).
+    pub rejected: u64,
+}
+
+impl StaticSchedule {
+    pub fn new(mut steps: Vec<(Ps, usize, u64)>) -> Self {
+        steps.sort_by_key(|&(t, ..)| t);
+        Self {
+            steps,
+            next: 0,
+            rejected: 0,
+        }
+    }
+
+    /// Remaining steps.
+    pub fn pending(&self) -> usize {
+        self.steps.len() - self.next
+    }
+}
+
+impl DfsPolicy for StaticSchedule {
+    fn on_sample(&mut self, soc: &mut Soc, now: Ps) {
+        while self.next < self.steps.len() && self.steps[self.next].0 <= now {
+            let (_, island, mhz) = self.steps[self.next];
+            if soc.host_write_freq(island, mhz).is_err() {
+                self.rejected += 1;
+            }
+            self.next += 1;
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "static-schedule"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets::paper_soc;
+    use crate::policy::run_with_policy;
+    use crate::runtime::RefCompute;
+    use crate::sim::Soc;
+
+    #[test]
+    fn applies_steps_in_order() {
+        let cfg = paper_soc(("dfadd", 1), ("dfadd", 1));
+        let mut soc = Soc::build(cfg, Box::new(RefCompute::new())).unwrap();
+        let mut sched = StaticSchedule::new(vec![
+            (50_000_000, 1, 10),
+            (10_000_000, 3, 25),
+        ]);
+        run_with_policy(&mut soc, &mut sched, 5_000_000, 100_000_000);
+        assert_eq!(sched.pending(), 0);
+        assert_eq!(sched.rejected, 0);
+        // After actuator latency both islands run the new frequencies.
+        soc.run_until(150_000_000);
+        assert_eq!(soc.islands[1].freq(soc.now).as_mhz(), 10);
+        assert_eq!(soc.islands[3].freq(soc.now).as_mhz(), 25);
+    }
+
+    #[test]
+    fn rejects_out_of_range_steps() {
+        let cfg = paper_soc(("dfadd", 1), ("dfadd", 1));
+        let mut soc = Soc::build(cfg, Box::new(RefCompute::new())).unwrap();
+        // A1 island max is 50 MHz.
+        let mut sched = StaticSchedule::new(vec![(1_000_000, 1, 100)]);
+        run_with_policy(&mut soc, &mut sched, 1_000_000, 5_000_000);
+        assert_eq!(sched.rejected, 1);
+    }
+}

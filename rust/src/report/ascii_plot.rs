@@ -1,0 +1,88 @@
+//! Minimal ASCII line plots for the figure benches.
+
+use crate::monitor::TimeSeries;
+
+/// Render one or more series into an ASCII plot of `width x height`
+/// characters. Each series gets a distinct glyph.
+pub fn plot(series: &[&TimeSeries], width: usize, height: usize) -> String {
+    const GLYPHS: [char; 6] = ['*', 'o', '+', 'x', '#', '@'];
+    let (mut t_min, mut t_max) = (u64::MAX, 0u64);
+    let (mut v_min, mut v_max) = (f64::INFINITY, f64::NEG_INFINITY);
+    for s in series {
+        for p in &s.samples {
+            t_min = t_min.min(p.t);
+            t_max = t_max.max(p.t);
+            v_min = v_min.min(p.value);
+            v_max = v_max.max(p.value);
+        }
+    }
+    if t_min >= t_max || !v_min.is_finite() {
+        return "(empty plot)\n".to_string();
+    }
+    if (v_max - v_min).abs() < 1e-12 {
+        v_max = v_min + 1.0;
+    }
+    let mut grid = vec![vec![' '; width]; height];
+    for (si, s) in series.iter().enumerate() {
+        let g = GLYPHS[si % GLYPHS.len()];
+        for p in &s.samples {
+            let x = ((p.t - t_min) as f64 / (t_max - t_min) as f64 * (width - 1) as f64) as usize;
+            let yf = (p.value - v_min) / (v_max - v_min);
+            let y = height - 1 - (yf * (height - 1) as f64) as usize;
+            grid[y][x] = g;
+        }
+    }
+    let mut out = String::new();
+    out.push_str(&format!("{v_max:>12.3} ┐\n"));
+    for row in grid {
+        out.push_str("             │");
+        out.extend(row);
+        out.push('\n');
+    }
+    out.push_str(&format!(
+        "{v_min:>12.3} └{}\n",
+        "─".repeat(width)
+    ));
+    out.push_str(&format!(
+        "             {:.1}us .. {:.1}us\n",
+        t_min as f64 / 1e6,
+        t_max as f64 / 1e6
+    ));
+    let mut legend = String::new();
+    for (si, s) in series.iter().enumerate() {
+        legend.push_str(&format!("  {} {}", GLYPHS[si % GLYPHS.len()], s.name));
+    }
+    out.push_str(&format!("legend:{legend}\n"));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plots_a_ramp() {
+        let mut ts = TimeSeries::new("ramp");
+        for i in 0..50 {
+            ts.push(i * 1000, i as f64);
+        }
+        let s = plot(&[&ts], 40, 10);
+        assert!(s.contains('*'));
+        assert!(s.contains("ramp"));
+    }
+
+    #[test]
+    fn empty_series_safe() {
+        let ts = TimeSeries::new("e");
+        assert_eq!(plot(&[&ts], 10, 5), "(empty plot)\n");
+    }
+
+    #[test]
+    fn constant_series_safe() {
+        let mut ts = TimeSeries::new("c");
+        ts.push(0, 5.0);
+        ts.push(100, 5.0);
+        let s = plot(&[&ts], 10, 5);
+        assert!(s.contains('*'));
+    }
+}

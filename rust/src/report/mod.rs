@@ -1,0 +1,9 @@
+//! Table and time-series rendering for the reproduction benches: aligned
+//! text tables (the paper's tables) and ASCII line plots (the figures),
+//! plus CSV export for external plotting.
+
+pub mod ascii_plot;
+pub mod table;
+
+pub use ascii_plot::plot;
+pub use table::Table;

@@ -1,0 +1,110 @@
+//! Per-accelerator HLS characterization and the ESP tile shared-logic
+//! constant.
+//!
+//! `BASELINE_TILE` figures are Table I's 1x columns: the full accelerator
+//! *tile* (shared ESP infrastructure + one accelerator core) as reported
+//! post-implementation by Vivado. `SHARED_TILE` is the ESP tile
+//! infrastructure (NI, DMA, monitors, bridge base) — the intercept the
+//! model uses to separate core from tile (DESIGN.md documents the
+//! fitting: identical across all five accelerators to within ~1%).
+
+use super::fpga::Utilization;
+
+/// ESP accelerator-tile shared infrastructure.
+pub const SHARED_TILE: Utilization = Utilization::new(5_484, 8_392, 2, 0);
+
+/// One accelerator's characterization.
+#[derive(Debug, Clone)]
+pub struct AccelArea {
+    pub name: &'static str,
+    /// Full 1x tile utilization (Table I baseline columns).
+    pub baseline_tile: Utilization,
+    /// Table I baseline throughput in MB/s (for reporting only).
+    pub baseline_thr_mbs: f64,
+}
+
+impl AccelArea {
+    /// The five CHStone accelerators of the paper.
+    pub fn db() -> Vec<AccelArea> {
+        vec![
+            AccelArea {
+                name: "adpcm",
+                baseline_tile: Utilization::new(10_899, 11_720, 25, 81),
+                baseline_thr_mbs: 1.40,
+            },
+            AccelArea {
+                name: "dfadd",
+                baseline_tile: Utilization::new(11_268, 11_199, 2, 9),
+                baseline_thr_mbs: 9.22,
+            },
+            AccelArea {
+                name: "dfmul",
+                baseline_tile: Utilization::new(8_435, 10_222, 2, 25),
+                baseline_thr_mbs: 8.70,
+            },
+            AccelArea {
+                name: "dfsin",
+                baseline_tile: Utilization::new(16_627, 14_997, 2, 52),
+                baseline_thr_mbs: 0.33,
+            },
+            AccelArea {
+                name: "gsm",
+                baseline_tile: Utilization::new(9_900, 11_418, 18, 62),
+                baseline_thr_mbs: 4.61,
+            },
+        ]
+    }
+
+    pub fn lookup(name: &str) -> crate::Result<AccelArea> {
+        Self::db()
+            .into_iter()
+            .find(|a| a.name == name)
+            .ok_or_else(|| anyhow::anyhow!("no area characterization for {name:?}"))
+    }
+
+    /// The accelerator *core* (baseline tile minus shared infrastructure).
+    pub fn core(&self) -> Utilization {
+        Utilization {
+            lut: self.baseline_tile.lut - SHARED_TILE.lut,
+            ff: self.baseline_tile.ff - SHARED_TILE.ff,
+            bram: self.baseline_tile.bram - SHARED_TILE.bram,
+            dsp: self.baseline_tile.dsp - SHARED_TILE.dsp,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn db_complete() {
+        assert_eq!(AccelArea::db().len(), 5);
+        assert!(AccelArea::lookup("gsm").is_ok());
+        assert!(AccelArea::lookup("x").is_err());
+    }
+
+    #[test]
+    fn cores_are_positive() {
+        for a in AccelArea::db() {
+            let c = a.core();
+            assert!(c.lut > 0, "{}", a.name);
+            assert!(c.ff > 0, "{}", a.name);
+            assert_eq!(c.dsp, a.baseline_tile.dsp, "DSPs all in the core");
+        }
+    }
+
+    #[test]
+    fn baseline_under_paper_utilization_caps() {
+        // §III-A: each baseline accelerator tile occupies up to 1.4% LUT,
+        // 0.6% FF, 1.0% BRAM, 3.8% DSP of the Virtex-7 2000T.
+        use super::super::fpga::XC7V2000T;
+        for a in AccelArea::db() {
+            let p = a.baseline_tile.percent_of(&XC7V2000T);
+            assert!(p[0] <= 1.4 + 0.01, "{} LUT {:.2}%", a.name, p[0]);
+            assert!(p[1] <= 0.6 + 0.02, "{} FF {:.2}%", a.name, p[1]);
+            assert!(p[2] <= 1.0 + 0.01, "{} BRAM {:.2}%", a.name, p[2]);
+            assert!(p[3] <= 3.8 + 0.01, "{} DSP {:.2}%", a.name, p[3]);
+        }
+    }
+}

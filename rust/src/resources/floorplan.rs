@@ -1,0 +1,172 @@
+//! Floorplanner: places the SoC's tiles onto the FPGA's clock-region
+//! grid and renders Fig. 2's floorplan view.
+//!
+//! The placement follows the prototype flow: each SoC tile maps to one
+//! clock region of the Virtex-7 grid (the device has enough regions for
+//! a 4x4 SoC), keeping the NoC column structure, and the per-region
+//! resource demand is checked against the region's share of the device.
+
+use crate::config::{SocConfig, TileKind};
+
+use super::accel_db::{AccelArea, SHARED_TILE};
+use super::fpga::{FpgaDevice, Utilization};
+use super::mra_model::mra_area;
+
+/// One placed region.
+#[derive(Debug, Clone)]
+pub struct Region {
+    pub x: u16,
+    pub y: u16,
+    pub label: String,
+    pub kind: &'static str,
+    pub util: Utilization,
+    pub island: usize,
+}
+
+/// A computed floorplan.
+#[derive(Debug, Clone)]
+pub struct Floorplan {
+    pub device: &'static str,
+    pub regions: Vec<Region>,
+    pub total: Utilization,
+    pub fits: bool,
+}
+
+/// ESP infrastructure tiles' approximate utilization (CVA6 CPU tile,
+/// memory tile with MIG, I/O tile, TG tile), from ESP-reported figures.
+fn infra_util(kind: &TileKind) -> Utilization {
+    match kind {
+        TileKind::Cpu => Utilization::new(55_000, 42_000, 40, 27), // CVA6 + NI
+        TileKind::Mem => Utilization::new(18_000, 16_000, 24, 0),  // MIG + NI
+        TileKind::Io => Utilization::new(9_000, 9_500, 8, 0),
+        TileKind::Tg => SHARED_TILE.add(Utilization::new(1_200, 900, 0, 0)),
+        TileKind::Accel { .. } => unreachable!("handled by mra_area"),
+    }
+}
+
+impl Floorplan {
+    /// Compute the floorplan of `cfg` on `dev`.
+    pub fn compute(cfg: &SocConfig, dev: &FpgaDevice) -> crate::Result<Self> {
+        let mut regions = Vec::new();
+        let mut total = Utilization::default();
+        for t in &cfg.tiles {
+            let (util, kind, label) = match &t.kind {
+                TileKind::Accel { accel, replicas } => {
+                    let a = AccelArea::lookup(accel)?;
+                    (
+                        mra_area(&a, *replicas),
+                        "accel",
+                        format!("{}x{}", accel, replicas),
+                    )
+                }
+                other => {
+                    let label = match other {
+                        TileKind::Cpu => "CPU",
+                        TileKind::Mem => "MEM",
+                        TileKind::Io => "I/O",
+                        TileKind::Tg => "TG",
+                        TileKind::Accel { .. } => unreachable!(),
+                    };
+                    (infra_util(other), label, label.to_string())
+                }
+            };
+            total = total.add(util);
+            regions.push(Region {
+                x: t.x,
+                y: t.y,
+                label,
+                kind,
+                util,
+                island: t.island,
+            });
+        }
+        // NoC routers + top-level glue.
+        let noc_util = Utilization::new(3_000, 2_500, 0, 0).scale(cfg.tiles.len() as u64);
+        total = total.add(noc_util);
+
+        let fits = total.fits(&dev.capacity);
+        Ok(Self {
+            device: dev.name,
+            regions,
+            total,
+            fits,
+        })
+    }
+
+    /// Render the Fig.-2-style ASCII floorplan.
+    pub fn render(&self, cfg: &SocConfig) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "Floorplan of {} on {} ({})\n",
+            cfg.name,
+            self.device,
+            if self.fits { "FITS" } else { "DOES NOT FIT" }
+        ));
+        let cell_w = 14;
+        for y in 0..cfg.height {
+            out.push_str(&format!("{}+\n", format!("+{}", "-".repeat(cell_w)).repeat(cfg.width as usize)));
+            let mut line1 = String::new();
+            let mut line2 = String::new();
+            for x in 0..cfg.width {
+                let r = self
+                    .regions
+                    .iter()
+                    .find(|r| r.x == x && r.y == y)
+                    .expect("region per cell");
+                line1.push_str(&format!("|{:^cell_w$}", r.label));
+                line2.push_str(&format!("|{:^cell_w$}", format!("isl{} {}k LUT", r.island, r.util.lut / 1000)));
+            }
+            out.push_str(&format!("{line1}|\n{line2}|\n"));
+        }
+        out.push_str(&format!("{}+\n", format!("+{}", "-".repeat(cell_w)).repeat(cfg.width as usize)));
+        let p = self.total.percent_of(&super::fpga::XC7V2000T);
+        out.push_str(&format!(
+            "Total: {} LUT ({:.1}%), {} FF ({:.1}%), {} BRAM ({:.1}%), {} DSP ({:.1}%)\n",
+            self.total.lut, p[0], self.total.ff, p[1], self.total.bram, p[2], self.total.dsp, p[3]
+        ));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets::paper_soc;
+    use crate::resources::fpga::XC7V2000T;
+
+    #[test]
+    fn paper_soc_fits_device() {
+        let cfg = paper_soc(("dfsin", 1), ("gsm", 1));
+        let fp = Floorplan::compute(&cfg, &XC7V2000T).unwrap();
+        assert!(fp.fits, "total {:?}", fp.total);
+        assert_eq!(fp.regions.len(), 16);
+    }
+
+    #[test]
+    fn heavy_replication_still_fits() {
+        // Even 4x replication everywhere stays within the 2000T.
+        let cfg = paper_soc(("dfsin", 4), ("gsm", 4));
+        let fp = Floorplan::compute(&cfg, &XC7V2000T).unwrap();
+        assert!(fp.fits);
+    }
+
+    #[test]
+    fn render_contains_all_tiles() {
+        let cfg = paper_soc(("dfsin", 1), ("gsm", 2));
+        let fp = Floorplan::compute(&cfg, &XC7V2000T).unwrap();
+        let s = fp.render(&cfg);
+        assert!(s.contains("CPU"));
+        assert!(s.contains("MEM"));
+        assert!(s.contains("dfsin"));
+        assert!(s.contains("gsmx2"));
+        assert!(s.contains("Total:"));
+    }
+
+    #[test]
+    fn totals_accumulate() {
+        let cfg = paper_soc(("dfadd", 1), ("dfadd", 1));
+        let fp = Floorplan::compute(&cfg, &XC7V2000T).unwrap();
+        let sum: u64 = fp.regions.iter().map(|r| r.util.lut).sum();
+        assert!(fp.total.lut > sum, "NoC overhead included");
+    }
+}

@@ -1,0 +1,97 @@
+//! FPGA device capacities and utilization accounting.
+
+/// Resource vector (LUT, FF, BRAM18, DSP).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct Utilization {
+    pub lut: u64,
+    pub ff: u64,
+    pub bram: u64,
+    pub dsp: u64,
+}
+
+impl Utilization {
+    pub const fn new(lut: u64, ff: u64, bram: u64, dsp: u64) -> Self {
+        Self { lut, ff, bram, dsp }
+    }
+
+    pub fn add(self, o: Self) -> Self {
+        Self {
+            lut: self.lut + o.lut,
+            ff: self.ff + o.ff,
+            bram: self.bram + o.bram,
+            dsp: self.dsp + o.dsp,
+        }
+    }
+
+    pub fn scale(self, k: u64) -> Self {
+        Self {
+            lut: self.lut * k,
+            ff: self.ff * k,
+            bram: self.bram * k,
+            dsp: self.dsp * k,
+        }
+    }
+
+    /// Fraction of the device per resource, as percentages.
+    pub fn percent_of(&self, dev: &FpgaDevice) -> [f64; 4] {
+        [
+            100.0 * self.lut as f64 / dev.capacity.lut as f64,
+            100.0 * self.ff as f64 / dev.capacity.ff as f64,
+            100.0 * self.bram as f64 / dev.capacity.bram as f64,
+            100.0 * self.dsp as f64 / dev.capacity.dsp as f64,
+        ]
+    }
+
+    /// Whether this fits within `cap`.
+    pub fn fits(&self, cap: &Utilization) -> bool {
+        self.lut <= cap.lut && self.ff <= cap.ff && self.bram <= cap.bram && self.dsp <= cap.dsp
+    }
+}
+
+/// An FPGA device.
+#[derive(Debug, Clone)]
+pub struct FpgaDevice {
+    pub name: &'static str,
+    pub capacity: Utilization,
+    pub mmcms: u32,
+    /// Clock regions (rows x cols) for floorplanning.
+    pub regions: (u16, u16),
+}
+
+/// The paper's target: AMD Virtex-7 2000T (§III).
+pub const XC7V2000T: FpgaDevice = FpgaDevice {
+    name: "xc7v2000t",
+    capacity: Utilization::new(1_221_600, 2_443_200, 2_584, 2_160),
+    mmcms: 24,
+    regions: (4, 4),
+};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn device_matches_paper() {
+        assert_eq!(XC7V2000T.capacity.lut, 1_221_600);
+        assert_eq!(XC7V2000T.capacity.ff, 2_443_200);
+        assert_eq!(XC7V2000T.capacity.bram, 2_584);
+        assert_eq!(XC7V2000T.capacity.dsp, 2_160);
+        assert_eq!(XC7V2000T.mmcms, 24);
+    }
+
+    #[test]
+    fn arithmetic() {
+        let a = Utilization::new(1, 2, 3, 4);
+        let b = a.scale(2).add(a);
+        assert_eq!(b, Utilization::new(3, 6, 9, 12));
+        assert!(a.fits(&b));
+        assert!(!b.fits(&a));
+    }
+
+    #[test]
+    fn percentages() {
+        let u = Utilization::new(12_216, 0, 0, 0);
+        let p = u.percent_of(&XC7V2000T);
+        assert!((p[0] - 1.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,21 @@
+//! FPGA resource model and floorplanner.
+//!
+//! Reproduces Table I's area columns and Fig. 2's floorplan. The model
+//! is compositional: a tile's utilization is the ESP tile *shared*
+//! infrastructure (NI, DMA engines, monitors — constant across
+//! accelerators) plus `K` times the accelerator *core* (from the
+//! per-accelerator HLS characterization DB). See DESIGN.md for the
+//! derivation: Table I's own 1x/2x/4x rows are affine in K with a
+//! shared-logic intercept that is the same (±1%) for all five
+//! accelerators — LUT ~5.5k, FF ~8.4k, BRAM 2 — which is exactly the
+//! ESP tile overhead this model encodes.
+
+pub mod accel_db;
+pub mod floorplan;
+pub mod fpga;
+pub mod mra_model;
+
+pub use accel_db::{AccelArea, SHARED_TILE};
+pub use floorplan::{Floorplan, Region};
+pub use fpga::{FpgaDevice, Utilization, XC7V2000T};
+pub use mra_model::mra_area;

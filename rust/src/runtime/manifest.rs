@@ -1,0 +1,231 @@
+//! Parser for `artifacts/manifest.txt`.
+//!
+//! The AOT step (`python/compile/aot.py`) writes a line-oriented manifest
+//! describing each lowered module's I/O geometry:
+//!
+//! ```text
+//! module dfadd file=dfadd.hlo.txt
+//! input dfadd 0 dtype=f32 shape=8x128
+//! output dfadd 0 dtype=f32 shape=8x128
+//! ```
+//!
+//! (A deliberate non-JSON format: the build is offline and a JSON dep is
+//! not available; this parser is ~100 lines and fully tested.)
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context};
+
+/// Tensor element type (only the two the accelerators use).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    S32,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> crate::Result<Self> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "s32" => Ok(DType::S32),
+            other => bail!("unknown dtype {other:?}"),
+        }
+    }
+}
+
+/// Shape + dtype of one input or output tensor.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.elems() * 4
+    }
+}
+
+/// One lowered module.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ModuleSpec {
+    pub name: String,
+    /// HLO text file, relative to the manifest's directory.
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+impl ModuleSpec {
+    /// Total input payload bytes of one invocation.
+    pub fn bytes_in(&self) -> usize {
+        self.inputs.iter().map(TensorSpec::bytes).sum()
+    }
+
+    /// Total output payload bytes of one invocation.
+    pub fn bytes_out(&self) -> usize {
+        self.outputs.iter().map(TensorSpec::bytes).sum()
+    }
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub modules: BTreeMap<String, ModuleSpec>,
+}
+
+impl Manifest {
+    /// Parse `dir/manifest.txt`.
+    pub fn load(dir: impl AsRef<Path>) -> crate::Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading manifest {}", path.display()))?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest text (exposed for tests).
+    pub fn parse(text: &str, dir: PathBuf) -> crate::Result<Self> {
+        let mut modules: BTreeMap<String, ModuleSpec> = BTreeMap::new();
+        for (ln, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let fields: Vec<&str> = line.split_whitespace().collect();
+            let err = || format!("manifest line {}: {line:?}", ln + 1);
+            match fields[0] {
+                "module" => {
+                    let [_, name, filekv] = fields[..] else {
+                        bail!("{}: want `module <name> file=<f>`", err());
+                    };
+                    let file = filekv
+                        .strip_prefix("file=")
+                        .with_context(err)?
+                        .to_string();
+                    modules.insert(
+                        name.to_string(),
+                        ModuleSpec {
+                            name: name.to_string(),
+                            file,
+                            inputs: vec![],
+                            outputs: vec![],
+                        },
+                    );
+                }
+                dir_kw @ ("input" | "output") => {
+                    let [_, name, idx, dtypekv, shapekv] = fields[..] else {
+                        bail!("{}: want `{dir_kw} <name> <i> dtype= shape=`", err());
+                    };
+                    let idx: usize = idx.parse().with_context(err)?;
+                    let dtype = DType::parse(dtypekv.strip_prefix("dtype=").with_context(err)?)?;
+                    let shape: Vec<usize> = shapekv
+                        .strip_prefix("shape=")
+                        .with_context(err)?
+                        .split('x')
+                        .map(|d| d.parse::<usize>())
+                        .collect::<Result<_, _>>()
+                        .with_context(err)?;
+                    let m = modules
+                        .get_mut(name)
+                        .with_context(|| format!("{}: unknown module {name}", err()))?;
+                    let list = if dir_kw == "input" {
+                        &mut m.inputs
+                    } else {
+                        &mut m.outputs
+                    };
+                    if list.len() != idx {
+                        bail!("{}: index {idx} out of order (have {})", err(), list.len());
+                    }
+                    list.push(TensorSpec { dtype, shape });
+                }
+                other => bail!("{}: unknown keyword {other:?}", err()),
+            }
+        }
+        for m in modules.values() {
+            if m.inputs.is_empty() || m.outputs.is_empty() {
+                bail!("module {} missing inputs or outputs", m.name);
+            }
+        }
+        Ok(Self { dir, modules })
+    }
+
+    pub fn get(&self, name: &str) -> crate::Result<&ModuleSpec> {
+        self.modules
+            .get(name)
+            .with_context(|| format!("no module {name:?} in manifest"))
+    }
+
+    /// Absolute path to a module's HLO text file.
+    pub fn hlo_path(&self, name: &str) -> crate::Result<PathBuf> {
+        Ok(self.dir.join(&self.get(name)?.file))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+module dfadd file=dfadd.hlo.txt
+input dfadd 0 dtype=f32 shape=8x128
+input dfadd 1 dtype=f32 shape=8x128
+output dfadd 0 dtype=f32 shape=8x128
+module gsm file=gsm.hlo.txt
+input gsm 0 dtype=f32 shape=160x128
+output gsm 0 dtype=f32 shape=16x128
+output gsm 1 dtype=f32 shape=8x128
+";
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/a")).unwrap();
+        assert_eq!(m.modules.len(), 2);
+        let dfadd = m.get("dfadd").unwrap();
+        assert_eq!(dfadd.inputs.len(), 2);
+        assert_eq!(dfadd.bytes_in(), 2 * 8 * 128 * 4);
+        assert_eq!(dfadd.bytes_out(), 8 * 128 * 4);
+        let gsm = m.get("gsm").unwrap();
+        assert_eq!(gsm.outputs.len(), 2);
+        assert_eq!(gsm.outputs[1].shape, vec![8, 128]);
+        assert_eq!(m.hlo_path("gsm").unwrap(), PathBuf::from("/a/gsm.hlo.txt"));
+    }
+
+    #[test]
+    fn rejects_unknown_dtype() {
+        let bad = "module x file=x\ninput x 0 dtype=f64 shape=2\noutput x 0 dtype=f32 shape=2\n";
+        assert!(Manifest::parse(bad, PathBuf::new()).is_err());
+    }
+
+    #[test]
+    fn rejects_out_of_order_index() {
+        let bad = "module x file=x\ninput x 1 dtype=f32 shape=2\n";
+        assert!(Manifest::parse(bad, PathBuf::new()).is_err());
+    }
+
+    #[test]
+    fn rejects_io_for_unknown_module() {
+        let bad = "input y 0 dtype=f32 shape=2\n";
+        assert!(Manifest::parse(bad, PathBuf::new()).is_err());
+    }
+
+    #[test]
+    fn rejects_module_without_outputs() {
+        let bad = "module x file=x\ninput x 0 dtype=f32 shape=2\n";
+        assert!(Manifest::parse(bad, PathBuf::new()).is_err());
+    }
+
+    #[test]
+    fn skips_comments_and_blank_lines(){
+        let ok = "# c\n\nmodule x file=x\ninput x 0 dtype=f32 shape=2x3\noutput x 0 dtype=s32 shape=4\n";
+        let m = Manifest::parse(ok, PathBuf::new()).unwrap();
+        assert_eq!(m.get("x").unwrap().inputs[0].elems(), 6);
+        assert_eq!(m.get("x").unwrap().outputs[0].dtype, DType::S32);
+    }
+}

@@ -1,0 +1,33 @@
+//! PJRT runtime: loads the AOT-lowered HLO artifacts once at startup and
+//! executes accelerator invocations from the simulator's hot path.
+//!
+//! Python never runs here — `make artifacts` (build time) lowered the
+//! Layer-2 JAX functions to HLO *text* (see `python/compile/aot.py` for
+//! why text, not serialized protos), and [`pjrt::PjrtCompute`] compiles
+//! them on the PJRT CPU client via the `xla` crate.
+//!
+//! [`AccelCompute`] abstracts the functional datapath so unit tests and
+//! artifact-less builds can use [`refcompute::RefCompute`] — an
+//! independent native-Rust implementation of the five accelerators that
+//! doubles as a second oracle: the integration tests assert PJRT and
+//! RefCompute agree.
+
+pub mod manifest;
+pub mod pjrt;
+pub mod refcompute;
+
+pub use manifest::{DType, Manifest, ModuleSpec, TensorSpec};
+pub use pjrt::PjrtCompute;
+pub use refcompute::RefCompute;
+
+use crate::mem::Block;
+
+/// The functional datapath of an accelerator invocation.
+pub trait AccelCompute: Send {
+    /// Execute one invocation of accelerator `name` on `inputs`,
+    /// returning the output blocks in manifest order.
+    fn invoke(&mut self, name: &str, inputs: &[&Block]) -> crate::Result<Vec<Block>>;
+
+    /// Implementation label (for logs/reports).
+    fn backend(&self) -> &'static str;
+}

@@ -1,0 +1,156 @@
+//! PJRT-backed functional datapath.
+//!
+//! Loads each `artifacts/<name>.hlo.txt` once, compiles it on the PJRT
+//! CPU client (`xla` crate), and executes invocations with [`Block`]
+//! inputs/outputs. Adapted from /opt/xla-example/src/bin/load_hlo.rs:
+//! HLO *text* interchange + `return_tuple=True` unwrapping.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context};
+
+use super::manifest::{DType, Manifest, ModuleSpec};
+use super::AccelCompute;
+use crate::mem::Block;
+
+/// One compiled module.
+struct Loaded {
+    exe: xla::PjRtLoadedExecutable,
+    spec: ModuleSpec,
+}
+
+/// PJRT CPU backend holding all compiled accelerator executables.
+pub struct PjrtCompute {
+    _client: xla::PjRtClient,
+    modules: HashMap<String, Loaded>,
+    /// Invocation counter (perf reporting).
+    pub invocations: u64,
+}
+
+impl PjrtCompute {
+    /// Load and compile every module in the manifest at `artifacts_dir`.
+    pub fn load(artifacts_dir: impl AsRef<std::path::Path>) -> crate::Result<Self> {
+        let manifest = Manifest::load(&artifacts_dir)?;
+        Self::from_manifest(manifest)
+    }
+
+    /// Load and compile from a parsed manifest.
+    pub fn from_manifest(manifest: Manifest) -> crate::Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let mut modules = HashMap::new();
+        for (name, spec) in &manifest.modules {
+            let path = manifest.hlo_path(name)?;
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("non-utf8 artifact path")?,
+            )
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .with_context(|| format!("compiling module {name}"))?;
+            modules.insert(
+                name.clone(),
+                Loaded {
+                    exe,
+                    spec: spec.clone(),
+                },
+            );
+        }
+        Ok(Self {
+            _client: client,
+            modules,
+            invocations: 0,
+        })
+    }
+
+    pub fn module_names(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.modules.keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    pub fn spec(&self, name: &str) -> crate::Result<&ModuleSpec> {
+        Ok(&self
+            .modules
+            .get(name)
+            .with_context(|| format!("module {name:?} not loaded"))?
+            .spec)
+    }
+
+    fn block_to_literal(block: &Block, spec: &super::TensorSpec) -> crate::Result<xla::Literal> {
+        let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+        let lit = match (block, spec.dtype) {
+            (Block::F32(v), DType::F32) => {
+                if v.len() != spec.elems() {
+                    bail!("input has {} words, spec wants {}", v.len(), spec.elems());
+                }
+                xla::Literal::vec1(v).reshape(&dims)?
+            }
+            (Block::I32(v), DType::S32) => {
+                if v.len() != spec.elems() {
+                    bail!("input has {} words, spec wants {}", v.len(), spec.elems());
+                }
+                xla::Literal::vec1(v).reshape(&dims)?
+            }
+            _ => bail!("block dtype does not match spec dtype"),
+        };
+        Ok(lit)
+    }
+
+    fn literal_to_block(lit: &xla::Literal, dtype: DType) -> crate::Result<Block> {
+        Ok(match dtype {
+            DType::F32 => Block::F32(lit.to_vec::<f32>()?),
+            DType::S32 => Block::I32(lit.to_vec::<i32>()?),
+        })
+    }
+}
+
+impl AccelCompute for PjrtCompute {
+    fn invoke(&mut self, name: &str, inputs: &[&Block]) -> crate::Result<Vec<Block>> {
+        let loaded = self
+            .modules
+            .get(name)
+            .with_context(|| format!("module {name:?} not loaded"))?;
+        let spec = &loaded.spec;
+        if inputs.len() != spec.inputs.len() {
+            bail!(
+                "{name}: {} inputs given, manifest wants {}",
+                inputs.len(),
+                spec.inputs.len()
+            );
+        }
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .zip(&spec.inputs)
+            .map(|(b, ts)| Self::block_to_literal(b, ts))
+            .collect::<crate::Result<_>>()?;
+
+        let result = loaded.exe.execute::<xla::Literal>(&literals)?[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        // aot.py lowers with return_tuple=True: unwrap the tuple.
+        let parts = result.to_tuple().context("untupling result")?;
+        if parts.len() != spec.outputs.len() {
+            bail!(
+                "{name}: {} outputs returned, manifest wants {}",
+                parts.len(),
+                spec.outputs.len()
+            );
+        }
+        self.invocations += 1;
+        parts
+            .iter()
+            .zip(&spec.outputs)
+            .map(|(lit, ts)| Self::literal_to_block(lit, ts.dtype))
+            .collect()
+    }
+
+    fn backend(&self) -> &'static str {
+        "pjrt"
+    }
+}
+
+// PjRtClient/LoadedExecutable wrap thread-safe XLA objects; the xla crate
+// just doesn't mark them Send. The simulator only ever uses the backend
+// from one thread at a time (it is behind &mut), so this is sound.
+unsafe impl Send for PjrtCompute {}

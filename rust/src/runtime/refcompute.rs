@@ -1,0 +1,306 @@
+//! Native-Rust reference implementations of the five CHStone
+//! accelerators — an independent oracle for the PJRT datapath and the
+//! default functional backend for artifact-less unit tests.
+//!
+//! These are transcriptions of the same specifications the Python
+//! kernels implement (IMA ADPCM from CHStone's `adpcm.c`, GSM LPC from
+//! GSM 06.10, Taylor sine), *not* ports of the Pallas code: agreement
+//! between the two is a meaningful end-to-end check of the whole
+//! JAX -> HLO -> PJRT pipeline.
+
+use anyhow::bail;
+
+use super::AccelCompute;
+use crate::mem::Block;
+
+/// Invocation geometry (must match `python/compile/model.py`).
+pub const DF_ROWS: usize = 8;
+pub const ADPCM_ROWS: usize = 64;
+pub const GSM_ROWS: usize = 160;
+pub const LANES: usize = 128;
+pub const GSM_ACF_ROWS: usize = 16;
+pub const GSM_ORDER: usize = 8;
+
+/// IMA ADPCM step-size table (89 entries), as in CHStone.
+pub const IMA_STEP_TABLE: [i32; 89] = [
+    7, 8, 9, 10, 11, 12, 13, 14, 16, 17, 19, 21, 23, 25, 28, 31, 34, 37, 41, 45, 50, 55, 60, 66,
+    73, 80, 88, 97, 107, 118, 130, 143, 157, 173, 190, 209, 230, 253, 279, 307, 337, 371, 408,
+    449, 494, 544, 598, 658, 724, 796, 876, 963, 1060, 1166, 1282, 1411, 1552, 1707, 1878, 2066,
+    2272, 2499, 2749, 3024, 3327, 3660, 4026, 4428, 4871, 5358, 5894, 6484, 7132, 7845, 8630,
+    9493, 10442, 11487, 12635, 13899, 15289, 16818, 18500, 20350, 22385, 24623, 27086, 29794,
+    32767,
+];
+
+/// IMA index-adjustment table for the 3 magnitude bits.
+pub const IMA_INDEX_TABLE: [i32; 8] = [-1, -1, -1, -1, 2, 4, 6, 8];
+
+/// The reference backend.
+#[derive(Debug, Default, Clone)]
+pub struct RefCompute;
+
+impl RefCompute {
+    pub fn new() -> Self {
+        Self
+    }
+}
+
+fn want_f32<'b>(b: &'b Block, what: &str, len: usize) -> crate::Result<&'b [f32]> {
+    match b.as_f32() {
+        Some(v) if v.len() == len => Ok(v),
+        Some(v) => bail!("{what}: expected {len} f32 words, got {}", v.len()),
+        None => bail!("{what}: expected f32 block"),
+    }
+}
+
+fn want_i32<'b>(b: &'b Block, what: &str, len: usize) -> crate::Result<&'b [i32]> {
+    match b.as_i32() {
+        Some(v) if v.len() == len => Ok(v),
+        Some(v) => bail!("{what}: expected {len} i32 words, got {}", v.len()),
+        None => bail!("{what}: expected i32 block"),
+    }
+}
+
+/// `sin(x)` elementwise (f64 libm sine, cast to f32 — the oracle side).
+pub fn dfsin(x: &[f32]) -> Vec<f32> {
+    x.iter().map(|&v| (v as f64).sin() as f32).collect()
+}
+
+/// IMA ADPCM encode: `x` is (rows, LANES) row-major i32 PCM; returns the
+/// 4-bit codes. Direct transcription of CHStone `adpcm_coder`.
+pub fn adpcm_encode(x: &[i32], rows: usize, lanes: usize) -> Vec<i32> {
+    let mut out = vec![0i32; rows * lanes];
+    for c in 0..lanes {
+        let mut valpred: i64 = 0;
+        let mut index: i32 = 0;
+        for t in 0..rows {
+            let sample = x[t * lanes + c] as i64;
+            let mut step = IMA_STEP_TABLE[index as usize] as i64;
+            let mut diff = sample - valpred;
+            let sign = if diff < 0 { 8 } else { 0 };
+            if diff < 0 {
+                diff = -diff;
+            }
+            let mut code: i32 = 0;
+            let mut vpdiff = step >> 3;
+            if diff >= step {
+                code |= 4;
+                diff -= step;
+                vpdiff += step;
+            }
+            step >>= 1;
+            if diff >= step {
+                code |= 2;
+                diff -= step;
+                vpdiff += step;
+            }
+            step >>= 1;
+            if diff >= step {
+                code |= 1;
+                vpdiff += step;
+            }
+            if sign != 0 {
+                valpred -= vpdiff;
+            } else {
+                valpred += vpdiff;
+            }
+            valpred = valpred.clamp(-32768, 32767);
+            index = (index + IMA_INDEX_TABLE[code as usize]).clamp(0, 88);
+            out[t * lanes + c] = code | sign;
+        }
+    }
+    out
+}
+
+/// GSM autocorrelation lags r[0..8], zero-padded to `GSM_ACF_ROWS` rows.
+pub fn gsm_acf(x: &[f32], rows: usize, lanes: usize) -> Vec<f32> {
+    let mut out = vec![0f32; GSM_ACF_ROWS * lanes];
+    for k in 0..9 {
+        for c in 0..lanes {
+            let mut acc = 0f64;
+            for t in 0..rows - k {
+                acc += x[t * lanes + c] as f64 * x[(t + k) * lanes + c] as f64;
+            }
+            out[k * lanes + c] = acc as f32;
+        }
+    }
+    out
+}
+
+/// Reflection coefficients from the ACF via Levinson-Durbin (matches the
+/// Layer-2 graph and `ref.py`). `acf` is (GSM_ACF_ROWS, lanes) row-major.
+pub fn gsm_reflection(acf: &[f32], lanes: usize) -> Vec<f32> {
+    let order = GSM_ORDER;
+    let mut out = vec![0f32; order * lanes];
+    for c in 0..lanes {
+        let r: Vec<f64> = (0..9).map(|k| acf[k * lanes + c] as f64).collect();
+        if r[0] <= 0.0 {
+            continue; // silent frame: zeros
+        }
+        let mut a = vec![0f64; order + 1];
+        a[0] = 1.0;
+        let mut err = r[0];
+        for i in 1..=order {
+            let mut acc = r[i];
+            for j in 1..i {
+                acc += a[j] * r[i - j];
+            }
+            let k = if err > 0.0 {
+                (-acc / err).clamp(-1.0, 1.0)
+            } else {
+                0.0
+            };
+            out[(i - 1) * lanes + c] = k as f32;
+            let mut a_new = a.clone();
+            for j in 1..i {
+                a_new[j] = a[j] + k * a[i - j];
+            }
+            a_new[i] = k;
+            a = a_new;
+            err *= 1.0 - k * k;
+        }
+    }
+    out
+}
+
+impl AccelCompute for RefCompute {
+    fn invoke(&mut self, name: &str, inputs: &[&Block]) -> crate::Result<Vec<Block>> {
+        let df = DF_ROWS * LANES;
+        match name {
+            "dfadd" | "dfmul" => {
+                if inputs.len() != 2 {
+                    bail!("{name}: want 2 inputs, got {}", inputs.len());
+                }
+                let a = want_f32(inputs[0], name, df)?;
+                let b = want_f32(inputs[1], name, df)?;
+                let out: Vec<f32> = if name == "dfadd" {
+                    a.iter().zip(b).map(|(x, y)| x + y).collect()
+                } else {
+                    a.iter().zip(b).map(|(x, y)| x * y).collect()
+                };
+                Ok(vec![Block::F32(out)])
+            }
+            "dfsin" => {
+                if inputs.len() != 1 {
+                    bail!("dfsin: want 1 input");
+                }
+                let x = want_f32(inputs[0], name, df)?;
+                Ok(vec![Block::F32(dfsin(x))])
+            }
+            "adpcm" => {
+                if inputs.len() != 1 {
+                    bail!("adpcm: want 1 input");
+                }
+                let x = want_i32(inputs[0], name, ADPCM_ROWS * LANES)?;
+                Ok(vec![Block::I32(adpcm_encode(x, ADPCM_ROWS, LANES))])
+            }
+            "gsm" => {
+                if inputs.len() != 1 {
+                    bail!("gsm: want 1 input");
+                }
+                let x = want_f32(inputs[0], name, GSM_ROWS * LANES)?;
+                let acf = gsm_acf(x, GSM_ROWS, LANES);
+                let refl = gsm_reflection(&acf, LANES);
+                Ok(vec![Block::F32(acf), Block::F32(refl)])
+            }
+            other => bail!("unknown accelerator {other:?}"),
+        }
+    }
+
+    fn backend(&self) -> &'static str {
+        "ref"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::SplitMix64;
+
+    fn f32_block(rng: &mut SplitMix64, n: usize, lo: f32, hi: f32) -> Block {
+        Block::F32((0..n).map(|_| rng.range_f32(lo, hi)).collect())
+    }
+
+    #[test]
+    fn dfadd_adds() {
+        let mut rc = RefCompute::new();
+        let a = Block::F32(vec![1.0; DF_ROWS * LANES]);
+        let b = Block::F32(vec![2.5; DF_ROWS * LANES]);
+        let out = rc.invoke("dfadd", &[&a, &b]).unwrap();
+        assert_eq!(out[0].as_f32().unwrap()[17], 3.5);
+    }
+
+    #[test]
+    fn dfmul_multiplies() {
+        let mut rc = RefCompute::new();
+        let a = Block::F32(vec![3.0; DF_ROWS * LANES]);
+        let b = Block::F32(vec![-2.0; DF_ROWS * LANES]);
+        let out = rc.invoke("dfmul", &[&a, &b]).unwrap();
+        assert_eq!(out[0].as_f32().unwrap()[100], -6.0);
+    }
+
+    #[test]
+    fn dfsin_known_values() {
+        let mut rc = RefCompute::new();
+        let mut v = vec![0f32; DF_ROWS * LANES];
+        v[0] = std::f32::consts::FRAC_PI_2;
+        let out = rc.invoke("dfsin", &[&Block::F32(v)]).unwrap();
+        let o = out[0].as_f32().unwrap();
+        assert!((o[0] - 1.0).abs() < 1e-6);
+        assert_eq!(o[1], 0.0);
+    }
+
+    #[test]
+    fn adpcm_codes_in_range_and_deterministic() {
+        let mut rng = SplitMix64::new(5);
+        let x: Vec<i32> = (0..ADPCM_ROWS * LANES)
+            .map(|_| rng.range_i64(-32768, 32767) as i32)
+            .collect();
+        let a = adpcm_encode(&x, ADPCM_ROWS, LANES);
+        let b = adpcm_encode(&x, ADPCM_ROWS, LANES);
+        assert_eq!(a, b);
+        assert!(a.iter().all(|&c| (0..=15).contains(&c)));
+    }
+
+    #[test]
+    fn adpcm_silence_is_zero_codes() {
+        let x = vec![0i32; ADPCM_ROWS * LANES];
+        let out = adpcm_encode(&x, ADPCM_ROWS, LANES);
+        assert!(out.iter().all(|&c| c == 0));
+    }
+
+    #[test]
+    fn gsm_acf_lag0_is_energy() {
+        let mut rng = SplitMix64::new(9);
+        let x = f32_block(&mut rng, GSM_ROWS * LANES, -1.0, 1.0);
+        let v = x.as_f32().unwrap();
+        let acf = gsm_acf(v, GSM_ROWS, LANES);
+        let energy: f64 = (0..GSM_ROWS).map(|t| (v[t * LANES] as f64).powi(2)).sum();
+        assert!((acf[0] as f64 - energy).abs() / energy < 1e-5);
+    }
+
+    #[test]
+    fn gsm_reflection_bounded() {
+        let mut rng = SplitMix64::new(11);
+        let x = f32_block(&mut rng, GSM_ROWS * LANES, -1.0, 1.0);
+        let acf = gsm_acf(x.as_f32().unwrap(), GSM_ROWS, LANES);
+        let refl = gsm_reflection(&acf, LANES);
+        assert!(refl.iter().all(|k| k.abs() <= 1.0 + 1e-6));
+    }
+
+    #[test]
+    fn gsm_silent_frame_zero_reflection() {
+        let acf = vec![0f32; GSM_ACF_ROWS * LANES];
+        let refl = gsm_reflection(&acf, LANES);
+        assert!(refl.iter().all(|&k| k == 0.0));
+    }
+
+    #[test]
+    fn rejects_bad_shapes() {
+        let mut rc = RefCompute::new();
+        let bad = Block::F32(vec![0.0; 7]);
+        assert!(rc.invoke("dfsin", &[&bad]).is_err());
+        let int = Block::I32(vec![0; DF_ROWS * LANES]);
+        assert!(rc.invoke("dfsin", &[&int]).is_err());
+        assert!(rc.invoke("nosuch", &[&bad]).is_err());
+    }
+}

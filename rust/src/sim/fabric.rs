@@ -1,0 +1,136 @@
+//! Fabric construction: routers, link FIFOs, and NI attach points for
+//! every plane of the mesh.
+
+use crate::config::SocConfig;
+use crate::noc::{
+    LinkFifo, LinkId, Mesh, NodeId, OutputRef, Port, Router, NUM_PLANES, NUM_PORTS,
+};
+
+/// The physical interconnect: all planes' routers plus the shared link
+/// arena (router-to-router links, NI inject/eject FIFOs).
+pub struct Fabric {
+    pub mesh: Mesh,
+    pub links: Vec<LinkFifo>,
+    /// Routers, indexed `plane * nodes + node`.
+    pub routers: Vec<Router>,
+    /// Per node: inject link (NI -> router local in) per plane.
+    pub inject: Vec<[LinkId; NUM_PLANES]>,
+    /// Per node: eject link (router local out -> NI) per plane.
+    pub eject: Vec<[LinkId; NUM_PLANES]>,
+}
+
+impl Fabric {
+    /// Build the fabric for `cfg`. `tile_islands[node]` is the frequency
+    /// island of the tile at that node (for CDC stamping on ejection).
+    pub fn build(cfg: &SocConfig, tile_islands: &[usize]) -> Self {
+        let mesh = Mesh::new(cfg.width, cfg.height);
+        let nodes = mesh.nodes();
+        let depth = cfg.noc.fifo_depth;
+
+        let mut links: Vec<LinkFifo> = Vec::new();
+        let mut alloc = |cap: usize| -> LinkId {
+            links.push(LinkFifo::new(cap));
+            LinkId((links.len() - 1) as u32)
+        };
+
+        // Per plane and node: 5 router input FIFOs (N,S,E,W,Local) and
+        // one eject FIFO. The local input FIFO doubles as the inject link.
+        let mut inputs = vec![[LinkId(0); NUM_PORTS]; nodes * NUM_PLANES];
+        let mut eject = vec![[LinkId(0); NUM_PLANES]; nodes];
+        let mut inject = vec![[LinkId(0); NUM_PLANES]; nodes];
+        for p in 0..NUM_PLANES {
+            for n in 0..nodes {
+                for port in 0..NUM_PORTS {
+                    inputs[p * nodes + n][port] = alloc(depth);
+                }
+                inject[n][p] = inputs[p * nodes + n][Port::Local.index()];
+                eject[n][p] = alloc(depth);
+            }
+        }
+
+        let mut routers = Vec::with_capacity(nodes * NUM_PLANES);
+        for p in 0..NUM_PLANES {
+            for n in 0..nodes {
+                let node = NodeId(n as u16);
+                let mut outputs: [Option<OutputRef>; NUM_PORTS] = [None; NUM_PORTS];
+                for port in [Port::North, Port::South, Port::East, Port::West] {
+                    if let Some(nb) = mesh.neighbor(node, port) {
+                        outputs[port.index()] = Some(OutputRef {
+                            link: inputs[p * nodes + nb.index()][port.opposite().index()],
+                            dst_island: cfg.noc.island,
+                        });
+                    }
+                }
+                outputs[Port::Local.index()] = Some(OutputRef {
+                    link: eject[n][p],
+                    dst_island: tile_islands[n],
+                });
+                routers.push(Router::new(
+                    node,
+                    cfg.noc.island,
+                    inputs[p * nodes + n],
+                    outputs,
+                ));
+            }
+        }
+
+        Self {
+            mesh,
+            links,
+            routers,
+            inject,
+            eject,
+        }
+    }
+
+    /// Total flits forwarded by all routers.
+    pub fn total_flits(&self) -> u64 {
+        self.routers.iter().map(|r| r.stats.flits).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets::paper_soc;
+
+    #[test]
+    fn paper_fabric_dimensions() {
+        let cfg = paper_soc(("dfsin", 1), ("gsm", 1));
+        let islands: Vec<usize> = cfg.tiles.iter().map(|t| t.island).collect();
+        let f = Fabric::build(&cfg, &islands);
+        assert_eq!(f.routers.len(), 16 * NUM_PLANES);
+        // 16 nodes x 3 planes x (5 inputs + 1 eject) FIFOs.
+        assert_eq!(f.links.len(), 16 * NUM_PLANES * 6);
+    }
+
+    #[test]
+    fn edges_have_no_dangling_outputs() {
+        let cfg = paper_soc(("dfadd", 1), ("dfadd", 1));
+        let islands: Vec<usize> = cfg.tiles.iter().map(|t| t.island).collect();
+        let f = Fabric::build(&cfg, &islands);
+        // Corner node 0: North and West must be None.
+        let r = &f.routers[0];
+        assert!(r.outputs[Port::North.index()].is_none());
+        assert!(r.outputs[Port::West.index()].is_none());
+        assert!(r.outputs[Port::East.index()].is_some());
+        assert!(r.outputs[Port::Local.index()].is_some());
+    }
+
+    #[test]
+    fn neighbor_links_are_symmetric() {
+        let cfg = paper_soc(("dfadd", 1), ("dfadd", 1));
+        let islands: Vec<usize> = cfg.tiles.iter().map(|t| t.island).collect();
+        let f = Fabric::build(&cfg, &islands);
+        let nodes = f.mesh.nodes();
+        // Router n's East output feeds the East-neighbour's West input.
+        for n in 0..nodes {
+            let node = NodeId(n as u16);
+            if let Some(nb) = f.mesh.neighbor(node, Port::East) {
+                let out = f.routers[n].outputs[Port::East.index()].unwrap();
+                let want = f.routers[nb.index()].inputs[Port::West.index()];
+                assert_eq!(out.link, want);
+            }
+        }
+    }
+}

@@ -1,0 +1,10 @@
+//! The SoC simulator: fabric construction, the multi-clock event engine,
+//! and the host-side workload driver.
+
+pub mod driver;
+pub mod fabric;
+pub mod soc;
+
+pub use driver::{stage_inputs_for, ThroughputProbe};
+pub use fabric::Fabric;
+pub use soc::Soc;

@@ -1,0 +1,488 @@
+//! The assembled SoC and its multi-clock event engine.
+//!
+//! Time advances edge-by-edge: a binary heap holds each frequency
+//! island's next rising edge; popping the earliest edge ticks that
+//! island's routers and tiles one cycle, honouring DFS retiming (an
+//! island whose actuator swapped frequency re-schedules at its new
+//! period). Determinism: heap ties break on island index; all randomness
+//! is seeded from the config.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use anyhow::Context;
+
+use crate::clock::domain::{ClockDomain, IslandId};
+use crate::config::{SocConfig, TileKind};
+use crate::mem::BlockStore;
+use crate::monitor::{MonitorFile, Sampler};
+use crate::noc::{ClockView, NodeId, PacketArena};
+use crate::runtime::AccelCompute;
+use crate::tiles::{cpu::CpuTile, io::IoTile, mem_tile::MemTile, mra::MraTile, tg::TgTile};
+use crate::tiles::{AccelTiming, NetIface, Tile, TileCtx};
+use crate::util::time::Freq;
+use crate::util::{Ps, SplitMix64};
+
+use super::fabric::Fabric;
+
+/// The simulated SoC.
+pub struct Soc {
+    pub cfg: SocConfig,
+    pub islands: Vec<ClockDomain>,
+    pub fabric: Fabric,
+    pub tiles: Vec<Tile>,
+    pub arena: PacketArena,
+    pub blocks: BlockStore,
+    pub mon: MonitorFile,
+    pub compute: Box<dyn AccelCompute>,
+    pub now: Ps,
+    view: ClockView,
+    island_tiles: Vec<Vec<usize>>,
+    heap: BinaryHeap<Reverse<(Ps, usize)>>,
+    /// Optional periodic sampler (Fig. 4 instrumentation).
+    pub sampler: Option<Sampler>,
+    /// Pending host frequency schedule: (time, island, MHz), sorted.
+    schedule: Vec<(Ps, usize, u64)>,
+    schedule_next: usize,
+    /// Total edges processed (engine throughput metric).
+    pub edges: u64,
+}
+
+impl Soc {
+    /// Build a SoC from a validated config and a functional backend.
+    pub fn build(cfg: SocConfig, compute: Box<dyn AccelCompute>) -> crate::Result<Self> {
+        cfg.validate()?;
+        let mut rng = SplitMix64::new(cfg.seed);
+
+        let islands: Vec<ClockDomain> = cfg
+            .islands
+            .iter()
+            .enumerate()
+            .map(|(i, spec)| {
+                if spec.dfs {
+                    ClockDomain::dfs(
+                        IslandId(i),
+                        spec.name.clone(),
+                        Freq::mhz(spec.freq_mhz),
+                        Freq::mhz(spec.min_mhz),
+                        Freq::mhz(spec.max_mhz),
+                        spec.step_mhz,
+                    )
+                } else {
+                    ClockDomain::fixed(IslandId(i), spec.name.clone(), Freq::mhz(spec.freq_mhz))
+                }
+            })
+            .collect();
+
+        let mut tile_islands = vec![0usize; cfg.tiles.len()];
+        for t in &cfg.tiles {
+            tile_islands[cfg.node_of(t.x, t.y)] = t.island;
+        }
+        let fabric = Fabric::build(&cfg, &tile_islands);
+
+        let mem_spec = cfg.mem_tile();
+        let mem_node = NodeId(cfg.node_of(mem_spec.x, mem_spec.y) as u16);
+
+        // Build tiles in node order.
+        let mut tiles_by_node: Vec<Option<Tile>> = (0..cfg.tiles.len()).map(|_| None).collect();
+        for spec in &cfg.tiles {
+            let n = cfg.node_of(spec.x, spec.y);
+            let ni = NetIface::new(
+                NodeId(n as u16),
+                spec.island,
+                cfg.noc.island,
+                fabric.inject[n],
+                fabric.eject[n],
+            );
+            let tile = match &spec.kind {
+                TileKind::Mem => Tile::Mem(MemTile::new(ni, n, cfg.mem.clone())),
+                TileKind::Cpu => Tile::Cpu(CpuTile::new(ni, n, cfg.cpu_poll_interval)),
+                TileKind::Io => Tile::Io(IoTile::new(ni, n)),
+                TileKind::Tg => Tile::Tg(TgTile::new(
+                    ni,
+                    n,
+                    mem_node,
+                    cfg.dma.burst_beats,
+                    cfg.dma.max_outstanding,
+                    rng.fork(),
+                )),
+                TileKind::Accel { accel, replicas } => {
+                    let timing = AccelTiming::lookup(accel)?;
+                    let bp = crate::axi::BridgeParams {
+                        replicas: *replicas,
+                        replica_fifo_depth: cfg.bridge.replica_fifo_depth,
+                        tile_fifo_depth: cfg.bridge.tile_fifo_depth,
+                        switch_cycles: cfg.bridge.switch_cycles,
+                    };
+                    Tile::Mra(Box::new(MraTile::new(
+                        ni,
+                        n,
+                        accel,
+                        *replicas,
+                        timing,
+                        cfg.dma,
+                        bp,
+                        mem_node,
+                    )))
+                }
+            };
+            tiles_by_node[n] = Some(tile);
+        }
+        let tiles: Vec<Tile> = tiles_by_node.into_iter().map(Option::unwrap).collect();
+
+        // CPU polls every accelerator tile by default.
+        let accel_targets: Vec<(NodeId, usize)> = tiles
+            .iter()
+            .enumerate()
+            .filter(|(_, t)| matches!(t, Tile::Mra(_)))
+            .map(|(i, _)| (NodeId(i as u16), i))
+            .collect();
+        let mut tiles = tiles;
+        for t in &mut tiles {
+            if let Tile::Cpu(c) = t {
+                c.poll_targets = accel_targets.clone();
+            }
+        }
+
+        let mut island_tiles = vec![Vec::new(); islands.len()];
+        for (n, &isl) in tile_islands.iter().enumerate() {
+            island_tiles[isl].push(n);
+        }
+
+        let view = ClockView {
+            periods: islands.iter().map(|d| d.period(0)).collect(),
+            last_edges: vec![0; islands.len()],
+            pipeline: cfg.noc.pipeline,
+            sync_stages: cfg.noc.sync_stages,
+        };
+
+        let mut heap = BinaryHeap::new();
+        for (i, d) in islands.iter().enumerate() {
+            heap.push(Reverse((d.next_edge(0), i)));
+        }
+
+        let mon = MonitorFile::new(cfg.tiles.len());
+        Ok(Self {
+            cfg,
+            islands,
+            fabric,
+            tiles,
+            arena: PacketArena::new(),
+            blocks: BlockStore::new(),
+            mon,
+            compute,
+            now: 0,
+            view,
+            island_tiles,
+            heap,
+            sampler: None,
+            schedule: Vec::new(),
+            schedule_next: 0,
+            edges: 0,
+        })
+    }
+
+    /// Node index of the (unique) MEM tile.
+    pub fn mem_node(&self) -> usize {
+        let s = self.cfg.mem_tile();
+        self.cfg.node_of(s.x, s.y)
+    }
+
+    /// Tile indices of all MRA tiles.
+    pub fn mra_tiles(&self) -> Vec<usize> {
+        self.tiles
+            .iter()
+            .enumerate()
+            .filter(|(_, t)| matches!(t, Tile::Mra(_)))
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Mutable access to an MRA tile.
+    pub fn mra_mut(&mut self, tile: usize) -> &mut MraTile {
+        match &mut self.tiles[tile] {
+            Tile::Mra(m) => m,
+            _ => panic!("tile {tile} is not an MRA tile"),
+        }
+    }
+
+    pub fn mra(&self, tile: usize) -> &MraTile {
+        match &self.tiles[tile] {
+            Tile::Mra(m) => m,
+            _ => panic!("tile {tile} is not an MRA tile"),
+        }
+    }
+
+    // ---------------------------------------------------------------
+    // Host (USB-serial) access paths. Direct application is documented
+    // in DESIGN.md: observability/config writes from the host do not
+    // perturb NoC timing on the real system either (dedicated link).
+    // ---------------------------------------------------------------
+
+    /// Host write to an island's frequency register.
+    pub fn host_write_freq(&mut self, island: usize, mhz: u64) -> crate::Result<Ps> {
+        self.islands
+            .get_mut(island)
+            .context("no such island")?
+            .request_freq(Freq::mhz(mhz), self.now)
+            .map_err(Into::into)
+    }
+
+    /// Schedule a host frequency write at a future simulation time.
+    pub fn schedule_freq(&mut self, at: Ps, island: usize, mhz: u64) {
+        self.schedule.push((at, island, mhz));
+        self.schedule.sort_by_key(|&(t, ..)| t);
+        self.schedule_next = 0;
+    }
+
+    /// Enable the first `n` TG tiles (Fig. 3's X axis), disable the rest.
+    pub fn host_set_tg_active(&mut self, n: usize) {
+        let mut seen = 0;
+        for t in &mut self.tiles {
+            if let Tile::Tg(tg) = t {
+                tg.enabled = seen < n;
+                seen += 1;
+            }
+        }
+    }
+
+    /// Number of TG tiles.
+    pub fn tg_count(&self) -> usize {
+        self.tiles
+            .iter()
+            .filter(|t| matches!(t, Tile::Tg(_)))
+            .count()
+    }
+
+    /// Host read of a monitor counter.
+    pub fn host_read_counter(&self, tile: usize, reg: crate::monitor::CounterReg) -> u64 {
+        use crate::monitor::CounterReg as R;
+        let c = self.mon.tile(tile);
+        match reg {
+            R::Ctrl => c.enable as u64,
+            R::ExecTime => c.exec_cycles,
+            R::PktsIn => c.pkts_in,
+            R::PktsOut => c.pkts_out,
+            R::RttSum => c.rtt_sum,
+            R::RttCnt => c.rtt_count,
+            R::Invocations => c.invocations,
+        }
+    }
+
+    /// Install the default Fig.-4-style sampler: cumulative MEM packets
+    /// plus each island's frequency, every `interval` ps.
+    pub fn enable_sampler(&mut self, interval: Ps) {
+        let mut names = vec!["mem_pkts_in".to_string()];
+        for isl in &self.cfg.islands {
+            names.push(format!("freq_{}", isl.name));
+        }
+        let name_refs: Vec<&str> = names.iter().map(String::as_str).collect();
+        self.sampler = Some(Sampler::new(interval, &name_refs));
+    }
+
+    // ---------------------------------------------------------------
+    // Engine
+    // ---------------------------------------------------------------
+
+    /// Process one clock edge; returns the new simulation time.
+    pub fn step(&mut self) -> Ps {
+        let Reverse((t, i)) = self.heap.pop().expect("at least one island");
+        self.now = t;
+        self.edges += 1;
+
+        // Apply due host schedule entries.
+        while self.schedule_next < self.schedule.len() && self.schedule[self.schedule_next].0 <= t
+        {
+            let (_, island, mhz) = self.schedule[self.schedule_next];
+            let _ = self.host_write_freq(island, mhz);
+            self.schedule_next += 1;
+        }
+
+        self.islands[i].edge_delivered(t);
+        self.view.last_edges[i] = t;
+        self.view.periods[i] = self.islands[i].period(t);
+
+        // Routers of this island (all planes).
+        if i == self.cfg.noc.island {
+            let Fabric {
+                mesh,
+                links,
+                routers,
+                ..
+            } = &mut self.fabric;
+            for r in routers.iter_mut() {
+                r.tick(t, mesh, links, &self.view);
+            }
+        }
+
+        // Tiles of this island.
+        {
+            let Self {
+                fabric,
+                tiles,
+                arena,
+                blocks,
+                mon,
+                compute,
+                islands,
+                view,
+                island_tiles,
+                ..
+            } = self;
+            let mut ctx = TileCtx {
+                now: t,
+                mesh: &fabric.mesh,
+                links: &mut fabric.links,
+                view,
+                arena,
+                blocks,
+                compute: compute.as_mut(),
+                mon,
+                islands,
+            };
+            for &ti in &island_tiles[i] {
+                tiles[ti].tick(&mut ctx);
+            }
+        }
+
+        // Sample if due.
+        if let Some(s) = &mut self.sampler {
+            if s.due(t) {
+                let mut row = vec![self.mon.mem_pkts_in as f64];
+                for d in &self.islands {
+                    row.push(d.freq(t).as_mhz() as f64);
+                }
+                s.record(t, &row);
+            }
+        }
+
+        self.heap.push(Reverse((self.islands[i].next_edge(t), i)));
+        t
+    }
+
+    /// Run the engine until simulated time `t_end`.
+    pub fn run_until(&mut self, t_end: Ps) {
+        while self
+            .heap
+            .peek()
+            .map(|Reverse((t, _))| *t <= t_end)
+            .unwrap_or(false)
+        {
+            self.step();
+        }
+        self.now = t_end;
+    }
+
+    /// Run for `dur` more picoseconds.
+    pub fn run_for(&mut self, dur: Ps) {
+        let end = self.now + dur;
+        self.run_until(end);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets::paper_soc;
+    use crate::runtime::RefCompute;
+
+    fn build_paper(a1: (&str, usize), a2: (&str, usize)) -> Soc {
+        Soc::build(paper_soc(a1, a2), Box::new(RefCompute::new())).unwrap()
+    }
+
+    #[test]
+    fn builds_and_steps() {
+        let mut soc = build_paper(("dfadd", 1), ("dfmul", 1));
+        let t0 = soc.step();
+        assert!(t0 > 0);
+        soc.run_until(1_000_000); // 1 us
+        assert!(soc.edges > 50);
+        assert_eq!(soc.now, 1_000_000);
+    }
+
+    #[test]
+    fn edges_are_monotonic() {
+        let mut soc = build_paper(("dfadd", 1), ("dfadd", 1));
+        let mut last = 0;
+        for _ in 0..1000 {
+            let t = soc.step();
+            assert!(t >= last);
+            last = t;
+        }
+    }
+
+    #[test]
+    fn island_cycle_counts_match_frequencies() {
+        let mut soc = build_paper(("dfadd", 1), ("dfadd", 1));
+        soc.run_until(10_000_000); // 10 us
+        // NoC at 100 MHz: ~1000 cycles; A1 at 50 MHz: ~500.
+        let noc = soc.islands[0].cycles;
+        let a1 = soc.islands[1].cycles;
+        assert!((990..=1010).contains(&noc), "noc {noc}");
+        assert!((495..=505).contains(&a1), "a1 {a1}");
+    }
+
+    #[test]
+    fn dfs_request_changes_island_rate() {
+        let mut soc = build_paper(("dfadd", 1), ("dfadd", 1));
+        soc.run_until(1_000_000);
+        soc.host_write_freq(1, 10).unwrap(); // A1: 50 -> 10 MHz
+        soc.run_until(2_000_000);
+        let cycles_before_swap = soc.islands[1].cycles;
+        // After the actuator latency (11 us default) the island slows to
+        // 10 MHz: over the next 10 us it gains only ~100 cycles.
+        soc.run_until(13_000_000);
+        let at_swap = soc.islands[1].cycles;
+        soc.run_until(23_000_000);
+        let after = soc.islands[1].cycles;
+        let slow_rate = (after - at_swap) as f64 / 10.0; // cycles/us
+        assert!(slow_rate < 15.0, "slow rate {slow_rate} (want ~10)");
+        assert!(cycles_before_swap > 0);
+    }
+
+    #[test]
+    fn tg_activation_counts() {
+        let mut soc = build_paper(("adpcm", 4), ("dfmul", 4));
+        assert_eq!(soc.tg_count(), 11);
+        soc.host_set_tg_active(7);
+        let active = soc
+            .tiles
+            .iter()
+            .filter(|t| matches!(t, Tile::Tg(tg) if tg.enabled))
+            .count();
+        assert_eq!(active, 7);
+    }
+
+    #[test]
+    fn tgs_generate_memory_traffic() {
+        let mut soc = build_paper(("dfadd", 1), ("dfadd", 1));
+        soc.host_set_tg_active(4);
+        soc.run_until(200_000_000); // 200 us
+        assert!(soc.mon.mem_pkts_in > 50, "mem pkts {}", soc.mon.mem_pkts_in);
+        // Responses flow back: TGs complete round trips.
+        let completed: u64 = soc
+            .tiles
+            .iter()
+            .map(|t| match t {
+                Tile::Tg(tg) => tg.completed,
+                _ => 0,
+            })
+            .sum();
+        assert!(completed > 20, "completed {completed}");
+    }
+
+    #[test]
+    fn packet_arena_drains() {
+        let mut soc = build_paper(("dfadd", 1), ("dfadd", 1));
+        soc.host_set_tg_active(2);
+        soc.run_until(100_000_000);
+        soc.host_set_tg_active(0);
+        soc.run_until(200_000_000);
+        // All in-flight packets eventually delivered and released.
+        assert!(
+            soc.arena.live() < 40,
+            "arena leak: {} live",
+            soc.arena.live()
+        );
+    }
+}

@@ -1,0 +1,75 @@
+//! CPU tile: a CVA6 stand-in that exercises the monitoring path from
+//! software — it periodically polls accelerator counters over the
+//! config NoC plane, as §II-C's "accessed via software executing on CPU
+//! cores of the SoC" path.
+
+use crate::monitor::mmio::{counter_addr, CounterReg};
+use crate::noc::{Msg, NodeId};
+
+use super::{ni::NetIface, TileCtx};
+
+/// The CPU tile.
+pub struct CpuTile {
+    pub ni: NetIface,
+    pub tile_index: usize,
+    /// Nodes of the accelerator tiles to poll (with their tile indices).
+    pub poll_targets: Vec<(NodeId, usize)>,
+    /// Poll period in CPU cycles (0 = polling off).
+    pub poll_interval: u32,
+    countdown: u32,
+    next_target: usize,
+    tag: u32,
+    /// Completed polls (read responses received).
+    pub polls_completed: u64,
+    /// Last polled value (software-visible register).
+    pub last_value: u64,
+}
+
+impl CpuTile {
+    pub fn new(ni: NetIface, tile_index: usize, poll_interval: u32) -> Self {
+        Self {
+            ni,
+            tile_index,
+            poll_targets: Vec::new(),
+            poll_interval,
+            countdown: poll_interval,
+            next_target: 0,
+            tag: 0,
+            polls_completed: 0,
+            last_value: 0,
+        }
+    }
+
+    pub fn tick(&mut self, ctx: &mut TileCtx<'_>) {
+        for pkt in self.ni.tick_rx(ctx.links, ctx.now, 0) {
+            if let Msg::MmioResp { value, .. } = ctx.arena.get(pkt).msg {
+                self.polls_completed += 1;
+                self.last_value = value;
+            }
+            ctx.arena.release(pkt);
+        }
+
+        if self.poll_interval > 0 && !self.poll_targets.is_empty() {
+            if self.countdown > 0 {
+                self.countdown -= 1;
+            } else if self.ni.tx_backlog() < 4 {
+                let (node, tile) = self.poll_targets[self.next_target];
+                self.next_target = (self.next_target + 1) % self.poll_targets.len();
+                let addr = counter_addr(tile, CounterReg::ExecTime);
+                self.tag = self.tag.wrapping_add(1);
+                self.ni.send(
+                    ctx.arena,
+                    node,
+                    Msg::MmioRead {
+                        addr,
+                        tag: self.tag,
+                    },
+                    ctx.now,
+                );
+                self.countdown = self.poll_interval;
+            }
+        }
+
+        self.ni.tick_tx(ctx.links, ctx.arena, ctx.view, ctx.now);
+    }
+}

@@ -1,0 +1,81 @@
+//! I/O (auxiliary) tile: hosts the frequency registers of all islands
+//! and bridges the host (USB-serial on the real board).
+//!
+//! An `MmioWrite` to a FREQ register arriving over the config plane
+//! triggers the corresponding island's DFS actuator; `MmioRead` returns
+//! the current output frequency or the actuator-busy flag.
+
+use crate::monitor::mmio::{decode, MmioTarget};
+use crate::noc::Msg;
+use crate::util::time::Freq;
+
+use super::{ni::NetIface, TileCtx};
+
+/// The I/O tile.
+pub struct IoTile {
+    pub ni: NetIface,
+    pub tile_index: usize,
+    /// Frequency-change requests applied (stats).
+    pub freq_writes: u64,
+    /// Requests rejected (bad island / out of range).
+    pub freq_rejects: u64,
+}
+
+impl IoTile {
+    pub fn new(ni: NetIface, tile_index: usize) -> Self {
+        Self {
+            ni,
+            tile_index,
+            freq_writes: 0,
+            freq_rejects: 0,
+        }
+    }
+
+    /// Apply a frequency-register write (shared with the host path).
+    pub fn apply_freq_write(
+        islands: &mut [crate::clock::domain::ClockDomain],
+        island: usize,
+        mhz: u64,
+        now: crate::util::Ps,
+    ) -> bool {
+        if island >= islands.len() {
+            return false;
+        }
+        islands[island].request_freq(Freq::mhz(mhz), now).is_ok()
+    }
+
+    pub fn tick(&mut self, ctx: &mut TileCtx<'_>) {
+        for pkt in self.ni.tick_rx(ctx.links, ctx.now, 0) {
+            let p = ctx.arena.get(pkt);
+            let (src, msg) = (p.src, p.msg);
+            match msg {
+                Msg::MmioWrite { addr, value } => {
+                    if let MmioTarget::IslandFreq(i) = decode(addr) {
+                        if Self::apply_freq_write(ctx.islands, i, value, ctx.now) {
+                            self.freq_writes += 1;
+                        } else {
+                            self.freq_rejects += 1;
+                        }
+                    }
+                }
+                Msg::MmioRead { addr, tag } => {
+                    let value = match decode(addr) {
+                        MmioTarget::IslandFreq(i) if i < ctx.islands.len() => {
+                            ctx.islands[i].freq(ctx.now).as_mhz()
+                        }
+                        MmioTarget::IslandBusy(i) if i < ctx.islands.len() => {
+                            // Busy while a DFS request is still in flight.
+                            u64::from(ctx.islands[i].next_edge(ctx.now) == 0)
+                        }
+                        _ => 0,
+                    };
+                    self.ni
+                        .send(ctx.arena, src, Msg::MmioResp { value, tag }, ctx.now);
+                }
+                other => debug_assert!(false, "I/O tile got unexpected {other:?}"),
+            }
+            ctx.arena.release(pkt);
+        }
+        self.ni.tick_tx(ctx.links, ctx.arena, ctx.view, ctx.now);
+    }
+}

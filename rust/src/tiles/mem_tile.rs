@@ -1,0 +1,105 @@
+//! MEM tile: terminates DMA traffic at the DDR controller model and
+//! counts Fig. 4's "incoming data packets to memory".
+
+use crate::mem::{MemController, MemParams, MemRequest};
+use crate::noc::{Msg, Plane};
+use crate::util::Ps;
+
+use super::{ni::NetIface, TileCtx};
+
+/// The MEM tile.
+pub struct MemTile {
+    pub ni: NetIface,
+    pub tile_index: usize,
+    pub ctrl: MemController,
+    /// Island period at the last tick (for the controller's clock).
+    last_period: Ps,
+}
+
+impl MemTile {
+    pub fn new(ni: NetIface, tile_index: usize, params: MemParams) -> Self {
+        Self {
+            ni,
+            tile_index,
+            ctrl: MemController::new(params),
+            last_period: 10_000,
+        }
+    }
+
+    pub fn tick(&mut self, ctx: &mut TileCtx<'_>) {
+        let period = ctx.view.periods[self.ni.island];
+        self.last_period = period;
+
+        // Back-pressure the request plane when the controller queue is
+        // full — the NoC absorbs it (ejection FIFO fills, then credits).
+        let hold = if self.ctrl.can_accept() {
+            0
+        } else {
+            1 << Plane::Request.index()
+        };
+        for pkt in self.ni.tick_rx(ctx.links, ctx.now, hold) {
+            let p = ctx.arena.get(pkt);
+            let (src, msg) = (p.src, p.msg);
+            ctx.mon.mem_pkts_in += 1;
+            match msg {
+                Msg::MemRead { addr, beats, tag } => {
+                    self.ctrl.accept(
+                        MemRequest {
+                            addr,
+                            beats,
+                            is_write: false,
+                            src: src.0,
+                            tag,
+                            block: u32::MAX,
+                            offset: 0,
+                        },
+                        ctx.now,
+                    );
+                }
+                Msg::MemWrite {
+                    addr, beats, tag, ..
+                } => {
+                    ctx.mon.mem_beats_in += beats as u64;
+                    self.ctrl.accept(
+                        MemRequest {
+                            addr,
+                            beats,
+                            is_write: true,
+                            src: src.0,
+                            tag,
+                            block: u32::MAX,
+                            offset: 0,
+                        },
+                        ctx.now,
+                    );
+                }
+                other => debug_assert!(false, "MEM tile got unexpected {other:?}"),
+            }
+            ctx.arena.release(pkt);
+        }
+
+        self.ctrl.tick(ctx.now, period);
+
+        // Packetize completed bursts (throttled by the NI backlog so the
+        // response path models the single ejection port).
+        while self.ni.tx_backlog() < 8 {
+            let Some(resp) = self.ctrl.pop_done(ctx.now) else {
+                break;
+            };
+            let dst = crate::noc::NodeId(resp.req.src);
+            let msg = if resp.req.is_write {
+                Msg::MemWriteAck { tag: resp.req.tag }
+            } else {
+                Msg::MemReadResp {
+                    beats: resp.req.beats,
+                    tag: resp.req.tag,
+                    block: crate::mem::BlockId(resp.req.block),
+                    offset: resp.req.offset,
+                }
+            };
+            self.ni.send(ctx.arena, dst, msg, ctx.now);
+        }
+
+        self.ni.tick_tx(ctx.links, ctx.arena, ctx.view, ctx.now);
+    }
+}

@@ -1,0 +1,88 @@
+//! SoC tiles: CPU, memory, I/O, traffic generators, and the multi-replica
+//! accelerator (MRA) tiles that are the paper's contribution 1.
+//!
+//! Every tile owns a [`ni::NetIface`] connecting it to its NoC node's
+//! local router port. Tiles are ticked by the simulation engine at their
+//! frequency island's clock edges and interact with shared state through
+//! [`TileCtx`].
+
+pub mod cpu;
+pub mod io;
+pub mod mem_tile;
+pub mod mra;
+pub mod ni;
+pub mod tg;
+pub mod timing;
+
+pub use mra::{MraTile, ReplicaState};
+pub use ni::NetIface;
+pub use timing::{AccelTiming, DmaParams};
+
+use crate::clock::domain::ClockDomain;
+use crate::mem::BlockStore;
+use crate::monitor::MonitorFile;
+use crate::noc::{ClockView, LinkFifo, Mesh, PacketArena};
+use crate::runtime::AccelCompute;
+use crate::util::Ps;
+
+/// Shared state a tile may touch during its tick.
+pub struct TileCtx<'a> {
+    pub now: Ps,
+    pub mesh: &'a Mesh,
+    /// The fabric's link-FIFO arena (NI inject/eject FIFOs included).
+    pub links: &'a mut [LinkFifo],
+    pub view: &'a ClockView,
+    pub arena: &'a mut PacketArena,
+    pub blocks: &'a mut BlockStore,
+    pub compute: &'a mut dyn AccelCompute,
+    pub mon: &'a mut MonitorFile,
+    /// All clock domains (the I/O tile services frequency registers).
+    pub islands: &'a mut [ClockDomain],
+}
+
+/// A tile instance (enum dispatch keeps the hot loop monomorphic).
+pub enum Tile {
+    Cpu(cpu::CpuTile),
+    Mem(mem_tile::MemTile),
+    Io(io::IoTile),
+    Tg(tg::TgTile),
+    Mra(Box<mra::MraTile>),
+}
+
+impl Tile {
+    /// Tile index (== NoC node index) this tile sits at.
+    pub fn node_index(&self) -> usize {
+        self.ni().node.index()
+    }
+
+    pub fn ni(&self) -> &ni::NetIface {
+        match self {
+            Tile::Cpu(t) => &t.ni,
+            Tile::Mem(t) => &t.ni,
+            Tile::Io(t) => &t.ni,
+            Tile::Tg(t) => &t.ni,
+            Tile::Mra(t) => &t.ni,
+        }
+    }
+
+    /// One island-clock cycle.
+    pub fn tick(&mut self, ctx: &mut TileCtx<'_>) {
+        match self {
+            Tile::Cpu(t) => t.tick(ctx),
+            Tile::Mem(t) => t.tick(ctx),
+            Tile::Io(t) => t.tick(ctx),
+            Tile::Tg(t) => t.tick(ctx),
+            Tile::Mra(t) => t.tick(ctx),
+        }
+    }
+
+    pub fn kind_name(&self) -> &'static str {
+        match self {
+            Tile::Cpu(_) => "cpu",
+            Tile::Mem(_) => "mem",
+            Tile::Io(_) => "io",
+            Tile::Tg(_) => "tg",
+            Tile::Mra(_) => "mra",
+        }
+    }
+}

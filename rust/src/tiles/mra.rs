@@ -1,0 +1,525 @@
+//! Multi-replica accelerator (MRA) tile — paper contribution 1.
+//!
+//! `K` replicas of one HLS accelerator live behind the tile's
+//! [`AxiBridge`]. Each replica runs an independent DMA-fetch → compute →
+//! DMA-drain pipeline:
+//!
+//! * **Fetch** — the replica issues read-burst descriptors on its rdCtrl
+//!   stream (bounded by `max_outstanding`); the tile converts bridge-muxed
+//!   descriptors into `MemRead` packets; response data beats flow back
+//!   through the bridge's rdData demux to the replica.
+//! * **Compute** — once the invocation's input beats have arrived, the
+//!   replica is busy for [`AccelTiming::compute_cycles`]. When the timer
+//!   expires the *functional* result is produced by the PJRT executable
+//!   (or the native reference backend) on the tile's staged input blocks.
+//! * **Drain** — the replica streams the output through wrCtrl/wrData;
+//!   the tile packetizes completed bursts into `MemWrite` packets.
+//!
+//! Throughput observed at the monitors therefore reflects compute time,
+//! bridge contention (K-to-1 mux with per-burst grant switching), NoC
+//! transit, resynchronizer crossings, and memory-controller queueing —
+//! the full path the paper measures in Table I and Figs. 3-4.
+
+use std::collections::VecDeque;
+
+use crate::axi::bridge::UpStream;
+use crate::axi::{AxiBridge, BridgeParams, StreamBeat};
+use crate::mem::{Block, BlockId};
+use crate::monitor::mmio::{self, CounterReg, MmioTarget};
+use crate::noc::{Msg, NodeId};
+use crate::util::Ps;
+
+use super::timing::{AccelTiming, DmaParams};
+use super::{ni::NetIface, TileCtx};
+
+/// Snapshot of a replica's pipeline occupancy (debug/reporting).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ReplicaState {
+    /// Complete input sets buffered and ready to compute.
+    pub inputs_ready: u32,
+    /// Whether the compute pipeline is busy.
+    pub computing: bool,
+    /// Completed computations awaiting writeback.
+    pub outputs_pending: u32,
+}
+
+/// One accelerator replica: three loosely-coupled engines (fetch,
+/// compute, drain) sharing ping-pong buffers, as in ESP's DMA model —
+/// the *next* invocation's input DMA overlaps the current computation.
+#[derive(Debug)]
+struct Replica {
+    // fetch engine --------------------------------------------------
+    /// Read bursts issued for the in-progress prefetch round.
+    bursts_issued: u32,
+    /// Read bursts in flight (ctrl issued, last data beat not yet seen).
+    outstanding: usize,
+    /// Input data beats received for the in-progress prefetch round.
+    beats_received: u32,
+    /// Complete input sets buffered (ping-pong: at most 2).
+    inputs_ready: u32,
+    /// Issue times of in-flight bursts (FIFO: per-replica responses
+    /// return in order).
+    inflight: VecDeque<Ps>,
+    // compute engine ------------------------------------------------
+    /// Remaining busy cycles; `None` = idle.
+    compute_remaining: Option<u64>,
+    // drain engine --------------------------------------------------
+    /// Completed computations whose output is not yet written back.
+    outputs_pending: u32,
+    /// Write bursts whose descriptor has been pushed (current drain).
+    wr_bursts_pushed: u32,
+    /// Write data beats pushed (current drain).
+    wr_beats_pushed: u32,
+    /// Completed invocations (output fully drained).
+    invocations: u64,
+}
+
+/// Input double-buffer depth (ESP ping-pong DMA buffers).
+const INPUT_BUFFERS: u32 = 2;
+/// Output buffers: one draining + one completing.
+const OUTPUT_BUFFERS: u32 = 2;
+
+impl Replica {
+    fn new() -> Self {
+        Self {
+            bursts_issued: 0,
+            outstanding: 0,
+            beats_received: 0,
+            inputs_ready: 0,
+            inflight: VecDeque::new(),
+            compute_remaining: None,
+            outputs_pending: 0,
+            wr_bursts_pushed: 0,
+            wr_beats_pushed: 0,
+            invocations: 0,
+        }
+    }
+
+    fn state(&self) -> ReplicaState {
+        ReplicaState {
+            inputs_ready: self.inputs_ready,
+            computing: self.compute_remaining.is_some(),
+            outputs_pending: self.outputs_pending,
+        }
+    }
+}
+
+/// The MRA tile.
+pub struct MraTile {
+    pub ni: NetIface,
+    /// Tile index in the SoC (monitor-file slot).
+    pub tile_index: usize,
+    pub accel: String,
+    pub timing: AccelTiming,
+    pub dma: DmaParams,
+    bridge: AxiBridge,
+    replicas: Vec<Replica>,
+    mem_node: NodeId,
+    /// Replicas currently in Compute (drives the tile exec-time counter).
+    computing: usize,
+
+    // -- tile-level packetization state --------------------------------
+    /// Write bursts announced on wrCtrl awaiting data: (replica, beats).
+    pending_writes: VecDeque<(u8, u16)>,
+    /// wrData beats accumulated per replica.
+    wr_data_avail: Vec<u32>,
+    /// Delivered read-response bursts awaiting serialization into the
+    /// bridge's tile-side rdData stream: (replica, beats left, total).
+    rd_staging: VecDeque<(u8, u16)>,
+    /// Rolling DMA address cursor (timing-only).
+    addr_cursor: u64,
+
+    // -- functional state ----------------------------------------------
+    /// Input blocks for the accelerator function (staged by the driver;
+    /// rotated per invocation when more than one set is staged).
+    pub staged_inputs: Vec<Vec<BlockId>>,
+    staged_cursor: usize,
+    /// Outputs of the most recent invocation (validation hook).
+    pub last_outputs: Vec<Block>,
+    /// Invoke the functional backend on every invocation (true) or only
+    /// on the first use of each staged input set (false — long benches).
+    pub functional_every_invocation: bool,
+    /// Cached outputs per staged input set (used when the flag is false).
+    cached_outputs: Vec<Option<Vec<Block>>>,
+    /// Total functional invocations actually executed.
+    pub functional_calls: u64,
+}
+
+impl MraTile {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        ni: NetIface,
+        tile_index: usize,
+        accel: &str,
+        replicas: usize,
+        timing: AccelTiming,
+        dma: DmaParams,
+        bridge_params: BridgeParams,
+        mem_node: NodeId,
+    ) -> Self {
+        assert_eq!(bridge_params.replicas, replicas);
+        Self {
+            ni,
+            tile_index,
+            accel: accel.to_string(),
+            timing,
+            dma,
+            bridge: AxiBridge::new(bridge_params),
+            replicas: (0..replicas).map(|_| Replica::new()).collect(),
+            mem_node,
+            computing: 0,
+            pending_writes: VecDeque::new(),
+            wr_data_avail: vec![0; replicas],
+            rd_staging: VecDeque::new(),
+            addr_cursor: 0,
+            staged_inputs: Vec::new(),
+            staged_cursor: 0,
+            last_outputs: Vec::new(),
+            functional_every_invocation: true,
+            cached_outputs: Vec::new(),
+            functional_calls: 0,
+        }
+    }
+
+    pub fn replica_count(&self) -> usize {
+        self.replicas.len()
+    }
+
+    pub fn invocations(&self) -> u64 {
+        self.replicas.iter().map(|r| r.invocations).sum()
+    }
+
+    /// Pipeline snapshot of replica `r`.
+    pub fn replica_state(&self, r: usize) -> ReplicaState {
+        self.replicas[r].state()
+    }
+
+    /// Total input beats (words) of one invocation.
+    fn in_beats(&self) -> u32 {
+        self.timing.bytes_in / 4
+    }
+
+    fn out_beats(&self) -> u32 {
+        self.timing.bytes_out / 4
+    }
+
+    /// Stage functional input sets (driver API). Each set is one vector
+    /// of block ids matching the accelerator's manifest inputs.
+    pub fn stage_inputs(&mut self, sets: Vec<Vec<BlockId>>) {
+        self.cached_outputs = vec![None; sets.len()];
+        self.staged_inputs = sets;
+        self.staged_cursor = 0;
+    }
+
+    /// One tile-clock cycle.
+    pub fn tick(&mut self, ctx: &mut TileCtx<'_>) {
+        self.rx(ctx);
+        self.feed_rd_staging();
+        self.bridge.tick();
+        self.tick_replicas(ctx);
+        self.packetize(ctx);
+        self.ni.tick_tx(ctx.links, ctx.arena, ctx.view, ctx.now);
+    }
+
+    /// Deliver incoming packets.
+    fn rx(&mut self, ctx: &mut TileCtx<'_>) {
+        // Hold the response plane if staging is deep (finite reassembly
+        // buffer): backpressure propagates into the NoC.
+        let hold = if self.rd_staging.len() >= 8 {
+            1 << crate::noc::Plane::Response.index()
+        } else {
+            0
+        };
+        for pkt in self.ni.tick_rx(ctx.links, ctx.now, hold) {
+            let msg = ctx.arena.get(pkt).msg;
+            ctx.mon.tile_mut(self.tile_index).on_pkt_in();
+            match msg {
+                Msg::MemReadResp { beats, tag, .. } => {
+                    let replica = (tag >> 16) as u8;
+                    self.rd_staging.push_back((replica, beats));
+                }
+                Msg::MemWriteAck { .. } => {}
+                Msg::MmioRead { addr, tag } => {
+                    let value = self.mmio_read(addr, ctx);
+                    let src = ctx.arena.get(pkt).src;
+                    self.ni
+                        .send(ctx.arena, src, Msg::MmioResp { value, tag }, ctx.now);
+                    ctx.mon.tile_mut(self.tile_index).on_pkt_out();
+                }
+                Msg::MmioWrite { addr, value } => {
+                    self.mmio_write(addr, value, ctx);
+                }
+                other => {
+                    debug_assert!(false, "MRA tile got unexpected {other:?}");
+                }
+            }
+            ctx.arena.release(pkt);
+        }
+    }
+
+    fn mmio_read(&self, addr: u64, ctx: &TileCtx<'_>) -> u64 {
+        let c = ctx.mon.tile(self.tile_index);
+        match mmio::decode(addr) {
+            MmioTarget::Counter(_, reg) => match reg {
+                CounterReg::Ctrl => c.enable as u64,
+                CounterReg::ExecTime => c.exec_cycles,
+                CounterReg::PktsIn => c.pkts_in,
+                CounterReg::PktsOut => c.pkts_out,
+                CounterReg::RttSum => c.rtt_sum,
+                CounterReg::RttCnt => c.rtt_count,
+                CounterReg::Invocations => c.invocations,
+            },
+            _ => 0,
+        }
+    }
+
+    fn mmio_write(&mut self, addr: u64, value: u64, ctx: &mut TileCtx<'_>) {
+        if let MmioTarget::Counter(_, CounterReg::Ctrl) = mmio::decode(addr) {
+            let c = ctx.mon.tile_mut(self.tile_index);
+            if value & 0b10 != 0 {
+                c.manual_reset();
+            }
+            c.enable = (value & 0x0F) as u8;
+        }
+    }
+
+    /// Serialize one staged response beat per cycle into the bridge's
+    /// tile-side rdData stream.
+    fn feed_rd_staging(&mut self) {
+        let Some(&(replica, left)) = self.rd_staging.front() else {
+            return;
+        };
+        if self
+            .bridge
+            .tile_rd_data
+            .try_push(StreamBeat {
+                replica,
+                payload: 0,
+                last: left == 1,
+            })
+        {
+            if left == 1 {
+                self.rd_staging.pop_front();
+            } else {
+                self.rd_staging.front_mut().unwrap().1 -= 1;
+            }
+        }
+    }
+
+    fn tick_replicas(&mut self, ctx: &mut TileCtx<'_>) {
+        let in_beats = self.in_beats();
+        let out_beats = self.out_beats();
+        let read_bursts = self.timing.read_bursts(self.dma.burst_beats);
+        let write_bursts = self.timing.write_bursts(self.dma.burst_beats);
+
+        for r in 0..self.replicas.len() {
+            // ---- rdData sink: consume one demuxed beat per cycle. ----
+            if let Some(beat) = self.bridge.pop_rd_data(r) {
+                let rep = &mut self.replicas[r];
+                rep.beats_received += 1;
+                if beat.last {
+                    rep.outstanding -= 1;
+                    if let Some(t_issue) = rep.inflight.pop_front() {
+                        ctx.mon
+                            .tile_mut(self.tile_index)
+                            .on_round_trip(ctx.now - t_issue);
+                    }
+                }
+            }
+
+            // ---- fetch engine: prefetch up to INPUT_BUFFERS sets. ----
+            {
+                let rep = &mut self.replicas[r];
+                // Continue the in-flight prefetch round, or start a new
+                // one only while a ping-pong buffer is free.
+                let may_fetch = rep.bursts_issued > 0 || rep.inputs_ready < INPUT_BUFFERS;
+                if may_fetch
+                    && rep.bursts_issued < read_bursts
+                    && rep.outstanding < self.dma.max_outstanding
+                    && self.bridge.can_push_up(UpStream::RdCtrl, r)
+                {
+                    let seq = rep.bursts_issued;
+                    let ok = self.bridge.push_up(
+                        UpStream::RdCtrl,
+                        r,
+                        StreamBeat {
+                            replica: r as u8,
+                            payload: seq as u64,
+                            last: true,
+                        },
+                    );
+                    debug_assert!(ok);
+                    let rep = &mut self.replicas[r];
+                    rep.inflight.push_back(ctx.now);
+                    rep.bursts_issued += 1;
+                    rep.outstanding += 1;
+                }
+                let rep = &mut self.replicas[r];
+                if rep.beats_received >= in_beats {
+                    rep.beats_received -= in_beats;
+                    rep.inputs_ready += 1;
+                    rep.bursts_issued = 0; // next prefetch round may begin
+                }
+            }
+
+            // ---- compute engine. ----
+            match self.replicas[r].compute_remaining {
+                None => {
+                    let rep = &mut self.replicas[r];
+                    if rep.inputs_ready > 0 && rep.outputs_pending < OUTPUT_BUFFERS {
+                        rep.inputs_ready -= 1;
+                        rep.compute_remaining = Some(self.timing.compute_cycles);
+                        if self.computing == 0 {
+                            ctx.mon.tile_mut(self.tile_index).on_start(ctx.now);
+                        }
+                        self.computing += 1;
+                    }
+                }
+                Some(remaining) => {
+                    if remaining > 1 {
+                        self.replicas[r].compute_remaining = Some(remaining - 1);
+                    } else {
+                        self.finish_compute(r, ctx);
+                    }
+                }
+            }
+
+            // ---- drain engine. ----
+            if self.replicas[r].outputs_pending > 0 {
+                let rep = &self.replicas[r];
+                let beats_announced = rep.wr_bursts_pushed * self.dma.burst_beats as u32;
+                if rep.wr_bursts_pushed < write_bursts
+                    && beats_announced <= rep.wr_beats_pushed
+                    && self.bridge.can_push_up(UpStream::WrCtrl, r)
+                {
+                    let remaining_total = out_beats - beats_announced;
+                    let burst = remaining_total.min(self.dma.burst_beats as u32) as u16;
+                    self.bridge.push_up(
+                        UpStream::WrCtrl,
+                        r,
+                        StreamBeat {
+                            replica: r as u8,
+                            payload: burst as u64,
+                            last: true,
+                        },
+                    );
+                    self.replicas[r].wr_bursts_pushed += 1;
+                }
+                let rep = &self.replicas[r];
+                if rep.wr_beats_pushed < out_beats
+                    && rep.wr_beats_pushed < rep.wr_bursts_pushed * self.dma.burst_beats as u32
+                    && self.bridge.can_push_up(UpStream::WrData, r)
+                {
+                    let last = (rep.wr_beats_pushed + 1) % self.dma.burst_beats as u32 == 0
+                        || rep.wr_beats_pushed + 1 == out_beats;
+                    self.bridge.push_up(
+                        UpStream::WrData,
+                        r,
+                        StreamBeat {
+                            replica: r as u8,
+                            payload: 0,
+                            last,
+                        },
+                    );
+                    self.replicas[r].wr_beats_pushed += 1;
+                }
+                let rep = &mut self.replicas[r];
+                if rep.wr_beats_pushed >= out_beats {
+                    rep.invocations += 1;
+                    rep.outputs_pending -= 1;
+                    rep.wr_bursts_pushed = 0;
+                    rep.wr_beats_pushed = 0;
+                    ctx.mon.tile_mut(self.tile_index).on_invocation();
+                }
+            }
+        }
+
+        if self.computing > 0 {
+            ctx.mon.tile_mut(self.tile_index).on_exec_cycle();
+        }
+    }
+
+    /// Compute finished on replica `r`: run the functional datapath.
+    fn finish_compute(&mut self, r: usize, ctx: &mut TileCtx<'_>) {
+        if !self.staged_inputs.is_empty() {
+            let set = self.staged_cursor % self.staged_inputs.len();
+            self.staged_cursor += 1;
+            let run = self.functional_every_invocation || self.cached_outputs[set].is_none();
+            if run {
+                let ids = &self.staged_inputs[set];
+                let inputs: Vec<&Block> = ids.iter().map(|&id| ctx.blocks.get(id)).collect();
+                match ctx.compute.invoke(&self.accel, &inputs) {
+                    Ok(outs) => {
+                        self.functional_calls += 1;
+                        self.cached_outputs[set] = Some(outs.clone());
+                        self.last_outputs = outs;
+                    }
+                    Err(e) => panic!("functional invocation of {} failed: {e:#}", self.accel),
+                }
+            } else if let Some(outs) = &self.cached_outputs[set] {
+                self.last_outputs = outs.clone();
+            }
+        }
+        self.computing -= 1;
+        if self.computing == 0 {
+            ctx.mon.tile_mut(self.tile_index).on_complete(ctx.now);
+        }
+        let rep = &mut self.replicas[r];
+        rep.compute_remaining = None;
+        rep.outputs_pending += 1;
+    }
+
+    /// Convert bridge-muxed tile streams into NoC packets.
+    fn packetize(&mut self, ctx: &mut TileCtx<'_>) {
+        // rdCtrl descriptor -> MemRead packet (one per cycle).
+        if self.ni.tx_backlog() < 16 {
+            if let Some(beat) = self.bridge.tile_up[UpStream::RdCtrl as usize].pop() {
+                let tag = ((beat.replica as u32) << 16) | (beat.payload as u32 & 0xFFFF);
+                let addr = 0x1000_0000 + (self.tile_index as u64) * 0x10_0000 + self.addr_cursor;
+                self.addr_cursor = (self.addr_cursor + self.dma.burst_beats as u64 * 4) % 0x10_0000;
+                self.ni.send(
+                    ctx.arena,
+                    self.mem_node,
+                    Msg::MemRead {
+                        addr,
+                        beats: self.dma.burst_beats,
+                        tag,
+                    },
+                    ctx.now,
+                );
+                ctx.mon.tile_mut(self.tile_index).on_pkt_out();
+            }
+        }
+
+        // wrCtrl descriptor -> pending write burst.
+        if let Some(beat) = self.bridge.tile_up[UpStream::WrCtrl as usize].pop() {
+            self.pending_writes
+                .push_back((beat.replica, beat.payload as u16));
+        }
+        // wrData beat -> per-replica accumulation.
+        if let Some(beat) = self.bridge.tile_up[UpStream::WrData as usize].pop() {
+            self.wr_data_avail[beat.replica as usize] += 1;
+        }
+        // Completed write burst -> MemWrite packet.
+        if let Some(&(r, beats)) = self.pending_writes.front() {
+            if self.wr_data_avail[r as usize] >= beats as u32 && self.ni.tx_backlog() < 16 {
+                self.pending_writes.pop_front();
+                self.wr_data_avail[r as usize] -= beats as u32;
+                let addr = 0x2000_0000 + (self.tile_index as u64) * 0x10_0000 + self.addr_cursor;
+                self.ni.send(
+                    ctx.arena,
+                    self.mem_node,
+                    Msg::MemWrite {
+                        addr,
+                        beats,
+                        tag: (r as u32) << 16,
+                        block: BlockId(u32::MAX), // timing-only payload
+                        offset: 0,
+                    },
+                    ctx.now,
+                );
+                ctx.mon.tile_mut(self.tile_index).on_pkt_out();
+            }
+        }
+    }
+}

@@ -1,0 +1,288 @@
+//! Tile network interface (NI): packetization between a tile and its
+//! router's local port, one flit per plane per tile-clock cycle.
+//!
+//! The NI is where tile-island traffic crosses into the NoC island:
+//! flits pushed towards the router are stamped with the resynchronizer
+//! delay (see [`crate::noc::ClockView::ready_at`]), modelling the
+//! dual-clock FIFOs at the island boundary (Fig. 1's *Resync* blocks).
+
+use std::collections::VecDeque;
+
+use crate::noc::{ClockView, LinkFifo, LinkId, Msg, NodeId, PacketArena, PacketId, NUM_PLANES};
+use crate::util::Ps;
+
+/// Per-plane NI endpoint state.
+#[derive(Debug, Default)]
+struct PlaneState {
+    /// Packets queued for injection.
+    tx: VecDeque<PacketId>,
+    /// Flits of the front packet already injected.
+    tx_sent: u16,
+    /// Flits of the in-progress incoming packet received.
+    rx_got: u16,
+}
+
+/// Packets completed in one rx tick (at most one per plane).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct RxDone(pub [Option<PacketId>; NUM_PLANES]);
+
+impl RxDone {
+    pub fn iter(&self) -> impl Iterator<Item = PacketId> + '_ {
+        self.0.iter().flatten().copied()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.0.iter().all(Option::is_none)
+    }
+}
+
+impl IntoIterator for RxDone {
+    type Item = PacketId;
+    type IntoIter = core::iter::Flatten<core::array::IntoIter<Option<PacketId>, NUM_PLANES>>;
+    fn into_iter(self) -> Self::IntoIter {
+        self.0.into_iter().flatten()
+    }
+}
+
+/// The NI.
+#[derive(Debug)]
+pub struct NetIface {
+    pub node: NodeId,
+    /// Frequency island of the owning tile.
+    pub island: usize,
+    /// Island of the NoC routers (resync target).
+    pub noc_island: usize,
+    /// Inject link per plane (NI -> router local input).
+    pub inject: [LinkId; NUM_PLANES],
+    /// Eject link per plane (router local output -> NI).
+    pub eject: [LinkId; NUM_PLANES],
+    planes: [PlaneState; NUM_PLANES],
+    /// Packets fully injected (stats).
+    pub pkts_sent: u64,
+    /// Packets fully received (stats).
+    pub pkts_received: u64,
+}
+
+impl NetIface {
+    pub fn new(
+        node: NodeId,
+        island: usize,
+        noc_island: usize,
+        inject: [LinkId; NUM_PLANES],
+        eject: [LinkId; NUM_PLANES],
+    ) -> Self {
+        Self {
+            node,
+            island,
+            noc_island,
+            inject,
+            eject,
+            planes: Default::default(),
+            pkts_sent: 0,
+            pkts_received: 0,
+        }
+    }
+
+    /// Queue a message for transmission. Returns the packet id.
+    pub fn send(
+        &mut self,
+        arena: &mut PacketArena,
+        dst: NodeId,
+        msg: Msg,
+        now: Ps,
+    ) -> PacketId {
+        let plane = msg.plane();
+        let id = arena.alloc(self.node, dst, msg, now);
+        self.planes[plane.index()].tx.push_back(id);
+        id
+    }
+
+    /// Packets waiting (or in progress) for injection on any plane.
+    pub fn tx_backlog(&self) -> usize {
+        self.planes.iter().map(|p| p.tx.len()).sum()
+    }
+
+    /// One tile-clock cycle of the transmit side: inject up to one flit
+    /// per plane.
+    pub fn tick_tx(
+        &mut self,
+        links: &mut [LinkFifo],
+        arena: &PacketArena,
+        view: &ClockView,
+        now: Ps,
+    ) {
+        for p in 0..NUM_PLANES {
+            let st = &mut self.planes[p];
+            let Some(&pkt) = st.tx.front() else { continue };
+            let fifo = &mut links[self.inject[p].0 as usize];
+            if !fifo.can_push() {
+                continue;
+            }
+            let flit = arena.flit(pkt, st.tx_sent);
+            let t = view.ready_at(now, self.island, self.noc_island);
+            fifo.push(flit, t);
+            st.tx_sent += 1;
+            if flit.is_tail() {
+                st.tx.pop_front();
+                st.tx_sent = 0;
+                self.pkts_sent += 1;
+            }
+        }
+    }
+
+    /// One tile-clock cycle of the receive side: eject up to one flit per
+    /// plane; returns packets completed this cycle (tail received), at
+    /// most one per plane — a fixed array, so the hot loop never
+    /// allocates. Planes whose index is in `hold_planes` are
+    /// back-pressured (the tile cannot accept more messages of that
+    /// class — e.g. a full memory-controller queue).
+    pub fn tick_rx(
+        &mut self,
+        links: &mut [LinkFifo],
+        now: Ps,
+        hold_planes: u8,
+    ) -> RxDone {
+        let mut done = RxDone::default();
+        for p in 0..NUM_PLANES {
+            if hold_planes & (1 << p) != 0 {
+                continue;
+            }
+            let st = &mut self.planes[p];
+            let fifo = &mut links[self.eject[p].0 as usize];
+            if let Some(flit) = fifo.pop(now) {
+                st.rx_got += 1;
+                if flit.is_tail() {
+                    debug_assert_eq!(st.rx_got, flit.len, "flit loss within packet");
+                    st.rx_got = 0;
+                    self.pkts_received += 1;
+                    done.0[p] = Some(flit.packet);
+                }
+            }
+        }
+        done
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::noc::packet::Msg;
+
+    fn view() -> ClockView {
+        ClockView {
+            periods: vec![20_000, 10_000],
+            last_edges: vec![0, 0],
+            pipeline: 1,
+            sync_stages: 2,
+        }
+    }
+
+    fn ni_and_links() -> (NetIface, Vec<LinkFifo>) {
+        let links: Vec<LinkFifo> = (0..6).map(|_| LinkFifo::new(2)).collect();
+        let ni = NetIface::new(
+            NodeId(0),
+            0,
+            1,
+            [LinkId(0), LinkId(1), LinkId(2)],
+            [LinkId(3), LinkId(4), LinkId(5)],
+        );
+        (ni, links)
+    }
+
+    #[test]
+    fn injects_one_flit_per_cycle_with_cdc_stamp() {
+        let (mut ni, mut links) = ni_and_links();
+        let mut arena = PacketArena::new();
+        ni.send(
+            &mut arena,
+            NodeId(3),
+            Msg::MemRead {
+                addr: 0,
+                beats: 4,
+                tag: 1,
+            },
+            0,
+        );
+        ni.tick_tx(&mut links, &arena, &view(), 20_000);
+        assert_eq!(links[0].len(), 1);
+        // Crossing island 0 -> 1 (period 10_000): visible at the second
+        // 10 kps edge after 20_000 => 40_000.
+        assert!(links[0].peek(39_999).is_none());
+        assert!(links[0].peek(40_000).is_some());
+    }
+
+    #[test]
+    fn multi_flit_packet_injected_over_cycles() {
+        let (mut ni, mut links) = ni_and_links();
+        let mut arena = PacketArena::new();
+        ni.send(
+            &mut arena,
+            NodeId(3),
+            Msg::MemReadResp {
+                beats: 3,
+                tag: 0,
+                block: crate::mem::BlockId(0),
+                offset: 0,
+            },
+            0,
+        );
+        // 4 flits total, inject fifo cap 2: two cycles fill it, then stall.
+        ni.tick_tx(&mut links, &arena, &view(), 20_000);
+        ni.tick_tx(&mut links, &arena, &view(), 40_000);
+        ni.tick_tx(&mut links, &arena, &view(), 60_000);
+        assert_eq!(links[1].len(), 2, "response plane fifo capped");
+        assert_eq!(ni.pkts_sent, 0);
+        // Drain and finish.
+        links[1].pop(u64::MAX);
+        links[1].pop(u64::MAX);
+        ni.tick_tx(&mut links, &arena, &view(), 80_000);
+        ni.tick_tx(&mut links, &arena, &view(), 100_000);
+        assert_eq!(ni.pkts_sent, 1);
+    }
+
+    #[test]
+    fn rx_completes_packet_on_tail() {
+        let (mut ni, mut links) = ni_and_links();
+        let mut arena = PacketArena::new();
+        let pkt = arena.alloc(
+            NodeId(3),
+            NodeId(0),
+            Msg::MemReadResp {
+                beats: 1,
+                tag: 9,
+                block: crate::mem::BlockId(0),
+                offset: 0,
+            },
+            0,
+        );
+        links[4].push(arena.flit(pkt, 0), 0);
+        links[4].push(arena.flit(pkt, 1), 0);
+        let d1 = ni.tick_rx(&mut links, 10, 0);
+        assert!(d1.is_empty());
+        let d2 = ni.tick_rx(&mut links, 20, 0);
+        assert_eq!(d2.into_iter().collect::<Vec<_>>(), vec![pkt]);
+        assert_eq!(ni.pkts_received, 1);
+    }
+
+    #[test]
+    fn rx_hold_backpressures_plane() {
+        let (mut ni, mut links) = ni_and_links();
+        let mut arena = PacketArena::new();
+        let pkt = arena.alloc(
+            NodeId(3),
+            NodeId(0),
+            Msg::MemRead {
+                addr: 0,
+                beats: 1,
+                tag: 0,
+            },
+            0,
+        );
+        links[3].push(arena.flit(pkt, 0), 0);
+        let d = ni.tick_rx(&mut links, 10, 1 << 0); // hold Request plane
+        assert!(d.is_empty());
+        assert_eq!(links[3].len(), 1, "flit stays queued");
+        let d = ni.tick_rx(&mut links, 20, 0);
+        assert_eq!(d.iter().count(), 1);
+    }
+}

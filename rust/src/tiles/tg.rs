@@ -1,0 +1,109 @@
+//! Traffic-generator (TG) tile.
+//!
+//! The paper's TG tiles "generate traffic in the NoC interconnect and
+//! implement dfadd accelerators, which were empirically observed to be
+//! memory-bound" (§III). The model captures exactly that behaviour: a
+//! stream of DMA read bursts to the MEM tile with a bounded number
+//! outstanding, i.e. a latency-tolerant memory-bound requester. Enabling
+//! `n` of them reproduces Fig. 3's X axis.
+
+use std::collections::VecDeque;
+
+use crate::noc::{Msg, NodeId};
+use crate::util::{Ps, SplitMix64};
+
+use super::{ni::NetIface, TileCtx};
+
+/// The TG tile.
+pub struct TgTile {
+    pub ni: NetIface,
+    pub tile_index: usize,
+    /// Active at run time (host/CPU toggled; Fig. 3 sweeps this).
+    pub enabled: bool,
+    pub burst_beats: u16,
+    pub max_outstanding: usize,
+    /// Idle cycles between burst issues (0 = maximum pressure).
+    pub gap_cycles: u32,
+    outstanding: usize,
+    seq: u32,
+    gap_left: u32,
+    inflight: VecDeque<Ps>,
+    rng: SplitMix64,
+    mem_node: NodeId,
+    /// Completed round trips (local stats; also in the monitor file).
+    pub completed: u64,
+}
+
+impl TgTile {
+    pub fn new(
+        ni: NetIface,
+        tile_index: usize,
+        mem_node: NodeId,
+        burst_beats: u16,
+        max_outstanding: usize,
+        rng: SplitMix64,
+    ) -> Self {
+        Self {
+            ni,
+            tile_index,
+            enabled: false,
+            burst_beats,
+            max_outstanding,
+            gap_cycles: 0,
+            outstanding: 0,
+            seq: 0,
+            gap_left: 0,
+            inflight: VecDeque::new(),
+            rng,
+            mem_node,
+            completed: 0,
+        }
+    }
+
+    pub fn tick(&mut self, ctx: &mut TileCtx<'_>) {
+        // Receive responses.
+        for pkt in self.ni.tick_rx(ctx.links, ctx.now, 0) {
+            let msg = ctx.arena.get(pkt).msg;
+            ctx.mon.tile_mut(self.tile_index).on_pkt_in();
+            if let Msg::MemReadResp { .. } = msg {
+                self.outstanding -= 1;
+                self.completed += 1;
+                if let Some(t_issue) = self.inflight.pop_front() {
+                    ctx.mon
+                        .tile_mut(self.tile_index)
+                        .on_round_trip(ctx.now - t_issue);
+                }
+            }
+            ctx.arena.release(pkt);
+        }
+
+        // Issue new bursts.
+        if self.gap_left > 0 {
+            self.gap_left -= 1;
+        } else if self.enabled
+            && self.outstanding < self.max_outstanding
+            && self.ni.tx_backlog() < 8
+        {
+            let addr = 0x4000_0000
+                + (self.tile_index as u64) * 0x10_0000
+                + (self.rng.next_below(0x4000)) * 64;
+            self.ni.send(
+                ctx.arena,
+                self.mem_node,
+                Msg::MemRead {
+                    addr,
+                    beats: self.burst_beats,
+                    tag: self.seq,
+                },
+                ctx.now,
+            );
+            self.inflight.push_back(ctx.now);
+            self.seq = self.seq.wrapping_add(1);
+            self.outstanding += 1;
+            self.gap_left = self.gap_cycles;
+            ctx.mon.tile_mut(self.tile_index).on_pkt_out();
+        }
+
+        self.ni.tick_tx(ctx.links, ctx.arena, ctx.view, ctx.now);
+    }
+}

@@ -1,0 +1,187 @@
+//! Per-accelerator timing models and DMA parameters.
+//!
+//! An accelerator invocation is one fixed-shape block computation (the
+//! AOT-lowered Layer-2 function). Its timing on the FPGA is characterized
+//! by the compute cycles per invocation (at the tile's island clock) and
+//! the DMA geometry. The compute-cycle figures are calibrated from
+//! Table I's baseline (1x) throughput at 50 MHz with an uncontended
+//! NoC@100MHz — see DESIGN.md §4:
+//!
+//! `compute_cycles = 50e6 * credit_bytes / (thr_MBs * 1e6)`
+//!
+//! dfadd/dfmul carry *low* cycles-per-byte (their HLS pipelines are
+//! shallow — they are memory-bound: DMA dominates whenever the NoC/MEM
+//! path is slow or contended), while dfsin/adpcm are deeply compute-bound.
+
+/// DMA engine parameters (per replica).
+#[derive(Debug, Clone, Copy)]
+pub struct DmaParams {
+    /// Data words per burst (ESP DMA transfers cacheline-sized chunks).
+    pub burst_beats: u16,
+    /// Maximum outstanding read bursts per replica.
+    pub max_outstanding: usize,
+}
+
+impl Default for DmaParams {
+    fn default() -> Self {
+        Self {
+            burst_beats: 16,
+            max_outstanding: 4,
+        }
+    }
+}
+
+/// Timing + geometry of one accelerator kind.
+#[derive(Debug, Clone)]
+pub struct AccelTiming {
+    pub name: &'static str,
+    /// Input bytes per invocation (sum over input streams).
+    pub bytes_in: u32,
+    /// Output bytes per invocation.
+    pub bytes_out: u32,
+    /// Bytes credited to throughput per invocation (what Table I's MB/s
+    /// measures: the accelerator's processed stream).
+    pub credit_bytes: u32,
+    /// Busy cycles per invocation at the tile clock once inputs are
+    /// buffered (the HLS pipeline's fill+drain time).
+    pub compute_cycles: u64,
+    /// Qualitative class from the paper (affects nothing; reporting only).
+    pub memory_bound: bool,
+}
+
+impl AccelTiming {
+    /// Calibrated timing DB for the five CHStone accelerators.
+    ///
+    /// Geometry matches `python/compile/model.py` (and the artifacts
+    /// manifest; checked at SoC build time):
+    ///   dfadd/dfmul: in 2x(8,128) f32, out (8,128)  -> 8192 B / 4096 B
+    ///   dfsin:       in  (8,128) f32, out (8,128)   -> 4096 B / 4096 B
+    ///   adpcm:       in  (64,128) i32, out (64,128) -> 32768 B / 32768 B
+    ///   gsm:         in  (160,128) f32, out (16+8,128) -> 81920 B / 12288 B
+    ///
+    /// `compute_cycles` from Table I baseline throughput @ 50 MHz:
+    ///   adpcm 1.40 MB/s over 32768 B  -> 1_170_000 cyc
+    ///   dfadd 9.22 MB/s over 4096 B   ->     22_212 cyc
+    ///   dfmul 8.70 MB/s over 4096 B   ->     23_540 cyc
+    ///   dfsin 0.33 MB/s over 4096 B   ->    620_606 cyc
+    ///   gsm   4.61 MB/s over 81920 B  ->    888_503 cyc
+    pub fn db() -> Vec<AccelTiming> {
+        vec![
+            AccelTiming {
+                name: "adpcm",
+                bytes_in: 64 * 128 * 4,
+                bytes_out: 64 * 128 * 4,
+                credit_bytes: 64 * 128 * 4,
+                compute_cycles: 1_170_000,
+                memory_bound: false,
+            },
+            AccelTiming {
+                name: "dfadd",
+                bytes_in: 2 * 8 * 128 * 4,
+                bytes_out: 8 * 128 * 4,
+                credit_bytes: 8 * 128 * 4,
+                compute_cycles: 22_212,
+                memory_bound: true,
+            },
+            AccelTiming {
+                name: "dfmul",
+                bytes_in: 2 * 8 * 128 * 4,
+                bytes_out: 8 * 128 * 4,
+                credit_bytes: 8 * 128 * 4,
+                compute_cycles: 23_540,
+                memory_bound: true,
+            },
+            AccelTiming {
+                name: "dfsin",
+                bytes_in: 8 * 128 * 4,
+                bytes_out: 8 * 128 * 4,
+                credit_bytes: 8 * 128 * 4,
+                compute_cycles: 620_606,
+                memory_bound: false,
+            },
+            AccelTiming {
+                name: "gsm",
+                bytes_in: 160 * 128 * 4,
+                bytes_out: (16 + 8) * 128 * 4,
+                credit_bytes: 160 * 128 * 4,
+                compute_cycles: 888_503,
+                memory_bound: false,
+            },
+        ]
+    }
+
+    pub fn lookup(name: &str) -> crate::Result<AccelTiming> {
+        Self::db()
+            .into_iter()
+            .find(|a| a.name == name)
+            .ok_or_else(|| anyhow::anyhow!("unknown accelerator {name:?}"))
+    }
+
+    /// Read bursts per invocation for a given DMA burst size.
+    pub fn read_bursts(&self, burst_beats: u16) -> u32 {
+        let beats = self.bytes_in / 4;
+        beats.div_ceil(burst_beats as u32)
+    }
+
+    /// Write bursts per invocation.
+    pub fn write_bursts(&self, burst_beats: u16) -> u32 {
+        let beats = self.bytes_out / 4;
+        beats.div_ceil(burst_beats as u32)
+    }
+
+    /// Ideal (uncontended, DMA-free) throughput in MB/s at `freq_mhz`.
+    pub fn ideal_throughput_mbs(&self, freq_mhz: u64) -> f64 {
+        self.credit_bytes as f64 * freq_mhz as f64 / self.compute_cycles as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn db_has_all_five() {
+        let names: Vec<&str> = AccelTiming::db().iter().map(|a| a.name).collect();
+        assert_eq!(names, vec!["adpcm", "dfadd", "dfmul", "dfsin", "gsm"]);
+    }
+
+    #[test]
+    fn calibration_matches_table1_baseline() {
+        // ideal throughput at 50 MHz must land on the Table I baseline
+        // within 1%.
+        for (name, want) in [
+            ("adpcm", 1.40),
+            ("dfadd", 9.22),
+            ("dfmul", 8.70),
+            ("dfsin", 0.33),
+            ("gsm", 4.61),
+        ] {
+            let t = AccelTiming::lookup(name).unwrap();
+            let got = t.ideal_throughput_mbs(50);
+            assert!(
+                (got - want).abs() / want < 0.01,
+                "{name}: {got:.3} vs {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn burst_counts() {
+        let t = AccelTiming::lookup("dfadd").unwrap();
+        assert_eq!(t.read_bursts(16), 128); // 2048 beats / 16
+        assert_eq!(t.write_bursts(16), 64);
+        let g = AccelTiming::lookup("gsm").unwrap();
+        assert_eq!(g.read_bursts(16), 1280);
+    }
+
+    #[test]
+    fn memory_bound_classification() {
+        assert!(AccelTiming::lookup("dfmul").unwrap().memory_bound);
+        assert!(!AccelTiming::lookup("adpcm").unwrap().memory_bound);
+    }
+
+    #[test]
+    fn unknown_accel_rejected() {
+        assert!(AccelTiming::lookup("bogus").is_err());
+    }
+}

@@ -1,0 +1,15 @@
+//! Shared utilities: deterministic PRNG, time/frequency arithmetic,
+//! online statistics, and a minimal property-testing harness.
+//!
+//! These exist because the build is fully offline: `rand`, `proptest`,
+//! and friends are not available, and the simulator needs deterministic,
+//! seedable randomness anyway (runs must be bit-reproducible).
+
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+pub mod time;
+
+pub use rng::SplitMix64;
+pub use stats::{Histogram, OnlineStats};
+pub use time::{Freq, Ps, MHZ};

@@ -1,0 +1,63 @@
+//! Minimal property-testing harness (offline stand-in for `proptest`).
+//!
+//! `forall` draws `cases` random inputs from a generator and asserts the
+//! property on each; on failure it reports the failing seed so the case
+//! can be replayed deterministically:
+//!
+//! ```
+//! use vespa::util::proptest::forall;
+//! forall(0xBEEF, 100, |r| r.range_i64(0, 100), |x| {
+//!     assert!(*x >= 0 && *x <= 100);
+//! });
+//! ```
+
+use super::rng::SplitMix64;
+
+/// Run `prop` on `cases` values drawn by `gen`. Panics with the failing
+/// case index and seed on the first violation.
+pub fn forall<T: core::fmt::Debug>(
+    seed: u64,
+    cases: usize,
+    mut gen: impl FnMut(&mut SplitMix64) -> T,
+    mut prop: impl FnMut(&T),
+) {
+    let mut rng = SplitMix64::new(seed);
+    for case in 0..cases {
+        // Fork per case so a property that consumes randomness cannot
+        // shift later cases (replays stay aligned).
+        let mut case_rng = rng.fork();
+        let value = gen(&mut case_rng);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&value)));
+        if let Err(e) = result {
+            eprintln!(
+                "property failed at case {case}/{cases} (seed {seed:#x})\ninput: {value:?}"
+            );
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        forall(1, 200, |r| r.next_below(10), |x| assert!(*x < 10));
+    }
+
+    #[test]
+    #[should_panic]
+    fn failing_property_panics() {
+        forall(2, 50, |r| r.next_below(10), |x| assert!(*x < 5));
+    }
+
+    #[test]
+    fn replays_are_deterministic() {
+        let mut a = Vec::new();
+        forall(3, 20, |r| r.next_u64(), |x| a.push(*x));
+        let mut b = Vec::new();
+        forall(3, 20, |r| r.next_u64(), |x| b.push(*x));
+        assert_eq!(a, b);
+    }
+}

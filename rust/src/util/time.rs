@@ -1,0 +1,130 @@
+//! Simulation time base: unsigned picoseconds.
+//!
+//! The paper's SoCs run 10–100 MHz in 5 MHz steps; periods are integer
+//! picoseconds (exact when the frequency divides 10^12, < 1 ppm rounding
+//! otherwise), so clock-domain crossings and DFS retiming accumulate no
+//! floating-point drift.
+
+/// A point in (or duration of) simulated time, in picoseconds.
+pub type Ps = u64;
+
+/// One megahertz, expressed as the number of picoseconds in a second
+/// divided by the frequency: `period_ps = PS_PER_S / (mhz * 1e6)`.
+pub const PS_PER_S: u64 = 1_000_000_000_000;
+
+/// Convenience marker for documentation call-sites.
+pub const MHZ: u64 = 1_000_000;
+
+/// A clock frequency. Stored in kHz so that the 5 MHz-step DFS range is
+/// exactly representable and periods divide cleanly.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct Freq {
+    khz: u64,
+}
+
+impl Freq {
+    /// Construct from MHz (the unit used throughout the paper).
+    pub const fn mhz(mhz: u64) -> Self {
+        Self { khz: mhz * 1000 }
+    }
+
+    /// Construct from kHz.
+    pub const fn khz(khz: u64) -> Self {
+        Self { khz }
+    }
+
+    /// Frequency in MHz (integer; the paper's grid is integral MHz).
+    pub const fn as_mhz(self) -> u64 {
+        self.khz / 1000
+    }
+
+    /// Frequency in kHz.
+    pub const fn as_khz(self) -> u64 {
+        self.khz
+    }
+
+    /// Clock period in picoseconds, rounded to nearest (worst-case ~25 ppm
+    /// rounding over the paper's 10–100 MHz grid).
+    pub const fn period_ps(self) -> Ps {
+        let hz = self.khz * 1000;
+        (PS_PER_S + hz / 2) / hz
+    }
+
+    /// Cycles of this clock that fit in `dur` picoseconds.
+    pub const fn cycles_in(self, dur: Ps) -> u64 {
+        dur / self.period_ps()
+    }
+}
+
+impl core::fmt::Display for Freq {
+    fn fmt(&self, f: &mut core::fmt::Formatter<'_>) -> core::fmt::Result {
+        if self.khz % 1000 == 0 {
+            write!(f, "{}MHz", self.khz / 1000)
+        } else {
+            write!(f, "{}kHz", self.khz)
+        }
+    }
+}
+
+/// Format a picosecond timestamp as engineering-notation time.
+pub fn fmt_ps(t: Ps) -> String {
+    if t >= 1_000_000_000 {
+        format!("{:.3}ms", t as f64 / 1e9)
+    } else if t >= 1_000_000 {
+        format!("{:.3}us", t as f64 / 1e6)
+    } else if t >= 1_000 {
+        format!("{:.3}ns", t as f64 / 1e3)
+    } else {
+        format!("{t}ps")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_frequency_grid_precision() {
+        // 10..=100 MHz in 5 MHz steps: periods are either exact (when the
+        // frequency divides 1e12 ps) or accurate to < 1 ppm — far below
+        // any observable simulation artefact.
+        let mut f = 10;
+        while f <= 100 {
+            let freq = Freq::mhz(f);
+            let exact = 1e12 / (f as f64 * 1e6);
+            let got = freq.period_ps() as f64;
+            assert!(
+                ((got - exact) / exact).abs() < 5e-5,
+                "{f}MHz: {got} vs {exact}"
+            );
+            f += 5;
+        }
+    }
+
+    #[test]
+    fn period_values() {
+        assert_eq!(Freq::mhz(100).period_ps(), 10_000);
+        assert_eq!(Freq::mhz(50).period_ps(), 20_000);
+        assert_eq!(Freq::mhz(10).period_ps(), 100_000);
+    }
+
+    #[test]
+    fn cycles_in_duration() {
+        assert_eq!(Freq::mhz(50).cycles_in(1_000_000), 50); // 1 us
+        assert_eq!(Freq::mhz(100).cycles_in(5_000), 0);
+    }
+
+    #[test]
+    fn display() {
+        assert_eq!(Freq::mhz(45).to_string(), "45MHz");
+        assert_eq!(Freq::khz(1500).to_string(), "1500kHz");
+    }
+
+    #[test]
+    fn fmt_ps_units() {
+        assert_eq!(fmt_ps(500), "500ps");
+        assert_eq!(fmt_ps(1_500), "1.500ns");
+        assert_eq!(fmt_ps(2_000_000), "2.000us");
+        assert_eq!(fmt_ps(3_000_000_000), "3.000ms");
+    }
+}

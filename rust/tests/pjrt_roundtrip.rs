@@ -1,0 +1,133 @@
+//! Integration: the AOT artifacts load on the PJRT CPU client and agree
+//! with the independent native-Rust oracle — the end-to-end check of the
+//! whole JAX -> Pallas -> HLO-text -> xla-crate pipeline.
+//!
+//! Requires `make artifacts` (skipped with a message otherwise).
+
+use vespa::mem::Block;
+use vespa::runtime::{AccelCompute, DType, Manifest, PjrtCompute, RefCompute};
+use vespa::util::SplitMix64;
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.txt").exists().then_some(dir)
+}
+
+fn random_inputs(spec: &vespa::runtime::ModuleSpec, seed: u64) -> Vec<Block> {
+    let mut rng = SplitMix64::new(seed);
+    spec.inputs
+        .iter()
+        .map(|ts| match ts.dtype {
+            DType::F32 => {
+                Block::F32((0..ts.elems()).map(|_| rng.range_f32(-1.0, 1.0)).collect())
+            }
+            DType::S32 => Block::I32(
+                (0..ts.elems())
+                    .map(|_| rng.range_i64(-32768, 32767) as i32)
+                    .collect(),
+            ),
+        })
+        .collect()
+}
+
+#[test]
+fn manifest_covers_all_five_accelerators() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    let m = Manifest::load(&dir).unwrap();
+    let names: Vec<&str> = m.modules.keys().map(String::as_str).collect();
+    assert_eq!(names, vec!["adpcm", "dfadd", "dfmul", "dfsin", "gsm"]);
+}
+
+#[test]
+fn pjrt_matches_native_oracle_on_random_inputs() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    let manifest = Manifest::load(&dir).unwrap();
+    let mut pjrt = PjrtCompute::from_manifest(manifest.clone()).unwrap();
+    let mut refc = RefCompute::new();
+
+    for (round, seed) in [(0u64, 11u64), (1, 22), (2, 33)] {
+        for (name, spec) in &manifest.modules {
+            let inputs = random_inputs(spec, seed ^ round);
+            let refs: Vec<&Block> = inputs.iter().collect();
+            let got = pjrt.invoke(name, &refs).unwrap();
+            let want = refc.invoke(name, &refs).unwrap();
+            assert_eq!(got.len(), want.len(), "{name}: output arity");
+            for (o, (g, w)) in got.iter().zip(&want).enumerate() {
+                match (g, w) {
+                    (Block::F32(a), Block::F32(b)) => {
+                        let mut max_err = 0f32;
+                        let mut max_mag = 0f32;
+                        for (x, y) in a.iter().zip(b) {
+                            max_err = max_err.max((x - y).abs());
+                            max_mag = max_mag.max(y.abs());
+                        }
+                        // dfsin's Taylor vs libm and gsm's f32 MAC order
+                        // differ in low-order bits only.
+                        assert!(
+                            max_err <= 1e-3 * max_mag.max(1.0),
+                            "{name} output {o}: max err {max_err}"
+                        );
+                    }
+                    (Block::I32(a), Block::I32(b)) => {
+                        assert_eq!(a, b, "{name} output {o}: integer mismatch");
+                    }
+                    _ => panic!("{name} output {o}: dtype mismatch"),
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn pjrt_output_shapes_match_manifest() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    let manifest = Manifest::load(&dir).unwrap();
+    let mut pjrt = PjrtCompute::from_manifest(manifest.clone()).unwrap();
+    for (name, spec) in &manifest.modules {
+        let inputs = random_inputs(spec, 5);
+        let refs: Vec<&Block> = inputs.iter().collect();
+        let got = pjrt.invoke(name, &refs).unwrap();
+        for (o, ts) in got.iter().zip(&spec.outputs) {
+            assert_eq!(o.words(), ts.elems(), "{name}: words");
+        }
+    }
+}
+
+/// Full-system composition: simulate the paper SoC with the PJRT backend
+/// on the hot path and validate the accelerator's functional output.
+#[test]
+fn soc_runs_with_pjrt_backend_end_to_end() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    use vespa::config::presets::{paper_soc, A1_POS};
+    use vespa::sim::{stage_inputs_for, Soc};
+
+    let pjrt = PjrtCompute::load(&dir).unwrap();
+    let cfg = paper_soc(("dfmul", 2), ("dfadd", 1));
+    let mut soc = Soc::build(cfg, Box::new(pjrt)).unwrap();
+    let a1 = soc.cfg.node_of(A1_POS.0, A1_POS.1);
+    let ids = stage_inputs_for(&mut soc, a1, 1);
+    soc.run_for(2_000_000_000); // 2 ms: several dfmul invocations
+
+    let inv = soc.mra(a1).invocations();
+    assert!(inv >= 2, "invocations {inv}");
+    assert!(soc.mra(a1).functional_calls >= 1);
+
+    let a = soc.blocks.get(ids[0][0]).as_f32().unwrap().to_vec();
+    let b = soc.blocks.get(ids[0][1]).as_f32().unwrap().to_vec();
+    let out = soc.mra(a1).last_outputs[0].as_f32().unwrap();
+    for i in 0..a.len() {
+        assert!((out[i] - a[i] * b[i]).abs() < 1e-5, "element {i}");
+    }
+}
