@@ -7,38 +7,35 @@
 use vespa::config::presets::{paper_soc, ISL_A1, ISL_NOC, ISL_TG};
 use vespa::policy::{run_with_policy, DfsPolicy, StaticSchedule};
 use vespa::report::plot;
-use vespa::runtime::RefCompute;
-use vespa::sim::{stage_inputs_for, Soc};
+use vespa::scenario::{ms, Session};
 
 fn main() -> vespa::Result<()> {
     let mut cfg = paper_soc(("dfmul", 4), ("dfmul", 4));
     cfg.islands[ISL_NOC].freq_mhz = 20;
     cfg.islands[ISL_TG].freq_mhz = 10;
-    let mut soc = Soc::build(cfg, Box::new(RefCompute::new()))?;
-    for t in soc.mra_tiles() {
-        stage_inputs_for(&mut soc, t, 1);
-        soc.mra_mut(t).functional_every_invocation = false;
-    }
-    soc.host_set_tg_active(11);
-    soc.enable_sampler(1_000_000_000); // 1 ms samples
+    let mut session = Session::new(cfg)?;
+    session
+        .stage_all(1)?
+        .perf_only()
+        .with_tg_load(11)
+        .sample_every(ms(1));
 
     // A three-act schedule: accel step (no traffic effect), TG boost,
     // NoC boost (big traffic effect).
-    let ms = 1_000_000_000u64;
     let mut sched = StaticSchedule::new(vec![
-        (10 * ms, ISL_A1, 50),
-        (30 * ms, ISL_TG, 50),
-        (50 * ms, ISL_NOC, 100),
+        (ms(10), ISL_A1, 50),
+        (ms(30), ISL_TG, 50),
+        (ms(50), ISL_NOC, 100),
     ]);
-    run_with_policy(&mut soc, &mut sched, ms, 80 * ms);
+    run_with_policy(session.soc_mut(), &mut sched, ms(1), ms(80));
     println!("schedule: {} steps applied, {} rejected ({})", 3, sched.rejected, sched.name());
 
-    let sampler = soc.sampler.as_ref().unwrap();
+    let sampler = session.soc().sampler.as_ref().unwrap();
     let rate = sampler.series("mem_pkts_in").unwrap().to_rate();
     println!("{}", plot(&[&rate], 70, 14));
 
-    let early = rate.mean_in(5 * ms, 25 * ms);
-    let late = rate.mean_in(60 * ms, 80 * ms);
+    let early = rate.mean_in(ms(5), ms(25));
+    let late = rate.mean_in(ms(60), ms(80));
     println!(
         "mem traffic: {:.2} Mpkt/s before the TG/NoC boost, {:.2} Mpkt/s after",
         early / 1e6,

@@ -4,6 +4,10 @@
 //! differ in the replication of accelerators, the clock frequencies of
 //! the frequency islands, and the tiles' placement").
 //!
+//! The sweep's design points are independent scenarios; they evaluate
+//! across every core via `ScenarioSet::run_parallel`, with results
+//! bit-identical to (and ordered like) the serial path.
+//!
 //!   cargo run --release --example dse_sweep [accel]
 
 use vespa::dse::{pareto_front, sweep_replication, SweepParams};
@@ -18,8 +22,15 @@ fn main() -> vespa::Result<()> {
     p.window = 8_000_000_000;
     p.warmup = 1_000_000_000;
 
-    println!("sweeping {accel}: K in {:?}, f in {:?} MHz, A1/A2 placement ...", p.replications, p.accel_mhz);
+    println!(
+        "sweeping {accel}: K in {:?}, f in {:?} MHz, A1/A2 placement, {} scenarios in parallel ...",
+        p.replications,
+        p.accel_mhz,
+        p.specs().len()
+    );
+    let t0 = std::time::Instant::now();
     let pts = sweep_replication(&p)?;
+    println!("{} points in {:.2}s wall clock", pts.len(), t0.elapsed().as_secs_f64());
 
     let costs: Vec<(f64, f64)> = pts
         .iter()

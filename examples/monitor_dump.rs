@@ -9,26 +9,26 @@ use vespa::config::presets::{paper_soc, A1_POS, A2_POS};
 use vespa::monitor::mmio::{counter_addr, CounterReg};
 use vespa::policy::{run_with_policy, ReactiveDfs};
 use vespa::report::Table;
-use vespa::runtime::RefCompute;
-use vespa::sim::{stage_inputs_for, Soc};
+use vespa::scenario::{ms, Session};
 
 fn main() -> vespa::Result<()> {
     let mut cfg = paper_soc(("adpcm", 2), ("dfmul", 4));
     cfg.cpu_poll_interval = 200; // CPU softly polls over the config plane
-    let mut soc = Soc::build(cfg, Box::new(RefCompute::new()))?;
-    let a1 = soc.cfg.node_of(A1_POS.0, A1_POS.1);
-    let a2 = soc.cfg.node_of(A2_POS.0, A2_POS.1);
-    for t in [a1, a2] {
-        stage_inputs_for(&mut soc, t, 1);
-        soc.mra_mut(t).functional_every_invocation = false;
-    }
-    soc.host_set_tg_active(8);
-    soc.host_write_freq(0, 20)?; // stress the NoC island
+    let mut session = Session::new(cfg)?;
+    let a1 = session.tile_at(A1_POS.0, A1_POS.1);
+    let a2 = session.tile_at(A2_POS.0, A2_POS.1);
+    session
+        .stage(a1, 1)?
+        .stage(a2, 1)?
+        .perf_only()
+        .with_tg_load(8)
+        .freq(0, 20)?; // stress the NoC island
 
     // Run with the reactive policy watching A2's round-trip times.
     let mut pol = ReactiveDfs::new(0, vec![a2], 3_000.0, 300.0);
-    run_with_policy(&mut soc, &mut pol, 20_000_000_000, 200_000_000_000);
+    run_with_policy(session.soc_mut(), &mut pol, ms(20), ms(200));
 
+    let soc = session.soc();
     let mut t = Table::new(
         "hardware counters (host/USB path)",
         &["tile", "kind", "exec_cycles", "inv", "pkts_in", "pkts_out", "rtt_ns", "rtt_cnt"],

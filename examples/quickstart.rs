@@ -1,79 +1,68 @@
-//! Quickstart: the end-to-end driver proving all layers compose.
+//! Quickstart: the Scenario/Session API end to end.
 //!
-//! Builds the paper's 4x4 SoC, loads the AOT-compiled PJRT artifacts if
-//! available (falls back to the native oracle otherwise), runs a real
-//! workload — two MRA tiles computing through the PJRT datapath while
-//! traffic generators load the NoC — exercises a run-time DFS change
-//! through the frequency registers, reads every monitor counter the way
-//! the paper's host tooling does, and validates the accelerator's
-//! functional output against the independent native implementation.
+//! Builds a 4x4 SoC with the fluent [`Scenario`] builder (dfmul 2x near
+//! memory, gsm 1x far from it), loads the AOT-compiled PJRT artifacts if
+//! available (native oracle otherwise), then drives two declarative
+//! phases — NoC at 100 MHz, then a run-time DFS drop to 20 MHz — and
+//! reads back typed [`PhaseReport`]s plus the functional outputs.
 //!
 //!   make artifacts && cargo run --release --example quickstart
+//!
+//! [`Scenario`]: vespa::scenario::Scenario
+//! [`PhaseReport`]: vespa::scenario::PhaseReport
 
-use vespa::config::presets::{paper_soc, A1_POS, A2_POS, ISL_NOC};
-use vespa::monitor::CounterReg;
-use vespa::report::Table;
 use vespa::runtime::{AccelCompute, PjrtCompute, RefCompute};
-use vespa::sim::{stage_inputs_for, Soc, ThroughputProbe};
+use vespa::scenario::{ms, Scenario, Session};
 
 fn main() -> vespa::Result<()> {
     // 1. Functional backend: PJRT artifacts when built, else native.
     let artifacts = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    let backend: Box<dyn AccelCompute> = if artifacts.join("manifest.txt").exists() {
+    let backend: Box<dyn AccelCompute> = if cfg!(feature = "pjrt")
+        && artifacts.join("manifest.txt").exists()
+    {
         println!("backend: PJRT (artifacts/)");
         Box::new(PjrtCompute::load(&artifacts)?)
     } else {
-        println!("backend: native reference (run `make artifacts` for PJRT)");
+        println!("backend: native reference (`make artifacts` + --features pjrt for PJRT)");
         Box::new(RefCompute::new())
     };
 
-    // 2. The paper's SoC: dfmul 2x near memory, gsm 1x far from it.
-    let cfg = paper_soc(("dfmul", 2), ("gsm", 1));
-    let mut soc = Soc::build(cfg, backend)?;
-    let a1 = soc.cfg.node_of(A1_POS.0, A1_POS.1);
-    let a2 = soc.cfg.node_of(A2_POS.0, A2_POS.1);
-    let in_a1 = stage_inputs_for(&mut soc, a1, 1);
-    stage_inputs_for(&mut soc, a2, 1);
+    // 2. Compose the SoC: 4x4 grid, three frequency islands, dfmul 2x
+    //    adjacent to MEM, gsm 1x in the far corner, TGs everywhere else.
+    let cfg = Scenario::grid(4, 4)
+        .island_dfs("noc-mem", 100, 10..=100, 5)
+        .island_dfs("acc", 50, 10..=50, 5)
+        .island("sys", 50)
+        .mem_at(0, 0)
+        .cpu_at_on(1, 0, "sys")
+        .io_at_on(2, 0, "sys")
+        .accel_at(0, 1, "dfmul", 2, "acc")
+        .accel_at(3, 3, "gsm", 1, "acc")
+        .fill_tg("sys")
+        .build()?;
 
-    // 3. Phase 1 — NoC at 100 MHz, 4 TGs active.
-    soc.host_set_tg_active(4);
-    soc.run_for(2_000_000_000); // 2 ms warmup
-    let probe = ThroughputProbe::begin(&soc, a1);
-    soc.run_for(5_000_000_000); // 5 ms measured
-    let thr_fast = probe.mbs(&soc);
+    // 3. Session: stage inputs, load the NoC with 4 TGs, warm up, and
+    //    measure — then drop the NoC island to 20 MHz at run time and
+    //    measure again.
+    let mut session = Session::with_backend(cfg, backend)?;
+    let a1 = session.tile_at(0, 1);
+    let a2 = session.tile_at(3, 3);
+    session.stage(a1, 1)?.stage(a2, 1)?.with_tg_load(4).warmup(ms(2));
+    let fast = session.measure(a1, ms(5))?;
+    session.freq(0, 20)?.warmup(100_000_000); // actuator swap + settle
+    let slow = session.measure(a1, ms(5))?;
 
-    // 4. Phase 2 — DFS: drop the NoC island to 20 MHz at run time.
-    soc.host_write_freq(ISL_NOC, 20)?;
-    soc.run_for(100_000_000); // actuator reprogram + swap (~11 us) + settle
-    let probe = ThroughputProbe::begin(&soc, a1);
-    soc.run_for(5_000_000_000);
-    let thr_slow = probe.mbs(&soc);
-
-    // 5. Monitoring readout (host path, as over USB-serial).
-    let mut t = Table::new(
-        "monitor counters after the run",
-        &["tile", "kind", "inv", "pkts_in", "pkts_out", "rtt_ns"],
+    println!(
+        "A1 dfmul 2x: {:.2} MB/s @ NoC 100 MHz ({} invocations, RTT {:.0} ns), \
+         {:.2} MB/s @ NoC 20 MHz (RTT {:.0} ns)",
+        fast.throughput_mbs, fast.invocations, fast.rtt_ns, slow.throughput_mbs, slow.rtt_ns
     );
-    for (i, tile) in soc.tiles.iter().enumerate() {
-        let c = soc.mon.tile(i);
-        if c.invocations == 0 && c.pkts_out == 0 {
-            continue;
-        }
-        t.row(&[
-            i.to_string(),
-            tile.kind_name().to_string(),
-            soc.host_read_counter(i, CounterReg::Invocations).to_string(),
-            soc.host_read_counter(i, CounterReg::PktsIn).to_string(),
-            soc.host_read_counter(i, CounterReg::PktsOut).to_string(),
-            format!("{:.0}", c.rtt_mean() / 1e3),
-        ]);
-    }
-    println!("{}", t.render());
-    println!("A1 dfmul 2x throughput: {thr_fast:.2} MB/s @ NoC 100 MHz, {thr_slow:.2} MB/s @ NoC 20 MHz");
 
-    // 6. Validate the functional datapath end to end.
-    let a = soc.blocks.get(in_a1[0][0]).as_f32().unwrap().to_vec();
-    let b = soc.blocks.get(in_a1[0][1]).as_f32().unwrap().to_vec();
+    // 4. Validate the functional datapath end to end: dfmul == a * b.
+    let staged = session.staged(a1)[0].clone();
+    let soc = session.soc();
+    let a = soc.blocks.get(staged[0]).as_f32().unwrap().to_vec();
+    let b = soc.blocks.get(staged[1]).as_f32().unwrap().to_vec();
     let out = soc.mra(a1).last_outputs[0].as_f32().unwrap();
     let max_err = a
         .iter()
@@ -86,7 +75,8 @@ fn main() -> vespa::Result<()> {
         a.len()
     );
     assert!(max_err < 1e-5);
-    assert!(thr_fast > 0.0 && thr_slow > 0.0);
+    assert!(fast.throughput_mbs > 0.0 && slow.throughput_mbs > 0.0);
+    assert!(fast.pkts_in > 0 && fast.pkts_out > 0);
     println!("quickstart OK");
     Ok(())
 }

@@ -8,22 +8,22 @@
 
 use vespa::bench_harness::{bench_args, Bench};
 use vespa::config::presets::{paper_soc, A1_POS};
-use vespa::experiments::run_until_invocations;
 use vespa::report::Table;
-use vespa::runtime::RefCompute;
-use vespa::sim::{stage_inputs_for, Soc, ThroughputProbe};
+use vespa::scenario::Session;
 
 fn measure(accel: &str, k: usize, switch_cycles: u64, inv: u64) -> f64 {
     let mut cfg = paper_soc((accel, k), ("dfadd", 1));
     cfg.bridge.switch_cycles = switch_cycles;
-    let mut soc = Soc::build(cfg, Box::new(RefCompute::new())).unwrap();
-    let tile = soc.cfg.node_of(A1_POS.0, A1_POS.1);
-    stage_inputs_for(&mut soc, tile, 1);
-    soc.mra_mut(tile).functional_every_invocation = false;
-    run_until_invocations(&mut soc, tile, k as u64, 400_000_000_000);
-    let probe = ThroughputProbe::begin(&soc, tile);
-    run_until_invocations(&mut soc, tile, inv, 2_000_000_000_000);
-    probe.mbs(&soc)
+    let mut session = Session::new(cfg).unwrap();
+    let tile = session.tile_at(A1_POS.0, A1_POS.1);
+    session.stage(tile, 1).unwrap().perf_only();
+    session
+        .warmup_invocations(tile, k as u64, 400_000_000_000)
+        .unwrap();
+    session
+        .measure_invocations(tile, inv, 2_000_000_000_000)
+        .unwrap()
+        .throughput_mbs
 }
 
 fn main() {

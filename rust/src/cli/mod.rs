@@ -1,6 +1,6 @@
 //! Minimal CLI argument parsing (offline stand-in for clap): subcommand
-//! plus `--key value` / `--flag` options, with typed getters and a usage
-//! renderer.
+//! plus `--key value` / `--key=value` / `--flag` options, with typed
+//! getters (including signed values) and a usage renderer.
 
 use std::collections::BTreeMap;
 
@@ -17,6 +17,12 @@ pub struct Args {
 
 impl Args {
     /// Parse from an iterator of raw args (excluding argv[0]).
+    ///
+    /// Option values bind in two ways: `--key value` (the next token,
+    /// unless it starts with `--` — a leading single `-` is fine, so
+    /// `--offset -5` parses as key/value) and `--key=value` (everything
+    /// after the first `=`, so `--offset=-5` also works). A `--name`
+    /// with neither becomes a boolean flag.
     pub fn parse_from<I: IntoIterator<Item = String>>(raw: I) -> crate::Result<Self> {
         let mut out = Args::default();
         let mut it = raw.into_iter().peekable();
@@ -24,6 +30,13 @@ impl Args {
             if let Some(name) = a.strip_prefix("--") {
                 if name.is_empty() {
                     bail!("bare `--` not supported");
+                }
+                if let Some((key, value)) = name.split_once('=') {
+                    if key.is_empty() {
+                        bail!("malformed option {a:?}: empty name before `=`");
+                    }
+                    out.options.insert(key.to_string(), value.to_string());
+                    continue;
                 }
                 // `--key value` when the next token is not an option;
                 // `--flag` otherwise.
@@ -64,6 +77,16 @@ impl Args {
         }
     }
 
+    /// Signed integer option (`--offset -5` or `--offset=-5`).
+    pub fn opt_i64(&self, name: &str, default: i64) -> crate::Result<i64> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .with_context(|| format!("--{name} must be a signed integer, got {v:?}")),
+        }
+    }
+
     pub fn opt_usize(&self, name: &str, default: usize) -> crate::Result<usize> {
         Ok(self.opt_u64(name, default as u64)? as usize)
     }
@@ -92,6 +115,43 @@ mod tests {
     }
 
     #[test]
+    fn key_equals_value_syntax() {
+        let a = parse("dse --accel=gsm --window-ms=12 --quick");
+        assert_eq!(a.opt("accel"), Some("gsm"));
+        assert_eq!(a.opt_u64("window-ms", 0).unwrap(), 12);
+        assert!(a.flag("quick"));
+        assert!(!a.flag("accel=gsm"), "--key=value must not become a flag");
+        assert!(a.options.keys().all(|k| !k.contains('=')));
+    }
+
+    #[test]
+    fn key_equals_value_keeps_later_equals_signs() {
+        let a = parse("run --define a=b=c");
+        assert_eq!(a.opt("define"), Some("a=b=c"));
+        let a = parse("run --define=a=b=c");
+        assert_eq!(a.opt("define"), Some("a=b=c"));
+    }
+
+    #[test]
+    fn negative_numeric_values() {
+        // Space-separated: `-5` does not start with `--`, so it binds.
+        let a = parse("tune --offset -5 --gain -2");
+        assert_eq!(a.opt_i64("offset", 0).unwrap(), -5);
+        assert_eq!(a.opt_i64("gain", 0).unwrap(), -2);
+        // `=`-separated negative.
+        let a = parse("tune --offset=-17");
+        assert_eq!(a.opt_i64("offset", 0).unwrap(), -17);
+        // Default passes through untouched.
+        assert_eq!(a.opt_i64("missing", -3).unwrap(), -3);
+    }
+
+    #[test]
+    fn empty_key_rejected() {
+        assert!(Args::parse_from(["--=v".to_string()]).is_err());
+        assert!(Args::parse_from(["--".to_string()]).is_err());
+    }
+
+    #[test]
     fn positional_args() {
         let a = parse("run config.toml extra");
         assert_eq!(a.subcommand.as_deref(), Some("run"));
@@ -109,6 +169,7 @@ mod tests {
     fn bad_int_rejected() {
         let a = parse("x --n abc");
         assert!(a.opt_u64("n", 0).is_err());
+        assert!(a.opt_i64("n", 0).is_err());
     }
 
     #[test]

@@ -1,14 +1,18 @@
-//! The paper's experimental SoC instance (§III), built programmatically.
+//! The paper's experimental SoC instance (§III), as a thin preset over
+//! the [`crate::scenario::Scenario`] builder.
 //!
 //! A 4-by-4 grid with a CVA6 CPU tile, a DDR MEM tile, an auxiliary I/O
 //! tile, eleven TG tiles (dfadd-like memory-bound requesters) and two
 //! accelerator tiles: A1 close to MEM, A2 far from it. Five frequency
 //! islands: NoC+MEM (DFS 10-100 MHz), A1, A2, TG, CPU+I/O (each DFS
 //! 10-50 MHz), all on a 5 MHz step grid.
+//!
+//! New code exploring *other* floorplans should use the builder
+//! directly — `Scenario::grid(w, h)…` composes any grid, island set, and
+//! placement; this module only pins down the paper's instance.
 
-use super::soc::{BridgeCfg, IslandSpec, NocParams, SocConfig, TileKind, TileSpec};
-use crate::mem::MemParams;
-use crate::tiles::DmaParams;
+use super::soc::SocConfig;
+use crate::scenario::Scenario;
 
 /// Island indices of the paper preset.
 pub const ISL_NOC: usize = 0;
@@ -30,100 +34,39 @@ pub const A2_POS: (u16, u16) = (3, 3);
 ///
 /// `a1`/`a2` are (accelerator name, replication factor). The eleven
 /// remaining tiles become TGs.
+///
+/// Panics on structurally impossible inputs (unknown accelerator name,
+/// zero/overlarge replication): the preset's geometry itself is always
+/// valid, so failures can only come from these two arguments. Callers
+/// taking user-supplied names should pre-validate with
+/// [`crate::tiles::AccelTiming::lookup`].
 pub fn paper_soc(a1: (&str, usize), a2: (&str, usize)) -> SocConfig {
-    let islands = vec![
-        IslandSpec {
-            name: "noc-mem".into(),
-            freq_mhz: 100,
-            dfs: true,
-            min_mhz: 10,
-            max_mhz: 100,
-            step_mhz: 5,
-        },
-        IslandSpec {
-            name: "a1".into(),
-            freq_mhz: 50,
-            dfs: true,
-            min_mhz: 10,
-            max_mhz: 50,
-            step_mhz: 5,
-        },
-        IslandSpec {
-            name: "a2".into(),
-            freq_mhz: 50,
-            dfs: true,
-            min_mhz: 10,
-            max_mhz: 50,
-            step_mhz: 5,
-        },
-        IslandSpec {
-            name: "tg".into(),
-            freq_mhz: 50,
-            dfs: true,
-            min_mhz: 10,
-            max_mhz: 50,
-            step_mhz: 5,
-        },
-        IslandSpec {
-            name: "cpu-io".into(),
-            freq_mhz: 50,
-            dfs: true,
-            min_mhz: 10,
-            max_mhz: 50,
-            step_mhz: 5,
-        },
-    ];
-
-    let mut tiles = Vec::new();
-    for y in 0..4u16 {
-        for x in 0..4u16 {
-            let (kind, island) = if (x, y) == MEM_POS {
-                (TileKind::Mem, ISL_NOC)
-            } else if (x, y) == CPU_POS {
-                (TileKind::Cpu, ISL_CPU)
-            } else if (x, y) == IO_POS {
-                (TileKind::Io, ISL_CPU)
-            } else if (x, y) == A1_POS {
-                (
-                    TileKind::Accel {
-                        accel: a1.0.into(),
-                        replicas: a1.1,
-                    },
-                    ISL_A1,
-                )
-            } else if (x, y) == A2_POS {
-                (
-                    TileKind::Accel {
-                        accel: a2.0.into(),
-                        replicas: a2.1,
-                    },
-                    ISL_A2,
-                )
-            } else {
-                (TileKind::Tg, ISL_TG)
-            };
-            tiles.push(TileSpec { x, y, kind, island });
-        }
-    }
-
-    SocConfig {
-        name: format!("paper-4x4-{}x{}-{}x{}", a1.0, a1.1, a2.0, a2.1),
-        width: 4,
-        height: 4,
-        seed: 0xE5B,
-        tiles,
-        islands,
-        noc: NocParams::default(),
-        mem: MemParams::default(),
-        dma: DmaParams::default(),
-        bridge: BridgeCfg::default(),
-        cpu_poll_interval: 0,
-    }
+    Scenario::grid(4, 4)
+        .name(format!(
+            "paper-4x4-{}x{}-{}x{}",
+            a1.0, a1.1, a2.0, a2.1
+        ))
+        .seed(0xE5B)
+        .island_dfs("noc-mem", 100, 10..=100, 5)
+        .island_dfs("a1", 50, 10..=50, 5)
+        .island_dfs("a2", 50, 10..=50, 5)
+        .island_dfs("tg", 50, 10..=50, 5)
+        .island_dfs("cpu-io", 50, 10..=50, 5)
+        .noc_island("noc-mem")
+        .mem_at(MEM_POS.0, MEM_POS.1)
+        .cpu_at_on(CPU_POS.0, CPU_POS.1, "cpu-io")
+        .io_at_on(IO_POS.0, IO_POS.1, "cpu-io")
+        .accel_at(A1_POS.0, A1_POS.1, a1.0, a1.1, "a1")
+        .accel_at(A2_POS.0, A2_POS.1, a2.0, a2.1, "a2")
+        .fill_tg("tg")
+        .build()
+        .expect("paper preset with valid accelerators")
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::TileKind;
 
     #[test]
     fn paper_soc_validates() {
@@ -138,6 +81,28 @@ mod tests {
         let cfg = paper_soc(("adpcm", 4), ("dfmul", 4));
         let tgs = cfg.tiles_where(|k| *k == TileKind::Tg);
         assert_eq!(tgs.len(), 11);
+    }
+
+    #[test]
+    fn island_indices_match_the_named_constants() {
+        // The builder assigns island indices in declaration order; the
+        // ISL_* constants (used by experiments to reprogram frequencies)
+        // must agree with it.
+        let cfg = paper_soc(("dfadd", 1), ("dfadd", 1));
+        assert_eq!(cfg.islands[ISL_NOC].name, "noc-mem");
+        assert_eq!(cfg.islands[ISL_A1].name, "a1");
+        assert_eq!(cfg.islands[ISL_A2].name, "a2");
+        assert_eq!(cfg.islands[ISL_TG].name, "tg");
+        assert_eq!(cfg.islands[ISL_CPU].name, "cpu-io");
+        assert_eq!(cfg.noc.island, ISL_NOC);
+        let a1 = &cfg.tiles[cfg.node_of(A1_POS.0, A1_POS.1)];
+        assert_eq!(a1.island, ISL_A1);
+        let cpu = &cfg.tiles[cfg.node_of(CPU_POS.0, CPU_POS.1)];
+        assert_eq!(cpu.kind, TileKind::Cpu);
+        assert_eq!(cpu.island, ISL_CPU);
+        let mem = cfg.mem_tile();
+        assert_eq!((mem.x, mem.y), MEM_POS);
+        assert_eq!(mem.island, ISL_NOC);
     }
 
     #[test]

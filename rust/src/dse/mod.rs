@@ -8,4 +8,6 @@ pub mod pareto;
 pub mod sweep;
 
 pub use pareto::pareto_front;
-pub use sweep::{sweep_replication, DsePoint, SweepParams};
+pub use sweep::{
+    evaluate_point, sweep_replication, sweep_replication_serial, DsePoint, SweepParams,
+};

@@ -1,13 +1,14 @@
-//! Replication / frequency / placement sweeps.
+//! Replication / frequency / placement sweeps over [`ScenarioSpec`]
+//! design points, evaluated serially or across threads via
+//! [`ScenarioSet`].
 
-use crate::config::presets::{paper_soc, A1_POS, A2_POS};
 use crate::resources::{mra_area, AccelArea, Utilization, XC7V2000T};
-use crate::runtime::RefCompute;
-use crate::sim::{stage_inputs_for, Soc, ThroughputProbe};
+use crate::scenario::{ScenarioSet, ScenarioSpec, Session};
+use crate::tiles::AccelTiming;
 use crate::util::Ps;
 
 /// One evaluated design point.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct DsePoint {
     pub accel: String,
     pub replicas: usize,
@@ -45,72 +46,74 @@ impl SweepParams {
             warmup: 2_000_000_000,
         }
     }
+
+    /// Expand the cross product into scenario specs (replication-major
+    /// order, matching the historical serial sweep).
+    pub fn specs(&self) -> Vec<ScenarioSpec> {
+        let mut out = Vec::new();
+        for &k in &self.replications {
+            for &am in &self.accel_mhz {
+                for &nm in &self.noc_mhz {
+                    for &near in &self.placements {
+                        out.push(
+                            ScenarioSpec::new(&self.accel, k)
+                                .accel_mhz(am)
+                                .noc_mhz(nm)
+                                .near_mem(near)
+                                .warmup(self.warmup)
+                                .window(self.window),
+                        );
+                    }
+                }
+            }
+        }
+        out
+    }
 }
 
 /// Evaluate one design point by simulation (TGs off, as Table I).
-pub fn evaluate_point(
-    accel: &str,
-    replicas: usize,
-    accel_mhz: u64,
-    noc_mhz: u64,
-    near_mem: bool,
-    warmup: Ps,
-    window: Ps,
-) -> crate::Result<DsePoint> {
-    let (a1, a2) = if near_mem {
-        ((accel, replicas), ("dfadd", 1))
-    } else {
-        (("dfadd", 1), (accel, replicas))
-    };
-    let mut cfg = paper_soc(a1, a2);
-    cfg.islands[0].freq_mhz = noc_mhz;
-    let isl = if near_mem { 1 } else { 2 };
-    cfg.islands[isl].freq_mhz = accel_mhz;
-    let mut soc = Soc::build(cfg, Box::new(RefCompute::new()))?;
-    let pos = if near_mem { A1_POS } else { A2_POS };
-    let tile = soc.cfg.node_of(pos.0, pos.1);
-    stage_inputs_for(&mut soc, tile, 1);
-    soc.mra_mut(tile).functional_every_invocation = false;
+pub fn evaluate_point(spec: &ScenarioSpec) -> crate::Result<DsePoint> {
+    // to_config() pre-validates name and replication, so user-typed CLI
+    // input gets a clean error rather than the preset's panic.
+    let cfg = spec.to_config()?;
+    let timing = AccelTiming::lookup(&spec.accel)?;
+    let mut session = Session::new(cfg)?;
+    let pos = spec.position();
+    let tile = session.tile_at(pos.0, pos.1);
+    session.stage(tile, 1)?.perf_only();
 
     // Scale the measurement to the accelerator's invocation time so slow
     // accelerators (gsm: ~18 ms, adpcm: ~23 ms per invocation at 50 MHz)
     // still complete several invocations in the window.
-    let inv_ps = soc.mra(tile).timing.compute_cycles * 1_000_000 / accel_mhz.max(1);
-    let warmup = warmup.max(2 * inv_ps);
-    let window = window.max(8 * inv_ps / replicas as u64 + inv_ps);
+    let inv_ps = timing.compute_cycles * 1_000_000 / spec.accel_mhz.max(1);
+    let warmup = spec.warmup.max(2 * inv_ps);
+    let window = spec.window.max(8 * inv_ps / spec.replicas as u64 + inv_ps);
 
-    soc.run_for(warmup);
-    let probe = ThroughputProbe::begin(&soc, tile);
-    soc.run_for(window);
-    let throughput_mbs = probe.mbs(&soc);
+    session.warmup(warmup);
+    let report = session.measure(tile, window)?;
 
-    let area = mra_area(&AccelArea::lookup(accel)?, replicas);
+    let area = mra_area(&AccelArea::lookup(&spec.accel)?, spec.replicas);
     Ok(DsePoint {
-        accel: accel.to_string(),
-        replicas,
-        accel_mhz,
-        noc_mhz,
-        near_mem,
+        accel: spec.accel.clone(),
+        replicas: spec.replicas,
+        accel_mhz: spec.accel_mhz,
+        noc_mhz: spec.noc_mhz,
+        near_mem: spec.near_mem,
         area,
-        throughput_mbs,
+        throughput_mbs: report.throughput_mbs,
     })
 }
 
-/// Run a full sweep.
+/// Run a full sweep across all available cores. Results are ordered by
+/// design-point index and bit-identical to [`sweep_replication_serial`]
+/// (each point simulates in its own `Soc`, seeded from the config).
 pub fn sweep_replication(p: &SweepParams) -> crate::Result<Vec<DsePoint>> {
-    let mut out = Vec::new();
-    for &k in &p.replications {
-        for &am in &p.accel_mhz {
-            for &nm in &p.noc_mhz {
-                for &near in &p.placements {
-                    out.push(evaluate_point(
-                        &p.accel, k, am, nm, near, p.warmup, p.window,
-                    )?);
-                }
-            }
-        }
-    }
-    Ok(out)
+    ScenarioSet::new(p.specs()).run_parallel(evaluate_point)
+}
+
+/// Serial reference path for the sweep (equivalence baseline, profiling).
+pub fn sweep_replication_serial(p: &SweepParams) -> crate::Result<Vec<DsePoint>> {
+    ScenarioSet::new(p.specs()).run_serial(evaluate_point)
 }
 
 /// Utilization check of a point against the paper's device.
@@ -125,10 +128,33 @@ mod tests {
     #[test]
     fn evaluate_single_point_quickly() {
         // Short window: just prove the plumbing works end to end.
-        let pt = evaluate_point("dfmul", 2, 50, 100, true, 500_000_000, 4_000_000_000).unwrap();
+        let spec = ScenarioSpec::new("dfmul", 2)
+            .warmup(500_000_000)
+            .window(4_000_000_000);
+        let pt = evaluate_point(&spec).unwrap();
         assert_eq!(pt.replicas, 2);
         assert!(pt.throughput_mbs > 0.5, "thr {}", pt.throughput_mbs);
         assert!(fits_device(&pt));
         assert!(pt.area.lut > 11_000);
+    }
+
+    #[test]
+    fn unknown_accel_is_a_clean_error() {
+        let spec = ScenarioSpec::new("warpcore", 1);
+        let err = evaluate_point(&spec).unwrap_err().to_string();
+        assert!(err.contains("warpcore"), "{err}");
+    }
+
+    #[test]
+    fn specs_expand_in_replication_major_order() {
+        let mut p = SweepParams::quick("dfadd");
+        p.replications = vec![1, 2];
+        p.placements = vec![true, false];
+        let specs = p.specs();
+        assert_eq!(specs.len(), 4);
+        assert_eq!(
+            specs.iter().map(|s| (s.replicas, s.near_mem)).collect::<Vec<_>>(),
+            vec![(1, true), (1, false), (2, true), (2, false)]
+        );
     }
 }

@@ -7,16 +7,13 @@
 //! NoC+MEM island caps deliverable bandwidth at ~40 MB/s, which the TGs
 //! exhaust.
 
-use crate::config::presets::{paper_soc, A2_POS};
+use crate::config::presets::{paper_soc, A2_POS, ISL_NOC};
 use crate::report::Table;
-use crate::runtime::RefCompute;
-use crate::sim::{stage_inputs_for, Soc, ThroughputProbe};
+use crate::scenario::{ScenarioSet, Session};
 use crate::util::Ps;
 
-use super::run_until_invocations;
-
 /// One measured point.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Point {
     pub tg_active: usize,
     pub thr_mbs: f64,
@@ -36,31 +33,40 @@ pub fn measure_point(
     window: Ps,
 ) -> crate::Result<Point> {
     let mut cfg = paper_soc(("dfadd", 1), (accel, k));
-    cfg.islands[0].freq_mhz = 10; // NoC+MEM at 10 MHz (paper setup)
-    let mut soc = Soc::build(cfg, Box::new(RefCompute::new()))?;
-    let tile = soc.cfg.node_of(A2_POS.0, A2_POS.1);
-    stage_inputs_for(&mut soc, tile, 1);
-    soc.mra_mut(tile).functional_every_invocation = false;
-    soc.host_set_tg_active(tg);
+    cfg.islands[ISL_NOC].freq_mhz = 10; // NoC+MEM at 10 MHz (paper setup)
+    let mut session = Session::new(cfg)?;
+    let tile = session.tile_at(A2_POS.0, A2_POS.1);
+    session.stage(tile, 1)?.perf_only().with_tg_load(tg);
 
-    // Warmup: fill the replica pipelines (at least 2 invocation rounds).
-    run_until_invocations(&mut soc, tile, 2 * k as u64, warmup.max(1) * 20);
-    soc.run_for(warmup);
-    // Measure: whole invocation rounds, timed exactly.
-    let probe = ThroughputProbe::begin(&soc, tile);
+    // Warmup: fill the replica pipelines (at least 2 invocation rounds),
+    // then settle. Measure: whole invocation rounds, timed exactly.
+    session
+        .warmup_invocations(tile, 2 * k as u64, warmup.max(1) * 20)?
+        .warmup(warmup);
     let rounds = 4u64;
-    run_until_invocations(&mut soc, tile, rounds * k as u64, window * 40);
+    let report = session.measure_invocations(tile, rounds * k as u64, window * 40)?;
     Ok(Point {
         tg_active: tg,
-        thr_mbs: probe.mbs(&soc),
+        thr_mbs: report.throughput_mbs,
     })
 }
 
-/// Full Fig. 3 sweep for one accelerator.
+/// Full Fig. 3 sweep for one accelerator: the 12 TG points run as
+/// independent scenarios across threads, results in TG order.
 pub fn sweep(accel: &str, k: usize, warmup: Ps, window: Ps) -> crate::Result<Vec<Point>> {
-    (0..=11)
-        .map(|tg| measure_point(accel, k, tg, warmup, window))
-        .collect()
+    sweep_points(accel, k, &(0..=11).collect::<Vec<_>>(), warmup, window)
+}
+
+/// Sweep an explicit list of TG counts.
+pub fn sweep_points(
+    accel: &str,
+    k: usize,
+    tg_counts: &[usize],
+    warmup: Ps,
+    window: Ps,
+) -> crate::Result<Vec<Point>> {
+    ScenarioSet::new(tg_counts.to_vec())
+        .run_parallel(|&tg| measure_point(accel, k, tg, warmup, window))
 }
 
 /// Run the figure: both accelerators, rendered side by side.
@@ -109,5 +115,19 @@ mod tests {
             adpcm4 > adpcm0 * 0.8,
             "adpcm should hold: {adpcm0:.2} -> {adpcm4:.2}"
         );
+    }
+
+    /// The parallel sweep must agree point-for-point with serial
+    /// measurement (each point is an independent, seeded simulation).
+    #[test]
+    fn parallel_sweep_matches_serial_points() {
+        let w = 1_000_000_000;
+        let win = 4_000_000_000;
+        let tgs = [0usize, 6, 11];
+        let par = sweep_points("dfmul", 2, &tgs, w, win).unwrap();
+        for (i, &tg) in tgs.iter().enumerate() {
+            let serial = measure_point("dfmul", 2, tg, w, win).unwrap();
+            assert_eq!(par[i], serial, "tg={tg}");
+        }
     }
 }

@@ -10,8 +10,7 @@
 use crate::config::presets::{paper_soc, ISL_A1, ISL_A2, ISL_NOC, ISL_TG};
 use crate::monitor::TimeSeries;
 use crate::report::Table;
-use crate::runtime::RefCompute;
-use crate::sim::{stage_inputs_for, Soc};
+use crate::scenario::Session;
 use crate::util::Ps;
 
 /// A phase of the frequency program.
@@ -49,32 +48,28 @@ pub fn run(phase_len: Ps, sample_interval: Ps) -> crate::Result<Fig4Result> {
     cfg.islands[ISL_A1].freq_mhz = 10;
     cfg.islands[ISL_A2].freq_mhz = 10;
     cfg.islands[ISL_TG].freq_mhz = 10;
-    let mut soc = Soc::build(cfg, Box::new(RefCompute::new()))?;
-    for tile in soc.mra_tiles() {
-        stage_inputs_for(&mut soc, tile, 1);
-        soc.mra_mut(tile).functional_every_invocation = false;
-    }
-    soc.host_set_tg_active(11);
-    soc.enable_sampler(sample_interval);
+    let mut session = Session::new(cfg)?;
+    session
+        .stage_all(1)?
+        .perf_only()
+        .with_tg_load(11)
+        .sample_every(sample_interval);
 
     for (i, ph) in PHASES.iter().enumerate() {
         let t0 = i as u64 * phase_len;
-        soc.schedule_freq(t0, ISL_A1, ph.accel_mhz);
-        soc.schedule_freq(t0, ISL_A2, ph.accel_mhz);
-        soc.schedule_freq(t0, ISL_TG, ph.tg_mhz);
-        soc.schedule_freq(t0, ISL_NOC, ph.noc_mhz);
+        session
+            .schedule_freq(t0, ISL_A1, ph.accel_mhz)
+            .schedule_freq(t0, ISL_A2, ph.accel_mhz)
+            .schedule_freq(t0, ISL_TG, ph.tg_mhz)
+            .schedule_freq(t0, ISL_NOC, ph.noc_mhz);
     }
-    soc.run_until(PHASES.len() as u64 * phase_len);
+    session.run_until(PHASES.len() as u64 * phase_len);
 
+    let soc = session.soc();
     let sampler = soc.sampler.as_ref().expect("sampler enabled");
     let pkts = sampler.series("mem_pkts_in").unwrap().clone();
     let rate = pkts.to_rate();
-    let freq_series: Vec<TimeSeries> = sampler
-        .series
-        .iter()
-        .skip(1)
-        .map(|s| s.clone())
-        .collect();
+    let freq_series: Vec<TimeSeries> = sampler.series.iter().skip(1).cloned().collect();
 
     // Mean Mpkt/s per phase (skip the first third of each phase: DFS
     // actuator latency + settling).

@@ -5,28 +5,16 @@
 //! (§III) on the simulated SoC and returns both the rendered report and
 //! the raw numbers so benches/tests can assert the *shape* of the result
 //! (who wins, by what factor, where crossovers fall).
+//!
+//! All measurement choreography goes through [`crate::scenario::Session`]
+//! (stage → warmup → measure); the multi-point experiments (`fig3`,
+//! `table1`) fan their independent simulations out across threads with
+//! [`crate::scenario::ScenarioSet`].
 
 pub mod fig2;
 pub mod fig3;
 pub mod fig4;
 pub mod table1;
 
-use crate::monitor::CounterReg;
-use crate::sim::Soc;
-use crate::util::Ps;
-
-/// Run until `tile` has completed `n` more invocations (or `cap` time
-/// elapses). Returns elapsed ps.
-pub fn run_until_invocations(soc: &mut Soc, tile: usize, n: u64, cap: Ps) -> Ps {
-    let start = soc.now;
-    let target = soc.host_read_counter(tile, CounterReg::Invocations) + n;
-    let cap_t = start + cap;
-    while soc.host_read_counter(tile, CounterReg::Invocations) < target && soc.now < cap_t {
-        // 20 us slices: fine enough that the measurement window aligns
-        // with invocation completion (sub-5% quantization even for the
-        // fastest accelerators), coarse enough to amortize loop overhead.
-        let next = (soc.now + 20_000_000).min(cap_t);
-        soc.run_until(next);
-    }
-    soc.now - start
-}
+// Historical home of this helper; it now lives with the Session API.
+pub use crate::scenario::run_until_invocations;

@@ -3,15 +3,13 @@
 //!
 //! Setup per the paper (§III-A): accelerator in A1 (adjacent to MEM),
 //! NoC+MEM island at 100 MHz, accelerator island at 50 MHz, all TGs
-//! disabled — best-case throughput.
+//! disabled — best-case throughput. The 15 (accelerator, K) cells are
+//! independent simulations and run across threads via [`ScenarioSet`].
 
 use crate::config::presets::{paper_soc, A1_POS};
 use crate::report::Table;
 use crate::resources::{mra_area, AccelArea, Utilization};
-use crate::runtime::RefCompute;
-use crate::sim::{stage_inputs_for, Soc, ThroughputProbe};
-
-use super::run_until_invocations;
+use crate::scenario::{ScenarioSet, Session};
 
 /// Paper throughput values (MB/s) for comparison: (accel, [1x, 2x, 4x]).
 pub const PAPER_THR: [(&str, [f64; 3]); 5] = [
@@ -35,35 +33,37 @@ pub struct Row {
 /// Measure the throughput of `accel` at replication `k` (A1 placement).
 pub fn measure_throughput(accel: &str, k: usize, invocations: u64) -> crate::Result<f64> {
     let cfg = paper_soc((accel, k), ("dfadd", 1));
-    let mut soc = Soc::build(cfg, Box::new(RefCompute::new()))?;
-    let tile = soc.cfg.node_of(A1_POS.0, A1_POS.1);
-    stage_inputs_for(&mut soc, tile, 1);
-    soc.mra_mut(tile).functional_every_invocation = false;
+    let mut session = Session::new(cfg)?;
+    let tile = session.tile_at(A1_POS.0, A1_POS.1);
+    session.stage(tile, 1)?.perf_only();
 
-    // Warm up: let the first invocations fill the pipeline.
-    run_until_invocations(&mut soc, tile, k as u64, 400_000_000_000);
-    let probe = ThroughputProbe::begin(&soc, tile);
-    run_until_invocations(&mut soc, tile, invocations, 2_000_000_000_000);
-    Ok(probe.mbs(&soc))
+    // Warm up: let the first invocations fill the pipeline; then time a
+    // whole number of invocations exactly.
+    session.warmup_invocations(tile, k as u64, 400_000_000_000)?;
+    let report = session.measure_invocations(tile, invocations, 2_000_000_000_000)?;
+    Ok(report.throughput_mbs)
 }
 
 /// Run the full Table I reproduction. `invocations` controls the
-/// measurement window (larger = tighter estimates).
+/// measurement window (larger = tighter estimates). The 15 cells
+/// evaluate in parallel, in deterministic row order.
 pub fn run(invocations: u64) -> crate::Result<(Table, Vec<Row>)> {
-    let mut rows = Vec::new();
+    let mut cells = Vec::new();
     for (accel, paper) in PAPER_THR {
-        let area_db = AccelArea::lookup(accel)?;
         for (ki, &k) in [1usize, 2, 4].iter().enumerate() {
-            let thr = measure_throughput(accel, k, invocations * k as u64)?;
-            rows.push(Row {
-                accel: accel.to_string(),
-                k,
-                area: mra_area(&area_db, k),
-                thr_mbs: thr,
-                paper_thr_mbs: paper[ki],
-            });
+            cells.push((accel, k, paper[ki]));
         }
     }
+    let rows = ScenarioSet::new(cells).run_parallel(|&(accel, k, paper_thr)| {
+        let thr = measure_throughput(accel, k, invocations * k as u64)?;
+        Ok(Row {
+            accel: accel.to_string(),
+            k,
+            area: mra_area(&AccelArea::lookup(accel)?, k),
+            thr_mbs: thr,
+            paper_thr_mbs: paper_thr,
+        })
+    })?;
 
     let mut t = Table::new(
         "Table I — FPGA resources and throughput of 1x/2x/4x MRA tiles",

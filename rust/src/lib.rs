@@ -19,10 +19,49 @@
 //!    counters (execution time, packets in/out, round-trip time) exposed
 //!    over MMIO to both the CPU tile and the host.
 //!
+//! ## The Scenario/Session API
+//!
+//! [`scenario`] is the front door (see `docs/API.md` for the full tour).
+//! Compose any SoC with the fluent [`scenario::Scenario`] builder —
+//! arbitrary `WxH` grids, named frequency islands, any tile kind at any
+//! coordinate — then drive it with declarative [`scenario::Session`]
+//! phases that return typed [`scenario::PhaseReport`]s:
+//!
+//! ```text
+//! let cfg = Scenario::grid(4, 4)
+//!     .island_dfs("noc", 100, 10..=100, 5)
+//!     .island_dfs("acc", 50, 10..=50, 5)
+//!     .island("sys", 50)
+//!     .mem_at(0, 0)
+//!     .cpu_at_on(1, 0, "sys")
+//!     .accel_at(0, 1, "dfmul", 2, "acc")
+//!     .fill_tg("sys")
+//!     .build()?;
+//! let mut session = Session::new(cfg)?;
+//! let tile = session.tile_at(0, 1);
+//! session.stage(tile, 1)?.with_tg_load(4).warmup(ms(2));
+//! let report = session.measure(tile, ms(5))?;  // -> PhaseReport
+//! ```
+//!
+//! Batches of independent design points evaluate across every core with
+//! [`scenario::ScenarioSet::run_parallel`] (bit-identical to the serial
+//! path); [`dse::sweep`] and the `fig3`/`table1` experiments are built on
+//! it, with [`scenario::ScenarioSpec`] naming one paper-grid point.
+//!
+//! The original low-level surface remains for existing code:
+//! [`config::presets::paper_soc`] is now a thin preset over the builder,
+//! and `sim::stage_inputs_for` + `sim::ThroughputProbe` still exist as
+//! the primitives `Session` is made of — prefer the Session API in new
+//! code; the hand-rolled choreography is considered deprecated and no
+//! longer appears anywhere in this crate's experiments or examples.
+//!
+//! ## Functional datapaths
+//!
 //! Accelerator datapaths execute *real* compute: JAX/Pallas kernels are
 //! AOT-lowered at build time to HLO text and executed from the simulator's
-//! hot path through the PJRT CPU client ([`runtime`]). Python never runs at
-//! simulation time.
+//! hot path through the PJRT CPU client ([`runtime`], behind the `pjrt`
+//! feature). Python never runs at simulation time; builds without the
+//! feature use the native [`runtime::RefCompute`] oracle.
 
 pub mod axi;
 pub mod bench_harness;
@@ -38,6 +77,7 @@ pub mod policy;
 pub mod report;
 pub mod resources;
 pub mod runtime;
+pub mod scenario;
 pub mod sim;
 pub mod tiles;
 pub mod util;

@@ -16,13 +16,13 @@
 
 use vespa::cli::Args;
 use vespa::config::SocConfig;
-use vespa::dse::{pareto_front, sweep_replication, SweepParams};
+use vespa::dse::{pareto_front, sweep_replication, sweep_replication_serial, SweepParams};
 use vespa::experiments::{fig2, fig3, fig4, table1};
 use vespa::mem::Block;
 use vespa::report::{plot, Table};
 use vespa::resources::AccelArea;
 use vespa::runtime::{AccelCompute, Manifest, PjrtCompute, RefCompute};
-use vespa::sim::{stage_inputs_for, Soc};
+use vespa::scenario::Session;
 use vespa::tiles::AccelTiming;
 
 fn main() {
@@ -51,6 +51,7 @@ fn usage() {
            --window-ms N       Fig. 3 window per point (default 10)\n\
            --phase-ms N        Fig. 4 phase length (default 30)\n\
            --accel NAME        DSE target accelerator (default dfmul)\n\
+           --serial            DSE: disable the parallel scenario runner\n\
            --artifacts DIR     use the PJRT backend from DIR\n\
            --duration-ms N     `run` duration (default 10)\n\
            --tg N              `run`: active TG count (default 0)"
@@ -161,13 +162,13 @@ fn cmd_run(args: &Args) -> vespa::Result<()> {
         .first()
         .ok_or_else(|| anyhow::anyhow!("run: missing config path"))?;
     let cfg = SocConfig::load(path)?;
-    let mut soc = Soc::build(cfg, backend(args)?)?;
-    for tile in soc.mra_tiles() {
-        stage_inputs_for(&mut soc, tile, 1);
-    }
-    soc.host_set_tg_active(args.opt_usize("tg", 0)?);
+    let mut session = Session::with_backend(cfg, backend(args)?)?;
     let dur = args.opt_u64("duration-ms", 10)? * 1_000_000_000;
-    soc.run_for(dur);
+    session
+        .stage_all(1)?
+        .with_tg_load(args.opt_usize("tg", 0)?)
+        .warmup(dur);
+    let soc = session.soc();
 
     let mut t = Table::new(
         format!("run {} for {} ms", soc.cfg.name, dur / 1_000_000_000),
@@ -211,7 +212,13 @@ fn cmd_dse(args: &Args) -> vespa::Result<()> {
         p.window = 4_000_000_000;
         p.warmup = 500_000_000;
     }
-    let pts = sweep_replication(&p)?;
+    // Parallel across cores by default; --serial for the reference path
+    // (results are bit-identical either way).
+    let pts = if args.flag("serial") {
+        sweep_replication_serial(&p)?
+    } else {
+        sweep_replication(&p)?
+    };
     let mut t = Table::new(
         format!("DSE — {accel}"),
         &["K", "accel MHz", "NoC MHz", "near", "LUT", "DSP", "MB/s", "pareto"],

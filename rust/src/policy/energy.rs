@@ -137,7 +137,7 @@ mod tests {
         cfg.islands[1].freq_mhz = 50;
         let mut soc = Soc::build(cfg, Box::new(RefCompute::new())).unwrap();
         let a1 = soc.cfg.node_of(crate::config::presets::A1_POS.0, crate::config::presets::A1_POS.1);
-        crate::sim::stage_inputs_for(&mut soc, a1, 1);
+        crate::sim::stage_inputs_for(&mut soc, a1, 1).unwrap();
         soc.mra_mut(a1).functional_every_invocation = false;
         soc.run_for(3_000_000_000);
         let epi = energy_per_invocation(&soc, a1, &EnergyModel::default()).unwrap();

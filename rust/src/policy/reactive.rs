@@ -102,7 +102,7 @@ mod tests {
         let cfg = paper_soc(("dfmul", 4), ("dfmul", 4));
         let mut soc = Soc::build(cfg, Box::new(RefCompute::new())).unwrap();
         let a2 = soc.cfg.node_of(A2_POS.0, A2_POS.1);
-        stage_inputs_for(&mut soc, a2, 1);
+        stage_inputs_for(&mut soc, a2, 1).unwrap();
         soc.mra_mut(a2).functional_every_invocation = false;
         soc.host_write_freq(0, 10).unwrap(); // slow NoC
         soc.host_set_tg_active(11);
@@ -124,7 +124,7 @@ mod tests {
         let cfg = paper_soc(("dfadd", 1), ("dfadd", 1));
         let mut soc = Soc::build(cfg, Box::new(RefCompute::new())).unwrap();
         let a2 = soc.cfg.node_of(A2_POS.0, A2_POS.1);
-        stage_inputs_for(&mut soc, a2, 1);
+        stage_inputs_for(&mut soc, a2, 1).unwrap();
         soc.mra_mut(a2).functional_every_invocation = false;
         // NoC at 100 MHz, one lazy accelerator: RTTs are far below the
         // relax threshold, so the policy steps the island down.

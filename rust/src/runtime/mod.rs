@@ -13,6 +13,10 @@
 //! RefCompute agree.
 
 pub mod manifest;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
+#[cfg(not(feature = "pjrt"))]
+#[path = "pjrt_stub.rs"]
 pub mod pjrt;
 pub mod refcompute;
 

@@ -1,0 +1,46 @@
+//! Stub PJRT backend for builds without the `pjrt` feature.
+//!
+//! The real [`super::pjrt`] module needs the `xla` crate and its C++
+//! runtime — a heavyweight optional dependency. This stub mirrors the
+//! module's public API exactly so every call site compiles unchanged;
+//! constructors return a descriptive error at run time, steering users to
+//! the native [`super::RefCompute`] oracle or a `--features pjrt` build.
+
+use anyhow::bail;
+
+use super::manifest::Manifest;
+use super::AccelCompute;
+use crate::mem::Block;
+
+/// Place-holder for the PJRT CPU backend (`--features pjrt` enables the
+/// real implementation).
+pub struct PjrtCompute {
+    /// Invocation counter (perf reporting); always 0 in the stub.
+    pub invocations: u64,
+}
+
+impl PjrtCompute {
+    /// Always fails: the crate was built without PJRT support.
+    pub fn load(_artifacts_dir: impl AsRef<std::path::Path>) -> crate::Result<Self> {
+        bail!(
+            "vespa was built without the `pjrt` feature; rebuild with \
+             `cargo build --features pjrt` (requires the xla crate) or use \
+             the native RefCompute backend"
+        )
+    }
+
+    /// Always fails: the crate was built without PJRT support.
+    pub fn from_manifest(_manifest: Manifest) -> crate::Result<Self> {
+        Self::load("")
+    }
+}
+
+impl AccelCompute for PjrtCompute {
+    fn invoke(&mut self, name: &str, _inputs: &[&Block]) -> crate::Result<Vec<Block>> {
+        bail!("PJRT backend unavailable (built without the `pjrt` feature); cannot invoke {name}")
+    }
+
+    fn backend(&self) -> &'static str {
+        "pjrt-stub"
+    }
+}

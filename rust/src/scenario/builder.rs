@@ -1,0 +1,630 @@
+//! [`Scenario`]: a fluent, validated builder over [`SocConfig`].
+//!
+//! Supports arbitrary `WxH` grids, named frequency islands (fixed or
+//! DFS-driven), and placement of any tile kind at any coordinate.
+//! Placement errors (overlaps, out-of-grid coordinates, zero replicas)
+//! are recorded as they happen and reported together — with actionable
+//! messages — when [`Scenario::build`] runs, so a long fluent chain never
+//! panics halfway through.
+
+use std::fmt;
+use std::ops::RangeInclusive;
+
+use anyhow::{bail, Context};
+
+use crate::config::{BridgeCfg, IslandSpec, NocParams, SocConfig, TileKind, TileSpec};
+use crate::mem::MemParams;
+use crate::tiles::DmaParams;
+
+/// A reference to a frequency island: by declared name or by index.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum IslandRef {
+    Name(String),
+    Index(usize),
+}
+
+impl From<&str> for IslandRef {
+    fn from(s: &str) -> Self {
+        IslandRef::Name(s.to_string())
+    }
+}
+
+impl From<String> for IslandRef {
+    fn from(s: String) -> Self {
+        IslandRef::Name(s)
+    }
+}
+
+impl From<usize> for IslandRef {
+    fn from(i: usize) -> Self {
+        IslandRef::Index(i)
+    }
+}
+
+impl fmt::Display for IslandRef {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            IslandRef::Name(n) => write!(f, "{n:?}"),
+            IslandRef::Index(i) => write!(f, "#{i}"),
+        }
+    }
+}
+
+/// Short human name for a tile kind, used in builder error messages.
+fn kind_name(k: &TileKind) -> &'static str {
+    match k {
+        TileKind::Cpu => "CPU",
+        TileKind::Mem => "MEM",
+        TileKind::Io => "I/O",
+        TileKind::Tg => "TG",
+        TileKind::Accel { .. } => "accelerator",
+    }
+}
+
+/// Fluent SoC scenario builder. See the [module docs](crate::scenario)
+/// for the full quickstart.
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    name: Option<String>,
+    width: u16,
+    height: u16,
+    seed: u64,
+    islands: Vec<IslandSpec>,
+    /// One slot per grid cell (row-major), filled by placement calls.
+    /// `None` in the island slot means "the NoC island", resolved at
+    /// `build()` time so a later `.noc_island()` call still applies.
+    cells: Vec<Option<(TileKind, Option<IslandRef>)>>,
+    /// Island for cells left unplaced (TGs), if any.
+    fill: Option<IslandRef>,
+    /// Island the NoC routers + MEM controller belong to (default: #0).
+    noc_island: Option<IslandRef>,
+    noc: NocParams,
+    mem: MemParams,
+    dma: DmaParams,
+    bridge: BridgeCfg,
+    cpu_poll_interval: u32,
+    /// Deferred placement/declaration errors, reported by `build()`.
+    errors: Vec<String>,
+}
+
+impl Scenario {
+    /// Start a scenario on a `width x height` mesh.
+    pub fn grid(width: u16, height: u16) -> Self {
+        let mut errors = Vec::new();
+        if width == 0 || height == 0 {
+            errors.push(format!(
+                "empty {width}x{height} grid — both dimensions must be >= 1"
+            ));
+        }
+        Self {
+            name: None,
+            width,
+            height,
+            seed: 0xE5B,
+            islands: Vec::new(),
+            cells: vec![None; width as usize * height as usize],
+            fill: None,
+            noc_island: None,
+            noc: NocParams::default(),
+            mem: MemParams::default(),
+            dma: DmaParams::default(),
+            bridge: BridgeCfg::default(),
+            cpu_poll_interval: 0,
+            errors,
+        }
+    }
+
+    /// Name the scenario (defaults to `scenario-WxH`).
+    pub fn name(mut self, name: impl Into<String>) -> Self {
+        self.name = Some(name.into());
+        self
+    }
+
+    /// Seed for all simulation randomness (determinism knob).
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Declare a fixed-frequency island.
+    pub fn island(mut self, name: &str, freq_mhz: u64) -> Self {
+        self.declare_island(IslandSpec {
+            name: name.to_string(),
+            freq_mhz,
+            dfs: false,
+            min_mhz: freq_mhz,
+            max_mhz: freq_mhz,
+            step_mhz: 5,
+        });
+        self
+    }
+
+    /// Declare a DFS-driven island: initial `freq_mhz`, runtime range
+    /// `range` MHz, actuator step `step_mhz`.
+    pub fn island_dfs(
+        mut self,
+        name: &str,
+        freq_mhz: u64,
+        range: RangeInclusive<u64>,
+        step_mhz: u64,
+    ) -> Self {
+        self.declare_island(IslandSpec {
+            name: name.to_string(),
+            freq_mhz,
+            dfs: true,
+            min_mhz: *range.start(),
+            max_mhz: *range.end(),
+            step_mhz,
+        });
+        self
+    }
+
+    fn declare_island(&mut self, spec: IslandSpec) {
+        if self.islands.iter().any(|i| i.name == spec.name) {
+            self.errors.push(format!(
+                "island {:?} declared twice — island names must be unique",
+                spec.name
+            ));
+            return;
+        }
+        self.islands.push(spec);
+    }
+
+    /// Choose the island the NoC routers and MEM controller clock in
+    /// (default: the first declared island).
+    pub fn noc_island(mut self, island: impl Into<IslandRef>) -> Self {
+        self.noc_island = Some(island.into());
+        self
+    }
+
+    /// Place any tile kind at `(x, y)` on `island` (by name or index).
+    pub fn tile_at(
+        mut self,
+        x: u16,
+        y: u16,
+        kind: TileKind,
+        island: impl Into<IslandRef>,
+    ) -> Self {
+        self.place(x, y, kind, Some(island.into()));
+        self
+    }
+
+    /// Place the (unique) MEM tile; it clocks with the NoC island (as
+    /// chosen by [`Scenario::noc_island`], even when called later).
+    pub fn mem_at(mut self, x: u16, y: u16) -> Self {
+        self.place(x, y, TileKind::Mem, None);
+        self
+    }
+
+    /// Place the MEM tile on an explicit island.
+    pub fn mem_at_on(self, x: u16, y: u16, island: impl Into<IslandRef>) -> Self {
+        self.tile_at(x, y, TileKind::Mem, island)
+    }
+
+    /// Place a CPU tile on the NoC island (see `cpu_at_on` to choose).
+    pub fn cpu_at(mut self, x: u16, y: u16) -> Self {
+        self.place(x, y, TileKind::Cpu, None);
+        self
+    }
+
+    /// Place a CPU tile on an explicit island.
+    pub fn cpu_at_on(self, x: u16, y: u16, island: impl Into<IslandRef>) -> Self {
+        self.tile_at(x, y, TileKind::Cpu, island)
+    }
+
+    /// Place an I/O tile on the NoC island (see `io_at_on` to choose).
+    pub fn io_at(mut self, x: u16, y: u16) -> Self {
+        self.place(x, y, TileKind::Io, None);
+        self
+    }
+
+    /// Place an I/O tile on an explicit island.
+    pub fn io_at_on(self, x: u16, y: u16, island: impl Into<IslandRef>) -> Self {
+        self.tile_at(x, y, TileKind::Io, island)
+    }
+
+    /// Place a traffic-generator tile.
+    pub fn tg_at(self, x: u16, y: u16, island: impl Into<IslandRef>) -> Self {
+        self.tile_at(x, y, TileKind::Tg, island)
+    }
+
+    /// Place a multi-replica accelerator tile: `replicas` copies of
+    /// `accel` behind one NoC node, clocked by `island`.
+    pub fn accel_at(
+        mut self,
+        x: u16,
+        y: u16,
+        accel: &str,
+        replicas: usize,
+        island: impl Into<IslandRef>,
+    ) -> Self {
+        if replicas == 0 {
+            self.errors.push(format!(
+                "accelerator {accel:?} at ({x}, {y}): zero replicas — an MRA tile needs \
+                 1 to 16 replicas"
+            ));
+            return self;
+        }
+        self.place(
+            x,
+            y,
+            TileKind::Accel {
+                accel: accel.to_string(),
+                replicas,
+            },
+            Some(island.into()),
+        );
+        self
+    }
+
+    /// Fill every cell not explicitly placed with a TG tile on `island`.
+    pub fn fill_tg(mut self, island: impl Into<IslandRef>) -> Self {
+        self.fill = Some(island.into());
+        self
+    }
+
+    /// Override the NoC microarchitecture parameters (FIFO depth,
+    /// pipeline, synchronizer stages). The `island` field of the params
+    /// is ignored — `build()` always sets it from
+    /// [`Scenario::noc_island`] (default: island #0).
+    pub fn with_noc(mut self, params: NocParams) -> Self {
+        self.noc = params;
+        self
+    }
+
+    /// Override the memory-controller parameters.
+    pub fn with_mem(mut self, params: MemParams) -> Self {
+        self.mem = params;
+        self
+    }
+
+    /// Override the per-replica DMA parameters.
+    pub fn with_dma(mut self, params: DmaParams) -> Self {
+        self.dma = params;
+        self
+    }
+
+    /// Override the MRA bridge parameters.
+    pub fn with_bridge(mut self, params: BridgeCfg) -> Self {
+        self.bridge = params;
+        self
+    }
+
+    /// CPU monitor-poll interval in CPU cycles (0 = off).
+    pub fn cpu_poll_interval(mut self, cycles: u32) -> Self {
+        self.cpu_poll_interval = cycles;
+        self
+    }
+
+    fn default_island_ref(&self) -> IslandRef {
+        self.noc_island.clone().unwrap_or(IslandRef::Index(0))
+    }
+
+    fn place(&mut self, x: u16, y: u16, kind: TileKind, island: Option<IslandRef>) {
+        if x >= self.width || y >= self.height {
+            self.errors.push(format!(
+                "{} tile at ({x}, {y}) is outside the {}x{} grid — valid coordinates are \
+                 x < {}, y < {}",
+                kind_name(&kind),
+                self.width,
+                self.height,
+                self.width,
+                self.height
+            ));
+            return;
+        }
+        let idx = y as usize * self.width as usize + x as usize;
+        if let Some((existing, _)) = &self.cells[idx] {
+            self.errors.push(format!(
+                "cell ({x}, {y}) already holds a {} tile — cannot also place a {} there \
+                 (one tile per cell)",
+                kind_name(existing),
+                kind_name(&kind)
+            ));
+            return;
+        }
+        self.cells[idx] = Some((kind, island));
+    }
+
+    fn resolve(&self, r: &IslandRef, what: &str) -> crate::Result<usize> {
+        match r {
+            IslandRef::Index(i) => {
+                if *i >= self.islands.len() {
+                    bail!(
+                        "{what}: island index {i} out of range — {} island(s) declared \
+                         ({})",
+                        self.islands.len(),
+                        self.declared_names()
+                    );
+                }
+                Ok(*i)
+            }
+            IslandRef::Name(n) => self
+                .islands
+                .iter()
+                .position(|i| &i.name == n)
+                .with_context(|| {
+                    format!(
+                        "{what}: no island named {n:?} — declare it with .island()/\
+                         .island_dfs() before use (declared: {})",
+                        self.declared_names()
+                    )
+                }),
+        }
+    }
+
+    fn declared_names(&self) -> String {
+        if self.islands.is_empty() {
+            "none".to_string()
+        } else {
+            self.islands
+                .iter()
+                .map(|i| format!("{:?}", i.name))
+                .collect::<Vec<_>>()
+                .join(", ")
+        }
+    }
+
+    /// Resolve names, fill the grid, and validate into a [`SocConfig`].
+    pub fn build(self) -> crate::Result<SocConfig> {
+        if !self.errors.is_empty() {
+            bail!("invalid scenario:\n  - {}", self.errors.join("\n  - "));
+        }
+
+        let noc_ref = self.default_island_ref();
+        let noc_island = self.resolve(&noc_ref, "NoC island")?;
+
+        let mut tiles = Vec::with_capacity(self.cells.len());
+        let mut unfilled = Vec::new();
+        let fill_island = match &self.fill {
+            Some(r) => Some(self.resolve(r, "fill_tg island")?),
+            None => None,
+        };
+        for (idx, cell) in self.cells.iter().enumerate() {
+            let x = (idx % self.width as usize) as u16;
+            let y = (idx / self.width as usize) as u16;
+            match cell {
+                Some((kind, isl)) => {
+                    let island = match isl {
+                        Some(r) => self
+                            .resolve(r, &format!("{} tile at ({x}, {y})", kind_name(kind)))?,
+                        None => noc_island,
+                    };
+                    tiles.push(TileSpec {
+                        x,
+                        y,
+                        kind: kind.clone(),
+                        island,
+                    });
+                }
+                None => match fill_island {
+                    Some(island) => tiles.push(TileSpec {
+                        x,
+                        y,
+                        kind: TileKind::Tg,
+                        island,
+                    }),
+                    None => unfilled.push((x, y)),
+                },
+            }
+        }
+        if !unfilled.is_empty() {
+            bail!(
+                "{} grid cell(s) unfilled (first: ({}, {})) — place a tile at every \
+                 cell or call .fill_tg(island) to populate the rest with traffic \
+                 generators",
+                unfilled.len(),
+                unfilled[0].0,
+                unfilled[0].1
+            );
+        }
+
+        let mems: Vec<(u16, u16)> = tiles
+            .iter()
+            .filter(|t| t.kind == TileKind::Mem)
+            .map(|t| (t.x, t.y))
+            .collect();
+        if mems.is_empty() {
+            bail!(
+                "scenario has no MEM tile — every SoC needs exactly one memory tile; \
+                 add .mem_at(x, y)"
+            );
+        }
+        if mems.len() > 1 {
+            bail!(
+                "scenario has {} MEM tiles (at {:?}) — exactly one allowed",
+                mems.len(),
+                mems
+            );
+        }
+
+        let mut noc = self.noc.clone();
+        noc.island = noc_island;
+        let cfg = SocConfig {
+            name: self
+                .name
+                .clone()
+                .unwrap_or_else(|| format!("scenario-{}x{}", self.width, self.height)),
+            width: self.width,
+            height: self.height,
+            seed: self.seed,
+            tiles,
+            islands: self.islands,
+            noc,
+            mem: self.mem,
+            dma: self.dma,
+            bridge: self.bridge,
+            cpu_poll_interval: self.cpu_poll_interval,
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn two_island_base() -> Scenario {
+        Scenario::grid(2, 2)
+            .island_dfs("noc", 100, 10..=100, 5)
+            .island("acc", 50)
+    }
+
+    #[test]
+    fn minimal_scenario_builds() {
+        let cfg = two_island_base()
+            .mem_at(0, 0)
+            .accel_at(1, 0, "dfmul", 2, "acc")
+            .fill_tg("acc")
+            .build()
+            .unwrap();
+        assert_eq!(cfg.tiles.len(), 4);
+        assert_eq!(cfg.islands.len(), 2);
+        assert_eq!(cfg.noc.island, 0);
+        assert_eq!(
+            cfg.tiles_where(|k| matches!(k, TileKind::Accel { .. })).len(),
+            1
+        );
+        assert_eq!(cfg.tiles_where(|k| *k == TileKind::Tg).len(), 2);
+    }
+
+    #[test]
+    fn islands_resolve_by_name_or_index() {
+        let cfg = two_island_base()
+            .mem_at(0, 0)
+            .tg_at(1, 0, 1usize)
+            .tg_at(0, 1, "acc")
+            .tg_at(1, 1, "noc")
+            .build()
+            .unwrap();
+        assert_eq!(cfg.tiles[1].island, 1);
+        assert_eq!(cfg.tiles[2].island, 1);
+        assert_eq!(cfg.tiles[3].island, 0);
+    }
+
+    #[test]
+    fn overlap_reports_both_kinds() {
+        let err = two_island_base()
+            .mem_at(0, 0)
+            .accel_at(0, 0, "dfadd", 1, "acc")
+            .fill_tg("acc")
+            .build()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("already holds a MEM tile"), "{err}");
+        assert!(err.contains("(0, 0)"), "{err}");
+    }
+
+    #[test]
+    fn island_index_out_of_range_is_actionable() {
+        let err = two_island_base()
+            .mem_at(0, 0)
+            .tg_at(1, 0, 7usize)
+            .fill_tg("acc")
+            .build()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("island index 7 out of range"), "{err}");
+        assert!(err.contains("2 island(s) declared"), "{err}");
+    }
+
+    #[test]
+    fn unknown_island_name_lists_declared() {
+        let err = two_island_base()
+            .mem_at(0, 0)
+            .fill_tg("turbo")
+            .build()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("no island named \"turbo\""), "{err}");
+        assert!(err.contains("\"noc\""), "{err}");
+        assert!(err.contains("\"acc\""), "{err}");
+    }
+
+    #[test]
+    fn missing_mem_tile_is_actionable() {
+        let err = two_island_base()
+            .fill_tg("acc")
+            .build()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("no MEM tile"), "{err}");
+        assert!(err.contains(".mem_at"), "{err}");
+    }
+
+    #[test]
+    fn zero_replicas_is_actionable() {
+        let err = two_island_base()
+            .mem_at(0, 0)
+            .accel_at(1, 1, "gsm", 0, "acc")
+            .fill_tg("acc")
+            .build()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("zero replicas"), "{err}");
+        assert!(err.contains("\"gsm\""), "{err}");
+    }
+
+    #[test]
+    fn out_of_grid_placement_is_actionable() {
+        let err = two_island_base()
+            .mem_at(0, 0)
+            .tg_at(5, 0, "acc")
+            .fill_tg("acc")
+            .build()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("outside the 2x2 grid"), "{err}");
+    }
+
+    #[test]
+    fn unfilled_cells_without_fill_error() {
+        let err = two_island_base().mem_at(0, 0).build().unwrap_err().to_string();
+        assert!(err.contains("unfilled"), "{err}");
+        assert!(err.contains(".fill_tg"), "{err}");
+    }
+
+    #[test]
+    fn duplicate_island_name_rejected() {
+        let err = Scenario::grid(1, 1)
+            .island("a", 50)
+            .island("a", 60)
+            .mem_at(0, 0)
+            .build()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("declared twice"), "{err}");
+    }
+
+    #[test]
+    fn non_square_grids_build() {
+        let cfg = Scenario::grid(6, 2)
+            .island_dfs("all", 50, 10..=50, 5)
+            .mem_at(0, 0)
+            .cpu_at(1, 0)
+            .accel_at(5, 1, "dfadd", 4, "all")
+            .fill_tg("all")
+            .build()
+            .unwrap();
+        assert_eq!(cfg.width, 6);
+        assert_eq!(cfg.tiles.len(), 12);
+        cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn multiple_errors_reported_together() {
+        let err = Scenario::grid(2, 1)
+            .island("a", 50)
+            .mem_at(0, 0)
+            .mem_at_on(0, 0, "a")
+            .accel_at(9, 9, "dfadd", 1, "a")
+            .accel_at(1, 0, "dfmul", 0, "a")
+            .build()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("already holds"), "{err}");
+        assert!(err.contains("outside the 2x1 grid"), "{err}");
+        assert!(err.contains("zero replicas"), "{err}");
+    }
+}

@@ -1,0 +1,55 @@
+//! The Scenario/Session API: fluent SoC construction, declarative
+//! workload phases, and parallel scenario evaluation.
+//!
+//! This is the crate's front door for design-space exploration — the
+//! paper's §I workflow of "exploring a multitude of solutions that differ
+//! in the replication of accelerators, the clock frequencies of the
+//! frequency islands, and the tiles' placement" — packaged as three
+//! layers:
+//!
+//! 1. [`Scenario`] — a validated fluent builder over
+//!    [`crate::config::SocConfig`]: arbitrary `WxH` grids, named
+//!    frequency islands, any tile kind at any coordinate.
+//! 2. [`Session`] — wraps a running [`crate::sim::Soc`] with declarative
+//!    workload phases (`stage` → `warmup` → `measure`) that return typed
+//!    [`PhaseReport`]s instead of hand-rolled counter choreography.
+//! 3. [`ScenarioSet`] — evaluates independent scenarios across OS
+//!    threads (one `Soc` per worker) with results in deterministic
+//!    scenario-index order; [`ScenarioSpec`] names one paper-grid design
+//!    point for `dse::sweep` and friends.
+//!
+//! ```text
+//! let cfg = Scenario::grid(4, 4)
+//!     .island_dfs("noc", 100, 10..=100, 5)
+//!     .island_dfs("acc", 50, 10..=50, 5)
+//!     .mem_at(0, 0)
+//!     .cpu_at(3, 0)
+//!     .accel_at(0, 1, "dfmul", 2, "acc")
+//!     .fill_tg("acc")
+//!     .build()?;
+//! let mut session = Session::new(cfg)?;
+//! let tile = session.soc().cfg.node_of(0, 1);
+//! session.stage(tile, 1)?.with_tg_load(4).warmup(ms(2));
+//! let report = session.measure(tile, ms(5))?;
+//! println!("{:.2} MB/s, RTT {:.0} ns", report.throughput_mbs, report.rtt_ns);
+//! ```
+
+pub mod builder;
+pub mod session;
+pub mod set;
+
+pub use builder::{IslandRef, Scenario};
+pub use session::{run_until_invocations, PhaseReport, Session};
+pub use set::{ScenarioSet, ScenarioSpec};
+
+use crate::util::Ps;
+
+/// `n` milliseconds of simulated time, in [`Ps`].
+pub const fn ms(n: u64) -> Ps {
+    n * 1_000_000_000
+}
+
+/// `n` microseconds of simulated time, in [`Ps`].
+pub const fn us(n: u64) -> Ps {
+    n * 1_000_000
+}

@@ -1,0 +1,368 @@
+//! [`Session`]: declarative workload phases over a running [`Soc`].
+//!
+//! A session owns the simulated SoC and exposes the staging → warmup →
+//! measure choreography that the paper's host tooling performs, as
+//! chainable phases that return typed [`PhaseReport`]s. It replaces the
+//! hand-rolled `stage_inputs_for` + `ThroughputProbe` + `run_for`
+//! sequences that every experiment and example used to copy.
+
+use std::collections::BTreeMap;
+
+use crate::config::SocConfig;
+use crate::mem::BlockId;
+use crate::monitor::CounterReg;
+use crate::runtime::{AccelCompute, RefCompute};
+use crate::sim::{driver, Soc};
+use crate::util::Ps;
+
+/// Typed result of one measurement phase on one MRA tile.
+///
+/// Counter fields are *deltas over the measurement window* (the session
+/// snapshots the hardware counters when the phase begins), so a report
+/// is meaningful even after earlier phases ran on the same tile — the
+/// one exception is [`PhaseReport::last_exec_cycles`], which mirrors the
+/// auto-resetting hardware exec-time counter.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PhaseReport {
+    /// Tile the phase measured.
+    pub tile: usize,
+    /// Simulation time when the window opened (ps).
+    pub start: Ps,
+    /// Window length (ps).
+    pub elapsed: Ps,
+    /// Completed accelerator invocations in the window.
+    pub invocations: u64,
+    /// Throughput in MB/s credited per the accelerator's stream bytes —
+    /// the quantity Table I and Fig. 3 report.
+    pub throughput_mbs: f64,
+    /// Mean DMA round-trip time inside the window (ns); 0 if no
+    /// round-trips completed.
+    pub rtt_ns: f64,
+    /// NoC packets into the tile during the window.
+    pub pkts_in: u64,
+    /// NoC packets out of the tile during the window.
+    pub pkts_out: u64,
+    /// Exec-time counter at window close (island-clock cycles). The
+    /// hardware counter auto-resets when a computation starts, so this
+    /// is the most recent computation's cycle count — not a window
+    /// total.
+    pub last_exec_cycles: u64,
+}
+
+/// Snapshot of one tile's counters at the start of a window.
+#[derive(Debug, Clone, Copy)]
+struct CounterSnapshot {
+    start: Ps,
+    invocations: u64,
+    pkts_in: u64,
+    pkts_out: u64,
+    rtt_sum: u64,
+    rtt_count: u64,
+}
+
+impl CounterSnapshot {
+    fn take(soc: &Soc, tile: usize) -> Self {
+        let c = soc.mon.tile(tile);
+        Self {
+            start: soc.now,
+            invocations: c.invocations,
+            pkts_in: c.pkts_in,
+            pkts_out: c.pkts_out,
+            rtt_sum: c.rtt_sum,
+            rtt_count: c.rtt_count,
+        }
+    }
+
+    fn report(&self, soc: &Soc, tile: usize) -> PhaseReport {
+        let c = soc.mon.tile(tile);
+        let elapsed = soc.now - self.start;
+        let invocations = c.invocations - self.invocations;
+        let dt_s = elapsed as f64 / 1e12;
+        let credit = soc.mra(tile).timing.credit_bytes as f64;
+        let throughput_mbs = if dt_s > 0.0 {
+            invocations as f64 * credit / 1e6 / dt_s
+        } else {
+            0.0
+        };
+        let rtt_n = c.rtt_count - self.rtt_count;
+        let rtt_ns = if rtt_n > 0 {
+            (c.rtt_sum - self.rtt_sum) as f64 / rtt_n as f64 / 1e3
+        } else {
+            0.0
+        };
+        PhaseReport {
+            tile,
+            start: self.start,
+            elapsed,
+            invocations,
+            throughput_mbs,
+            rtt_ns,
+            pkts_in: c.pkts_in - self.pkts_in,
+            pkts_out: c.pkts_out - self.pkts_out,
+            last_exec_cycles: c.exec_cycles,
+        }
+    }
+}
+
+/// Run `soc` until `tile` has completed `n` more invocations (or `cap`
+/// time elapses). Returns elapsed ps. Time advances in 20 us slices —
+/// fine enough that measurement windows align with invocation completion
+/// (sub-5% quantization even for the fastest accelerators), coarse
+/// enough to amortize loop overhead.
+pub fn run_until_invocations(soc: &mut Soc, tile: usize, n: u64, cap: Ps) -> Ps {
+    let start = soc.now;
+    let target = soc.host_read_counter(tile, CounterReg::Invocations) + n;
+    let cap_t = start + cap;
+    while soc.host_read_counter(tile, CounterReg::Invocations) < target && soc.now < cap_t {
+        let next = (soc.now + 20_000_000).min(cap_t);
+        soc.run_until(next);
+    }
+    soc.now - start
+}
+
+/// A running simulation with declarative workload phases. See the
+/// [module docs](crate::scenario) for the quickstart.
+pub struct Session {
+    soc: Soc,
+    /// Block ids staged per tile (for functional output validation).
+    staged: BTreeMap<usize, Vec<Vec<BlockId>>>,
+}
+
+impl Session {
+    /// Build a session over `cfg` with the native reference backend.
+    pub fn new(cfg: SocConfig) -> crate::Result<Self> {
+        Self::with_backend(cfg, Box::new(RefCompute::new()))
+    }
+
+    /// Build a session over `cfg` with an explicit functional backend
+    /// (e.g. PJRT).
+    pub fn with_backend(cfg: SocConfig, backend: Box<dyn AccelCompute>) -> crate::Result<Self> {
+        Ok(Self::from_soc(Soc::build(cfg, backend)?))
+    }
+
+    /// Wrap an already-built SoC.
+    pub fn from_soc(soc: Soc) -> Self {
+        Self {
+            soc,
+            staged: BTreeMap::new(),
+        }
+    }
+
+    /// The underlying SoC (counters, sampler, tiles, ...).
+    pub fn soc(&self) -> &Soc {
+        &self.soc
+    }
+
+    /// Mutable access to the underlying SoC (escape hatch).
+    pub fn soc_mut(&mut self) -> &mut Soc {
+        &mut self.soc
+    }
+
+    /// Unwrap back into the SoC.
+    pub fn into_soc(self) -> Soc {
+        self.soc
+    }
+
+    /// Node index of the accelerator tile at grid position `(x, y)`.
+    pub fn tile_at(&self, x: u16, y: u16) -> usize {
+        self.soc.cfg.node_of(x, y)
+    }
+
+    /// Tile indices of all MRA tiles.
+    pub fn mra_tiles(&self) -> Vec<usize> {
+        self.soc.mra_tiles()
+    }
+
+    /// Stage `sets` functional input sets for MRA tile `tile`.
+    pub fn stage(&mut self, tile: usize, sets: usize) -> crate::Result<&mut Self> {
+        let ids = driver::stage_inputs_for(&mut self.soc, tile, sets)?;
+        self.staged.insert(tile, ids);
+        Ok(self)
+    }
+
+    /// Stage `sets` input sets on every MRA tile.
+    pub fn stage_all(&mut self, sets: usize) -> crate::Result<&mut Self> {
+        for tile in self.soc.mra_tiles() {
+            self.stage(tile, sets)?;
+        }
+        Ok(self)
+    }
+
+    /// Block ids staged on `tile` (for functional output validation).
+    pub fn staged(&self, tile: usize) -> &[Vec<BlockId>] {
+        self.staged.get(&tile).map(Vec::as_slice).unwrap_or(&[])
+    }
+
+    /// Perf mode: skip the functional datapath on all MRA tiles except
+    /// for the first invocation (timing is unaffected; Table I / Fig. 3
+    /// runs use this).
+    pub fn perf_only(&mut self) -> &mut Self {
+        for tile in self.soc.mra_tiles() {
+            self.soc.mra_mut(tile).functional_every_invocation = false;
+        }
+        self
+    }
+
+    /// Enable the first `n` traffic-generator tiles, disable the rest
+    /// (Fig. 3's X axis).
+    pub fn with_tg_load(&mut self, n: usize) -> &mut Self {
+        self.soc.host_set_tg_active(n);
+        self
+    }
+
+    /// Host write to an island's frequency register (run-time DFS).
+    pub fn freq(&mut self, island: usize, mhz: u64) -> crate::Result<&mut Self> {
+        self.soc.host_write_freq(island, mhz)?;
+        Ok(self)
+    }
+
+    /// Schedule a host frequency write at future simulation time `at`.
+    pub fn schedule_freq(&mut self, at: Ps, island: usize, mhz: u64) -> &mut Self {
+        self.soc.schedule_freq(at, island, mhz);
+        self
+    }
+
+    /// Enable the periodic sampler (MEM packets + island frequencies).
+    pub fn sample_every(&mut self, interval: Ps) -> &mut Self {
+        self.soc.enable_sampler(interval);
+        self
+    }
+
+    /// Run the simulation for `dur` picoseconds (settling phase).
+    pub fn warmup(&mut self, dur: Ps) -> &mut Self {
+        self.soc.run_for(dur);
+        self
+    }
+
+    /// Run until `tile` completes `n` more invocations or `cap` elapses
+    /// (pipeline-fill warmup for slow accelerators).
+    pub fn warmup_invocations(
+        &mut self,
+        tile: usize,
+        n: u64,
+        cap: Ps,
+    ) -> crate::Result<&mut Self> {
+        self.soc.try_mra(tile)?;
+        run_until_invocations(&mut self.soc, tile, n, cap);
+        Ok(self)
+    }
+
+    /// Run until absolute simulation time `t` (ps).
+    pub fn run_until(&mut self, t: Ps) -> &mut Self {
+        self.soc.run_until(t);
+        self
+    }
+
+    /// Measure `tile` over a fixed window of `window` picoseconds and
+    /// return the typed report. Errors (without advancing time) if
+    /// `tile` is not an MRA tile.
+    pub fn measure(&mut self, tile: usize, window: Ps) -> crate::Result<PhaseReport> {
+        self.soc.try_mra(tile)?;
+        let snap = CounterSnapshot::take(&self.soc, tile);
+        self.soc.run_for(window);
+        Ok(snap.report(&self.soc, tile))
+    }
+
+    /// Measure `tile` over `n` whole invocations (timed exactly; at most
+    /// `cap` picoseconds). Invocation-aligned windows avoid the burst
+    /// quantization of fixed windows when replicas run in lockstep.
+    pub fn measure_invocations(
+        &mut self,
+        tile: usize,
+        n: u64,
+        cap: Ps,
+    ) -> crate::Result<PhaseReport> {
+        self.soc.try_mra(tile)?;
+        let snap = CounterSnapshot::take(&self.soc, tile);
+        run_until_invocations(&mut self.soc, tile, n, cap);
+        Ok(snap.report(&self.soc, tile))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets::{paper_soc, A1_POS, ISL_A1};
+    use crate::scenario::ms;
+
+    #[test]
+    fn session_measures_like_a_throughput_probe() {
+        // Session::measure must agree exactly with the low-level probe.
+        let mkcfg = || paper_soc(("dfmul", 2), ("dfadd", 1));
+
+        let mut soc = Soc::build(mkcfg(), Box::new(RefCompute::new())).unwrap();
+        let a1 = soc.cfg.node_of(A1_POS.0, A1_POS.1);
+        driver::stage_inputs_for(&mut soc, a1, 1).unwrap();
+        soc.mra_mut(a1).functional_every_invocation = false;
+        soc.run_for(ms(2));
+        let probe = driver::ThroughputProbe::begin(&soc, a1);
+        soc.run_for(ms(4));
+        let probe_mbs = probe.mbs(&soc);
+
+        let mut s = Session::new(mkcfg()).unwrap();
+        s.stage(a1, 1).unwrap().perf_only().warmup(ms(2));
+        let r = s.measure(a1, ms(4)).unwrap();
+        assert_eq!(r.throughput_mbs, probe_mbs, "bit-identical to the probe");
+        assert!(r.invocations > 0);
+        assert_eq!(r.elapsed, ms(4));
+    }
+
+    #[test]
+    fn phase_report_counts_window_deltas_only() {
+        let mut s = Session::new(paper_soc(("dfmul", 1), ("dfadd", 1))).unwrap();
+        let a1 = s.tile_at(A1_POS.0, A1_POS.1);
+        s.stage(a1, 1).unwrap().perf_only().warmup(ms(3));
+        let warm_inv = s.soc().host_read_counter(a1, CounterReg::Invocations);
+        assert!(warm_inv > 0, "warmup completed invocations");
+        let r = s.measure(a1, ms(3)).unwrap();
+        let total = s.soc().host_read_counter(a1, CounterReg::Invocations);
+        assert_eq!(r.invocations, total - warm_inv);
+        assert!(r.rtt_ns > 0.0);
+        assert!(r.pkts_in > 0 && r.pkts_out > 0);
+    }
+
+    #[test]
+    fn dfs_phase_reduces_throughput() {
+        let mut s = Session::new(paper_soc(("dfmul", 2), ("dfadd", 1))).unwrap();
+        let a1 = s.tile_at(A1_POS.0, A1_POS.1);
+        s.stage(a1, 1).unwrap().perf_only().warmup(ms(2));
+        let fast = s.measure(a1, ms(4)).unwrap();
+        s.freq(ISL_A1, 10).unwrap().warmup(100_000_000);
+        let slow = s.measure(a1, ms(4)).unwrap();
+        let ratio = slow.throughput_mbs / fast.throughput_mbs;
+        assert!(
+            (0.12..=0.40).contains(&ratio),
+            "50->10 MHz should cut throughput ~5x: {:.2} -> {:.2}",
+            fast.throughput_mbs,
+            slow.throughput_mbs
+        );
+    }
+
+    #[test]
+    fn staged_blocks_are_recorded() {
+        let mut s = Session::new(paper_soc(("dfadd", 1), ("dfadd", 1))).unwrap();
+        let a1 = s.tile_at(A1_POS.0, A1_POS.1);
+        s.stage(a1, 2).unwrap();
+        assert_eq!(s.staged(a1).len(), 2);
+        assert_eq!(s.staged(a1)[0].len(), 2, "dfadd: two input streams");
+        assert!(s.staged(99).is_empty());
+    }
+
+    #[test]
+    fn stage_on_non_mra_tile_errors() {
+        let mut s = Session::new(paper_soc(("dfadd", 1), ("dfadd", 1))).unwrap();
+        let mem = s.tile_at(0, 0);
+        assert!(s.stage(mem, 1).is_err());
+    }
+
+    #[test]
+    fn measuring_a_non_mra_tile_errors_without_advancing_time() {
+        let mut s = Session::new(paper_soc(("dfadd", 1), ("dfadd", 1))).unwrap();
+        let mem = s.tile_at(0, 0);
+        let t0 = s.soc().now;
+        assert!(s.measure(mem, ms(1)).is_err());
+        assert!(s.measure_invocations(999, 1, ms(1)).is_err());
+        assert!(s.warmup_invocations(mem, 1, ms(1)).is_err());
+        assert_eq!(s.soc().now, t0, "failed phases must not advance time");
+    }
+}

@@ -1,0 +1,282 @@
+//! [`ScenarioSet`]: evaluate independent scenarios across OS threads.
+//!
+//! Each worker claims the next unevaluated scenario off a shared atomic
+//! cursor, builds its own `Soc` (simulations share nothing), and writes
+//! the result into that scenario's slot — so results come back in
+//! deterministic scenario-index order regardless of which worker ran
+//! what, and a parallel run is bit-identical to a serial one.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use anyhow::Context;
+
+use crate::config::presets::{paper_soc, A1_POS, A2_POS, ISL_A1, ISL_A2, ISL_NOC};
+use crate::config::SocConfig;
+use crate::util::Ps;
+
+/// One paper-grid design point: which accelerator, how many replicas,
+/// island frequencies, and placement — the struct that replaces
+/// `evaluate_point`'s seven positional scalars.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScenarioSpec {
+    pub accel: String,
+    pub replicas: usize,
+    /// Frequency of the accelerator-under-test's island (MHz).
+    pub accel_mhz: u64,
+    /// Frequency of the NoC+MEM island (MHz).
+    pub noc_mhz: u64,
+    /// Placement: `true` = A1 (adjacent to MEM), `false` = A2 (far
+    /// corner).
+    pub near_mem: bool,
+    /// Warmup before the measurement window (ps).
+    pub warmup: Ps,
+    /// Measurement window (ps).
+    pub window: Ps,
+}
+
+impl ScenarioSpec {
+    /// A spec with the Table-I defaults: A1 placement, accelerator
+    /// island at 50 MHz, NoC at 100 MHz, 2 ms warmup, 20 ms window.
+    pub fn new(accel: &str, replicas: usize) -> Self {
+        Self {
+            accel: accel.to_string(),
+            replicas,
+            accel_mhz: 50,
+            noc_mhz: 100,
+            near_mem: true,
+            warmup: 2_000_000_000,
+            window: 20_000_000_000,
+        }
+    }
+
+    pub fn accel_mhz(mut self, mhz: u64) -> Self {
+        self.accel_mhz = mhz;
+        self
+    }
+
+    pub fn noc_mhz(mut self, mhz: u64) -> Self {
+        self.noc_mhz = mhz;
+        self
+    }
+
+    pub fn near_mem(mut self, near: bool) -> Self {
+        self.near_mem = near;
+        self
+    }
+
+    pub fn warmup(mut self, ps: Ps) -> Self {
+        self.warmup = ps;
+        self
+    }
+
+    pub fn window(mut self, ps: Ps) -> Self {
+        self.window = ps;
+        self
+    }
+
+    /// Grid position of the accelerator under test.
+    pub fn position(&self) -> (u16, u16) {
+        if self.near_mem {
+            A1_POS
+        } else {
+            A2_POS
+        }
+    }
+
+    /// Island index of the accelerator under test.
+    pub fn island(&self) -> usize {
+        if self.near_mem {
+            ISL_A1
+        } else {
+            ISL_A2
+        }
+    }
+
+    /// Materialize the paper's 4x4 SoC for this point (TGs idle; the
+    /// non-measured accelerator slot holds a 1x dfadd as in Table I).
+    /// Errors on an unknown accelerator or out-of-range replication —
+    /// the two inputs the underlying preset would otherwise panic on.
+    pub fn to_config(&self) -> crate::Result<SocConfig> {
+        crate::tiles::AccelTiming::lookup(&self.accel)?;
+        anyhow::ensure!(
+            (1..=16).contains(&self.replicas),
+            "{:?}: replication {} out of [1, 16]",
+            self.accel,
+            self.replicas
+        );
+        let ut = (self.accel.as_str(), self.replicas);
+        let mut cfg = if self.near_mem {
+            paper_soc(ut, ("dfadd", 1))
+        } else {
+            paper_soc(("dfadd", 1), ut)
+        };
+        cfg.islands[ISL_NOC].freq_mhz = self.noc_mhz;
+        cfg.islands[self.island()].freq_mhz = self.accel_mhz;
+        Ok(cfg)
+    }
+}
+
+/// A batch of independent scenarios with serial and parallel runners.
+pub struct ScenarioSet<T> {
+    items: Vec<T>,
+}
+
+impl<T: Sync> ScenarioSet<T> {
+    pub fn new(items: Vec<T>) -> Self {
+        Self { items }
+    }
+
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    pub fn items(&self) -> &[T] {
+        &self.items
+    }
+
+    pub fn into_items(self) -> Vec<T> {
+        self.items
+    }
+
+    /// Evaluate every scenario on the calling thread, in order.
+    pub fn run_serial<R>(&self, f: impl Fn(&T) -> crate::Result<R>) -> crate::Result<Vec<R>> {
+        self.items
+            .iter()
+            .enumerate()
+            .map(|(i, item)| f(item).with_context(|| format!("scenario #{i}")))
+            .collect()
+    }
+
+    /// Evaluate scenarios across `available_parallelism` worker threads.
+    /// One `Soc` per in-flight scenario, nothing shared; results are
+    /// returned in scenario-index order, bit-identical to
+    /// [`ScenarioSet::run_serial`].
+    pub fn run_parallel<R: Send>(
+        &self,
+        f: impl Fn(&T) -> crate::Result<R> + Sync,
+    ) -> crate::Result<Vec<R>> {
+        self.run_with_threads(0, f)
+    }
+
+    /// Evaluate with an explicit worker count (`0` = auto). `1` degrades
+    /// to the serial path.
+    pub fn run_with_threads<R: Send>(
+        &self,
+        threads: usize,
+        f: impl Fn(&T) -> crate::Result<R> + Sync,
+    ) -> crate::Result<Vec<R>> {
+        let n = self.items.len();
+        let threads = if threads == 0 {
+            std::thread::available_parallelism()
+                .map(|p| p.get())
+                .unwrap_or(1)
+        } else {
+            threads
+        }
+        .min(n.max(1));
+        if threads <= 1 {
+            return self.run_serial(f);
+        }
+
+        let next = AtomicUsize::new(0);
+        let slots: Vec<Mutex<Option<crate::Result<R>>>> =
+            (0..n).map(|_| Mutex::new(None)).collect();
+        std::thread::scope(|scope| {
+            for _ in 0..threads {
+                scope.spawn(|| loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let r = f(&self.items[i]);
+                    *slots[i].lock().expect("result slot poisoned") = Some(r);
+                });
+            }
+        });
+
+        let mut out = Vec::with_capacity(n);
+        for (i, slot) in slots.into_iter().enumerate() {
+            let r = slot
+                .into_inner()
+                .expect("result slot poisoned")
+                .expect("every scenario index was claimed by a worker");
+            out.push(r.with_context(|| format!("scenario #{i}"))?);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parallel_results_keep_scenario_order() {
+        let set = ScenarioSet::new((0..37usize).collect());
+        let serial = set.run_serial(|&i| Ok(i * i)).unwrap();
+        let parallel = set.run_with_threads(4, |&i| Ok(i * i)).unwrap();
+        assert_eq!(serial, parallel);
+        assert_eq!(parallel[10], 100);
+    }
+
+    #[test]
+    fn errors_carry_the_scenario_index() {
+        let set = ScenarioSet::new(vec![1u64, 2, 3]);
+        let err = set
+            .run_with_threads(2, |&i| {
+                if i == 2 {
+                    anyhow::bail!("boom")
+                } else {
+                    Ok(i)
+                }
+            })
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("scenario #1"), "{err:#}");
+    }
+
+    #[test]
+    fn single_item_sets_run() {
+        let set = ScenarioSet::new(vec![5i32]);
+        assert_eq!(set.run_parallel(|&i| Ok(i + 1)).unwrap(), vec![6]);
+        let empty: ScenarioSet<i32> = ScenarioSet::new(vec![]);
+        assert!(empty.run_parallel(|&i| Ok(i)).unwrap().is_empty());
+        assert!(empty.is_empty());
+    }
+
+    #[test]
+    fn spec_materializes_placement_and_frequencies() {
+        let spec = ScenarioSpec::new("dfmul", 4)
+            .accel_mhz(25)
+            .noc_mhz(50)
+            .near_mem(false);
+        let cfg = spec.to_config().unwrap();
+        assert_eq!(cfg.islands[ISL_NOC].freq_mhz, 50);
+        assert_eq!(cfg.islands[ISL_A2].freq_mhz, 25);
+        let pos = spec.position();
+        assert_eq!(pos, A2_POS);
+        let tile = &cfg.tiles[cfg.node_of(pos.0, pos.1)];
+        assert_eq!(
+            tile.kind,
+            crate::config::TileKind::Accel {
+                accel: "dfmul".into(),
+                replicas: 4
+            }
+        );
+        cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn spec_with_bad_inputs_errors_instead_of_panicking() {
+        let err = ScenarioSpec::new("warpcore", 1).to_config().unwrap_err();
+        assert!(err.to_string().contains("warpcore"), "{err}");
+        let err = ScenarioSpec::new("dfmul", 0).to_config().unwrap_err();
+        assert!(err.to_string().contains("out of [1, 16]"), "{err}");
+        let err = ScenarioSpec::new("dfmul", 17).to_config().unwrap_err();
+        assert!(err.to_string().contains("out of [1, 16]"), "{err}");
+    }
+}

@@ -1,24 +1,35 @@
 //! Host-side workload driver helpers: staging functional inputs for MRA
 //! tiles and measuring throughput through the monitoring counters, the
 //! way the paper's experiments do.
+//!
+//! Higher-level choreography (warmup/measure phases, typed reports,
+//! parallel scenario evaluation) lives in [`crate::scenario`]; the
+//! helpers here are the low-level building blocks it is made of.
 
 use crate::mem::{Block, BlockId};
 use crate::monitor::CounterReg;
+use crate::tiles::AccelTiming;
 use crate::util::{Ps, SplitMix64};
 
 use super::soc::Soc;
 
 /// Generate and stage `sets` functional input sets for MRA tile `tile`,
 /// with data shaped per the accelerator's manifest geometry. Returns the
-/// staged block ids.
-pub fn stage_inputs_for(soc: &mut Soc, tile: usize, sets: usize) -> Vec<Vec<BlockId>> {
-    let accel = soc.mra(tile).accel.clone();
+/// staged block ids, or an error if `tile` is not an MRA tile or its
+/// accelerator is unknown.
+pub fn stage_inputs_for(
+    soc: &mut Soc,
+    tile: usize,
+    sets: usize,
+) -> crate::Result<Vec<Vec<BlockId>>> {
+    let accel = soc.try_mra(tile)?.accel.clone();
+    let shapes = input_shapes(&accel)?;
     let mut rng = SplitMix64::new(soc.cfg.seed ^ (tile as u64) << 32 ^ 0x57A6E);
     let mut all = Vec::new();
     for _ in 0..sets {
-        let ids: Vec<BlockId> = input_shapes(&accel)
-            .into_iter()
-            .map(|(words, int)| {
+        let ids: Vec<BlockId> = shapes
+            .iter()
+            .map(|&(words, int)| {
                 let block = if int {
                     Block::I32(
                         (0..words)
@@ -33,23 +44,29 @@ pub fn stage_inputs_for(soc: &mut Soc, tile: usize, sets: usize) -> Vec<Vec<Bloc
             .collect();
         all.push(ids);
     }
-    soc.mra_mut(tile).stage_inputs(all.clone());
-    all
+    soc.try_mra_mut(tile)?.stage_inputs(all.clone());
+    Ok(all)
 }
 
-/// (words, is_int) per input stream, matching `python/compile/model.py`.
-fn input_shapes(accel: &str) -> Vec<(usize, bool)> {
-    match accel {
-        "dfadd" | "dfmul" => vec![(8 * 128, false), (8 * 128, false)],
-        "dfsin" => vec![(8 * 128, false)],
-        "adpcm" => vec![(64 * 128, true)],
-        "gsm" => vec![(160 * 128, false)],
-        other => panic!("unknown accelerator {other}"),
-    }
+/// (words, is_int) per input stream, derived from the accelerator timing
+/// table — the single in-crate source of the `python/compile/model.py`
+/// geometry (cross-checked against `bytes_in` by the timing tests and
+/// against the artifacts manifest at SoC build time).
+pub fn input_shapes(accel: &str) -> crate::Result<Vec<(usize, bool)>> {
+    let timing = AccelTiming::lookup(accel)?;
+    Ok(timing
+        .input_streams
+        .iter()
+        .map(|s| (s.words, s.int))
+        .collect())
 }
 
 /// Throughput measurement window over the monitoring counters, as the
 /// paper's host tooling does: reset, run, read invocations.
+///
+/// Prefer [`crate::scenario::Session::measure`] for new code — it wraps
+/// this choreography in one call and returns a typed
+/// [`crate::scenario::PhaseReport`] with counter deltas.
 pub struct ThroughputProbe {
     tile: usize,
     start: Ps,
@@ -83,7 +100,8 @@ impl ThroughputProbe {
 
     /// Mean DMA round-trip time observed in the window (ns). Note: reads
     /// the cumulative counters, so callers wanting a clean window should
-    /// `manual_reset` first.
+    /// `manual_reset` first (or use `Session::measure`, which computes
+    /// the in-window mean from counter deltas).
     pub fn rtt_ns(&self, soc: &Soc) -> f64 {
         let c = soc.mon.tile(self.tile);
         c.rtt_mean() / 1e3
@@ -93,7 +111,7 @@ impl ThroughputProbe {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::presets::{paper_soc, A1_POS};
+    use crate::config::presets::{paper_soc, A1_POS, MEM_POS};
     use crate::runtime::RefCompute;
 
     #[test]
@@ -101,10 +119,31 @@ mod tests {
         let cfg = paper_soc(("dfadd", 2), ("gsm", 1));
         let mut soc = Soc::build(cfg, Box::new(RefCompute::new())).unwrap();
         let a1 = soc.cfg.node_of(A1_POS.0, A1_POS.1);
-        let sets = stage_inputs_for(&mut soc, a1, 2);
+        let sets = stage_inputs_for(&mut soc, a1, 2).unwrap();
         assert_eq!(sets.len(), 2);
         assert_eq!(sets[0].len(), 2, "dfadd has two input streams");
         assert_eq!(soc.blocks.get(sets[0][0]).words(), 1024);
+    }
+
+    #[test]
+    fn input_shapes_cover_all_accels_and_reject_unknown() {
+        assert_eq!(input_shapes("dfadd").unwrap(), vec![(1024, false); 2]);
+        assert_eq!(input_shapes("dfsin").unwrap(), vec![(1024, false)]);
+        assert_eq!(input_shapes("adpcm").unwrap(), vec![(64 * 128, true)]);
+        assert_eq!(input_shapes("gsm").unwrap(), vec![(160 * 128, false)]);
+        let err = input_shapes("nope").unwrap_err().to_string();
+        assert!(err.contains("nope"), "{err}");
+    }
+
+    #[test]
+    fn staging_a_non_mra_tile_errors_instead_of_panicking() {
+        let cfg = paper_soc(("dfadd", 1), ("dfadd", 1));
+        let mut soc = Soc::build(cfg, Box::new(RefCompute::new())).unwrap();
+        let mem = soc.cfg.node_of(MEM_POS.0, MEM_POS.1);
+        let err = stage_inputs_for(&mut soc, mem, 1).unwrap_err().to_string();
+        assert!(err.contains("mem"), "{err}");
+        let err = stage_inputs_for(&mut soc, 999, 1).unwrap_err().to_string();
+        assert!(err.contains("out of range"), "{err}");
     }
 
     /// End-to-end smoke: a 1x dfadd in A1 completes invocations and the
@@ -114,7 +153,7 @@ mod tests {
         let cfg = paper_soc(("dfadd", 1), ("dfadd", 1));
         let mut soc = Soc::build(cfg, Box::new(RefCompute::new())).unwrap();
         let a1 = soc.cfg.node_of(A1_POS.0, A1_POS.1);
-        let ids = stage_inputs_for(&mut soc, a1, 1);
+        let ids = stage_inputs_for(&mut soc, a1, 1).unwrap();
         let probe = ThroughputProbe::begin(&soc, a1);
         // dfadd 1x at ~9.2 MB/s needs ~445 us per invocation; run 3 ms.
         soc.run_for(3_000_000_000);
@@ -135,7 +174,7 @@ mod tests {
         let cfg = paper_soc(("dfmul", 1), ("dfadd", 1));
         let mut soc = Soc::build(cfg, Box::new(RefCompute::new())).unwrap();
         let a1 = soc.cfg.node_of(A1_POS.0, A1_POS.1);
-        stage_inputs_for(&mut soc, a1, 1);
+        stage_inputs_for(&mut soc, a1, 1).unwrap();
         soc.run_for(1_000_000_000); // warmup 1 ms
         let probe = ThroughputProbe::begin(&soc, a1);
         soc.run_for(3_000_000_000);

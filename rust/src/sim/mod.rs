@@ -5,6 +5,6 @@ pub mod driver;
 pub mod fabric;
 pub mod soc;
 
-pub use driver::{stage_inputs_for, ThroughputProbe};
+pub use driver::{input_shapes, stage_inputs_for, ThroughputProbe};
 pub use fabric::Fabric;
 pub use soc::Soc;

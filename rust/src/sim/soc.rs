@@ -10,7 +10,7 @@
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 
-use anyhow::Context;
+use anyhow::{bail, Context};
 
 use crate::clock::domain::{ClockDomain, IslandId};
 use crate::config::{SocConfig, TileKind};
@@ -210,6 +210,32 @@ impl Soc {
         match &self.tiles[tile] {
             Tile::Mra(m) => m,
             _ => panic!("tile {tile} is not an MRA tile"),
+        }
+    }
+
+    /// Fallible access to an MRA tile (for host-driver paths that take
+    /// user-supplied tile indices).
+    pub fn try_mra(&self, tile: usize) -> crate::Result<&MraTile> {
+        match self.tiles.get(tile) {
+            Some(Tile::Mra(m)) => Ok(m),
+            Some(t) => bail!(
+                "tile {tile} is a {:?} tile, not an accelerator (MRA)",
+                t.kind_name()
+            ),
+            None => bail!("tile index {tile} out of range ({} tiles)", self.tiles.len()),
+        }
+    }
+
+    /// Fallible mutable access to an MRA tile.
+    pub fn try_mra_mut(&mut self, tile: usize) -> crate::Result<&mut MraTile> {
+        let n = self.tiles.len();
+        match self.tiles.get_mut(tile) {
+            Some(Tile::Mra(m)) => Ok(m),
+            Some(t) => bail!(
+                "tile {tile} is a {:?} tile, not an accelerator (MRA)",
+                t.kind_name()
+            ),
+            None => bail!("tile index {tile} out of range ({n} tiles)"),
         }
     }
 

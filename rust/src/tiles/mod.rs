@@ -16,7 +16,7 @@ pub mod timing;
 
 pub use mra::{MraTile, ReplicaState};
 pub use ni::NetIface;
-pub use timing::{AccelTiming, DmaParams};
+pub use timing::{AccelTiming, DmaParams, StreamSpec};
 
 use crate::clock::domain::ClockDomain;
 use crate::mem::BlockStore;

@@ -31,6 +31,27 @@ impl Default for DmaParams {
     }
 }
 
+/// Shape of one DMA input stream of an accelerator invocation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StreamSpec {
+    /// 32-bit words per invocation on this stream.
+    pub words: usize,
+    /// Integer lanes (i32) when true, f32 otherwise.
+    pub int: bool,
+}
+
+/// dfadd/dfmul: two f32 (8,128) operand streams.
+const DF_PAIR_STREAMS: [StreamSpec; 2] = [
+    StreamSpec { words: 8 * 128, int: false },
+    StreamSpec { words: 8 * 128, int: false },
+];
+/// dfsin: one f32 (8,128) stream.
+const DF_SINGLE_STREAM: [StreamSpec; 1] = [StreamSpec { words: 8 * 128, int: false }];
+/// adpcm: one i32 (64,128) PCM block.
+const ADPCM_STREAMS: [StreamSpec; 1] = [StreamSpec { words: 64 * 128, int: true }];
+/// gsm: one f32 (160,128) frame block.
+const GSM_STREAMS: [StreamSpec; 1] = [StreamSpec { words: 160 * 128, int: false }];
+
 /// Timing + geometry of one accelerator kind.
 #[derive(Debug, Clone)]
 pub struct AccelTiming {
@@ -47,6 +68,10 @@ pub struct AccelTiming {
     pub compute_cycles: u64,
     /// Qualitative class from the paper (affects nothing; reporting only).
     pub memory_bound: bool,
+    /// Per-stream input geometry (the streaming interface the AOT
+    /// manifest records). `bytes_in` is the sum over these streams —
+    /// asserted in tests; the host driver stages inputs from this table.
+    pub input_streams: &'static [StreamSpec],
 }
 
 impl AccelTiming {
@@ -74,6 +99,7 @@ impl AccelTiming {
                 credit_bytes: 64 * 128 * 4,
                 compute_cycles: 1_170_000,
                 memory_bound: false,
+                input_streams: &ADPCM_STREAMS,
             },
             AccelTiming {
                 name: "dfadd",
@@ -82,6 +108,7 @@ impl AccelTiming {
                 credit_bytes: 8 * 128 * 4,
                 compute_cycles: 22_212,
                 memory_bound: true,
+                input_streams: &DF_PAIR_STREAMS,
             },
             AccelTiming {
                 name: "dfmul",
@@ -90,6 +117,7 @@ impl AccelTiming {
                 credit_bytes: 8 * 128 * 4,
                 compute_cycles: 23_540,
                 memory_bound: true,
+                input_streams: &DF_PAIR_STREAMS,
             },
             AccelTiming {
                 name: "dfsin",
@@ -98,6 +126,7 @@ impl AccelTiming {
                 credit_bytes: 8 * 128 * 4,
                 compute_cycles: 620_606,
                 memory_bound: false,
+                input_streams: &DF_SINGLE_STREAM,
             },
             AccelTiming {
                 name: "gsm",
@@ -106,6 +135,7 @@ impl AccelTiming {
                 credit_bytes: 160 * 128 * 4,
                 compute_cycles: 888_503,
                 memory_bound: false,
+                input_streams: &GSM_STREAMS,
             },
         ]
     }
@@ -172,6 +202,18 @@ mod tests {
         assert_eq!(t.write_bursts(16), 64);
         let g = AccelTiming::lookup("gsm").unwrap();
         assert_eq!(g.read_bursts(16), 1280);
+    }
+
+    #[test]
+    fn input_streams_sum_to_bytes_in() {
+        // The per-stream geometry (what the host driver stages) must
+        // agree with the aggregate DMA byte count used by the timing
+        // model — one source of truth for python/compile/model.py shapes.
+        for t in AccelTiming::db() {
+            let words: usize = t.input_streams.iter().map(|s| s.words).sum();
+            assert_eq!(words as u32 * 4, t.bytes_in, "{}", t.name);
+            assert!(!t.input_streams.is_empty(), "{}", t.name);
+        }
     }
 
     #[test]

@@ -1,0 +1,199 @@
+//! Integration tests for the Scenario/Session API: builder validation
+//! ergonomics, session phase semantics over the full simulator, and
+//! parallel-vs-serial sweep equivalence.
+
+use vespa::config::presets::{paper_soc, A1_POS};
+use vespa::config::TileKind;
+use vespa::dse::{sweep_replication, sweep_replication_serial, SweepParams};
+use vespa::scenario::{ms, Scenario, ScenarioSet, ScenarioSpec, Session};
+
+fn base() -> Scenario {
+    Scenario::grid(3, 3)
+        .island_dfs("noc", 100, 10..=100, 5)
+        .island_dfs("acc", 50, 10..=50, 5)
+        .island("sys", 50)
+}
+
+// ---------------------------------------------------------------------
+// Builder validation: each failure mode yields a distinct, actionable
+// message.
+// ---------------------------------------------------------------------
+
+#[test]
+fn overlapping_tiles_error_names_cell_and_kinds() {
+    let err = base()
+        .mem_at(0, 0)
+        .accel_at(0, 0, "dfmul", 1, "acc")
+        .fill_tg("sys")
+        .build()
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("(0, 0)"), "{err}");
+    assert!(err.contains("already holds a MEM tile"), "{err}");
+    assert!(err.contains("accelerator"), "{err}");
+}
+
+#[test]
+fn island_index_out_of_range_error_counts_islands() {
+    let err = base()
+        .mem_at(0, 0)
+        .accel_at(1, 1, "dfmul", 1, 9usize)
+        .fill_tg("sys")
+        .build()
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("island index 9 out of range"), "{err}");
+    assert!(err.contains("3 island(s) declared"), "{err}");
+    assert!(err.contains("\"noc\""), "{err}");
+}
+
+#[test]
+fn unknown_island_name_error_lists_alternatives() {
+    let err = base()
+        .mem_at(0, 0)
+        .tg_at(1, 0, "warp")
+        .fill_tg("sys")
+        .build()
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("no island named \"warp\""), "{err}");
+    assert!(err.contains(".island_dfs()"), "{err}");
+}
+
+#[test]
+fn missing_mem_error_suggests_mem_at() {
+    let err = base().fill_tg("sys").build().unwrap_err().to_string();
+    assert!(err.contains("no MEM tile"), "{err}");
+    assert!(err.contains(".mem_at"), "{err}");
+}
+
+#[test]
+fn zero_replica_error_names_the_accelerator() {
+    let err = base()
+        .mem_at(0, 0)
+        .accel_at(2, 2, "dfsin", 0, "acc")
+        .fill_tg("sys")
+        .build()
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("zero replicas"), "{err}");
+    assert!(err.contains("\"dfsin\""), "{err}");
+    assert!(err.contains("(2, 2)"), "{err}");
+}
+
+#[test]
+fn the_errors_are_mutually_distinct() {
+    let errs: Vec<String> = vec![
+        base()
+            .mem_at(0, 0)
+            .mem_at(0, 0)
+            .fill_tg("sys")
+            .build()
+            .unwrap_err()
+            .to_string(),
+        base()
+            .mem_at(0, 0)
+            .tg_at(1, 1, 9usize)
+            .fill_tg("sys")
+            .build()
+            .unwrap_err()
+            .to_string(),
+        base().fill_tg("sys").build().unwrap_err().to_string(),
+        base()
+            .mem_at(0, 0)
+            .accel_at(1, 1, "gsm", 0, "acc")
+            .fill_tg("sys")
+            .build()
+            .unwrap_err()
+            .to_string(),
+    ];
+    for i in 0..errs.len() {
+        for j in (i + 1)..errs.len() {
+            assert_ne!(errs[i], errs[j], "error messages must be distinct");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Builder output drives the real simulator.
+// ---------------------------------------------------------------------
+
+#[test]
+fn built_scenario_simulates_end_to_end() {
+    let cfg = base()
+        .mem_at(0, 0)
+        .cpu_at_on(1, 0, "sys")
+        .accel_at(2, 2, "dfmul", 2, "acc")
+        .fill_tg("sys")
+        .build()
+        .unwrap();
+    assert_eq!(cfg.tiles.len(), 9);
+    let mut session = Session::new(cfg).unwrap();
+    let tile = session.tile_at(2, 2);
+    session.stage(tile, 1).unwrap().perf_only().warmup(ms(2));
+    let report = session.measure(tile, ms(5)).unwrap();
+    assert!(report.invocations > 0, "{report:?}");
+    assert!(report.throughput_mbs > 1.0, "{report:?}");
+    assert!(report.rtt_ns > 0.0, "{report:?}");
+}
+
+#[test]
+fn preset_is_reproduced_by_the_builder() {
+    // paper_soc is a thin preset over the builder; its shape must be
+    // unchanged from the hand-rolled original.
+    let cfg = paper_soc(("dfsin", 1), ("gsm", 2));
+    cfg.validate().unwrap();
+    assert_eq!((cfg.width, cfg.height), (4, 4));
+    assert_eq!(cfg.islands.len(), 5);
+    assert_eq!(cfg.tiles_where(|k| *k == TileKind::Tg).len(), 11);
+    let a1 = &cfg.tiles[cfg.node_of(A1_POS.0, A1_POS.1)];
+    assert_eq!(
+        a1.kind,
+        TileKind::Accel {
+            accel: "dfsin".into(),
+            replicas: 1
+        }
+    );
+}
+
+// ---------------------------------------------------------------------
+// Parallel scenario evaluation.
+// ---------------------------------------------------------------------
+
+/// `ScenarioSet::run_parallel` must produce bit-identical `DsePoint`s to
+/// the serial path (each scenario is an independent seeded simulation).
+#[test]
+fn parallel_sweep_is_bit_identical_to_serial() {
+    let mut p = SweepParams::quick("dfmul");
+    p.replications = vec![1, 2];
+    p.accel_mhz = vec![25, 50];
+    p.placements = vec![true, false];
+    p.warmup = 500_000_000;
+    p.window = 3_000_000_000;
+    assert!(p.specs().len() >= 8, "sweep must cover >= 8 points");
+
+    let serial = sweep_replication_serial(&p).unwrap();
+    let parallel = sweep_replication(&p).unwrap();
+    assert_eq!(serial.len(), parallel.len());
+    for (i, (s, q)) in serial.iter().zip(&parallel).enumerate() {
+        assert_eq!(s, q, "point #{i} diverged between serial and parallel");
+    }
+}
+
+#[test]
+fn explicit_thread_counts_agree_too() {
+    let specs: Vec<ScenarioSpec> = [1usize, 2, 4]
+        .iter()
+        .map(|&k| {
+            ScenarioSpec::new("dfadd", k)
+                .warmup(500_000_000)
+                .window(2_000_000_000)
+        })
+        .collect();
+    let set = ScenarioSet::new(specs);
+    let one = set.run_with_threads(1, vespa::dse::evaluate_point).unwrap();
+    let many = set.run_with_threads(3, vespa::dse::evaluate_point).unwrap();
+    assert_eq!(one, many);
+    // Replication helps dfadd: monotone non-decreasing throughput.
+    assert!(many[1].throughput_mbs > many[0].throughput_mbs * 1.2);
+}

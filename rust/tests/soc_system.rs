@@ -15,7 +15,7 @@ fn build(a1: (&str, usize), a2: (&str, usize)) -> Soc {
 
 fn setup_mra(soc: &mut Soc, pos: (u16, u16)) -> usize {
     let t = soc.cfg.node_of(pos.0, pos.1);
-    stage_inputs_for(soc, t, 1);
+    stage_inputs_for(soc, t, 1).unwrap();
     soc.mra_mut(t).functional_every_invocation = false;
     t
 }
