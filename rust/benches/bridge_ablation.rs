@@ -6,7 +6,7 @@
 //! replication is ~linear; at the calibrated cost it lands on the
 //! paper's ~3.0x; beyond it the shared path dominates.
 
-use vespa::bench_harness::{bench_args, Bench};
+use vespa::bench_harness::{Bench, BenchArgs, BenchReport};
 use vespa::config::presets::{paper_soc, A1_POS};
 use vespa::report::Table;
 use vespa::scenario::Session;
@@ -27,7 +27,8 @@ fn measure(accel: &str, k: usize, switch_cycles: u64, inv: u64) -> f64 {
 }
 
 fn main() {
-    let (quick, _) = bench_args();
+    let args = BenchArgs::from_env();
+    let quick = args.quick;
     let inv = if quick { 4 } else { 12 };
     let costs: &[u64] = if quick { &[0, 60, 120] } else { &[0, 20, 40, 60, 90, 120] };
 
@@ -56,6 +57,16 @@ fn main() {
     }
     println!("{}", t.render());
     println!("{}", r.report());
+
+    let mut report = BenchReport::new("bridge_ablation");
+    for &(c, t1, t4, eff) in &rows {
+        report.metric(&format!("mbs_1x_switch{c}"), t1);
+        report.metric(&format!("mbs_4x_switch{c}"), t4);
+        report.metric(&format!("eff_4x_switch{c}"), eff);
+    }
+    report.push(r);
+    let path = report.write(args.json_path()).expect("write bench report");
+    println!("wrote {}", path.display());
 
     // Shape: scaling decreases monotonically (within noise) with cost,
     // near-linear at zero.

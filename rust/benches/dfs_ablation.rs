@@ -6,7 +6,7 @@
 //! dual-MMCM design must deliver every cycle; the naive one loses the
 //! whole reconfiguration window each switch.
 
-use vespa::bench_harness::Bench;
+use vespa::bench_harness::{Bench, BenchArgs, BenchReport};
 use vespa::clock::{DfsActuator, DualMmcmActuator, SingleMmcmActuator};
 use vespa::report::Table;
 use vespa::util::time::Freq;
@@ -34,7 +34,8 @@ fn storm(actuator: &mut dyn DfsActuator, switches: u32, gap_ps: u64) -> (u64, u6
 }
 
 fn main() {
-    let bench = Bench::new(1, 10);
+    let args = BenchArgs::from_env();
+    let bench = Bench::new(1, args.iters.unwrap_or(10));
     const SWITCHES: u32 = 50;
     const GAP: u64 = 40_000_000; // 40 us between requests
 
@@ -60,6 +61,15 @@ fn main() {
     }
     println!("{}", t.render());
     println!("{}", r.report());
+
+    let mut report = BenchReport::new("dfs_ablation");
+    report.metric("dual_dead_us", results[0].1 .0 as f64 / 1e6);
+    report.metric("single_dead_us", results[1].1 .0 as f64 / 1e6);
+    report.metric("dual_cycles", results[0].1 .1 as f64);
+    report.metric("single_cycles", results[1].1 .1 as f64);
+    report.push(r);
+    let path = report.write(args.json_path()).expect("write bench report");
+    println!("wrote {}", path.display());
 
     let dual = results[0].1;
     let single = results[1].1;

@@ -1,16 +1,22 @@
 //! Bench: regenerate Fig. 2 (the SoC floorplan) and time the
 //! floorplanner + resource model.
 
-use vespa::bench_harness::Bench;
+use vespa::bench_harness::{Bench, BenchArgs, BenchReport};
 use vespa::experiments::fig2;
 use vespa::resources::XC7V2000T;
 
 fn main() {
-    let bench = Bench::new(3, 20);
+    let args = BenchArgs::from_env();
+    let bench = Bench::new(3, args.iters.unwrap_or(20));
     let r = bench.run("fig2/floorplan", |_| fig2::run().expect("fig2"));
     let (rendered, fp) = fig2::run().unwrap();
     println!("{rendered}");
     println!("{}", r.report());
+
+    let mut report = BenchReport::new("fig2");
+    report.push(r);
+    let path = report.write(args.json_path()).expect("write bench report");
+    println!("wrote {}", path.display());
 
     assert!(fp.fits, "the paper instance must fit the Virtex-7 2000T");
     let p = fp.total.percent_of(&XC7V2000T);

@@ -4,12 +4,13 @@
 //!   cargo bench --bench fig3            full 12-point sweeps
 //!   cargo bench --bench fig3 -- --quick 4 points per curve
 
-use vespa::bench_harness::{bench_args, Bench};
+use vespa::bench_harness::{Bench, BenchArgs, BenchReport};
 use vespa::experiments::fig3;
 use vespa::report::Table;
 
 fn main() {
-    let (quick, _) = bench_args();
+    let args = BenchArgs::from_env();
+    let quick = args.quick;
     // adpcm 4x completes one invocation per ~5.9 ms in steady state: its
     // window must stay long even in --quick or the measurement quantizes
     // to a handful of invocations.
@@ -44,6 +45,15 @@ fn main() {
     }
     println!("{}", t.render());
     println!("{}", r.report());
+
+    let mut report = BenchReport::new("fig3");
+    for &(tg, a, d) in &rows {
+        report.metric(&format!("adpcm4x_mbs_tg{tg}"), a);
+        report.metric(&format!("dfmul4x_mbs_tg{tg}"), d);
+    }
+    report.push(r);
+    let path = report.write(args.json_path()).expect("write bench report");
+    println!("wrote {}", path.display());
 
     // Shape assertions.
     let first = rows.first().unwrap();

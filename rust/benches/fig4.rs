@@ -1,12 +1,13 @@
 //! Bench: regenerate Fig. 4 — memory incoming traffic while stepping
 //! island frequencies at run time.
 
-use vespa::bench_harness::{bench_args, Bench};
+use vespa::bench_harness::{Bench, BenchArgs, BenchReport};
 use vespa::experiments::fig4;
 use vespa::report::plot;
 
 fn main() {
-    let (quick, _) = bench_args();
+    let args = BenchArgs::from_env();
+    let quick = args.quick;
     let phase = if quick { 10_000_000_000 } else { 30_000_000_000 };
 
     let bench = Bench::new(0, 1);
@@ -18,6 +19,14 @@ fn main() {
     println!("{}", fig4::render_table(&res).render());
     println!("{}", plot(&[&res.pkts_rate], 70, 14));
     println!("{}", r.report());
+
+    let mut report = BenchReport::new("fig4");
+    for (i, &mpkts) in res.phase_mpkts.iter().enumerate() {
+        report.metric(&format!("phase{i}_mpkts"), mpkts);
+    }
+    report.push(r);
+    let path = report.write(args.json_path()).expect("write bench report");
+    println!("wrote {}", path.display());
 
     // Shape: accel steps negligible, TG/NoC steps dominant.
     let accel_delta = (res.phase_mpkts[2] - res.phase_mpkts[0]).abs();

@@ -1,33 +1,77 @@
 //! Microbench: raw simulator performance on the NoC hot path —
-//! router-cycles per second under TG saturation (the §Perf L3 metric).
+//! router-cycles per second under TG saturation (the §Perf L3 metric) —
+//! plus the idle-aware engine's coalescing win on low-utilization
+//! traffic, measured against the `reference` tick-everything engine.
+//!
+//! Writes `BENCH_noc_microbench.json` (override with `--json <path>`);
+//! the `sparse_speedup_vs_reference` metric is the CI-gated proof that
+//! idle-aware coalescing pays off (>= 3x required).
 
-use vespa::bench_harness::{bench_args, Bench};
+use vespa::bench_harness::{Bench, BenchArgs, BenchReport};
 use vespa::config::presets::paper_soc;
+use vespa::config::SocConfig;
 use vespa::runtime::RefCompute;
-use vespa::sim::Soc;
+use vespa::scenario::Scenario;
+use vespa::sim::{EngineMode, Soc};
+use vespa::tiles::Tile;
+
+/// A 4x4 SoC with sparse, bursty TG traffic and no accelerators: every
+/// TG issues one burst every ~1500 TG cycles, so the NoC drains and the
+/// whole SoC goes quiescent between bursts — the DS3-style
+/// low-utilization case event-driven simulation exists for.
+fn sparse_cfg() -> SocConfig {
+    Scenario::grid(4, 4)
+        .name("noc-microbench-sparse")
+        .seed(0x51AB)
+        .island_dfs("noc-mem", 100, 10..=100, 5)
+        .island_dfs("tg", 50, 10..=50, 5)
+        .noc_island("noc-mem")
+        .mem_at(0, 0)
+        .io_at_on(2, 0, "tg")
+        .fill_tg("tg")
+        .build()
+        .expect("sparse preset is structurally valid")
+}
+
+fn build_sparse(engine: EngineMode, active_tgs: usize) -> Soc {
+    let mut soc = Soc::build(sparse_cfg(), Box::new(RefCompute::new())).unwrap();
+    soc.engine = engine;
+    for t in &mut soc.tiles {
+        if let Tile::Tg(tg) = t {
+            tg.gap_cycles = 1500;
+        }
+    }
+    soc.host_set_tg_active(active_tgs);
+    soc
+}
 
 fn main() {
-    let (quick, _) = bench_args();
+    let args = BenchArgs::from_env();
+    let quick = args.quick;
     let sim_ms = if quick { 5 } else { 20 };
+    let sim_ps = sim_ms * 1_000_000_000;
 
-    let bench = Bench::new(1, if quick { 3 } else { 5 });
+    let bench = Bench::new(1, args.iters.unwrap_or(if quick { 3 } else { 5 }));
+    let mut report = BenchReport::new("noc_microbench");
 
-    // Saturated: all TGs on, NoC at 100 MHz.
+    // Saturated: all TGs on, NoC at 100 MHz (no-regression guard for
+    // the idle-aware engine: nothing to skip here).
     let r = bench.run("noc/saturated-11tg", |_| {
         let cfg = paper_soc(("dfadd", 1), ("dfadd", 1));
         let mut soc = Soc::build(cfg, Box::new(RefCompute::new())).unwrap();
         soc.host_set_tg_active(11);
-        soc.run_for(sim_ms * 1_000_000_000);
+        soc.run_for(sim_ps);
         (soc.edges, soc.fabric.total_flits())
     });
     println!("{}", r.report());
+    report.push(r);
 
     // Compute the engine metrics from one instrumented run.
     let cfg = paper_soc(("dfadd", 1), ("dfadd", 1));
     let mut soc = Soc::build(cfg, Box::new(RefCompute::new())).unwrap();
     soc.host_set_tg_active(11);
     let t0 = std::time::Instant::now();
-    soc.run_for(sim_ms * 1_000_000_000);
+    soc.run_for(sim_ps);
     let wall = t0.elapsed().as_secs_f64();
     // Router-cycles: NoC island cycles x routers (48 = 16 nodes x 3 planes).
     let router_cycles = soc.islands[0].cycles * 48;
@@ -39,14 +83,75 @@ fn main() {
         sim_ms,
         wall
     );
+    report.metric("saturated_edges_per_s", soc.edges as f64 / wall);
+    report.metric("saturated_flits_per_s", soc.fabric.total_flits() as f64 / wall);
 
-    // Idle SoC (engine overhead floor).
+    // Low utilization: sparse bursty TGs, idle-aware vs reference. Both
+    // runs must agree bit-exactly; the wall-clock ratio is the payoff.
+    let r_idle = bench.run("noc/low-util-sparse", |_| {
+        let mut soc = build_sparse(EngineMode::IdleAware, 11);
+        soc.run_for(sim_ps);
+        soc.edges
+    });
+    println!("{}", r_idle.report());
+    let r_ref = bench.run("noc/low-util-sparse-reference", |_| {
+        let mut soc = build_sparse(EngineMode::Reference, 11);
+        soc.run_for(sim_ps);
+        soc.edges
+    });
+    println!("{}", r_ref.report());
+
+    // Equivalence spot-check on the bench scenario itself.
+    let mut a = build_sparse(EngineMode::IdleAware, 11);
+    let mut b = build_sparse(EngineMode::Reference, 11);
+    a.run_for(sim_ps);
+    b.run_for(sim_ps);
+    assert_eq!(a.edges, b.edges, "engines disagree on delivered edges");
+    assert_eq!(
+        a.mon.mem_pkts_in, b.mon.mem_pkts_in,
+        "engines disagree on memory traffic"
+    );
+    assert_eq!(
+        a.fabric.total_flits(),
+        b.fabric.total_flits(),
+        "engines disagree on flits"
+    );
+    println!(
+        "sparse scenario: {} edges, {} coalesced over {} spans, {} tile ticks ({} skipped)",
+        a.edges,
+        a.engine_stats.coalesced_edges,
+        a.engine_stats.coalesced_spans,
+        a.engine_stats.tile_ticks,
+        a.engine_stats.skipped_tile_ticks,
+    );
+    assert!(
+        a.engine_stats.coalesced_edges > a.edges / 2,
+        "sparse workload should be dominated by coalesced spans"
+    );
+
+    let speedup = r_ref.mean.as_secs_f64() / r_idle.mean.as_secs_f64();
+    println!("idle-aware speedup on low-utilization traffic: {speedup:.1}x");
+    report.metric("sparse_speedup_vs_reference", speedup);
+    report.metric("sparse_coalesced_edges", a.engine_stats.coalesced_edges as f64);
+    report.push(r_idle);
+    report.push(r_ref);
+
+    // Idle SoC (engine overhead floor, MRA tiles self-driving).
     let r2 = bench.run("noc/idle", |_| {
         let cfg = paper_soc(("dfadd", 1), ("dfadd", 1));
         let mut soc = Soc::build(cfg, Box::new(RefCompute::new())).unwrap();
-        soc.run_for(sim_ms * 1_000_000_000);
+        soc.run_for(sim_ps);
         soc.edges
     });
     println!("{}", r2.report());
+    report.push(r2);
+
+    let path = report.write(args.json_path()).expect("write bench report");
+    println!("wrote {}", path.display());
+
+    assert!(
+        speedup >= 3.0,
+        "idle-aware engine must be >= 3x on low-utilization traffic, got {speedup:.2}x"
+    );
     println!("noc_microbench OK");
 }

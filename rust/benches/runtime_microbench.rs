@@ -3,7 +3,7 @@
 //!
 //! Requires `make artifacts`; exits cleanly with a notice otherwise.
 
-use vespa::bench_harness::{bench_args, Bench};
+use vespa::bench_harness::{Bench, BenchArgs, BenchReport};
 use vespa::mem::Block;
 use vespa::report::Table;
 use vespa::runtime::{AccelCompute, DType, Manifest, PjrtCompute, RefCompute};
@@ -15,8 +15,8 @@ fn main() {
         println!("runtime_microbench: artifacts/ missing — run `make artifacts` first (skipped)");
         return;
     }
-    let (quick, iters) = bench_args();
-    let iters = iters.unwrap_or(if quick { 20 } else { 100 });
+    let args = BenchArgs::from_env();
+    let iters = args.iters.unwrap_or(if args.quick { 20 } else { 100 });
 
     let manifest = Manifest::load(&dir).unwrap();
     let mut pjrt = PjrtCompute::from_manifest(manifest.clone()).unwrap();
@@ -28,6 +28,7 @@ fn main() {
         &["accel", "bytes in", "pjrt us", "native us", "pjrt MB/s"],
     );
     let bench = Bench::new(3, iters);
+    let mut report = BenchReport::new("runtime_microbench");
     for (name, spec) in &manifest.modules {
         let inputs: Vec<Block> = spec
             .inputs
@@ -59,7 +60,11 @@ fn main() {
             format!("{:.1}", rn.mean.as_secs_f64() * 1e6),
             format!("{mbs:.0}"),
         ]);
+        report.push(rp.with_ops(1.0));
+        report.push(rn.with_ops(1.0));
     }
     println!("{}", t.render());
+    let path = report.write(args.json_path()).expect("write bench report");
+    println!("wrote {}", path.display());
     println!("runtime_microbench OK ({} PJRT invocations)", pjrt.invocations);
 }

@@ -3,11 +3,12 @@
 //!   cargo bench --bench table1            full table (15 simulations)
 //!   cargo bench --bench table1 -- --quick smaller measurement windows
 
-use vespa::bench_harness::{bench_args, Bench};
+use vespa::bench_harness::{Bench, BenchArgs, BenchReport};
 use vespa::experiments::table1;
 
 fn main() {
-    let (quick, _) = bench_args();
+    let args = BenchArgs::from_env();
+    let quick = args.quick;
     let inv = if quick { 3 } else { 8 };
 
     let bench = Bench::new(0, 1);
@@ -21,6 +22,13 @@ fn main() {
     let (r2, r4) = table1::average_increments(&rows);
     println!("Average throughput increment: 2x = {r2:.2}x, 4x = {r4:.2}x (paper: 1.92x / 3.58x)");
     println!("{}", r.report());
+
+    let mut report = BenchReport::new("table1");
+    report.metric("avg_increment_2x", r2);
+    report.metric("avg_increment_4x", r4);
+    report.push(r);
+    let path = report.write(args.json_path()).expect("write bench report");
+    println!("wrote {}", path.display());
 
     // Shape assertions (who wins, by what factor).
     assert!((1.6..=2.2).contains(&r2), "2x increment {r2:.2}");

@@ -143,6 +143,18 @@ impl AxiBridge {
         self.rd_data[replica].len()
     }
 
+    /// Whether a tick would be a provable no-op: every FIFO (replica- and
+    /// tile-side, both directions) empty and no mux switch penalty
+    /// pending. Penalty cycles mutate stats each tick, so they count as
+    /// work. Held grants with empty FIFOs do nothing and don't count.
+    pub fn is_quiet(&self) -> bool {
+        self.mux.iter().all(|m| m.penalty == 0)
+            && self.tile_rd_data.is_empty()
+            && self.tile_up.iter().all(AxiStream::is_empty)
+            && self.rd_data.iter().all(AxiStream::is_empty)
+            && self.up.iter().all(|s| s.iter().all(|f| f.is_empty()))
+    }
+
     /// One bridge cycle (at the accelerator island clock): advance each
     /// upstream mux by at most one beat and the rdData demux by one beat.
     pub fn tick(&mut self) {
@@ -245,6 +257,24 @@ mod tests {
             tile_fifo_depth: 16,
             switch_cycles: switch,
         })
+    }
+
+    #[test]
+    fn quiescence_probe_tracks_beats_and_penalties() {
+        let mut b = bridge(1, 12);
+        assert!(b.is_quiet());
+        b.push_up(UpStream::RdCtrl, 0, beat(0, 1, true));
+        assert!(!b.is_quiet(), "replica-side beat pending");
+        b.tick();
+        assert!(!b.is_quiet(), "beat muxed to the tile side");
+        b.tile_up[0].pop();
+        assert!(b.is_quiet());
+
+        // K=2 with a switch cost: the penalty cycles count as work.
+        let mut b = bridge(2, 4);
+        b.push_up(UpStream::RdCtrl, 0, beat(0, 1, true));
+        b.tick(); // grant switch starts the penalty
+        assert!(!b.is_quiet(), "switch penalty pending");
     }
 
     #[test]

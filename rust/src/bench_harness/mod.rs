@@ -2,10 +2,24 @@
 //!
 //! Wall-clock measurement with warmup, configurable iteration counts,
 //! and mean/median/min/max reporting. Bench binaries (`rust/benches/`,
-//! `harness = false`) use [`Bench`] for timing sections and print the
-//! paper-reproduction tables through [`crate::report`].
+//! `harness = false`) use [`Bench`] for timing sections, print the
+//! paper-reproduction tables through [`crate::report`], and persist a
+//! machine-readable [`BenchReport`] as `BENCH_<name>.json` — the file
+//! CI's bench-smoke job feeds to the `bench_gate` comparator (see
+//! `docs/PERF.md` for the schema and the baseline-refresh flow).
+//!
+//! CLI: every bench accepts `--quick`, `--iters N` and `--json <path>`
+//! in both `--key value` and `--key=value` forms ([`BenchArgs`] reuses
+//! the [`crate::cli`] parser, so bench binaries and the main CLI accept
+//! the same syntax).
 
+pub mod json;
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
 use std::time::{Duration, Instant};
+
+use anyhow::Context;
 
 /// Result of one benchmark.
 #[derive(Debug, Clone)]
@@ -16,6 +30,9 @@ pub struct BenchResult {
     pub median: Duration,
     pub min: Duration,
     pub max: Duration,
+    /// Operations represented by one iteration (None = not a throughput
+    /// benchmark); `ops_per_s` in the JSON output is `ops / mean`.
+    pub ops: Option<f64>,
 }
 
 impl BenchResult {
@@ -29,6 +46,93 @@ impl BenchResult {
     /// Throughput in ops/s given `ops` per iteration.
     pub fn ops_per_sec(&self, ops: f64) -> f64 {
         ops / self.mean.as_secs_f64()
+    }
+
+    /// Tag the result with its per-iteration operation count (drives the
+    /// `ops_per_s` field of the JSON output).
+    pub fn with_ops(mut self, ops: f64) -> Self {
+        self.ops = Some(ops);
+        self
+    }
+
+    /// One JSON object: name, iters, mean/median/min/max in ns, ops/s.
+    pub fn to_json(&self) -> String {
+        let ops_per_s = match self.ops {
+            Some(ops) => json::fmt_f64(ops / self.mean.as_secs_f64()),
+            None => "null".to_string(),
+        };
+        format!(
+            "{{\"name\":{},\"iters\":{},\"mean_ns\":{},\"median_ns\":{},\"min_ns\":{},\"max_ns\":{},\"ops_per_s\":{}}}",
+            json::fmt_str(&self.name),
+            self.iters,
+            self.mean.as_nanos(),
+            self.median.as_nanos(),
+            self.min.as_nanos(),
+            self.max.as_nanos(),
+            ops_per_s,
+        )
+    }
+}
+
+/// Machine-readable output of one bench binary: every [`BenchResult`]
+/// plus free-form scalar metrics (speedups, efficiencies, edge rates).
+#[derive(Debug, Clone, Default)]
+pub struct BenchReport {
+    /// Bench binary name (drives the default `BENCH_<name>.json` path).
+    pub bench: String,
+    pub results: Vec<BenchResult>,
+    pub metrics: BTreeMap<String, f64>,
+}
+
+impl BenchReport {
+    pub fn new(bench: impl Into<String>) -> Self {
+        Self {
+            bench: bench.into(),
+            results: Vec::new(),
+            metrics: BTreeMap::new(),
+        }
+    }
+
+    /// Record a result (also returns it for chained printing).
+    pub fn push(&mut self, r: BenchResult) -> &BenchResult {
+        self.results.push(r);
+        self.results.last().expect("just pushed")
+    }
+
+    /// Record a named scalar metric.
+    pub fn metric(&mut self, name: &str, value: f64) {
+        self.metrics.insert(name.to_string(), value);
+    }
+
+    pub fn to_json(&self) -> String {
+        let results: Vec<String> = self.results.iter().map(BenchResult::to_json).collect();
+        let metrics: Vec<String> = self
+            .metrics
+            .iter()
+            .map(|(k, v)| format!("{}:{}", json::fmt_str(k), json::fmt_f64(*v)))
+            .collect();
+        format!(
+            "{{\"bench\":{},\"results\":[{}],\"metrics\":{{{}}}}}",
+            json::fmt_str(&self.bench),
+            results.join(","),
+            metrics.join(",")
+        )
+    }
+
+    /// `BENCH_<bench>.json` in the current directory.
+    pub fn default_path(&self) -> PathBuf {
+        PathBuf::from(format!("BENCH_{}.json", self.bench))
+    }
+
+    /// Write the report to `path` (or the default path) and return the
+    /// written location.
+    pub fn write(&self, path: Option<&Path>) -> crate::Result<PathBuf> {
+        let path = path
+            .map(Path::to_path_buf)
+            .unwrap_or_else(|| self.default_path());
+        std::fs::write(&path, self.to_json() + "\n")
+            .with_context(|| format!("writing bench report to {}", path.display()))?;
+        Ok(path)
     }
 }
 
@@ -76,20 +180,61 @@ impl Bench {
             median: times[self.iters / 2],
             min: times[0],
             max: times[self.iters - 1],
+            ops: None,
         }
     }
 }
 
-/// Parse `--quick` / `--iters N` style bench CLI args.
-pub fn bench_args() -> (bool, Option<usize>) {
-    let args: Vec<String> = std::env::args().collect();
-    let quick = args.iter().any(|a| a == "--quick");
-    let iters = args
-        .iter()
-        .position(|a| a == "--iters")
-        .and_then(|i| args.get(i + 1))
-        .and_then(|s| s.parse().ok());
-    (quick, iters)
+/// Parsed bench CLI. Shares the [`crate::cli`] parser with the main
+/// binary, so `--iters=N`, `--iters N`, `--json=path` and `--json path`
+/// all work (the pre-unification `bench_args` only accepted the
+/// space-separated form). Unknown flags — e.g. the `--bench` flag cargo
+/// appends — are tolerated.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct BenchArgs {
+    /// Reduced iteration counts / windows for smoke runs.
+    pub quick: bool,
+    /// Explicit iteration-count override.
+    pub iters: Option<usize>,
+    /// Output path override for the bench's JSON report
+    /// (default: `BENCH_<name>.json`).
+    pub json: Option<PathBuf>,
+}
+
+impl BenchArgs {
+    /// Parse from raw args (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> crate::Result<Self> {
+        let args = crate::cli::Args::parse_from(raw)?;
+        let iters = match args.opt("iters") {
+            None => None,
+            Some(v) => Some(
+                v.parse()
+                    .with_context(|| format!("--iters must be an integer, got {v:?}"))?,
+            ),
+        };
+        Ok(Self {
+            quick: args.flag("quick"),
+            iters,
+            json: args.opt("json").map(PathBuf::from),
+        })
+    }
+
+    /// Parse the process arguments; exits with a usage message on error
+    /// (bench binaries have no recovery path).
+    pub fn from_env() -> Self {
+        match Self::parse(std::env::args().skip(1)) {
+            Ok(a) => a,
+            Err(e) => {
+                eprintln!("bench arguments: {e:#}\nusage: [--quick] [--iters N] [--json PATH]");
+                std::process::exit(2);
+            }
+        }
+    }
+
+    /// JSON output path as `Option<&Path>` for [`BenchReport::write`].
+    pub fn json_path(&self) -> Option<&Path> {
+        self.json.as_deref()
+    }
 }
 
 #[cfg(test)]
@@ -116,5 +261,88 @@ mod tests {
         let b = Bench::new(0, 3);
         let r = b.run("named", |_| 1);
         assert!(r.report().contains("named"));
+    }
+
+    fn parse(s: &str) -> BenchArgs {
+        BenchArgs::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn bench_args_space_separated() {
+        let a = parse("--quick --iters 7 --json out.json");
+        assert!(a.quick);
+        assert_eq!(a.iters, Some(7));
+        assert_eq!(a.json, Some(PathBuf::from("out.json")));
+    }
+
+    #[test]
+    fn bench_args_key_equals_value() {
+        // The form PR 1's CLI learned and the old bench parser dropped.
+        let a = parse("--iters=12 --json=BENCH_x.json");
+        assert!(!a.quick);
+        assert_eq!(a.iters, Some(12));
+        assert_eq!(a.json, Some(PathBuf::from("BENCH_x.json")));
+    }
+
+    #[test]
+    fn bench_args_tolerates_cargos_bench_flag() {
+        let a = parse("--bench --quick");
+        assert!(a.quick);
+        assert_eq!(a.iters, None);
+    }
+
+    #[test]
+    fn bench_args_rejects_bad_iters() {
+        assert!(BenchArgs::parse(["--iters".to_string(), "abc".to_string()]).is_err());
+        assert!(BenchArgs::parse(["--iters=1.5".to_string()]).is_err());
+    }
+
+    #[test]
+    fn bench_args_defaults() {
+        let a = parse("");
+        assert_eq!(a, BenchArgs::default());
+    }
+
+    #[test]
+    fn result_json_roundtrips() {
+        let r = BenchResult {
+            name: "noc/\"quoted\"".to_string(),
+            iters: 5,
+            mean: Duration::from_nanos(1_500),
+            median: Duration::from_nanos(1_400),
+            min: Duration::from_nanos(1_000),
+            max: Duration::from_nanos(2_000),
+            ops: Some(3_000.0),
+        };
+        let v = json::parse(&r.to_json()).unwrap();
+        assert_eq!(v.get("name").unwrap().as_str().unwrap(), "noc/\"quoted\"");
+        assert_eq!(v.get("mean_ns").unwrap().as_f64().unwrap(), 1_500.0);
+        // ops/s = 3000 ops / 1.5 us = 2e9.
+        let ops = v.get("ops_per_s").unwrap().as_f64().unwrap();
+        assert!((ops - 2e9).abs() / 2e9 < 1e-9, "{ops}");
+    }
+
+    #[test]
+    fn bench_report_json_roundtrips() {
+        let b = Bench::new(0, 3);
+        let mut rep = BenchReport::new("unit");
+        rep.push(b.run("a", |_| 1));
+        rep.push(b.run("b", |_| 2).with_ops(10.0));
+        rep.metric("speedup", 3.75);
+        let v = json::parse(&rep.to_json()).unwrap();
+        assert_eq!(v.get("bench").unwrap().as_str().unwrap(), "unit");
+        let results = v.get("results").unwrap().as_array().unwrap();
+        assert_eq!(results.len(), 2);
+        assert_eq!(results[1].get("name").unwrap().as_str().unwrap(), "b");
+        let m = v.get("metrics").unwrap().get("speedup").unwrap();
+        assert_eq!(m.as_f64().unwrap(), 3.75);
+    }
+
+    #[test]
+    fn bench_report_default_path() {
+        assert_eq!(
+            BenchReport::new("noc_microbench").default_path(),
+            PathBuf::from("BENCH_noc_microbench.json")
+        );
     }
 }

@@ -1,0 +1,222 @@
+//! CI perf gate: compare `BENCH_*.json` reports against a checked-in
+//! baseline and fail on regressions.
+//!
+//! ```text
+//! bench_gate [--baseline ci/bench_baseline.json] [--tolerance 1.25]
+//!            [--update] BENCH_noc_microbench.json [BENCH_...json ...]
+//! ```
+//!
+//! The baseline (see `ci/bench_baseline.json`, schema in
+//! `docs/PERF.md`) tracks two kinds of bounds:
+//!
+//! * `mean_ns` — wall-clock means per benchmark name; the gate fails
+//!   when a current mean exceeds `baseline * tolerance` (default 1.25,
+//!   i.e. a >25% regression).
+//! * `min_metrics` — machine-independent lower bounds on report
+//!   metrics, keyed `<bench>.<metric>` (e.g. the idle-aware engine's
+//!   `noc_microbench.sparse_speedup_vs_reference >= 3`).
+//!
+//! Output is a GitHub-flavoured markdown table (append to
+//! `$GITHUB_STEP_SUMMARY` in CI). `--update` rewrites the baseline's
+//! `mean_ns` section from the current reports instead of gating —
+//! the refresh flow after an intentional perf change.
+
+use std::collections::BTreeMap;
+use std::process::ExitCode;
+
+use anyhow::{bail, Context};
+use vespa::bench_harness::json::{self, Json};
+use vespa::cli::Args;
+
+struct Current {
+    /// benchmark name -> mean ns.
+    means: BTreeMap<String, f64>,
+    /// `<bench>.<metric>` -> value.
+    metrics: BTreeMap<String, f64>,
+}
+
+fn load_reports(paths: &[String]) -> vespa::Result<Current> {
+    let mut means = BTreeMap::new();
+    let mut metrics = BTreeMap::new();
+    for path in paths {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading bench report {path}"))?;
+        let doc = json::parse(&text).with_context(|| format!("parsing {path}"))?;
+        let bench = doc
+            .get("bench")
+            .and_then(Json::as_str)
+            .with_context(|| format!("{path}: missing \"bench\" field"))?
+            .to_string();
+        for r in doc
+            .get("results")
+            .and_then(Json::as_array)
+            .unwrap_or_default()
+        {
+            let (Some(name), Some(mean)) = (
+                r.get("name").and_then(Json::as_str),
+                r.get("mean_ns").and_then(Json::as_f64),
+            ) else {
+                bail!("{path}: result entry without name/mean_ns");
+            };
+            means.insert(name.to_string(), mean);
+        }
+        if let Some(obj) = doc.get("metrics").and_then(Json::as_object) {
+            for (k, v) in obj {
+                if let Some(v) = v.as_f64() {
+                    metrics.insert(format!("{bench}.{k}"), v);
+                }
+            }
+        }
+    }
+    Ok(Current { means, metrics })
+}
+
+fn num_map(doc: &Json, key: &str) -> BTreeMap<String, f64> {
+    doc.get(key)
+        .and_then(Json::as_object)
+        .unwrap_or_default()
+        .iter()
+        .filter_map(|(k, v)| v.as_f64().map(|v| (k.clone(), v)))
+        .collect()
+}
+
+fn fmt_ms(ns: f64) -> String {
+    format!("{:.1}", ns / 1e6)
+}
+
+fn run() -> vespa::Result<ExitCode> {
+    let args = Args::from_env()?;
+    // The subcommand slot eats the first positional; treat both as files.
+    let mut files: Vec<String> = Vec::new();
+    files.extend(args.subcommand.clone());
+    files.extend(args.positional.clone());
+    // `--update BENCH_x.json` greedily binds the report path as the
+    // option's value — recover it as both the flag and a file.
+    let mut update = args.flag("update");
+    if let Some(v) = args.opt("update") {
+        update = true;
+        files.insert(0, v.to_string());
+    }
+    if files.is_empty() {
+        bail!("usage: bench_gate [--baseline PATH] [--tolerance R] [--update] BENCH_*.json");
+    }
+    let baseline_path = args.opt_str("baseline", "ci/bench_baseline.json");
+
+    let current = load_reports(&files)?;
+
+    let baseline_text = std::fs::read_to_string(&baseline_path)
+        .with_context(|| format!("reading baseline {baseline_path}"))?;
+    let baseline = json::parse(&baseline_text).with_context(|| format!("parsing {baseline_path}"))?;
+    let base_tol = baseline
+        .get("tolerance")
+        .and_then(Json::as_f64)
+        .unwrap_or(1.25);
+    let tolerance: f64 = match args.opt("tolerance") {
+        None => base_tol,
+        Some(v) => v
+            .parse()
+            .with_context(|| format!("--tolerance must be a number, got {v:?}"))?,
+    };
+    let base_means = num_map(&baseline, "mean_ns");
+    let min_metrics = num_map(&baseline, "min_metrics");
+
+    if update {
+        // Refresh `mean_ns` only: the baseline's own tolerance (not a
+        // one-off --tolerance override), comment, and min_metrics are
+        // preserved.
+        let mut out = String::from("{\n");
+        if let Some(c) = baseline.get("_comment").and_then(Json::as_str) {
+            out.push_str(&format!("  \"_comment\": {},\n", json::fmt_str(c)));
+        }
+        out.push_str(&format!("  \"tolerance\": {},\n", json::fmt_f64(base_tol)));
+        out.push_str("  \"mean_ns\": {\n");
+        let means: Vec<String> = current
+            .means
+            .iter()
+            .map(|(k, v)| format!("    {}: {}", json::fmt_str(k), json::fmt_f64(*v)))
+            .collect();
+        out.push_str(&means.join(",\n"));
+        out.push_str("\n  },\n  \"min_metrics\": {\n");
+        let mins: Vec<String> = min_metrics
+            .iter()
+            .map(|(k, v)| format!("    {}: {}", json::fmt_str(k), json::fmt_f64(*v)))
+            .collect();
+        out.push_str(&mins.join(",\n"));
+        out.push_str("\n  }\n}\n");
+        std::fs::write(&baseline_path, out)
+            .with_context(|| format!("writing baseline {baseline_path}"))?;
+        println!("updated {baseline_path} from {} report(s)", files.len());
+        return Ok(ExitCode::SUCCESS);
+    }
+
+    let mut failures = 0usize;
+    println!("## Bench gate (tolerance {tolerance:.2}x)\n");
+    println!("| benchmark | baseline ms | current ms | ratio | status |");
+    println!("|---|---:|---:|---:|---|");
+    for (name, base) in &base_means {
+        match current.means.get(name) {
+            None => {
+                failures += 1;
+                println!("| {name} | {} | missing | — | ❌ missing |", fmt_ms(*base));
+            }
+            Some(cur) => {
+                let ratio = cur / base;
+                let ok = ratio <= tolerance;
+                if !ok {
+                    failures += 1;
+                }
+                println!(
+                    "| {name} | {} | {} | {ratio:.2}x | {} |",
+                    fmt_ms(*base),
+                    fmt_ms(*cur),
+                    if ok { "✅" } else { "❌ regression" }
+                );
+            }
+        }
+    }
+    for (name, bound) in &min_metrics {
+        match current.metrics.get(name) {
+            None => {
+                failures += 1;
+                println!("| {name} | ≥ {bound:.2} | missing | — | ❌ missing |");
+            }
+            Some(cur) => {
+                let ok = cur >= bound;
+                if !ok {
+                    failures += 1;
+                }
+                println!(
+                    "| {name} | ≥ {bound:.2} | {cur:.2} | — | {} |",
+                    if ok { "✅" } else { "❌ below bound" }
+                );
+            }
+        }
+    }
+    // Untracked benchmarks are informational only.
+    for (name, cur) in &current.means {
+        if !base_means.contains_key(name) {
+            println!("| {name} | — | {} | — | ℹ️ untracked |", fmt_ms(*cur));
+        }
+    }
+    println!();
+    if failures > 0 {
+        println!(
+            "**{failures} gate failure(s).** Intentional change? Refresh with `cargo run --release --bin bench_gate -- --update --baseline {baseline_path} {}`.",
+            files.join(" ")
+        );
+        Ok(ExitCode::FAILURE)
+    } else {
+        println!("All tracked benchmarks within bounds.");
+        Ok(ExitCode::SUCCESS)
+    }
+}
+
+fn main() -> ExitCode {
+    match run() {
+        Ok(code) => code,
+        Err(e) => {
+            eprintln!("bench_gate: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}

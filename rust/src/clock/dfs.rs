@@ -80,6 +80,16 @@ impl DualMmcmActuator {
         self.switches
     }
 
+    /// Time of the pending master/slave swap, if a reconfiguration is in
+    /// flight. The idle-aware engine must not coalesce a span across
+    /// this instant: the island's period changes there.
+    pub fn pending_swap(&self) -> Option<Ps> {
+        match self.state {
+            DualState::Idle => None,
+            DualState::Reprogramming { swap_at } => Some(swap_at),
+        }
+    }
+
     /// The latency of one frequency change (request -> effect).
     pub fn switch_latency(&self) -> Ps {
         self.slave.reconfig_latency()

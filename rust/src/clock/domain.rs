@@ -149,6 +149,42 @@ impl ClockDomain {
         self.tick_actuator(t);
     }
 
+    /// Time of the most recent delivered edge (phase anchor).
+    pub fn last_edge(&self) -> Ps {
+        self.last_edge
+    }
+
+    /// Time of a pending DFS retiming (actuator swap), if any.
+    pub fn pending_retime(&self) -> Option<Ps> {
+        match &self.source {
+            ClockSource::Fixed(_) => None,
+            ClockSource::Dfs(a) => a.pending_swap(),
+        }
+    }
+
+    /// Bulk-deliver every edge at or before `until`, in one step.
+    ///
+    /// Equivalent to repeated `next_edge` + `edge_delivered` under the
+    /// engine-guaranteed precondition that no DFS retiming lands inside
+    /// `(last_edge, until]` — the period is then constant over the span,
+    /// and delivering the actuator tick once at the final edge matches
+    /// delivering it at every edge (the actuator FSM is time-based and
+    /// transition-free across the span). Returns the edges delivered.
+    pub fn advance_span(&mut self, until: Ps) -> u64 {
+        debug_assert!(self.pending_retime().is_none_or(|swap| swap > until));
+        if until <= self.last_edge {
+            return 0;
+        }
+        let p = self.period(self.last_edge);
+        let k = (until - self.last_edge) / p;
+        if k > 0 {
+            self.last_edge += k * p;
+            self.cycles += k;
+            self.tick_actuator(self.last_edge);
+        }
+        k
+    }
+
     /// Dead-clock time (0 for fixed and dual-MMCM islands).
     pub fn dead_time(&self) -> Ps {
         match &self.source {
@@ -234,6 +270,48 @@ mod tests {
         // After the swap the period is 10 000 ps.
         let e = d.next_edge(t);
         assert_eq!(e - t, 10_000, "new period after swap at {t}");
+    }
+
+    #[test]
+    fn advance_span_matches_edge_by_edge() {
+        let mk = || ClockDomain::fixed(IslandId(0), "x", Freq::mhz(37));
+        let mut a = mk();
+        let mut t = 0;
+        for _ in 0..123 {
+            t = a.next_edge(t);
+            a.edge_delivered(t);
+        }
+        let mut b = mk();
+        assert_eq!(b.advance_span(t), 123);
+        assert_eq!(a.cycles, b.cycles);
+        assert_eq!(a.last_edge(), b.last_edge());
+        assert_eq!(a.next_edge(t), b.next_edge(t));
+        // A target strictly between edges delivers the same count.
+        let mut c = mk();
+        c.advance_span(t + 1);
+        assert_eq!(c.cycles, 123);
+        // A target before the next edge delivers nothing.
+        assert_eq!(b.advance_span(t), 0);
+    }
+
+    #[test]
+    fn pending_retime_visible_until_swap() {
+        let mut d = ClockDomain::dfs(
+            IslandId(1),
+            "a1",
+            Freq::mhz(50),
+            Freq::mhz(10),
+            Freq::mhz(50),
+            5,
+        );
+        assert_eq!(d.pending_retime(), None);
+        let eff = d.request_freq(Freq::mhz(10), 0).unwrap();
+        assert_eq!(d.pending_retime(), Some(eff));
+        // Spans may bulk-advance right up to (not across) the swap.
+        d.advance_span(eff - 1);
+        assert_eq!(d.pending_retime(), Some(eff));
+        d.edge_delivered(eff);
+        assert_eq!(d.pending_retime(), None);
     }
 
     #[test]

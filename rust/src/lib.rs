@@ -55,6 +55,20 @@
 //! code; the hand-rolled choreography is considered deprecated and no
 //! longer appears anywhere in this crate's experiments or examples.
 //!
+//! ## The idle-aware engine
+//!
+//! Simulation runs on an idle-aware event engine ([`sim::Soc`],
+//! [`sim::EngineMode`]): tiles report per-cycle [`tiles::TickOutcome`]
+//! wake points, routers report activity, and globally quiescent spans
+//! are coalesced by jumping time straight to the next event (tile wake,
+//! flit ready-time, DFS swap, schedule entry, or sampler deadline) —
+//! bit-identical to edge-by-edge stepping, but ~orders faster on
+//! low-utilization workloads. The original tick-everything loop remains
+//! as `EngineMode::Reference`, the equivalence oracle
+//! (`rust/tests/engine_equivalence.rs`). Engine architecture, bench
+//! workflow, `BENCH_*.json` schema, and the CI perf gate are documented
+//! in `docs/PERF.md`.
+//!
 //! ## Functional datapaths
 //!
 //! Accelerator datapaths execute *real* compute: JAX/Pallas kernels are

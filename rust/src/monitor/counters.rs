@@ -66,6 +66,15 @@ impl AccelCounters {
         }
     }
 
+    /// `n` island-clock cycles elapsed while computing — bulk credit for
+    /// cycles the idle-aware engine skipped while the tile's only work
+    /// was a running computation.
+    pub fn on_exec_cycles(&mut self, n: u64) {
+        if self.running {
+            self.exec_cycles += n;
+        }
+    }
+
     /// Computation completed: stop the exec-time counter.
     pub fn on_complete(&mut self, now: Ps) {
         if self.running {

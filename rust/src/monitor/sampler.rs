@@ -92,6 +92,14 @@ impl Sampler {
         now >= self.next_at
     }
 
+    /// Absolute time of the next sampling deadline. The idle-aware
+    /// engine treats this as a wakeup event: coalesced spans stop short
+    /// of it so the sample lands on the exact same edge as under
+    /// edge-by-edge stepping.
+    pub fn next_due(&self) -> Ps {
+        self.next_at
+    }
+
     /// Record one sample row (values aligned with the configured names).
     pub fn record(&mut self, now: Ps, values: &[f64]) {
         debug_assert_eq!(values.len(), self.series.len());

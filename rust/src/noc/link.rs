@@ -67,6 +67,14 @@ impl LinkFifo {
         self.pushed += 1;
     }
 
+    /// `ready_at` stamp of the head flit, if any — the earliest instant
+    /// this FIFO can produce work. The idle-aware engine uses this as a
+    /// wakeup: a non-empty FIFO whose head is still in flight (CDC or
+    /// pipeline delay) provably yields no-op ticks until this time.
+    pub fn head_ready_at(&self) -> Option<Ps> {
+        self.q.front().map(|(t, _)| *t)
+    }
+
     /// Head flit if it is visible at `now`.
     pub fn peek(&self, now: Ps) -> Option<&Flit> {
         match self.q.front() {
@@ -135,6 +143,17 @@ mod tests {
             assert_eq!(l.pop(1000).unwrap().seq, i);
         }
         assert!(l.is_empty());
+    }
+
+    #[test]
+    fn head_ready_at_reports_earliest_work() {
+        let mut l = LinkFifo::new(4);
+        assert_eq!(l.head_ready_at(), None);
+        l.push(flit(0), 70);
+        l.push(flit(1), 90);
+        assert_eq!(l.head_ready_at(), Some(70));
+        l.pop(100);
+        assert_eq!(l.head_ready_at(), Some(90));
     }
 
     #[test]

@@ -108,19 +108,29 @@ impl Router {
         }
     }
 
+    /// Whether any output port currently holds a wormhole allocation.
+    /// A held grant accrues `stall_cycles` whenever it cannot advance,
+    /// so the idle-aware engine must tick such a router every cycle.
+    pub fn holds_grant(&self) -> bool {
+        self.alloc.iter().any(|a| a.holder.is_some())
+    }
+
     /// One cycle at time `now`. `links` is the fabric's FIFO arena.
-    pub fn tick(&mut self, now: Ps, mesh: &Mesh, links: &mut [LinkFifo], view: &ClockView) {
+    /// Returns `true` when the router had (potential) work this cycle —
+    /// a held grant or any buffered input flit — and `false` when the
+    /// tick was the provable no-op fast path.
+    pub fn tick(&mut self, now: Ps, mesh: &Mesh, links: &mut [LinkFifo], view: &ClockView) -> bool {
         // Fast path (the §Perf hot-loop optimization): with no wormhole
         // allocated and every input FIFO empty there is nothing to do —
         // 5 length checks instead of a full 5x5 arbitration scan. An
         // idle mesh costs ~0 this way.
-        if self.alloc.iter().all(|a| a.holder.is_none())
+        if !self.holds_grant()
             && self
                 .inputs
                 .iter()
                 .all(|l| links[l.0 as usize].is_empty())
         {
-            return;
+            return false;
         }
 
         let mut stalled = false;
@@ -192,6 +202,7 @@ impl Router {
         if stalled {
             self.stats.stall_cycles += 1;
         }
+        true
     }
 }
 
@@ -232,6 +243,16 @@ mod tests {
         });
         let r = Router::new(NodeId(0), 0, inputs, outputs);
         (mesh, r, links)
+    }
+
+    #[test]
+    fn idle_tick_reports_no_work() {
+        let (mesh, mut r, mut links) = setup();
+        assert!(!r.tick(10_000, &mesh, &mut links, &view()));
+        assert!(!r.holds_grant());
+        links[Port::Local.index()].push(flit(1, 0, 2, NodeId(1)), 0);
+        assert!(r.tick(20_000, &mesh, &mut links, &view()));
+        assert!(r.holds_grant(), "wormhole held until the tail moves");
     }
 
     #[test]

@@ -193,6 +193,15 @@ impl Session {
         self.staged.get(&tile).map(Vec::as_slice).unwrap_or(&[])
     }
 
+    /// Select the simulation engine (default: idle-aware). The
+    /// [`Reference`](crate::sim::EngineMode::Reference) engine ticks
+    /// every component on every edge — the equivalence oracle the
+    /// idle-aware engine is tested against.
+    pub fn engine(&mut self, mode: crate::sim::EngineMode) -> &mut Self {
+        self.soc.engine = mode;
+        self
+    }
+
     /// Perf mode: skip the functional datapath on all MRA tiles except
     /// for the first invocation (timing is unaffected; Table I / Fig. 3
     /// runs use this).

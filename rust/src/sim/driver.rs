@@ -5,6 +5,12 @@
 //! Higher-level choreography (warmup/measure phases, typed reports,
 //! parallel scenario evaluation) lives in [`crate::scenario`]; the
 //! helpers here are the low-level building blocks it is made of.
+//!
+//! All helpers drive the SoC through `run_until`/`run_for`, so they get
+//! the idle-aware engine's span coalescing for free (see
+//! [`crate::sim::soc`] and `docs/PERF.md`); measurement windows are
+//! engine-invariant because coalescing is bit-identical to edge-by-edge
+//! stepping.
 
 use crate::mem::{Block, BlockId};
 use crate::monitor::CounterReg;

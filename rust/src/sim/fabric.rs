@@ -87,6 +87,32 @@ impl Fabric {
     pub fn total_flits(&self) -> u64 {
         self.routers.iter().map(|r| r.stats.flits).sum()
     }
+
+    /// Quiescence probe for the idle-aware engine.
+    ///
+    /// Returns `None` when the fabric needs per-cycle ticking right now:
+    /// some router holds a wormhole grant (it accrues stall statistics
+    /// every cycle) or some FIFO head is already visible at `now`.
+    /// Otherwise returns the earliest future `ready_at` among buffered
+    /// flits — the instant fabric work can next appear — or `Ps::MAX`
+    /// when every FIFO (router inputs, injects, and ejects) is empty.
+    pub fn next_flit_event(&self, now: crate::util::Ps) -> Option<crate::util::Ps> {
+        for r in &self.routers {
+            if r.holds_grant() {
+                return None;
+            }
+        }
+        let mut next = crate::util::Ps::MAX;
+        for l in &self.links {
+            if let Some(rt) = l.head_ready_at() {
+                if rt <= now {
+                    return None;
+                }
+                next = next.min(rt);
+            }
+        }
+        Some(next)
+    }
 }
 
 #[cfg(test)]

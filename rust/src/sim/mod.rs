@@ -7,4 +7,4 @@ pub mod soc;
 
 pub use driver::{input_shapes, stage_inputs_for, ThroughputProbe};
 pub use fabric::Fabric;
-pub use soc::Soc;
+pub use soc::{EngineMode, EngineStats, Soc};

@@ -6,6 +6,30 @@
 //! island whose actuator swapped frequency re-schedules at its new
 //! period). Determinism: heap ties break on island index; all randomness
 //! is seeded from the config.
+//!
+//! # The idle-aware engine
+//!
+//! The default [`EngineMode::IdleAware`] engine keeps the same edge
+//! heap but avoids provably no-op work on two levels (see
+//! `docs/PERF.md` for the full architecture):
+//!
+//! * **Component skipping.** Every tile tick returns a
+//!   [`TickOutcome`](crate::tiles::TickOutcome) naming the island cycle
+//!   at which it next needs an unconditional tick (its per-island wake
+//!   set); a sleeping tile is only ticked early when a flit becomes
+//!   visible in one of its eject FIFOs. Routers keep their empty-FIFO
+//!   fast path and report whether they had work.
+//! * **Span coalescing.** After a fully quiet edge, the engine probes
+//!   global quiescence (no router grants, no visible flits, every tile
+//!   asleep) and bulk-delivers all edges up to the next *event* — the
+//!   earliest tile wake, buffered-flit `ready_at`, DFS actuator swap,
+//!   host schedule entry, or sampler deadline — via
+//!   [`ClockDomain::advance_span`], instead of stepping each edge.
+//!
+//! Both levels only elide work that is a no-op by construction, so the
+//! engine is bit-identical to [`EngineMode::Reference`] (the original
+//! tick-everything loop, kept as the equivalence oracle — see
+//! `rust/tests/engine_equivalence.rs`).
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
@@ -19,11 +43,36 @@ use crate::monitor::{MonitorFile, Sampler};
 use crate::noc::{ClockView, NodeId, PacketArena};
 use crate::runtime::AccelCompute;
 use crate::tiles::{cpu::CpuTile, io::IoTile, mem_tile::MemTile, mra::MraTile, tg::TgTile};
-use crate::tiles::{AccelTiming, NetIface, Tile, TileCtx};
+use crate::tiles::{AccelTiming, NetIface, Tile, TileCtx, WAKE_ON_INPUT};
 use crate::util::time::Freq;
 use crate::util::{Ps, SplitMix64};
 
 use super::fabric::Fabric;
+
+/// Which step loop the engine runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum EngineMode {
+    /// Skip provably no-op component ticks and coalesce globally
+    /// quiescent spans (the default).
+    #[default]
+    IdleAware,
+    /// Tick every router and every tile on every edge — the
+    /// pre-idle-aware engine, kept as the equivalence oracle.
+    Reference,
+}
+
+/// Idle-aware engine telemetry (all zero under [`EngineMode::Reference`]).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct EngineStats {
+    /// Quiescent spans jumped.
+    pub coalesced_spans: u64,
+    /// Edges delivered in bulk inside those spans.
+    pub coalesced_edges: u64,
+    /// Tile ticks actually executed.
+    pub tile_ticks: u64,
+    /// Tile ticks skipped because the tile was asleep with no input.
+    pub skipped_tile_ticks: u64,
+}
 
 /// The simulated SoC.
 pub struct Soc {
@@ -44,8 +93,21 @@ pub struct Soc {
     /// Pending host frequency schedule: (time, island, MHz), sorted.
     schedule: Vec<(Ps, usize, u64)>,
     schedule_next: usize,
-    /// Total edges processed (engine throughput metric).
+    /// Total edges processed (engine throughput metric). Bulk-delivered
+    /// edges count exactly as stepped ones, so this is engine-invariant.
     pub edges: u64,
+    /// Engine selection. Pick before running; switching mid-run keeps
+    /// correctness (wake state is conservative) but is not supported as
+    /// a tested configuration.
+    pub engine: EngineMode,
+    pub engine_stats: EngineStats,
+    /// Per-tile wake point in island cycles ([`WAKE_ON_INPUT`] = only a
+    /// NoC arrival wakes it). 0 = due immediately.
+    tile_wake: Vec<u64>,
+    /// Scratch: tiles due this edge (reused to avoid per-edge allocs).
+    due_tiles: Vec<usize>,
+    /// The last processed edge did no work — gates coalescing attempts.
+    quiet_edge: bool,
 }
 
 impl Soc {
@@ -162,6 +224,7 @@ impl Soc {
         }
 
         let mon = MonitorFile::new(cfg.tiles.len());
+        let n_tiles = cfg.tiles.len();
         Ok(Self {
             cfg,
             islands,
@@ -179,6 +242,11 @@ impl Soc {
             schedule: Vec::new(),
             schedule_next: 0,
             edges: 0,
+            engine: EngineMode::default(),
+            engine_stats: EngineStats::default(),
+            tile_wake: vec![0; n_tiles],
+            due_tiles: Vec::with_capacity(n_tiles),
+            quiet_edge: false,
         })
     }
 
@@ -198,11 +266,22 @@ impl Soc {
             .collect()
     }
 
-    /// Mutable access to an MRA tile.
+    /// Mutable access to an MRA tile. Mutable host access may change
+    /// anything about the tile, so its engine wake point is reset — the
+    /// next edge re-evaluates it from scratch.
     pub fn mra_mut(&mut self, tile: usize) -> &mut MraTile {
+        self.wake_tile(tile);
         match &mut self.tiles[tile] {
             Tile::Mra(m) => m,
             _ => panic!("tile {tile} is not an MRA tile"),
+        }
+    }
+
+    /// Force a tile awake (any direct mutation of tile state from host
+    /// code invalidates the engine's sleep reasoning for that tile).
+    fn wake_tile(&mut self, tile: usize) {
+        if let Some(w) = self.tile_wake.get_mut(tile) {
+            *w = 0;
         }
     }
 
@@ -228,6 +307,7 @@ impl Soc {
 
     /// Fallible mutable access to an MRA tile.
     pub fn try_mra_mut(&mut self, tile: usize) -> crate::Result<&mut MraTile> {
+        self.wake_tile(tile);
         let n = self.tiles.len();
         match self.tiles.get_mut(tile) {
             Some(Tile::Mra(m)) => Ok(m),
@@ -264,10 +344,13 @@ impl Soc {
     /// Enable the first `n` TG tiles (Fig. 3's X axis), disable the rest.
     pub fn host_set_tg_active(&mut self, n: usize) {
         let mut seen = 0;
-        for t in &mut self.tiles {
+        for (ti, t) in self.tiles.iter_mut().enumerate() {
             if let Tile::Tg(tg) = t {
                 tg.enabled = seen < n;
                 seen += 1;
+                // A just-enabled (or disabled) TG must re-evaluate its
+                // wake point on the next edge.
+                self.tile_wake[ti] = 0;
             }
         }
     }
@@ -312,21 +395,58 @@ impl Soc {
 
     /// Process one clock edge; returns the new simulation time.
     pub fn step(&mut self) -> Ps {
+        match self.engine {
+            EngineMode::IdleAware => self.step_idle_aware(),
+            EngineMode::Reference => self.reference_step(),
+        }
+    }
+
+    /// Shared edge prologue: pop the earliest edge, apply due host
+    /// schedule entries, deliver the edge to its island's clock domain.
+    /// Returns (edge time, island, whether a schedule entry applied).
+    fn begin_edge(&mut self) -> (Ps, usize, bool) {
         let Reverse((t, i)) = self.heap.pop().expect("at least one island");
         self.now = t;
         self.edges += 1;
 
-        // Apply due host schedule entries.
+        let mut scheduled = false;
         while self.schedule_next < self.schedule.len() && self.schedule[self.schedule_next].0 <= t
         {
             let (_, island, mhz) = self.schedule[self.schedule_next];
             let _ = self.host_write_freq(island, mhz);
             self.schedule_next += 1;
+            scheduled = true;
         }
 
         self.islands[i].edge_delivered(t);
         self.view.last_edges[i] = t;
         self.view.periods[i] = self.islands[i].period(t);
+        (t, i, scheduled)
+    }
+
+    /// Shared edge epilogue: record a due sample and re-schedule the
+    /// island's next edge. Returns whether a sample was recorded.
+    fn end_edge(&mut self, t: Ps, i: usize) -> bool {
+        let mut sampled = false;
+        if let Some(s) = &mut self.sampler {
+            if s.due(t) {
+                let mut row = vec![self.mon.mem_pkts_in as f64];
+                for d in &self.islands {
+                    row.push(d.freq(t).as_mhz() as f64);
+                }
+                s.record(t, &row);
+                sampled = true;
+            }
+        }
+        self.heap.push(Reverse((self.islands[i].next_edge(t), i)));
+        sampled
+    }
+
+    /// The original engine: tick every router and every tile of the
+    /// edge's island, unconditionally. Kept as the equivalence oracle
+    /// for the idle-aware path.
+    fn reference_step(&mut self) -> Ps {
+        let (t, i, _) = self.begin_edge();
 
         // Routers of this island (all planes).
         if i == self.cfg.noc.island {
@@ -342,6 +462,7 @@ impl Soc {
         }
 
         // Tiles of this island.
+        let cycle = self.islands[i].cycles;
         {
             let Self {
                 fabric,
@@ -357,6 +478,7 @@ impl Soc {
             } = self;
             let mut ctx = TileCtx {
                 now: t,
+                cycle,
                 mesh: &fabric.mesh,
                 links: &mut fabric.links,
                 view,
@@ -371,29 +493,191 @@ impl Soc {
             }
         }
 
-        // Sample if due.
-        if let Some(s) = &mut self.sampler {
-            if s.due(t) {
-                let mut row = vec![self.mon.mem_pkts_in as f64];
-                for d in &self.islands {
-                    row.push(d.freq(t).as_mhz() as f64);
+        self.end_edge(t, i);
+        t
+    }
+
+    /// The idle-aware engine: tick only routers with work and tiles that
+    /// are due (wake point reached or a flit visible in an eject FIFO),
+    /// and flag fully quiet edges so `run_until` can try coalescing.
+    fn step_idle_aware(&mut self) -> Ps {
+        let (t, i, scheduled) = self.begin_edge();
+        let mut restless = scheduled;
+
+        if i == self.cfg.noc.island {
+            let Fabric {
+                mesh,
+                links,
+                routers,
+                ..
+            } = &mut self.fabric;
+            for r in routers.iter_mut() {
+                if r.tick(t, mesh, links, &self.view) {
+                    restless = true;
                 }
-                s.record(t, &row);
             }
         }
 
-        self.heap.push(Reverse((self.islands[i].next_edge(t), i)));
+        // Collect the due-set before ticking: flits pushed *during* this
+        // edge carry `ready_at > t` (pipeline/CDC stamps are strictly
+        // future), so nothing ticked here can make another tile due at
+        // this same edge — the pre-computed set is exact.
+        let cycle = self.islands[i].cycles;
+        self.due_tiles.clear();
+        for &ti in &self.island_tiles[i] {
+            let due = self.tile_wake[ti] <= cycle
+                || self.fabric.eject[ti].iter().any(|l| {
+                    self.fabric.links[l.0 as usize]
+                        .head_ready_at()
+                        .is_some_and(|rt| rt <= t)
+                });
+            if due {
+                self.due_tiles.push(ti);
+            } else {
+                self.engine_stats.skipped_tile_ticks += 1;
+            }
+        }
+        self.engine_stats.tile_ticks += self.due_tiles.len() as u64;
+
+        {
+            let Self {
+                fabric,
+                tiles,
+                arena,
+                blocks,
+                mon,
+                compute,
+                islands,
+                view,
+                due_tiles,
+                tile_wake,
+                ..
+            } = self;
+            let mut ctx = TileCtx {
+                now: t,
+                cycle,
+                mesh: &fabric.mesh,
+                links: &mut fabric.links,
+                view,
+                arena,
+                blocks,
+                compute: compute.as_mut(),
+                mon,
+                islands,
+            };
+            for &ti in due_tiles.iter() {
+                let out = tiles[ti].tick(&mut ctx);
+                tile_wake[ti] = out.wake_cycle;
+                if out.did_work || out.wake_cycle <= cycle + 1 {
+                    restless = true;
+                }
+            }
+        }
+
+        if self.end_edge(t, i) {
+            restless = true;
+        }
+        self.quiet_edge = !restless;
         t
+    }
+
+    /// Attempt to coalesce a quiescent span: when no component can do
+    /// work before a known future event, bulk-deliver every island edge
+    /// up to just before that event (bounded by `t_end`). Returns true
+    /// if any edges were delivered in bulk.
+    fn try_coalesce(&mut self, t_end: Ps) -> bool {
+        // Fabric: a held grant or visible flit needs per-cycle ticking;
+        // buffered future flits bound the span by their `ready_at`.
+        let Some(flit_event) = self.fabric.next_flit_event(self.now) else {
+            return false;
+        };
+        let mut next_event = flit_event;
+
+        // Clocks and tiles: every tile must be asleep. Sleeping wake
+        // cycles convert to times under the current period — valid
+        // because the span is also bounded by any pending DFS retiming.
+        for (i, d) in self.islands.iter().enumerate() {
+            if let Some(swap) = d.pending_retime() {
+                if swap <= self.now {
+                    return false;
+                }
+                next_event = next_event.min(swap);
+            }
+            let p = d.period(self.now);
+            for &ti in &self.island_tiles[i] {
+                let w = self.tile_wake[ti];
+                if w == WAKE_ON_INPUT {
+                    continue;
+                }
+                if w <= d.cycles {
+                    return false; // an awake tile: no span
+                }
+                let dt = (w - d.cycles).saturating_mul(p);
+                next_event = next_event.min(d.last_edge().saturating_add(dt));
+            }
+        }
+
+        // Host schedule entries and sampler deadlines are events too.
+        if self.schedule_next < self.schedule.len() {
+            let at = self.schedule[self.schedule_next].0;
+            if at <= self.now {
+                return false;
+            }
+            next_event = next_event.min(at);
+        }
+        if let Some(s) = &self.sampler {
+            let at = s.next_due();
+            if at <= self.now {
+                return false;
+            }
+            next_event = next_event.min(at);
+        }
+
+        // Deliver every edge strictly before the event (the event's own
+        // edge runs through the normal step path).
+        let target = t_end.min(next_event.saturating_sub(1));
+        if target <= self.now {
+            return false;
+        }
+        let mut delivered = 0;
+        for d in self.islands.iter_mut() {
+            delivered += d.advance_span(target);
+        }
+        if delivered == 0 {
+            return false;
+        }
+        self.edges += delivered;
+        self.engine_stats.coalesced_spans += 1;
+        self.engine_stats.coalesced_edges += delivered;
+        for (i, d) in self.islands.iter().enumerate() {
+            self.view.last_edges[i] = d.last_edge();
+            self.view.periods[i] = d.period(d.last_edge());
+        }
+        self.now = target;
+        self.heap.clear();
+        for (i, d) in self.islands.iter().enumerate() {
+            self.heap.push(Reverse((d.next_edge(d.last_edge()), i)));
+        }
+        true
     }
 
     /// Run the engine until simulated time `t_end`.
     pub fn run_until(&mut self, t_end: Ps) {
-        while self
-            .heap
-            .peek()
-            .map(|Reverse((t, _))| *t <= t_end)
-            .unwrap_or(false)
-        {
+        loop {
+            if self.quiet_edge && self.engine == EngineMode::IdleAware {
+                self.try_coalesce(t_end);
+                // One attempt per quiet edge: a failed probe stays
+                // failed until some edge does work again.
+                self.quiet_edge = false;
+            }
+            let due = self
+                .heap
+                .peek()
+                .map(|Reverse((t, _))| *t <= t_end)
+                .unwrap_or(false);
+            if !due {
+                break;
+            }
             self.step();
         }
         self.now = t_end;
@@ -495,6 +779,73 @@ mod tests {
             })
             .sum();
         assert!(completed > 20, "completed {completed}");
+    }
+
+    /// A small SoC with no self-driven traffic (TGs disabled, no MRA,
+    /// CPU not polling): the idle-aware engine should coalesce almost
+    /// the whole run.
+    fn quiet_soc() -> Soc {
+        let cfg = crate::scenario::Scenario::grid(2, 2)
+            .island("noc", 100)
+            .island("tg", 50)
+            .noc_island("noc")
+            .mem_at(0, 0)
+            .io_at_on(1, 0, "tg")
+            .fill_tg("tg")
+            .build()
+            .unwrap();
+        Soc::build(cfg, Box::new(RefCompute::new())).unwrap()
+    }
+
+    #[test]
+    fn idle_engine_coalesces_quiescent_spans() {
+        let mut soc = quiet_soc();
+        soc.run_until(10_000_000_000); // 10 ms
+        assert_eq!(soc.now, 10_000_000_000);
+        assert!(
+            soc.engine_stats.coalesced_edges > 0,
+            "{:?}",
+            soc.engine_stats
+        );
+        // Bulk-delivered edges keep the counters exact: 10 ms at
+        // 100 MHz / 50 MHz.
+        assert_eq!(soc.islands[0].cycles, 1_000_000);
+        assert_eq!(soc.islands[1].cycles, 500_000);
+        assert_eq!(soc.edges, 1_500_000);
+    }
+
+    #[test]
+    fn reference_engine_never_coalesces() {
+        let mut soc = quiet_soc();
+        soc.engine = EngineMode::Reference;
+        soc.run_until(1_000_000); // 1 us
+        assert_eq!(soc.engine_stats.coalesced_edges, 0);
+        assert_eq!(soc.islands[0].cycles, 100);
+    }
+
+    #[test]
+    fn sleeping_tiles_wake_on_host_toggle() {
+        let mut soc = quiet_soc();
+        soc.run_until(5_000_000_000); // all tiles asleep by now
+        assert!(soc.engine_stats.coalesced_edges > 0);
+        soc.host_set_tg_active(2);
+        soc.run_until(10_000_000_000);
+        assert!(
+            soc.mon.mem_pkts_in > 50,
+            "woken TGs must reach memory: {}",
+            soc.mon.mem_pkts_in
+        );
+    }
+
+    #[test]
+    fn coalescing_stops_at_schedule_entries() {
+        let mut soc = quiet_soc();
+        soc.schedule_freq(4_000_000_000, 0, 100); // no-op write, fixed island
+        soc.run_until(10_000_000_000);
+        // The entry applied (consumed), even though the whole run is
+        // quiescent and heavily coalesced.
+        assert_eq!(soc.schedule_next, 1);
+        assert!(soc.engine_stats.coalesced_edges > 0);
     }
 
     #[test]

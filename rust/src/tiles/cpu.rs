@@ -6,7 +6,7 @@
 use crate::monitor::mmio::{counter_addr, CounterReg};
 use crate::noc::{Msg, NodeId};
 
-use super::{ni::NetIface, TileCtx};
+use super::{ni::NetIface, TickOutcome, TileCtx};
 
 /// The CPU tile.
 pub struct CpuTile {
@@ -16,7 +16,10 @@ pub struct CpuTile {
     pub poll_targets: Vec<(NodeId, usize)>,
     /// Poll period in CPU cycles (0 = polling off).
     pub poll_interval: u32,
-    countdown: u32,
+    /// Island cycle at/after which the next poll fires. Absolute (not a
+    /// per-tick countdown) so the poll cadence survives skipped no-op
+    /// cycles unchanged; equal timing either way.
+    next_poll_cycle: u64,
     next_target: usize,
     tag: u32,
     /// Completed polls (read responses received).
@@ -32,7 +35,8 @@ impl CpuTile {
             tile_index,
             poll_targets: Vec::new(),
             poll_interval,
-            countdown: poll_interval,
+            // The legacy countdown fired on the (interval+1)-th tick.
+            next_poll_cycle: poll_interval as u64 + 1,
             next_target: 0,
             tag: 0,
             polls_completed: 0,
@@ -40,36 +44,45 @@ impl CpuTile {
         }
     }
 
-    pub fn tick(&mut self, ctx: &mut TileCtx<'_>) {
+    pub fn tick(&mut self, ctx: &mut TileCtx<'_>) -> TickOutcome {
+        let mut did_work = false;
         for pkt in self.ni.tick_rx(ctx.links, ctx.now, 0) {
             if let Msg::MmioResp { value, .. } = ctx.arena.get(pkt).msg {
                 self.polls_completed += 1;
                 self.last_value = value;
             }
             ctx.arena.release(pkt);
+            did_work = true;
         }
 
-        if self.poll_interval > 0 && !self.poll_targets.is_empty() {
-            if self.countdown > 0 {
-                self.countdown -= 1;
-            } else if self.ni.tx_backlog() < 4 {
-                let (node, tile) = self.poll_targets[self.next_target];
-                self.next_target = (self.next_target + 1) % self.poll_targets.len();
-                let addr = counter_addr(tile, CounterReg::ExecTime);
-                self.tag = self.tag.wrapping_add(1);
-                self.ni.send(
-                    ctx.arena,
-                    node,
-                    Msg::MmioRead {
-                        addr,
-                        tag: self.tag,
-                    },
-                    ctx.now,
-                );
-                self.countdown = self.poll_interval;
-            }
+        let polling = self.poll_interval > 0 && !self.poll_targets.is_empty();
+        if polling && ctx.cycle >= self.next_poll_cycle && self.ni.tx_backlog() < 4 {
+            let (node, tile) = self.poll_targets[self.next_target];
+            self.next_target = (self.next_target + 1) % self.poll_targets.len();
+            let addr = counter_addr(tile, CounterReg::ExecTime);
+            self.tag = self.tag.wrapping_add(1);
+            self.ni.send(
+                ctx.arena,
+                node,
+                Msg::MmioRead {
+                    addr,
+                    tag: self.tag,
+                },
+                ctx.now,
+            );
+            self.next_poll_cycle = ctx.cycle + self.poll_interval as u64 + 1;
+            did_work = true;
         }
 
         self.ni.tick_tx(ctx.links, ctx.arena, ctx.view, ctx.now);
+
+        if self.ni.tx_backlog() > 0 {
+            // Flits still to inject (or a poll deferred on backlog).
+            TickOutcome::active(true, ctx.cycle)
+        } else if polling {
+            TickOutcome::sleep_until(did_work, self.next_poll_cycle)
+        } else {
+            TickOutcome::on_input(did_work)
+        }
     }
 }

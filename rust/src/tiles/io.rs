@@ -9,7 +9,7 @@ use crate::monitor::mmio::{decode, MmioTarget};
 use crate::noc::Msg;
 use crate::util::time::Freq;
 
-use super::{ni::NetIface, TileCtx};
+use super::{ni::NetIface, TickOutcome, TileCtx};
 
 /// The I/O tile.
 pub struct IoTile {
@@ -44,8 +44,10 @@ impl IoTile {
         islands[island].request_freq(Freq::mhz(mhz), now).is_ok()
     }
 
-    pub fn tick(&mut self, ctx: &mut TileCtx<'_>) {
+    pub fn tick(&mut self, ctx: &mut TileCtx<'_>) -> TickOutcome {
+        let mut did_work = false;
         for pkt in self.ni.tick_rx(ctx.links, ctx.now, 0) {
+            did_work = true;
             let p = ctx.arena.get(pkt);
             let (src, msg) = (p.src, p.msg);
             match msg {
@@ -77,5 +79,10 @@ impl IoTile {
             ctx.arena.release(pkt);
         }
         self.ni.tick_tx(ctx.links, ctx.arena, ctx.view, ctx.now);
+        if self.ni.tx_backlog() > 0 {
+            TickOutcome::active(true, ctx.cycle)
+        } else {
+            TickOutcome::on_input(did_work)
+        }
     }
 }

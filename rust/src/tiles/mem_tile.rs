@@ -3,17 +3,14 @@
 
 use crate::mem::{MemController, MemParams, MemRequest};
 use crate::noc::{Msg, Plane};
-use crate::util::Ps;
 
-use super::{ni::NetIface, TileCtx};
+use super::{ni::NetIface, TickOutcome, TileCtx};
 
 /// The MEM tile.
 pub struct MemTile {
     pub ni: NetIface,
     pub tile_index: usize,
     pub ctrl: MemController,
-    /// Island period at the last tick (for the controller's clock).
-    last_period: Ps,
 }
 
 impl MemTile {
@@ -22,13 +19,14 @@ impl MemTile {
             ni,
             tile_index,
             ctrl: MemController::new(params),
-            last_period: 10_000,
         }
     }
 
-    pub fn tick(&mut self, ctx: &mut TileCtx<'_>) {
+    pub fn tick(&mut self, ctx: &mut TileCtx<'_>) -> TickOutcome {
+        let mut did_work = false;
+        // The controller clocks with the tile's island (NoC+MEM share a
+        // frequency island in the paper instance).
         let period = ctx.view.periods[self.ni.island];
-        self.last_period = period;
 
         // Back-pressure the request plane when the controller queue is
         // full — the NoC absorbs it (ejection FIFO fills, then credits).
@@ -38,6 +36,7 @@ impl MemTile {
             1 << Plane::Request.index()
         };
         for pkt in self.ni.tick_rx(ctx.links, ctx.now, hold) {
+            did_work = true;
             let p = ctx.arena.get(pkt);
             let (src, msg) = (p.src, p.msg);
             ctx.mon.mem_pkts_in += 1;
@@ -98,8 +97,20 @@ impl MemTile {
                 }
             };
             self.ni.send(ctx.arena, dst, msg, ctx.now);
+            did_work = true;
         }
 
         self.ni.tick_tx(ctx.links, ctx.arena, ctx.view, ctx.now);
+
+        // The controller needs per-cycle ticks while anything is queued
+        // or draining; with everything empty the tile is purely reactive.
+        let busy = self.ctrl.queued() > 0
+            || self.ctrl.pending_responses() > 0
+            || self.ni.tx_backlog() > 0;
+        if busy {
+            TickOutcome::active(true, ctx.cycle)
+        } else {
+            TickOutcome::on_input(did_work)
+        }
     }
 }

@@ -30,7 +30,7 @@ use crate::noc::{Msg, NodeId};
 use crate::util::Ps;
 
 use super::timing::{AccelTiming, DmaParams};
-use super::{ni::NetIface, TileCtx};
+use super::{ni::NetIface, TickOutcome, TileCtx};
 
 /// Snapshot of a replica's pipeline occupancy (debug/reporting).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -61,8 +61,10 @@ struct Replica {
     /// return in order).
     inflight: VecDeque<Ps>,
     // compute engine ------------------------------------------------
-    /// Remaining busy cycles; `None` = idle.
-    compute_remaining: Option<u64>,
+    /// Island cycle at which the running computation completes; `None`
+    /// = idle. Absolute (not a per-tick countdown) so a tile sleeping
+    /// through a compute-bound stretch finishes on the exact same edge.
+    compute_done_cycle: Option<u64>,
     // drain engine --------------------------------------------------
     /// Completed computations whose output is not yet written back.
     outputs_pending: u32,
@@ -87,7 +89,7 @@ impl Replica {
             beats_received: 0,
             inputs_ready: 0,
             inflight: VecDeque::new(),
-            compute_remaining: None,
+            compute_done_cycle: None,
             outputs_pending: 0,
             wr_bursts_pushed: 0,
             wr_beats_pushed: 0,
@@ -98,7 +100,7 @@ impl Replica {
     fn state(&self) -> ReplicaState {
         ReplicaState {
             inputs_ready: self.inputs_ready,
-            computing: self.compute_remaining.is_some(),
+            computing: self.compute_done_cycle.is_some(),
             outputs_pending: self.outputs_pending,
         }
     }
@@ -117,6 +119,10 @@ pub struct MraTile {
     mem_node: NodeId,
     /// Replicas currently in Compute (drives the tile exec-time counter).
     computing: usize,
+    /// Island cycle of the previous tick: a gap larger than one cycle
+    /// means the engine skipped provably-no-op cycles, whose exec-time
+    /// counts are credited in bulk on wake.
+    last_cycle: u64,
 
     // -- tile-level packetization state --------------------------------
     /// Write bursts announced on wrCtrl awaiting data: (replica, beats).
@@ -168,6 +174,7 @@ impl MraTile {
             replicas: (0..replicas).map(|_| Replica::new()).collect(),
             mem_node,
             computing: 0,
+            last_cycle: 0,
             pending_writes: VecDeque::new(),
             wr_data_avail: vec![0; replicas],
             rd_staging: VecDeque::new(),
@@ -212,13 +219,58 @@ impl MraTile {
     }
 
     /// One tile-clock cycle.
-    pub fn tick(&mut self, ctx: &mut TileCtx<'_>) {
+    pub fn tick(&mut self, ctx: &mut TileCtx<'_>) -> TickOutcome {
+        // Credit exec-time for skipped cycles: the engine only skips a
+        // computing tile while every other engine is frozen, so each
+        // missed cycle would have counted exactly one exec cycle.
+        let elapsed = ctx.cycle.saturating_sub(self.last_cycle);
+        if elapsed > 1 && self.computing > 0 {
+            ctx.mon
+                .tile_mut(self.tile_index)
+                .on_exec_cycles(elapsed - 1);
+        }
+        self.last_cycle = ctx.cycle;
+
         self.rx(ctx);
         self.feed_rd_staging();
         self.bridge.tick();
         self.tick_replicas(ctx);
         self.packetize(ctx);
         self.ni.tick_tx(ctx.links, ctx.arena, ctx.view, ctx.now);
+        self.outcome(ctx.cycle)
+    }
+
+    /// Post-tick wake computation: the tile must be ticked every cycle
+    /// while any engine can make progress on its own; with everything
+    /// drained and all replicas waiting, the only self-driven future
+    /// event is a running computation's completion cycle.
+    fn outcome(&self, cycle: u64) -> TickOutcome {
+        let read_bursts = self.timing.read_bursts(self.dma.burst_beats);
+        let restless = self.ni.tx_backlog() > 0
+            || !self.rd_staging.is_empty()
+            || !self.pending_writes.is_empty()
+            || self.wr_data_avail.iter().any(|&n| n > 0)
+            || !self.bridge.is_quiet()
+            || self.replicas.iter().any(|r| {
+                // Draining, startable, or able to issue another fetch.
+                r.outputs_pending > 0
+                    || (r.compute_done_cycle.is_none() && r.inputs_ready > 0)
+                    || ((r.bursts_issued > 0 || r.inputs_ready < INPUT_BUFFERS)
+                        && r.bursts_issued < read_bursts
+                        && r.outstanding < self.dma.max_outstanding)
+            });
+        if restless {
+            return TickOutcome::active(true, cycle);
+        }
+        match self
+            .replicas
+            .iter()
+            .filter_map(|r| r.compute_done_cycle)
+            .min()
+        {
+            Some(done) => TickOutcome::sleep_until(true, done),
+            None => TickOutcome::on_input(false),
+        }
     }
 
     /// Deliver incoming packets.
@@ -363,22 +415,20 @@ impl MraTile {
             }
 
             // ---- compute engine. ----
-            match self.replicas[r].compute_remaining {
+            match self.replicas[r].compute_done_cycle {
                 None => {
                     let rep = &mut self.replicas[r];
                     if rep.inputs_ready > 0 && rep.outputs_pending < OUTPUT_BUFFERS {
                         rep.inputs_ready -= 1;
-                        rep.compute_remaining = Some(self.timing.compute_cycles);
+                        rep.compute_done_cycle = Some(ctx.cycle + self.timing.compute_cycles);
                         if self.computing == 0 {
                             ctx.mon.tile_mut(self.tile_index).on_start(ctx.now);
                         }
                         self.computing += 1;
                     }
                 }
-                Some(remaining) => {
-                    if remaining > 1 {
-                        self.replicas[r].compute_remaining = Some(remaining - 1);
-                    } else {
+                Some(done) => {
+                    if ctx.cycle >= done {
                         self.finish_compute(r, ctx);
                     }
                 }
@@ -465,7 +515,7 @@ impl MraTile {
             ctx.mon.tile_mut(self.tile_index).on_complete(ctx.now);
         }
         let rep = &mut self.replicas[r];
-        rep.compute_remaining = None;
+        rep.compute_done_cycle = None;
         rep.outputs_pending += 1;
     }
 

@@ -12,7 +12,7 @@ use std::collections::VecDeque;
 use crate::noc::{Msg, NodeId};
 use crate::util::{Ps, SplitMix64};
 
-use super::{ni::NetIface, TileCtx};
+use super::{ni::NetIface, TickOutcome, TileCtx};
 
 /// The TG tile.
 pub struct TgTile {
@@ -26,7 +26,10 @@ pub struct TgTile {
     pub gap_cycles: u32,
     outstanding: usize,
     seq: u32,
-    gap_left: u32,
+    /// First island cycle at which the next burst may issue. Absolute
+    /// (the gap elapses in the background), so a sleeping TG wakes with
+    /// its cadence intact.
+    gap_until: u64,
     inflight: VecDeque<Ps>,
     rng: SplitMix64,
     mem_node: NodeId,
@@ -52,7 +55,7 @@ impl TgTile {
             gap_cycles: 0,
             outstanding: 0,
             seq: 0,
-            gap_left: 0,
+            gap_until: 0,
             inflight: VecDeque::new(),
             rng,
             mem_node,
@@ -60,9 +63,11 @@ impl TgTile {
         }
     }
 
-    pub fn tick(&mut self, ctx: &mut TileCtx<'_>) {
+    pub fn tick(&mut self, ctx: &mut TileCtx<'_>) -> TickOutcome {
+        let mut did_work = false;
         // Receive responses.
         for pkt in self.ni.tick_rx(ctx.links, ctx.now, 0) {
+            did_work = true;
             let msg = ctx.arena.get(pkt).msg;
             ctx.mon.tile_mut(self.tile_index).on_pkt_in();
             if let Msg::MemReadResp { .. } = msg {
@@ -78,9 +83,8 @@ impl TgTile {
         }
 
         // Issue new bursts.
-        if self.gap_left > 0 {
-            self.gap_left -= 1;
-        } else if self.enabled
+        if ctx.cycle >= self.gap_until
+            && self.enabled
             && self.outstanding < self.max_outstanding
             && self.ni.tx_backlog() < 8
         {
@@ -100,10 +104,21 @@ impl TgTile {
             self.inflight.push_back(ctx.now);
             self.seq = self.seq.wrapping_add(1);
             self.outstanding += 1;
-            self.gap_left = self.gap_cycles;
+            self.gap_until = ctx.cycle + self.gap_cycles as u64 + 1;
             ctx.mon.tile_mut(self.tile_index).on_pkt_out();
+            did_work = true;
         }
 
         self.ni.tick_tx(ctx.links, ctx.arena, ctx.view, ctx.now);
+
+        if self.ni.tx_backlog() > 0 {
+            TickOutcome::active(true, ctx.cycle)
+        } else if self.enabled && self.outstanding < self.max_outstanding {
+            // Next issue is gated only by the gap (backlog is clear).
+            TickOutcome::sleep_until(did_work, self.gap_until.max(ctx.cycle + 1))
+        } else {
+            // Saturated or disabled: a response (NoC input) unblocks us.
+            TickOutcome::on_input(did_work)
+        }
     }
 }

@@ -1,0 +1,248 @@
+//! Engine equivalence suite: the idle-aware engine must be bit-identical
+//! to the `reference` tick-everything engine on every observable —
+//! simulation time, delivered edges, island cycle counts, frequencies,
+//! all monitor counters, router statistics, sampler rows, and typed
+//! `PhaseReport`s — across the paper SoC, an all-idle SoC, and a
+//! mid-run DFS retune, plus a property sweep showing coalescing never
+//! jumps past a host schedule entry or a sampler deadline.
+
+use vespa::config::presets::{paper_soc, A1_POS, ISL_TG};
+use vespa::config::SocConfig;
+use vespa::runtime::RefCompute;
+use vespa::scenario::{ms, PhaseReport, Scenario, Session};
+use vespa::sim::{EngineMode, Soc};
+use vespa::tiles::Tile;
+use vespa::util::proptest::forall;
+
+/// Everything the engines must agree on, bit for bit.
+#[derive(Debug, PartialEq)]
+struct Snapshot {
+    now: u64,
+    edges: u64,
+    cycles: Vec<u64>,
+    freq_mhz: Vec<u64>,
+    /// Per tile: invocations, pkts in/out, rtt sum/count, exec cycles.
+    counters: Vec<(u64, u64, u64, u64, u64, u64)>,
+    mem_pkts_in: u64,
+    mem_beats_in: u64,
+    /// Summed router stats: flits, packets, stall cycles.
+    router_stats: (u64, u64, u64),
+    arena_live: usize,
+    tg_completed: u64,
+    /// Sampler rows, exactly (same deadlines, same edges, same values).
+    sampler: Option<Vec<(String, Vec<(u64, f64)>)>>,
+}
+
+fn snapshot(soc: &Soc) -> Snapshot {
+    Snapshot {
+        now: soc.now,
+        edges: soc.edges,
+        cycles: soc.islands.iter().map(|d| d.cycles).collect(),
+        freq_mhz: soc
+            .islands
+            .iter()
+            .map(|d| d.freq(soc.now).as_mhz())
+            .collect(),
+        counters: soc
+            .mon
+            .tiles
+            .iter()
+            .map(|c| {
+                (
+                    c.invocations,
+                    c.pkts_in,
+                    c.pkts_out,
+                    c.rtt_sum,
+                    c.rtt_count,
+                    c.exec_cycles,
+                )
+            })
+            .collect(),
+        mem_pkts_in: soc.mon.mem_pkts_in,
+        mem_beats_in: soc.mon.mem_beats_in,
+        router_stats: soc.fabric.routers.iter().fold((0, 0, 0), |a, r| {
+            (
+                a.0 + r.stats.flits,
+                a.1 + r.stats.packets,
+                a.2 + r.stats.stall_cycles,
+            )
+        }),
+        arena_live: soc.arena.live(),
+        tg_completed: soc
+            .tiles
+            .iter()
+            .map(|t| match t {
+                Tile::Tg(tg) => tg.completed,
+                _ => 0,
+            })
+            .sum(),
+        sampler: soc.sampler.as_ref().map(|s| {
+            s.series
+                .iter()
+                .map(|ts| {
+                    (
+                        ts.name.clone(),
+                        ts.samples.iter().map(|p| (p.t, p.value)).collect(),
+                    )
+                })
+                .collect()
+        }),
+    }
+}
+
+// ---------------------------------------------------------------------
+// (a) The paper SoC under a Session workload.
+// ---------------------------------------------------------------------
+
+fn run_paper_session(mode: EngineMode) -> (Snapshot, PhaseReport) {
+    let cfg = paper_soc(("dfmul", 2), ("dfadd", 1));
+    let mut s = Session::new(cfg).unwrap();
+    s.engine(mode);
+    let a1 = s.tile_at(A1_POS.0, A1_POS.1);
+    s.stage(a1, 1)
+        .unwrap()
+        .perf_only()
+        .with_tg_load(4)
+        .warmup(ms(2));
+    let report = s.measure(a1, ms(3)).unwrap();
+    let soc = s.into_soc();
+    (snapshot(&soc), report)
+}
+
+#[test]
+fn paper_soc_session_is_bit_identical() {
+    let (snap_idle, rep_idle) = run_paper_session(EngineMode::IdleAware);
+    let (snap_ref, rep_ref) = run_paper_session(EngineMode::Reference);
+    assert_eq!(snap_idle, snap_ref);
+    assert_eq!(rep_idle, rep_ref, "PhaseReports must match exactly");
+    assert!(rep_idle.invocations > 0, "workload actually ran");
+}
+
+// ---------------------------------------------------------------------
+// (b) An all-idle SoC — the coalescing-dominated extreme.
+// ---------------------------------------------------------------------
+
+fn quiet_cfg() -> SocConfig {
+    Scenario::grid(3, 2)
+        .name("equivalence-quiet")
+        .seed(0xE0)
+        .island_dfs("noc", 100, 10..=100, 5)
+        .island_dfs("tg", 50, 10..=50, 5)
+        .noc_island("noc")
+        .mem_at(0, 0)
+        .cpu_at_on(1, 0, "tg")
+        .io_at_on(2, 0, "tg")
+        .fill_tg("tg")
+        .build()
+        .unwrap()
+}
+
+fn build_quiet(mode: EngineMode, tgs: usize, gap: u32) -> Soc {
+    let mut soc = Soc::build(quiet_cfg(), Box::new(RefCompute::new())).unwrap();
+    soc.engine = mode;
+    for t in &mut soc.tiles {
+        if let Tile::Tg(tg) = t {
+            tg.gap_cycles = gap;
+        }
+    }
+    soc.host_set_tg_active(tgs);
+    soc
+}
+
+#[test]
+fn all_idle_soc_is_bit_identical_and_coalesces() {
+    let mut idle = build_quiet(EngineMode::IdleAware, 0, 0);
+    let mut reference = build_quiet(EngineMode::Reference, 0, 0);
+    idle.run_until(50_000_000_000); // 50 ms
+    reference.run_until(50_000_000_000);
+    assert_eq!(snapshot(&idle), snapshot(&reference));
+    assert!(
+        idle.engine_stats.coalesced_edges as f64 > idle.edges as f64 * 0.99,
+        "an idle SoC should be almost entirely coalesced: {:?}",
+        idle.engine_stats
+    );
+    assert_eq!(reference.engine_stats.coalesced_edges, 0);
+}
+
+#[test]
+fn sparse_bursty_tgs_are_bit_identical() {
+    let mut idle = build_quiet(EngineMode::IdleAware, 3, 800);
+    let mut reference = build_quiet(EngineMode::Reference, 3, 800);
+    idle.run_until(20_000_000_000); // 20 ms
+    reference.run_until(20_000_000_000);
+    assert_eq!(snapshot(&idle), snapshot(&reference));
+    let snap = snapshot(&idle);
+    assert!(snap.mem_pkts_in > 0, "bursts actually flowed");
+    assert!(
+        idle.engine_stats.coalesced_edges > 0 && idle.engine_stats.skipped_tile_ticks > 0,
+        "{:?}",
+        idle.engine_stats
+    );
+}
+
+// ---------------------------------------------------------------------
+// (c) Mid-run DFS retunes via the host schedule, with the sampler on.
+// ---------------------------------------------------------------------
+
+fn run_retune(mode: EngineMode) -> Snapshot {
+    // adpcm is compute-bound: long compute stretches exercise the MRA
+    // sleep-until-completion path and its exec-cycle bulk credit.
+    let cfg = paper_soc(("adpcm", 2), ("dfmul", 1));
+    let mut soc = Soc::build(cfg, Box::new(RefCompute::new())).unwrap();
+    soc.engine = mode;
+    soc.enable_sampler(100_000_000); // 100 us
+    soc.host_set_tg_active(6);
+    soc.schedule_freq(3_000_000_000, ISL_TG, 20);
+    soc.schedule_freq(6_000_000_000, 0, 10); // NoC+MEM island to 10 MHz
+    soc.schedule_freq(9_000_000_000, 0, 100);
+    soc.run_until(12_000_000_000); // 12 ms
+    snapshot(&soc)
+}
+
+#[test]
+fn dfs_retune_with_sampler_is_bit_identical() {
+    let idle = run_retune(EngineMode::IdleAware);
+    let reference = run_retune(EngineMode::Reference);
+    assert_eq!(idle, reference);
+    // The retunes really happened and the sampler really sampled.
+    assert_eq!(idle.freq_mhz[0], 100);
+    assert_eq!(idle.freq_mhz[ISL_TG], 20);
+    let rows = idle.sampler.as_ref().unwrap();
+    assert!(rows[0].1.len() > 100, "sampler rows: {}", rows[0].1.len());
+}
+
+// ---------------------------------------------------------------------
+// Property: coalescing never jumps past a schedule entry or a sampler
+// deadline, under randomized sparse workloads.
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_coalescing_respects_schedule_and_sampler() {
+    forall(
+        0xC0A1E5CE,
+        10,
+        |r| {
+            let interval = (r.next_below(20) + 1) * 10_000_000; // 10..200 us
+            let sched_t = (r.next_below(40) + 1) * 100_000_000; // 0.1..4 ms
+            let mhz = 10 + 5 * r.next_below(9); // 10..50 on the 5 MHz grid
+            let gap = r.next_below(3000) as u32;
+            let tgs = 1 + r.next_below(3) as usize;
+            (interval, sched_t, mhz, gap, tgs)
+        },
+        |&(interval, sched_t, mhz, gap, tgs)| {
+            let run = |mode: EngineMode| {
+                let mut soc = build_quiet(mode, tgs, gap);
+                soc.enable_sampler(interval);
+                soc.schedule_freq(sched_t, 1, mhz); // island 1 = "tg" (DFS)
+                soc.run_until(5_000_000_000); // 5 ms
+                snapshot(&soc)
+            };
+            let idle = run(EngineMode::IdleAware);
+            let reference = run(EngineMode::Reference);
+            assert_eq!(idle, reference);
+            // The sample cadence is exact: rows at every deadline edge.
+            let rows = &idle.sampler.as_ref().unwrap()[0].1;
+            assert!(rows.len() as u64 >= 5_000_000_000 / interval / 2);
+        },
+    );
+}
