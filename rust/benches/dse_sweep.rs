@@ -1,0 +1,125 @@
+//! Macro-bench: DSE sweep turnaround — the warm-start snapshot/fork
+//! planner against the cold per-point reference on a *frequency-major*
+//! sweep (one structure, many island-frequency pairs), the axis the
+//! paper's fine-grained DFS turns into a pure run-time knob.
+//!
+//! Cold pays (build + warmup + window) per point; WarmFork pays
+//! (build + warmup) once per structure and (fork + retune + settle +
+//! window) per point, so the speedup is the warmup amortization. Both
+//! timed sweeps run with `threads = 1` so the ratio measures simulation
+//! work, not the host's core count (the warm base is inherently serial
+//! while cold points all parallelize — auto threading would make the
+//! metric machine-dependent).
+//!
+//! Writes `BENCH_dse_sweep.json`; `warm_fork_speedup_vs_cold` is the
+//! CI-gated proof (>= 2x required). A final untimed pass cross-checks
+//! warm against cold results; the strict tolerance gates (20% per
+//! point, 10% mean, wide windows) live in `rust/tests/snapshot_fork.rs`
+//! — here the windows are deliberately short for timing, so the sanity
+//! bound is loose (fixed windows quantize by whole invocation bursts).
+
+use vespa::bench_harness::{Bench, BenchArgs, BenchReport};
+use vespa::dse::{clear_memo, memo_len, sweep_replication, SweepMode, SweepParams};
+
+fn sweep_params(quick: bool) -> SweepParams {
+    let mut p = SweepParams::quick("dfmul");
+    p.replications = vec![2];
+    if quick {
+        p.accel_mhz = vec![30, 40, 50];
+        p.noc_mhz = vec![50, 100];
+        p.warmup = 12_000_000_000; // 12 ms
+        p.window = 3_000_000_000; // 3 ms
+    } else {
+        p.accel_mhz = vec![25, 30, 35, 40, 45, 50];
+        p.noc_mhz = vec![50, 100];
+        p.warmup = 16_000_000_000; // 16 ms
+        p.window = 4_000_000_000; // 4 ms
+    }
+    p
+}
+
+fn main() {
+    let args = BenchArgs::from_env();
+    let quick = args.quick;
+
+    let points = sweep_params(quick).specs().len();
+    println!(
+        "dse_sweep: frequency-major sweep, {points} points ({} mode, threads=1)",
+        if quick { "quick" } else { "full" }
+    );
+
+    let bench = Bench::new(1, args.iters.unwrap_or(if quick { 2 } else { 3 }));
+    let mut report = BenchReport::new("dse_sweep");
+
+    // Cold reference: every point cold-builds and re-warms its own Soc.
+    // The memo cache is cleared inside the closure so every iteration
+    // really simulates.
+    let r_cold = bench.run("dse/cold-freq-sweep", |_| {
+        clear_memo();
+        let mut p = sweep_params(quick);
+        p.mode = SweepMode::Cold;
+        p.threads = 1;
+        sweep_replication(&p).expect("cold sweep")
+    });
+    println!("{}", r_cold.report());
+
+    // Warm-fork: one warmed base, forked + DFS-retuned per point.
+    let r_warm = bench.run("dse/warm-fork-freq-sweep", |_| {
+        clear_memo();
+        let mut p = sweep_params(quick);
+        p.mode = SweepMode::WarmFork;
+        p.threads = 1;
+        sweep_replication(&p).expect("warm-fork sweep")
+    });
+    println!("{}", r_warm.report());
+
+    // Untimed sanity cross-check (auto threads). Short timing windows
+    // quantize by whole invocation bursts (up to 2 replicas' worth each
+    // way), so the bound here is loose; snapshot_fork.rs holds the
+    // strict 20%/10% gates on statistically wide windows.
+    clear_memo();
+    let mut p = sweep_params(quick);
+    p.mode = SweepMode::Cold;
+    let cold = sweep_replication(&p).expect("cold sweep");
+    p.mode = SweepMode::WarmFork;
+    let warm = sweep_replication(&p).expect("warm-fork sweep");
+    let mut max_rel: f64 = 0.0;
+    for (c, w) in cold.iter().zip(&warm) {
+        assert_eq!((c.accel_mhz, c.noc_mhz), (w.accel_mhz, w.noc_mhz));
+        assert!(c.throughput_mbs > 0.0 && w.throughput_mbs > 0.0);
+        let rel = (c.throughput_mbs - w.throughput_mbs).abs() / c.throughput_mbs;
+        max_rel = max_rel.max(rel);
+    }
+    println!("warm-vs-cold max throughput deviation: {:.1}%", max_rel * 100.0);
+    assert!(
+        max_rel <= 0.5,
+        "warm-fork drifted {:.1}% from cold — beyond burst quantization",
+        max_rel * 100.0
+    );
+
+    // Memo: the sweeps just ran, so a re-run must be pure cache hits.
+    assert!(memo_len() >= 2 * points, "memo holds both modes");
+    let t0 = std::time::Instant::now();
+    let warm_again = sweep_replication(&p).expect("memoized re-run");
+    let memo_rerun = t0.elapsed();
+    assert_eq!(warm, warm_again, "memoized re-run must be identical");
+    println!("memoized re-run of {points} points: {memo_rerun:?}");
+
+    let speedup = r_cold.mean.as_secs_f64() / r_warm.mean.as_secs_f64();
+    println!("warm-fork speedup on frequency-major sweep: {speedup:.2}x");
+    report.metric("warm_fork_speedup_vs_cold", speedup);
+    report.metric("sweep_points", points as f64);
+    report.metric("warm_vs_cold_max_rel_dev", max_rel);
+    report.metric("memo_rerun_ns", memo_rerun.as_nanos() as f64);
+    report.push(r_cold);
+    report.push(r_warm);
+
+    let path = report.write(args.json_path()).expect("write bench report");
+    println!("wrote {}", path.display());
+
+    assert!(
+        speedup >= 2.0,
+        "warm-fork sweep must be >= 2x vs cold on a frequency-major sweep, got {speedup:.2}x"
+    );
+    println!("dse_sweep OK");
+}

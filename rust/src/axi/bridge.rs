@@ -75,7 +75,7 @@ struct MuxState {
 }
 
 /// The bridge.
-#[derive(Debug)]
+#[derive(Debug, Clone)]
 pub struct AxiBridge {
     params: BridgeParams,
     /// Per-replica upstream FIFOs: `up[stream][replica]`.

@@ -9,5 +9,6 @@ pub mod sweep;
 
 pub use pareto::pareto_front;
 pub use sweep::{
-    evaluate_point, sweep_replication, sweep_replication_serial, DsePoint, SweepParams,
+    clear_memo, effective_phases, evaluate_point, memo_len, sweep_replication,
+    sweep_replication_serial, DsePoint, SweepMode, SweepParams,
 };

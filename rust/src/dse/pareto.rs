@@ -2,21 +2,30 @@
 
 /// Indices of the Pareto-optimal points for (minimize cost, maximize
 /// benefit). Stable order (by cost ascending).
+///
+/// NaN-safe: ordering uses [`f64::total_cmp`], so a degenerate point
+/// (e.g. a zero-sample measurement window producing NaN throughput)
+/// sorts deterministically instead of panicking the whole sweep, and
+/// any point with a NaN cost or benefit is skipped outright — an
+/// incomparable point is never reported as optimal.
 pub fn pareto_front(points: &[(f64, f64)]) -> Vec<usize> {
     let mut idx: Vec<usize> = (0..points.len()).collect();
     idx.sort_by(|&a, &b| {
         points[a]
             .0
-            .partial_cmp(&points[b].0)
-            .unwrap()
-            .then(points[b].1.partial_cmp(&points[a].1).unwrap())
+            .total_cmp(&points[b].0)
+            .then(points[b].1.total_cmp(&points[a].1))
     });
     let mut front = Vec::new();
     let mut best = f64::NEG_INFINITY;
     for i in idx {
-        if points[i].1 > best {
+        let (cost, benefit) = points[i];
+        if cost.is_nan() || benefit.is_nan() {
+            continue;
+        }
+        if benefit > best {
             front.push(i);
-            best = points[i].1;
+            best = benefit;
         }
     }
     front
@@ -38,6 +47,25 @@ mod tests {
     #[test]
     fn single_point() {
         assert_eq!(pareto_front(&[(5.0, 5.0)]), vec![0]);
+    }
+
+    /// A degenerate zero-sample window can hand the sweep a NaN
+    /// throughput; the front must not panic and must not admit the NaN
+    /// point.
+    #[test]
+    fn nan_points_do_not_panic_or_enter_the_front() {
+        let pts = [
+            (1.0, 1.0),
+            (f64::NAN, f64::NAN),
+            (2.0, 3.0),
+            (3.0, f64::NAN),
+            (f64::NAN, 5.0), // NaN *cost* must be excluded too
+        ];
+        let f = pareto_front(&pts);
+        assert_eq!(f, vec![0, 2]);
+        // All-NaN input: deterministic, non-panicking, empty front.
+        let all = [(f64::NAN, f64::NAN); 3];
+        assert!(pareto_front(&all).is_empty());
     }
 
     #[test]

@@ -48,6 +48,14 @@
 //! path); [`dse::sweep`] and the `fig3`/`table1` experiments are built on
 //! it, with [`scenario::ScenarioSpec`] naming one paper-grid point.
 //!
+//! Sessions can be deep-frozen with [`scenario::Session::snapshot`] and
+//! forked any number of times ([`scenario::Session::resume`]),
+//! bit-identically (`rust/tests/snapshot_fork.rs`). The warm-start sweep
+//! planner ([`dse::SweepMode::WarmFork`]) builds on this: one warmed
+//! base SoC per structure, one snapshot fork + run-time DFS retune per
+//! frequency point, with a per-process memo cache on top — see
+//! `docs/PERF.md` ("Warm-start sweeps").
+//!
 //! The original low-level surface remains for existing code:
 //! [`config::presets::paper_soc`] is now a thin preset over the builder,
 //! and `sim::stage_inputs_for` + `sim::ThroughputProbe` still exist as

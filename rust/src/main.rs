@@ -16,7 +16,9 @@
 
 use vespa::cli::Args;
 use vespa::config::SocConfig;
-use vespa::dse::{pareto_front, sweep_replication, sweep_replication_serial, SweepParams};
+use vespa::dse::{
+    pareto_front, sweep_replication, sweep_replication_serial, SweepMode, SweepParams,
+};
 use vespa::experiments::{fig2, fig3, fig4, table1};
 use vespa::mem::Block;
 use vespa::report::{plot, Table};
@@ -52,6 +54,7 @@ fn usage() {
            --phase-ms N        Fig. 4 phase length (default 30)\n\
            --accel NAME        DSE target accelerator (default dfmul)\n\
            --serial            DSE: disable the parallel scenario runner\n\
+           --warm              DSE: warm-fork sweep (snapshot + DFS retune per point)\n\
            --artifacts DIR     use the PJRT backend from DIR\n\
            --duration-ms N     `run` duration (default 10)\n\
            --tg N              `run`: active TG count (default 0)"
@@ -212,6 +215,18 @@ fn cmd_dse(args: &Args) -> vespa::Result<()> {
         p.window = 4_000_000_000;
         p.warmup = 500_000_000;
     }
+    if args.flag("warm") {
+        // Warm-fork: one warmed base SoC per structure, frequency points
+        // fork its snapshot and retune through the DFS actuators.
+        p.mode = SweepMode::WarmFork;
+        // --serial selects the always-cold unmemoized reference path,
+        // which would silently drop --warm; a deterministic warm sweep
+        // is `--warm` alone with `threads = 1` semantics instead.
+        anyhow::ensure!(
+            !args.flag("serial"),
+            "--warm and --serial are mutually exclusive (--serial is the cold reference path)"
+        );
+    }
     // Parallel across cores by default; --serial for the reference path
     // (results are bit-identical either way).
     let pts = if args.flag("serial") {
@@ -241,6 +256,20 @@ fn cmd_dse(args: &Args) -> vespa::Result<()> {
         ]);
     }
     println!("{}", t.render());
+    // The evaluator floors warmup/window to the accelerator's invocation
+    // time; report what was actually simulated (spread over the sweep's
+    // frequency range when points disagree).
+    let lo = pts.iter().map(|pt| pt.eff_window_ps).min().unwrap_or(0);
+    let hi = pts.iter().map(|pt| pt.eff_window_ps).max().unwrap_or(0);
+    let wlo = pts.iter().map(|pt| pt.eff_warmup_ps).min().unwrap_or(0);
+    let whi = pts.iter().map(|pt| pt.eff_warmup_ps).max().unwrap_or(0);
+    println!(
+        "effective phases: warmup {:.1}..{:.1} ms, window {:.1}..{:.1} ms per point",
+        wlo as f64 / 1e9,
+        whi as f64 / 1e9,
+        lo as f64 / 1e9,
+        hi as f64 / 1e9
+    );
     Ok(())
 }
 

@@ -48,7 +48,7 @@ impl Block {
 }
 
 /// Free-listed arena of blocks.
-#[derive(Debug, Default)]
+#[derive(Debug, Default, Clone)]
 pub struct BlockStore {
     slots: Vec<Option<Block>>,
     free: Vec<u32>,

@@ -83,7 +83,7 @@ pub struct MemStats {
 }
 
 /// The controller.
-#[derive(Debug)]
+#[derive(Debug, Clone)]
 pub struct MemController {
     params: MemParams,
     queue: VecDeque<(Ps, MemRequest)>, // (arrival, request)

@@ -129,7 +129,7 @@ impl AccelCounters {
 }
 
 /// All monitor blocks of the SoC, indexed by tile.
-#[derive(Debug, Default)]
+#[derive(Debug, Default, Clone)]
 pub struct MonitorFile {
     pub tiles: Vec<AccelCounters>,
     /// Packets delivered to the MEM tile (Fig. 4's incoming-traffic

@@ -71,7 +71,7 @@ impl TimeSeries {
 
 /// Periodic sampler: fires every `interval` ps and records counters
 /// selected by a closure over the SoC state.
-#[derive(Debug)]
+#[derive(Debug, Clone)]
 pub struct Sampler {
     pub interval: Ps,
     next_at: Ps,

@@ -148,8 +148,10 @@ impl Flit {
 }
 
 /// Free-listed arena of live packets (no allocation in the hot loop once
-/// warmed up).
-#[derive(Debug, Default)]
+/// warmed up). `Clone` deep-copies every slot and the free list, so a
+/// forked simulation ([`crate::sim::Soc::fork`]) keeps identical packet
+/// ids and generation counters.
+#[derive(Debug, Default, Clone)]
 pub struct PacketArena {
     slots: Vec<Packet>,
     free: Vec<u32>,
@@ -209,6 +211,12 @@ impl PacketArena {
 
     pub fn allocated(&self) -> u64 {
         self.allocated
+    }
+
+    /// Total slots ever created (live + free-listed). Bounded by the
+    /// peak number of simultaneously live packets, not by `allocated`.
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
     }
 
     /// Build the `seq`-th flit of packet `id`.
@@ -286,6 +294,83 @@ mod tests {
         assert_eq!(id2.0, first_idx, "slot reused");
         assert_eq!(a.live(), 1);
         assert_eq!(a.allocated(), 2);
+    }
+
+    fn header_only(a: &mut PacketArena, tag: u32) -> PacketId {
+        a.alloc(NodeId(0), NodeId(1), Msg::MemWriteAck { tag }, 0)
+    }
+
+    /// Alloc/free/realloc cycles must keep the slot vector bounded by
+    /// the peak live count while the free list recycles indices.
+    #[test]
+    fn free_list_bounds_slot_growth() {
+        let mut a = PacketArena::new();
+        // Peak occupancy: 4 live packets.
+        let ids: Vec<PacketId> = (0..4).map(|i| header_only(&mut a, i)).collect();
+        assert_eq!(a.capacity(), 4);
+        // 100 full churn rounds at the same peak: no new slots.
+        let mut ids = ids;
+        for round in 0..100 {
+            for id in ids.drain(..) {
+                a.release(id);
+            }
+            assert_eq!(a.live(), 0);
+            ids = (0..4).map(|i| header_only(&mut a, round * 4 + i)).collect();
+            assert_eq!(a.live(), 4);
+            assert_eq!(a.capacity(), 4, "free list must recycle, not grow");
+        }
+        assert_eq!(a.allocated(), 4 * 101);
+    }
+
+    /// The `gen` counter must stay fresh across recycles: a slot reused
+    /// by a new packet carries a generation distinct from every earlier
+    /// occupant of the same slot.
+    #[test]
+    fn recycled_slots_get_fresh_generations() {
+        let mut a = PacketArena::new();
+        let mut seen = std::collections::HashSet::new();
+        let mut last_gen = 0;
+        for i in 0..50 {
+            let id = header_only(&mut a, i);
+            assert_eq!(id.0, 0, "single-packet churn reuses slot 0");
+            let gen = a.get(id).gen;
+            assert!(seen.insert(gen), "generation {gen} reused");
+            assert!(gen > last_gen, "generations must be monotonic");
+            last_gen = gen;
+            a.release(id);
+        }
+        assert_eq!(a.allocated(), 50);
+        assert_eq!(a.capacity(), 1);
+    }
+
+    /// Interleaved alloc/release (the NoC's steady state) keeps ids
+    /// valid: every live id resolves to its own packet, never a stale
+    /// neighbour's.
+    #[test]
+    fn interleaved_churn_keeps_ids_coherent() {
+        let mut a = PacketArena::new();
+        let mut live: Vec<(PacketId, u32)> = Vec::new();
+        for i in 0u32..200 {
+            if i % 3 == 2 {
+                let (id, tag) = live.remove((i as usize * 7) % live.len());
+                match a.get(id).msg {
+                    Msg::MemWriteAck { tag: t } => assert_eq!(t, tag),
+                    other => panic!("id {id:?} resolved to {other:?}"),
+                }
+                a.release(id);
+            } else {
+                let id = header_only(&mut a, i);
+                live.push((id, i));
+            }
+        }
+        for (id, tag) in live {
+            match a.get(id).msg {
+                Msg::MemWriteAck { tag: t } => assert_eq!(t, tag),
+                other => panic!("id {id:?} resolved to {other:?}"),
+            }
+            a.release(id);
+        }
+        assert_eq!(a.live(), 0);
     }
 
     #[test]

@@ -27,11 +27,22 @@ pub use refcompute::RefCompute;
 use crate::mem::Block;
 
 /// The functional datapath of an accelerator invocation.
-pub trait AccelCompute: Send {
+///
+/// `Send + Sync` so simulations (and frozen
+/// [`crate::scenario::SocSnapshot`]s) can move to and be shared across
+/// sweep worker threads; mutation still happens behind `&mut` from one
+/// thread at a time.
+pub trait AccelCompute: Send + Sync {
     /// Execute one invocation of accelerator `name` on `inputs`,
     /// returning the output blocks in manifest order.
     fn invoke(&mut self, name: &str, inputs: &[&Block]) -> crate::Result<Vec<Block>>;
 
     /// Implementation label (for logs/reports).
     fn backend(&self) -> &'static str;
+
+    /// Duplicate this backend for a forked simulation
+    /// ([`crate::sim::Soc::fork`]). Backends whose state cannot be
+    /// duplicated (compiled PJRT executables hold runtime handles)
+    /// return an error; the native [`RefCompute`] always succeeds.
+    fn fork(&self) -> crate::Result<Box<dyn AccelCompute>>;
 }

@@ -148,9 +148,19 @@ impl AccelCompute for PjrtCompute {
     fn backend(&self) -> &'static str {
         "pjrt"
     }
+
+    fn fork(&self) -> crate::Result<Box<dyn AccelCompute>> {
+        bail!(
+            "the PJRT backend holds compiled executables and cannot be \
+             forked; snapshot/fork sweeps need the native RefCompute \
+             backend"
+        )
+    }
 }
 
 // PjRtClient/LoadedExecutable wrap thread-safe XLA objects; the xla crate
-// just doesn't mark them Send. The simulator only ever uses the backend
-// from one thread at a time (it is behind &mut), so this is sound.
+// just doesn't mark them Send/Sync. The simulator only ever mutates the
+// backend from one thread at a time (it is behind &mut), so this is
+// sound.
 unsafe impl Send for PjrtCompute {}
+unsafe impl Sync for PjrtCompute {}

@@ -43,4 +43,8 @@ impl AccelCompute for PjrtCompute {
     fn backend(&self) -> &'static str {
         "pjrt-stub"
     }
+
+    fn fork(&self) -> crate::Result<Box<dyn AccelCompute>> {
+        bail!("PJRT backend unavailable (built without the `pjrt` feature); cannot fork")
+    }
 }

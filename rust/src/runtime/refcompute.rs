@@ -209,6 +209,10 @@ impl AccelCompute for RefCompute {
     fn backend(&self) -> &'static str {
         "ref"
     }
+
+    fn fork(&self) -> crate::Result<Box<dyn AccelCompute>> {
+        Ok(Box::new(self.clone()))
+    }
 }
 
 #[cfg(test)]

@@ -39,7 +39,7 @@ pub mod session;
 pub mod set;
 
 pub use builder::{IslandRef, Scenario};
-pub use session::{run_until_invocations, PhaseReport, Session};
+pub use session::{run_until_invocations, PhaseReport, Session, SocSnapshot};
 pub use set::{ScenarioSet, ScenarioSpec};
 
 use crate::util::Ps;

@@ -120,6 +120,33 @@ pub fn run_until_invocations(soc: &mut Soc, tile: usize, n: u64, cap: Ps) -> Ps 
     soc.now - start
 }
 
+/// A deep-frozen simulation instant: the complete [`Soc`] state (tiles,
+/// NoC links and routers, packet arena, block store, clock domains with
+/// in-flight DFS retimings, monitor counters, sampler traces, RNGs)
+/// plus the session's staged-block bookkeeping.
+///
+/// Created by [`Session::snapshot`]; any number of independent sessions
+/// can be forked from the same snapshot with [`Session::resume`] — the
+/// warm-start primitive `dse::sweep`'s `WarmFork` planner builds on
+/// (warm up one base SoC, fork it per frequency point, retune each fork
+/// through the DFS actuators).
+pub struct SocSnapshot {
+    soc: Soc,
+    staged: BTreeMap<usize, Vec<Vec<BlockId>>>,
+}
+
+impl SocSnapshot {
+    /// Simulation time the snapshot was taken at (ps).
+    pub fn now(&self) -> Ps {
+        self.soc.now
+    }
+
+    /// Read-only view of the frozen SoC.
+    pub fn soc(&self) -> &Soc {
+        &self.soc
+    }
+}
+
 /// A running simulation with declarative workload phases. See the
 /// [module docs](crate::scenario) for the quickstart.
 pub struct Session {
@@ -171,6 +198,31 @@ impl Session {
     /// Tile indices of all MRA tiles.
     pub fn mra_tiles(&self) -> Vec<usize> {
         self.soc.mra_tiles()
+    }
+
+    /// Freeze the complete simulation state into a [`SocSnapshot`].
+    ///
+    /// The session is untouched and keeps running; resuming the
+    /// snapshot (with unchanged frequencies) is bit-identical to
+    /// continuing this session — counters, sampler traces, and
+    /// [`PhaseReport`]s all agree exactly. Errors only if the
+    /// functional backend cannot be duplicated (PJRT; the default
+    /// `RefCompute` always can).
+    pub fn snapshot(&self) -> crate::Result<SocSnapshot> {
+        Ok(SocSnapshot {
+            soc: self.soc.fork()?,
+            staged: self.staged.clone(),
+        })
+    }
+
+    /// Fork a new independent session from `snap`. The snapshot is
+    /// reusable: every call forks a fresh simulation from the same
+    /// instant.
+    pub fn resume(snap: &SocSnapshot) -> crate::Result<Self> {
+        Ok(Self {
+            soc: snap.soc.fork()?,
+            staged: snap.staged.clone(),
+        })
     }
 
     /// Stage `sets` functional input sets for MRA tile `tile`.

@@ -7,7 +7,10 @@ use crate::noc::{
 };
 
 /// The physical interconnect: all planes' routers plus the shared link
-/// arena (router-to-router links, NI inject/eject FIFOs).
+/// arena (router-to-router links, NI inject/eject FIFOs). `Clone`
+/// deep-copies every FIFO and router (wormhole grants, stats) so a
+/// forked simulation continues bit-identically.
+#[derive(Clone)]
 pub struct Fabric {
     pub mesh: Mesh,
     pub links: Vec<LinkFifo>,

@@ -250,6 +250,46 @@ impl Soc {
         })
     }
 
+    /// Deep-copy the complete simulation state into an independent SoC.
+    ///
+    /// Everything observable is captured — tiles (DMA pipelines, NI FIFO
+    /// bookkeeping, per-tile RNGs), NoC routers/links with in-flight
+    /// flits, the packet arena, block store, clock domains with
+    /// in-flight DFS retimings, monitor counters, sampler traces, the
+    /// host schedule cursor, the edge heap, and the engine's wake/quiet
+    /// bookkeeping — so continuing the fork is bit-identical to
+    /// continuing `self` (proven in `rust/tests/snapshot_fork.rs`). The
+    /// two simulations share nothing afterwards.
+    ///
+    /// Errors only if the functional backend cannot be duplicated
+    /// ([`AccelCompute::fork`] — the PJRT backend's compiled executables
+    /// cannot; the native `RefCompute` always can).
+    pub fn fork(&self) -> crate::Result<Self> {
+        Ok(Self {
+            cfg: self.cfg.clone(),
+            islands: self.islands.clone(),
+            fabric: self.fabric.clone(),
+            tiles: self.tiles.clone(),
+            arena: self.arena.clone(),
+            blocks: self.blocks.clone(),
+            mon: self.mon.clone(),
+            compute: self.compute.fork()?,
+            now: self.now,
+            view: self.view.clone(),
+            island_tiles: self.island_tiles.clone(),
+            heap: self.heap.clone(),
+            sampler: self.sampler.clone(),
+            schedule: self.schedule.clone(),
+            schedule_next: self.schedule_next,
+            edges: self.edges,
+            engine: self.engine,
+            engine_stats: self.engine_stats,
+            tile_wake: self.tile_wake.clone(),
+            due_tiles: self.due_tiles.clone(),
+            quiet_edge: self.quiet_edge,
+        })
+    }
+
     /// Node index of the (unique) MEM tile.
     pub fn mem_node(&self) -> usize {
         let s = self.cfg.mem_tile();

@@ -9,6 +9,7 @@ use crate::noc::{Msg, NodeId};
 use super::{ni::NetIface, TickOutcome, TileCtx};
 
 /// The CPU tile.
+#[derive(Debug, Clone)]
 pub struct CpuTile {
     pub ni: NetIface,
     pub tile_index: usize,

@@ -12,6 +12,7 @@ use crate::util::time::Freq;
 use super::{ni::NetIface, TickOutcome, TileCtx};
 
 /// The I/O tile.
+#[derive(Debug, Clone)]
 pub struct IoTile {
     pub ni: NetIface,
     pub tile_index: usize,

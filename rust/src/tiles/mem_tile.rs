@@ -7,6 +7,7 @@ use crate::noc::{Msg, Plane};
 use super::{ni::NetIface, TickOutcome, TileCtx};
 
 /// The MEM tile.
+#[derive(Debug, Clone)]
 pub struct MemTile {
     pub ni: NetIface,
     pub tile_index: usize,

@@ -93,6 +93,9 @@ pub struct TileCtx<'a> {
 }
 
 /// A tile instance (enum dispatch keeps the hot loop monomorphic).
+/// `Clone` deep-copies the full tile state (NI FIFO bookkeeping, DMA
+/// pipelines, RNGs) for simulation forking.
+#[derive(Clone)]
 pub enum Tile {
     Cpu(cpu::CpuTile),
     Mem(mem_tile::MemTile),

@@ -46,7 +46,7 @@ pub struct ReplicaState {
 /// One accelerator replica: three loosely-coupled engines (fetch,
 /// compute, drain) sharing ping-pong buffers, as in ESP's DMA model —
 /// the *next* invocation's input DMA overlaps the current computation.
-#[derive(Debug)]
+#[derive(Debug, Clone)]
 struct Replica {
     // fetch engine --------------------------------------------------
     /// Read bursts issued for the in-progress prefetch round.
@@ -107,6 +107,7 @@ impl Replica {
 }
 
 /// The MRA tile.
+#[derive(Debug, Clone)]
 pub struct MraTile {
     pub ni: NetIface,
     /// Tile index in the SoC (monitor-file slot).

@@ -12,7 +12,7 @@ use crate::noc::{ClockView, LinkFifo, LinkId, Msg, NodeId, PacketArena, PacketId
 use crate::util::Ps;
 
 /// Per-plane NI endpoint state.
-#[derive(Debug, Default)]
+#[derive(Debug, Default, Clone)]
 struct PlaneState {
     /// Packets queued for injection.
     tx: VecDeque<PacketId>,
@@ -45,7 +45,7 @@ impl IntoIterator for RxDone {
 }
 
 /// The NI.
-#[derive(Debug)]
+#[derive(Debug, Clone)]
 pub struct NetIface {
     pub node: NodeId,
     /// Frequency island of the owning tile.

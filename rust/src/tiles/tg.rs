@@ -15,6 +15,7 @@ use crate::util::{Ps, SplitMix64};
 use super::{ni::NetIface, TickOutcome, TileCtx};
 
 /// The TG tile.
+#[derive(Debug, Clone)]
 pub struct TgTile {
     pub ni: NetIface,
     pub tile_index: usize,

@@ -1,0 +1,236 @@
+//! Snapshot/fork equivalence suite.
+//!
+//! `Session::snapshot()` + `Session::resume()` with unchanged
+//! frequencies must be **bit-identical** to continuing the original
+//! simulation — same counters, sampler traces, router stats, arena
+//! occupancy, and typed `PhaseReport`s — on the paper SoC, including a
+//! snapshot taken while a DFS retune is still in flight. On top of that
+//! contract, the warm-fork sweep planner (`SweepMode::WarmFork`) must
+//! return throughputs within a stated tolerance of the cold reference
+//! path across a frequency sweep (warm points measure after a run-time
+//! retune rather than a cold per-point warmup, so they are
+//! tolerance-gated, not bit-exact — see docs/PERF.md).
+
+use vespa::config::presets::{paper_soc, A1_POS, ISL_A1};
+use vespa::dse::{clear_memo, memo_len, sweep_replication, SweepMode, SweepParams};
+use vespa::scenario::{ms, PhaseReport, Session, SocSnapshot};
+use vespa::sim::Soc;
+use vespa::tiles::Tile;
+
+/// Everything a fork must agree on with its origin, bit for bit.
+#[derive(Debug, PartialEq)]
+struct Fingerprint {
+    now: u64,
+    edges: u64,
+    cycles: Vec<u64>,
+    freq_mhz: Vec<u64>,
+    /// Per tile: invocations, pkts in/out, rtt sum/count, exec cycles.
+    counters: Vec<(u64, u64, u64, u64, u64, u64)>,
+    mem_pkts_in: u64,
+    mem_beats_in: u64,
+    /// Summed router stats: flits, packets, stall cycles.
+    router_stats: (u64, u64, u64),
+    arena_live: usize,
+    arena_allocated: u64,
+    tg_completed: u64,
+    /// Sampler rows, exactly (same deadlines, same values).
+    sampler: Option<Vec<(String, Vec<(u64, f64)>)>>,
+}
+
+fn fingerprint(soc: &Soc) -> Fingerprint {
+    Fingerprint {
+        now: soc.now,
+        edges: soc.edges,
+        cycles: soc.islands.iter().map(|d| d.cycles).collect(),
+        freq_mhz: soc
+            .islands
+            .iter()
+            .map(|d| d.freq(soc.now).as_mhz())
+            .collect(),
+        counters: soc
+            .mon
+            .tiles
+            .iter()
+            .map(|c| {
+                (
+                    c.invocations,
+                    c.pkts_in,
+                    c.pkts_out,
+                    c.rtt_sum,
+                    c.rtt_count,
+                    c.exec_cycles,
+                )
+            })
+            .collect(),
+        mem_pkts_in: soc.mon.mem_pkts_in,
+        mem_beats_in: soc.mon.mem_beats_in,
+        router_stats: soc.fabric.routers.iter().fold((0, 0, 0), |a, r| {
+            (
+                a.0 + r.stats.flits,
+                a.1 + r.stats.packets,
+                a.2 + r.stats.stall_cycles,
+            )
+        }),
+        arena_live: soc.arena.live(),
+        arena_allocated: soc.arena.allocated(),
+        tg_completed: soc
+            .tiles
+            .iter()
+            .map(|t| match t {
+                Tile::Tg(tg) => tg.completed,
+                _ => 0,
+            })
+            .sum(),
+        sampler: soc.sampler.as_ref().map(|s| {
+            s.series
+                .iter()
+                .map(|ts| {
+                    (
+                        ts.name.clone(),
+                        ts.samples.iter().map(|p| (p.t, p.value)).collect(),
+                    )
+                })
+                .collect()
+        }),
+    }
+}
+
+/// A warmed paper-SoC session with traffic, sampling, and a staged
+/// accelerator — the state a warm-start sweep would snapshot.
+fn warmed_session() -> (Session, usize) {
+    let cfg = paper_soc(("dfmul", 2), ("dfadd", 1));
+    let mut s = Session::new(cfg).unwrap();
+    let a1 = s.tile_at(A1_POS.0, A1_POS.1);
+    s.sample_every(100_000_000); // 100 us
+    s.stage(a1, 1)
+        .unwrap()
+        .perf_only()
+        .with_tg_load(4)
+        .warmup(ms(2));
+    (s, a1)
+}
+
+fn continue_and_measure(s: &mut Session, tile: usize) -> (PhaseReport, Fingerprint) {
+    let report = s.measure(tile, ms(3)).unwrap();
+    (report, fingerprint(s.soc()))
+}
+
+#[test]
+fn fork_with_unchanged_frequencies_is_bit_identical() {
+    let (mut original, a1) = warmed_session();
+    let before = fingerprint(original.soc());
+    let snap: SocSnapshot = original.snapshot().unwrap();
+
+    // Taking the snapshot must not perturb the original.
+    assert_eq!(fingerprint(original.soc()), before);
+    assert_eq!(fingerprint(snap.soc()), before);
+    assert_eq!(snap.now(), original.soc().now);
+
+    // Continue the original and two independent resumes identically.
+    let (rep_orig, fp_orig) = continue_and_measure(&mut original, a1);
+    let mut fork_a = Session::resume(&snap).unwrap();
+    let mut fork_b = Session::resume(&snap).unwrap();
+    let (rep_a, fp_a) = continue_and_measure(&mut fork_a, a1);
+    let (rep_b, fp_b) = continue_and_measure(&mut fork_b, a1);
+
+    assert_eq!(rep_orig, rep_a, "PhaseReports must match exactly");
+    assert_eq!(rep_orig, rep_b, "snapshots must be reusable");
+    assert_eq!(fp_orig, fp_a);
+    assert_eq!(fp_orig, fp_b);
+    assert!(rep_orig.invocations > 0, "workload actually ran");
+    assert!(
+        fp_orig.sampler.as_ref().unwrap()[0].1.len() > 20,
+        "sampler traces compared"
+    );
+}
+
+#[test]
+fn fork_preserves_staged_blocks() {
+    let (original, a1) = warmed_session();
+    let snap = original.snapshot().unwrap();
+    let fork = Session::resume(&snap).unwrap();
+    assert_eq!(original.staged(a1), fork.staged(a1));
+    assert!(!fork.staged(a1).is_empty());
+}
+
+/// A snapshot taken while a DFS actuator swap is still in flight must
+/// capture the pending retime: both branches swap on the same edge.
+#[test]
+fn fork_mid_dfs_retune_is_bit_identical() {
+    let (mut original, a1) = warmed_session();
+    // Request A1: 50 -> 20 MHz; the dual-MMCM actuator swaps ~11 us
+    // later, so a snapshot right after the write is mid-retune.
+    original.freq(ISL_A1, 20).unwrap();
+    let snap = original.snapshot().unwrap();
+    let (rep_orig, fp_orig) = continue_and_measure(&mut original, a1);
+    let mut fork = Session::resume(&snap).unwrap();
+    let (rep_fork, fp_fork) = continue_and_measure(&mut fork, a1);
+    assert_eq!(rep_orig, rep_fork);
+    assert_eq!(fp_orig, fp_fork);
+    assert_eq!(fp_fork.freq_mhz[ISL_A1], 20, "the retune really landed");
+}
+
+/// WarmFork results must sit within the stated tolerance of the Cold
+/// reference across a >= 12-point frequency sweep: <= 20% per point and
+/// <= 10% on average (see docs/PERF.md for why warm points are
+/// tolerance-gated rather than bit-exact).
+#[test]
+fn warm_fork_sweep_is_within_tolerance_of_cold() {
+    // One replica (no lockstep completion bursts) and wide windows
+    // (>= 12 invocations per point) keep fixed-window quantization well
+    // under the gated tolerance.
+    let mut p = SweepParams::quick("dfmul");
+    p.replications = vec![1];
+    p.accel_mhz = vec![25, 30, 35, 40, 45, 50];
+    p.noc_mhz = vec![50, 100];
+    p.warmup = 1_000_000_000; // 1 ms
+    p.window = 12_000_000_000; // 12 ms
+    assert!(p.specs().len() >= 12, "frequency sweep must cover >= 12 points");
+
+    clear_memo();
+    p.mode = SweepMode::Cold;
+    let cold = sweep_replication(&p).unwrap();
+    p.mode = SweepMode::WarmFork;
+    let warm = sweep_replication(&p).unwrap();
+    assert_eq!(cold.len(), warm.len());
+    assert!(memo_len() >= cold.len() + warm.len(), "both sweeps memoized");
+
+    let mut rel_sum = 0.0;
+    for (c, w) in cold.iter().zip(&warm) {
+        // Identity and area must agree exactly; throughput within
+        // tolerance.
+        assert_eq!(
+            (c.accel.as_str(), c.replicas, c.accel_mhz, c.noc_mhz, c.near_mem),
+            (w.accel.as_str(), w.replicas, w.accel_mhz, w.noc_mhz, w.near_mem)
+        );
+        assert_eq!(c.area, w.area);
+        assert!(c.throughput_mbs > 0.0 && w.throughput_mbs > 0.0);
+        let rel = (c.throughput_mbs - w.throughput_mbs).abs() / c.throughput_mbs;
+        assert!(
+            rel <= 0.20,
+            "point {}@{}MHz/noc{}MHz: cold {:.3} vs warm {:.3} MB/s ({:.1}% off)",
+            c.accel,
+            c.accel_mhz,
+            c.noc_mhz,
+            c.throughput_mbs,
+            w.throughput_mbs,
+            rel * 100.0
+        );
+        rel_sum += rel;
+        // Observability: warm points report the (longer) shared warmup
+        // they actually rest on, and the same effective window.
+        assert_eq!(c.eff_window_ps, w.eff_window_ps);
+        assert!(w.eff_warmup_ps > 0);
+    }
+    let rel_mean = rel_sum / cold.len() as f64;
+    assert!(
+        rel_mean <= 0.10,
+        "mean warm-vs-cold deviation {:.1}% exceeds 10%",
+        rel_mean * 100.0
+    );
+
+    // Memoization: re-running either sweep must hit the cache (tested
+    // here via the identical results contract).
+    let warm2 = sweep_replication(&p).unwrap();
+    assert_eq!(warm, warm2, "memoized re-run must be identical");
+}
