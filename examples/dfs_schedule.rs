@@ -27,7 +27,7 @@ fn main() -> vespa::Result<()> {
         (ms(30), ISL_TG, 50),
         (ms(50), ISL_NOC, 100),
     ]);
-    run_with_policy(session.soc_mut(), &mut sched, ms(1), ms(80));
+    run_with_policy(session.soc_mut(), &mut sched, ms(1), ms(80))?;
     println!("schedule: {} steps applied, {} rejected ({})", 3, sched.rejected, sched.name());
 
     let sampler = session.soc().sampler.as_ref().unwrap();

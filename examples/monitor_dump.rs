@@ -26,7 +26,7 @@ fn main() -> vespa::Result<()> {
 
     // Run with the reactive policy watching A2's round-trip times.
     let mut pol = ReactiveDfs::new(0, vec![a2], 3_000.0, 300.0);
-    run_with_policy(session.soc_mut(), &mut pol, ms(20), ms(200));
+    run_with_policy(session.soc_mut(), &mut pol, ms(20), ms(200))?;
 
     let soc = session.soc();
     let mut t = Table::new(

@@ -1,0 +1,62 @@
+//! Serving example: drive the paper's 4x4 SoC with ramping Poisson
+//! traffic — dfmul replicated in A1 *and* A2, JSQ dispatch across the
+//! two tiles, and the queue-driven DFS governor holding a p95 SLO on
+//! the A1 island while the load triples.
+//!
+//!   cargo run --release --example serve_traffic
+
+use vespa::config::presets::{paper_soc, A1_POS, A2_POS, ISL_A1};
+use vespa::report::{plot, Table};
+use vespa::scenario::{ms, Session};
+use vespa::serve::{Arrival, DispatchPolicy, GovernorSpec, ServeSpec};
+
+fn main() -> vespa::Result<()> {
+    let slo = ms(8); // p95 target per phase
+    let mut session = Session::new(paper_soc(("dfmul", 2), ("dfmul", 2)))?;
+    let a1 = session.tile_at(A1_POS.0, A1_POS.1);
+    let a2 = session.tile_at(A2_POS.0, A2_POS.1);
+
+    // Start the governed island low: the governor must *earn* its
+    // frequency as the ramp arrives.
+    session.freq(ISL_A1, 10)?;
+
+    let mut summary = Table::new(
+        "ramping Poisson load — JSQ across A1+A2, governor on A1",
+        &["phase", "offered rps", "achieved rps", "p95 ms", "p99 ms", "dropped", "A1 MHz"],
+    );
+    let mut last_depths = None;
+    for (phase, rps) in [(1u32, 500.0), (2, 1500.0), (3, 3000.0)] {
+        let spec = ServeSpec::new(Arrival::Poisson { rps }, ms(120))
+            .tiles(vec![a1, a2])
+            .policy(DispatchPolicy::JoinShortestQueue)
+            .slo(slo)
+            .sample_interval(ms(2))
+            .seed(0xE5B + phase as u64)
+            .governor(GovernorSpec {
+                depth_high: 2.0,
+                ..GovernorSpec::new(ISL_A1, slo)
+            });
+        let report = session.serve(&spec)?;
+        summary.row(&[
+            phase.to_string(),
+            format!("{:.0}", report.offered_rps),
+            format!("{:.0}", report.achieved_rps),
+            format!("{:.3}", report.latency.p95_ms()),
+            format!("{:.3}", report.latency.p99_ms()),
+            report.dropped.to_string(),
+            report.final_freq_mhz[ISL_A1].to_string(),
+        ]);
+        println!("{}", report.render());
+        last_depths = Some(report.queue_depth);
+    }
+    println!("{}", summary.render());
+
+    if let Some(depths) = last_depths {
+        let refs: Vec<&vespa::monitor::TimeSeries> = depths.iter().collect();
+        println!("queue depth during the final phase:");
+        println!("{}", plot(&refs, 70, 12));
+    }
+
+    println!("serve_traffic OK");
+    Ok(())
+}

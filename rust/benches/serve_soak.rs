@@ -1,0 +1,155 @@
+//! Macro-bench: the serve subsystem under sustained open-loop load
+//! ("soak"), with the tail-latency claims the ISSUE gates on:
+//!
+//! * JSQ p99 <= round-robin p99 at equal offered load on a
+//!   replicated-accelerator SoC (heterogeneous tile frequencies);
+//! * the `QueueGovernor` meets a p95 SLO that a static low frequency
+//!   misses, and ends below the always-max frequency.
+//!
+//! Every serve run is inherently single-threaded (`threads = 1`
+//! semantics): one host loop drives one SoC, so the timings measure
+//! simulation work, not core count. Writes `BENCH_serve_soak.json`;
+//! `rr_over_jsq_p99` and `achieved_rps` are CI-gated.
+
+use vespa::bench_harness::{Bench, BenchArgs, BenchReport};
+use vespa::scenario::{ms, Scenario, Session};
+use vespa::serve::{Arrival, DispatchPolicy, GovernorSpec, ServeReport, ServeSpec};
+
+/// Two single-replica dfmul tiles at 50 / 15 MHz (replica-aware
+/// dispatch across tiles; heterogeneity makes policy quality visible).
+fn two_tile_session() -> Session {
+    let cfg = Scenario::grid(2, 2)
+        .name("serve-soak-2x2")
+        .seed(0xE5B)
+        .island("noc", 100)
+        .island_dfs("fast", 50, 10..=50, 5)
+        .island_dfs("slow", 15, 10..=50, 5)
+        .noc_island("noc")
+        .mem_at(0, 0)
+        .accel_at(1, 0, "dfmul", 1, "fast")
+        .accel_at(0, 1, "dfmul", 1, "slow")
+        .io_at_on(1, 1, "noc")
+        .build()
+        .unwrap();
+    Session::new(cfg).unwrap()
+}
+
+/// One 2-replica dfmul tile on a 10..=50 MHz island (index 1).
+fn governed_session(start_mhz: u64) -> Session {
+    let cfg = Scenario::grid(2, 2)
+        .name("serve-soak-governed")
+        .seed(0xE5B)
+        .island("noc", 100)
+        .island_dfs("acc", start_mhz, 10..=50, 5)
+        .noc_island("noc")
+        .mem_at(0, 0)
+        .accel_at(1, 0, "dfmul", 2, "acc")
+        .io_at_on(0, 1, "noc")
+        .fill_tg("noc")
+        .build()
+        .unwrap();
+    Session::new(cfg).unwrap()
+}
+
+fn soak_spec(policy: DispatchPolicy, duration_ms: u64) -> ServeSpec {
+    ServeSpec::new(Arrival::Poisson { rps: 2000.0 }, ms(duration_ms))
+        .policy(policy)
+        .seed(0xFEED)
+}
+
+fn run_policy(policy: DispatchPolicy, duration_ms: u64) -> ServeReport {
+    two_tile_session().serve(&soak_spec(policy, duration_ms)).expect("serve run")
+}
+
+fn main() {
+    let args = BenchArgs::from_env();
+    let quick = args.quick;
+    let duration_ms: u64 = if quick { 100 } else { 200 };
+    let slo = ms(10);
+
+    println!(
+        "serve_soak: 2000 rps Poisson for {duration_ms} ms per run ({} mode, threads=1)",
+        if quick { "quick" } else { "full" }
+    );
+
+    let bench = Bench::new(1, args.iters.unwrap_or(if quick { 2 } else { 3 }));
+    let mut report = BenchReport::new("serve_soak");
+
+    // Timed sections: one full serve run per policy.
+    let r_rr = bench.run("serve/rr-soak", |_| {
+        run_policy(DispatchPolicy::RoundRobin, duration_ms)
+    });
+    println!("{}", r_rr.report());
+    let r_jsq = bench.run("serve/jsq-soak", |_| {
+        run_policy(DispatchPolicy::JoinShortestQueue, duration_ms)
+    });
+    println!("{}", r_jsq.report());
+
+    // Untimed runs for the gated tail-latency claims.
+    let rr = run_policy(DispatchPolicy::RoundRobin, duration_ms);
+    let jsq = run_policy(DispatchPolicy::JoinShortestQueue, duration_ms);
+    assert_eq!(rr.offered, jsq.offered, "equal offered load");
+    println!(
+        "p99: rr {:.3} ms, jsq {:.3} ms | achieved: rr {:.0}, jsq {:.0} rps",
+        rr.latency.p99_ms(),
+        jsq.latency.p99_ms(),
+        rr.achieved_rps,
+        jsq.achieved_rps
+    );
+    assert!(
+        jsq.latency.p99_ps <= rr.latency.p99_ps,
+        "JSQ p99 {:.3} ms must not exceed RR p99 {:.3} ms",
+        jsq.latency.p99_ms(),
+        rr.latency.p99_ms()
+    );
+
+    // Governor: static 10 MHz misses the SLO; governed from 10 MHz
+    // meets it and ends below the 50 MHz ceiling.
+    let gov_spec = |governed: bool| {
+        let s = ServeSpec::new(Arrival::Poisson { rps: 1200.0 }, ms(2 * duration_ms))
+            .policy(DispatchPolicy::JoinShortestQueue)
+            .slo(slo)
+            .sample_interval(ms(2))
+            .seed(0x50C);
+        if governed {
+            s.governor(GovernorSpec {
+                depth_high: 2.0,
+                ..GovernorSpec::new(1, slo)
+            })
+        } else {
+            s
+        }
+    };
+    let r_low = governed_session(10).serve(&gov_spec(false)).expect("static low");
+    let r_gov = governed_session(10).serve(&gov_spec(true)).expect("governed");
+    println!(
+        "governor: static-low p95 {:.3} ms, governed p95 {:.3} ms, final {} MHz ({} actions)",
+        r_low.latency.p95_ms(),
+        r_gov.latency.p95_ms(),
+        r_gov.final_freq_mhz[1],
+        r_gov.governor_actions.len()
+    );
+    assert_eq!(r_low.slo_met, Some(false), "static low must miss the SLO");
+    assert_eq!(r_gov.slo_met, Some(true), "governor must meet the SLO");
+    assert!(
+        r_gov.final_freq_mhz[1] < 50,
+        "governor must settle below always-max, got {} MHz",
+        r_gov.final_freq_mhz[1]
+    );
+
+    let rr_over_jsq = rr.latency.p99_ps / jsq.latency.p99_ps;
+    report.metric("rr_over_jsq_p99", rr_over_jsq);
+    report.metric("jsq_p99_ms", jsq.latency.p99_ms());
+    report.metric("rr_p99_ms", rr.latency.p99_ms());
+    report.metric("achieved_rps", jsq.achieved_rps);
+    report.metric("governor_p95_ms", r_gov.latency.p95_ms());
+    report.metric("static_low_p95_ms", r_low.latency.p95_ms());
+    report.metric("governor_final_mhz", r_gov.final_freq_mhz[1] as f64);
+    report.metric("dropped_jsq", jsq.dropped as f64);
+    report.push(r_rr);
+    report.push(r_jsq);
+
+    let path = report.write(args.json_path()).expect("write bench report");
+    println!("wrote {}", path.display());
+    println!("serve_soak OK");
+}

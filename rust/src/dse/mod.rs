@@ -3,12 +3,18 @@
 //! area model plus (optionally) a short simulation; report the Pareto
 //! frontier of area vs. throughput — the workflow the paper's abstract
 //! promises ("effectively exploring a multitude of solutions").
+//!
+//! Points are scored by steady-state throughput by default; set
+//! [`SweepParams::objective`] to [`Objective::TailLatency`] to serve
+//! traffic at every point instead and rank by p99-under-SLO
+//! ([`rank_by_p99_under_slo`], `vespa dse --serve-rps N --slo-ms M`).
 
 pub mod pareto;
 pub mod sweep;
 
 pub use pareto::pareto_front;
 pub use sweep::{
-    clear_memo, effective_phases, evaluate_point, memo_len, sweep_replication,
-    sweep_replication_serial, DsePoint, SweepMode, SweepParams,
+    clear_memo, effective_phases, evaluate_point, evaluate_point_serving, memo_len,
+    rank_by_p99_under_slo, sweep_replication, sweep_replication_serial, DsePoint, Objective,
+    SweepMode, SweepParams,
 };

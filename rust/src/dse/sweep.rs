@@ -21,9 +21,9 @@
 //!
 //! Both [`sweep_replication`] paths additionally memoize evaluated
 //! points in a per-process cache keyed by the canonicalized spec (plus
-//! sweep mode), so repeated points across [`ScenarioSet`]s and Pareto
-//! iterations never re-simulate ([`clear_memo`] resets it, e.g. between
-//! bench runs).
+//! sweep mode and [`Objective`] fingerprint), so repeated points across
+//! [`ScenarioSet`]s and Pareto iterations never re-simulate
+//! ([`clear_memo`] resets it, e.g. between bench runs).
 
 use std::collections::HashMap;
 use std::sync::{Mutex, OnceLock};
@@ -32,8 +32,28 @@ use crate::clock::domain::FreqError;
 use crate::config::presets::ISL_NOC;
 use crate::resources::{mra_area, AccelArea, Utilization, XC7V2000T};
 use crate::scenario::{ScenarioSet, ScenarioSpec, Session, SocSnapshot};
+use crate::serve::ServeSpec;
 use crate::tiles::AccelTiming;
 use crate::util::Ps;
+
+/// What a sweep optimizes for.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub enum Objective {
+    /// Steady-state throughput over a warmup/measure window (Table I) —
+    /// the historical metric.
+    #[default]
+    Throughput,
+    /// Tail latency under served traffic: each point serves `spec`'s
+    /// arrivals on its accelerator-under-test and is ranked by
+    /// p99-under-SLO ([`rank_by_p99_under_slo`]) instead of raw MB/s.
+    /// Serving starts from a quiescent accelerator, so these sweeps
+    /// always evaluate cold regardless of [`SweepParams::mode`].
+    TailLatency {
+        /// Serving phase run at every point (`tiles` is overridden with
+        /// the point's accelerator-under-test).
+        spec: ServeSpec,
+    },
+}
 
 /// One evaluated design point.
 #[derive(Debug, Clone, PartialEq)]
@@ -54,6 +74,14 @@ pub struct DsePoint {
     /// window, floored so slow accelerators complete enough
     /// invocations).
     pub eff_window_ps: Ps,
+    /// Exact p99 end-to-end latency (ps) under
+    /// [`Objective::TailLatency`]; `None` for throughput points or when
+    /// nothing completed.
+    pub p99_latency_ps: Option<f64>,
+    /// Achieved completion rate (req/s) under serving objectives.
+    pub achieved_rps: Option<f64>,
+    /// Whether the serving SLO was met (p95 within the spec's SLO).
+    pub slo_met: Option<bool>,
 }
 
 /// How a sweep turns design points into simulations.
@@ -88,6 +116,9 @@ pub struct SweepParams {
     /// Worker threads (`0` = all cores, `1` = serial — deterministic
     /// wall-clock comparisons and profiling).
     pub threads: usize,
+    /// What each point is scored on (default
+    /// [`Objective::Throughput`]).
+    pub objective: Objective,
 }
 
 impl SweepParams {
@@ -103,6 +134,7 @@ impl SweepParams {
             warmup: 2_000_000_000,
             mode: SweepMode::Cold,
             threads: 0,
+            objective: Objective::Throughput,
         }
     }
 
@@ -161,8 +193,20 @@ fn invocation_ps(timing: &AccelTiming, accel_mhz: u64) -> Ps {
 /// as the cache key *itself* (hash-then-equality in the map, so hash
 /// collisions cannot return the wrong point). Fields: accel, replicas,
 /// accel/NoC MHz, placement, effective warmup/window, raw
-/// warmup/window (WarmFork only), mode.
-type MemoKey = (String, usize, u64, u64, bool, Ps, Ps, Ps, Ps, SweepMode);
+/// warmup/window (WarmFork only), mode, objective fingerprint (empty
+/// for throughput; the full serving spec's debug form otherwise).
+type MemoKey = (String, usize, u64, u64, bool, Ps, Ps, Ps, Ps, SweepMode, String);
+
+/// Cache-key component for the sweep objective. The serving spec's
+/// `Debug` form is deterministic and covers every field that changes a
+/// serving result, so two objectives share an entry iff they simulate
+/// identically.
+fn objective_fingerprint(objective: &Objective) -> String {
+    match objective {
+        Objective::Throughput => String::new(),
+        Objective::TailLatency { spec } => format!("{spec:?}"),
+    }
+}
 
 fn memo() -> &'static Mutex<HashMap<MemoKey, DsePoint>> {
     static MEMO: OnceLock<Mutex<HashMap<MemoKey, DsePoint>>> = OnceLock::new();
@@ -175,7 +219,11 @@ fn memo() -> &'static Mutex<HashMap<MemoKey, DsePoint>> {
 /// entry). A warm-fork run additionally depends on the raw spec phases
 /// — they size the shared base warmup via [`StructuralKey`] — so
 /// WarmFork keys include them too.
-fn memo_key(spec: &ScenarioSpec, mode: SweepMode) -> crate::Result<MemoKey> {
+fn memo_key(
+    spec: &ScenarioSpec,
+    mode: SweepMode,
+    objective: &Objective,
+) -> crate::Result<MemoKey> {
     let (eff_warmup, eff_window) = effective_phases(spec)?;
     let (raw_warmup, raw_window) = match mode {
         SweepMode::Cold => (0, 0),
@@ -192,6 +240,7 @@ fn memo_key(spec: &ScenarioSpec, mode: SweepMode) -> crate::Result<MemoKey> {
         raw_warmup,
         raw_window,
         mode,
+        objective_fingerprint(objective),
     ))
 }
 
@@ -237,6 +286,34 @@ pub fn evaluate_point(spec: &ScenarioSpec) -> crate::Result<DsePoint> {
     point_from_report(spec, report.start, report.elapsed, report.throughput_mbs)
 }
 
+/// Evaluate one design point under served traffic: build the SoC cold,
+/// serve `serve`'s arrivals on the accelerator-under-test, and score
+/// the point by its tail latency (`serve.tiles` is overridden with that
+/// tile). Throughput is still reported — as the *achieved* credited
+/// bytes over the offered-load horizon, not a steady-state window.
+pub fn evaluate_point_serving(
+    spec: &ScenarioSpec,
+    serve: &ServeSpec,
+) -> crate::Result<DsePoint> {
+    let cfg = spec.to_config()?;
+    let mut session = Session::new(cfg)?;
+    let pos = spec.position();
+    let tile = session.tile_at(pos.0, pos.1);
+    let mut sspec = serve.clone();
+    sspec.tiles = vec![tile];
+    let report = session.serve(&sspec)?;
+
+    let timing = AccelTiming::lookup(&spec.accel)?;
+    let dur_s = report.duration as f64 / 1e12;
+    let throughput_mbs =
+        report.completed as f64 * timing.credit_bytes as f64 / 1e6 / dur_s;
+    let mut pt = point_from_report(spec, 0, report.elapsed, throughput_mbs)?;
+    pt.p99_latency_ps = (report.completed > 0).then_some(report.latency.p99_ps);
+    pt.achieved_rps = Some(report.achieved_rps);
+    pt.slo_met = report.slo_met;
+    Ok(pt)
+}
+
 fn point_from_report(
     spec: &ScenarioSpec,
     eff_warmup_ps: Ps,
@@ -254,7 +331,37 @@ fn point_from_report(
         throughput_mbs,
         eff_warmup_ps,
         eff_window_ps,
+        p99_latency_ps: None,
+        achieved_rps: None,
+        slo_met: None,
     })
+}
+
+/// Rank points for a serving sweep: SLO-met points first (by p99
+/// ascending), then points with latency data but no met SLO, then
+/// points with no latency data at all; index order breaks exact ties.
+/// Returns indices into `points`, best first.
+pub fn rank_by_p99_under_slo(points: &[DsePoint]) -> Vec<usize> {
+    let group = |p: &DsePoint| -> u8 {
+        match (p.slo_met, p.p99_latency_ps) {
+            (Some(true), _) => 0,
+            (_, Some(_)) => 1,
+            _ => 2,
+        }
+    };
+    let mut idx: Vec<usize> = (0..points.len()).collect();
+    idx.sort_by(|&a, &b| {
+        let (pa, pb) = (&points[a], &points[b]);
+        group(pa)
+            .cmp(&group(pb))
+            .then(
+                pa.p99_latency_ps
+                    .unwrap_or(f64::INFINITY)
+                    .total_cmp(&pb.p99_latency_ps.unwrap_or(f64::INFINITY)),
+            )
+            .then(a.cmp(&b))
+    });
+    idx
 }
 
 // ---------------------------------------------------------------------
@@ -341,7 +448,7 @@ fn sweep_warm_fork(specs: &[ScenarioSpec], threads: usize) -> crate::Result<Vec<
     let mut out: Vec<Option<DsePoint>> = vec![None; specs.len()];
     let mut groups: Vec<(StructuralKey, Vec<(usize, MemoKey)>)> = Vec::new();
     for (i, spec) in specs.iter().enumerate() {
-        let key = memo_key(spec, SweepMode::WarmFork)?;
+        let key = memo_key(spec, SweepMode::WarmFork, &Objective::Throughput)?;
         if let Some(hit) = memo_get(&key) {
             out[i] = Some(hit);
             continue;
@@ -407,24 +514,44 @@ fn sweep_warm_fork(specs: &[ScenarioSpec], threads: usize) -> crate::Result<Vec<
 /// typically several times faster on frequency-major sweeps.
 pub fn sweep_replication(p: &SweepParams) -> crate::Result<Vec<DsePoint>> {
     let specs = p.specs();
-    match p.mode {
-        SweepMode::Cold => ScenarioSet::new(specs).run_with_threads(p.threads, |spec| {
-            let key = memo_key(spec, SweepMode::Cold)?;
-            if let Some(hit) = memo_get(&key) {
-                return Ok(hit);
-            }
-            let pt = evaluate_point(spec)?;
-            memo_put(key, &pt);
-            Ok(pt)
-        }),
-        SweepMode::WarmFork => sweep_warm_fork(&specs, p.threads),
+    match (&p.objective, p.mode) {
+        // Serving sweeps always evaluate cold: each point's tile must
+        // start quiescent, so there is no warmup to amortize by forking.
+        (Objective::TailLatency { spec: serve }, _) => {
+            ScenarioSet::new(specs).run_with_threads(p.threads, |spec| {
+                let key = memo_key(spec, SweepMode::Cold, &p.objective)?;
+                if let Some(hit) = memo_get(&key) {
+                    return Ok(hit);
+                }
+                let pt = evaluate_point_serving(spec, serve)?;
+                memo_put(key, &pt);
+                Ok(pt)
+            })
+        }
+        (Objective::Throughput, SweepMode::Cold) => {
+            ScenarioSet::new(specs).run_with_threads(p.threads, |spec| {
+                let key = memo_key(spec, SweepMode::Cold, &Objective::Throughput)?;
+                if let Some(hit) = memo_get(&key) {
+                    return Ok(hit);
+                }
+                let pt = evaluate_point(spec)?;
+                memo_put(key, &pt);
+                Ok(pt)
+            })
+        }
+        (Objective::Throughput, SweepMode::WarmFork) => sweep_warm_fork(&specs, p.threads),
     }
 }
 
 /// Serial reference path for the sweep (equivalence baseline,
-/// profiling). Always cold and never memoized, regardless of `p.mode`.
+/// profiling). Always cold and never memoized, regardless of `p.mode`;
+/// the objective is honoured.
 pub fn sweep_replication_serial(p: &SweepParams) -> crate::Result<Vec<DsePoint>> {
-    ScenarioSet::new(p.specs()).run_serial(evaluate_point)
+    match &p.objective {
+        Objective::Throughput => ScenarioSet::new(p.specs()).run_serial(evaluate_point),
+        Objective::TailLatency { spec: serve } => ScenarioSet::new(p.specs())
+            .run_serial(|spec| evaluate_point_serving(spec, serve)),
+    }
 }
 
 /// Utilization check of a point against the paper's device.
@@ -498,27 +625,94 @@ mod tests {
         // Cold: two specs whose raw warmups differ but whose *effective*
         // phases agree must share one cache entry; changing a frequency
         // or the mode must not.
+        let thr = Objective::Throughput;
         let a = ScenarioSpec::new("dfmul", 1).warmup(1).window(1);
         let b = ScenarioSpec::new("dfmul", 1).warmup(2).window(2);
         assert_eq!(
-            memo_key(&a, SweepMode::Cold).unwrap(),
-            memo_key(&b, SweepMode::Cold).unwrap()
+            memo_key(&a, SweepMode::Cold, &thr).unwrap(),
+            memo_key(&b, SweepMode::Cold, &thr).unwrap()
         );
         let c = ScenarioSpec::new("dfmul", 1).warmup(1).window(1).accel_mhz(25);
         assert_ne!(
-            memo_key(&a, SweepMode::Cold).unwrap(),
-            memo_key(&c, SweepMode::Cold).unwrap()
+            memo_key(&a, SweepMode::Cold, &thr).unwrap(),
+            memo_key(&c, SweepMode::Cold, &thr).unwrap()
         );
         assert_ne!(
-            memo_key(&a, SweepMode::Cold).unwrap(),
-            memo_key(&a, SweepMode::WarmFork).unwrap()
+            memo_key(&a, SweepMode::Cold, &thr).unwrap(),
+            memo_key(&a, SweepMode::WarmFork, &thr).unwrap()
         );
         // WarmFork: the raw phases size the shared base warmup, so
         // specs differing only in raw warmup must NOT share an entry.
         assert_ne!(
-            memo_key(&a, SweepMode::WarmFork).unwrap(),
-            memo_key(&b, SweepMode::WarmFork).unwrap()
+            memo_key(&a, SweepMode::WarmFork, &thr).unwrap(),
+            memo_key(&b, SweepMode::WarmFork, &thr).unwrap()
         );
+    }
+
+    #[test]
+    fn memo_keys_distinguish_objectives() {
+        use crate::serve::Arrival;
+        let a = ScenarioSpec::new("dfmul", 1).warmup(1).window(1);
+        let thr = Objective::Throughput;
+        let serve_1k = Objective::TailLatency {
+            spec: ServeSpec::new(Arrival::Poisson { rps: 1000.0 }, 50_000_000_000),
+        };
+        let serve_2k = Objective::TailLatency {
+            spec: ServeSpec::new(Arrival::Poisson { rps: 2000.0 }, 50_000_000_000),
+        };
+        let k_thr = memo_key(&a, SweepMode::Cold, &thr).unwrap();
+        let k_1k = memo_key(&a, SweepMode::Cold, &serve_1k).unwrap();
+        let k_2k = memo_key(&a, SweepMode::Cold, &serve_2k).unwrap();
+        assert_ne!(k_thr, k_1k, "serving points must not hit throughput entries");
+        assert_ne!(k_1k, k_2k, "different traffic, different entry");
+        assert_eq!(k_1k, memo_key(&a, SweepMode::Cold, &serve_1k).unwrap());
+    }
+
+    #[test]
+    fn serving_objective_scores_a_point_by_tail_latency() {
+        use crate::serve::Arrival;
+        // A light, short serving phase: just prove the plumbing — p99
+        // and achieved rps populated, SLO judged, throughput credited.
+        let spec = ScenarioSpec::new("dfmul", 2);
+        let serve = ServeSpec::new(Arrival::Poisson { rps: 800.0 }, 30_000_000_000)
+            .slo(20_000_000_000)
+            .seed(7);
+        let pt = evaluate_point_serving(&spec, &serve).unwrap();
+        assert!(pt.p99_latency_ps.is_some());
+        assert!(pt.p99_latency_ps.unwrap() > 0.0);
+        assert!(pt.achieved_rps.unwrap() > 100.0, "{:?}", pt.achieved_rps);
+        assert_eq!(pt.slo_met, Some(true), "p99 {:?}", pt.p99_latency_ps);
+        assert!(pt.throughput_mbs > 0.0);
+    }
+
+    #[test]
+    fn rank_by_p99_orders_met_then_latency() {
+        let base = || DsePoint {
+            accel: "dfmul".into(),
+            replicas: 1,
+            accel_mhz: 50,
+            noc_mhz: 100,
+            near_mem: true,
+            area: Utilization::default(),
+            throughput_mbs: 0.0,
+            eff_warmup_ps: 0,
+            eff_window_ps: 0,
+            p99_latency_ps: None,
+            achieved_rps: None,
+            slo_met: None,
+        };
+        let mut fast_met = base();
+        fast_met.p99_latency_ps = Some(1e9);
+        fast_met.slo_met = Some(true);
+        let mut slow_met = base();
+        slow_met.p99_latency_ps = Some(3e9);
+        slow_met.slo_met = Some(true);
+        let mut missed = base();
+        missed.p99_latency_ps = Some(0.5e9);
+        missed.slo_met = Some(false);
+        let no_data = base();
+        let pts = vec![no_data, missed, slow_met, fast_met];
+        assert_eq!(rank_by_p99_under_slo(&pts), vec![3, 2, 1, 0]);
     }
 
     #[test]

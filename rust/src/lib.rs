@@ -63,6 +63,20 @@
 //! code; the hand-rolled choreography is considered deprecated and no
 //! longer appears anywhere in this crate's experiments or examples.
 //!
+//! ## Serving traffic
+//!
+//! [`serve`] layers *request serving* on top of sessions: arrival
+//! processes ([`serve::Arrival`] — Poisson, bursts, traces, closed
+//! loop), replica-aware dispatch across MRA tiles with bounded
+//! admission queues ([`serve::DispatchPolicy`]), exact
+//! p50/p95/p99/max latency reporting ([`serve::ServeReport`]), and a
+//! queue-driven DFS governor ([`serve::QueueGovernor`]) that boosts an
+//! island when queues or tail latency breach an SLO and relaxes it
+//! when idle. Drive it with [`scenario::Session::serve`] or the
+//! `vespa serve` CLI subcommand; `dse` sweeps can rank design points by
+//! p99-under-SLO via [`dse::Objective::TailLatency`]. See
+//! `docs/API.md` ("Serving traffic").
+//!
 //! ## The idle-aware engine
 //!
 //! Simulation runs on an idle-aware event engine ([`sim::Soc`],
@@ -100,6 +114,7 @@ pub mod report;
 pub mod resources;
 pub mod runtime;
 pub mod scenario;
+pub mod serve;
 pub mod sim;
 pub mod tiles;
 pub mod util;

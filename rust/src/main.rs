@@ -2,6 +2,7 @@
 //!
 //! Subcommands:
 //!   run <config.toml>   simulate a SoC described by a config file
+//!   serve               serve open-loop traffic with replica-aware dispatch
 //!   table1              reproduce Table I (area + throughput, 1x/2x/4x)
 //!   fig2 | floorplan    reproduce Fig. 2 (floorplan)
 //!   fig3                reproduce Fig. 3 (throughput vs TG pressure)
@@ -15,9 +16,11 @@
 //! applicable; experiments default to the native reference backend.
 
 use vespa::cli::Args;
+use vespa::config::presets::{A1_POS, A2_POS};
 use vespa::config::SocConfig;
 use vespa::dse::{
-    pareto_front, sweep_replication, sweep_replication_serial, SweepMode, SweepParams,
+    pareto_front, rank_by_p99_under_slo, sweep_replication, sweep_replication_serial, Objective,
+    SweepMode, SweepParams,
 };
 use vespa::experiments::{fig2, fig3, fig4, table1};
 use vespa::mem::Block;
@@ -25,6 +28,7 @@ use vespa::report::{plot, Table};
 use vespa::resources::AccelArea;
 use vespa::runtime::{AccelCompute, Manifest, PjrtCompute, RefCompute};
 use vespa::scenario::Session;
+use vespa::serve::{Arrival, DispatchPolicy, GovernorSpec, ServeSpec};
 use vespa::tiles::AccelTiming;
 
 fn main() {
@@ -47,17 +51,28 @@ fn main() {
 
 fn usage() {
     eprintln!(
-        "usage: vespa <run|table1|fig2|fig3|fig4|dse|validate|accels|artifacts-check> [options]\n\
+        "usage: vespa <run|serve|table1|fig2|fig3|fig4|dse|validate|accels|artifacts-check> [options]\n\
          options:\n\
            --invocations N     Table I measurement window (default 6)\n\
            --window-ms N       Fig. 3 window per point (default 10)\n\
            --phase-ms N        Fig. 4 phase length (default 30)\n\
-           --accel NAME        DSE target accelerator (default dfmul)\n\
+           --accel NAME        DSE/serve target accelerator (default dfmul)\n\
            --serial            DSE: disable the parallel scenario runner\n\
            --warm              DSE: warm-fork sweep (snapshot + DFS retune per point)\n\
+           --serve-rps N       DSE: rank points by p99-under-SLO at N req/s\n\
+           --serve-ms N        DSE: serving horizon per point in ms (default 100)\n\
            --artifacts DIR     use the PJRT backend from DIR\n\
-           --duration-ms N     `run` duration (default 10)\n\
-           --tg N              `run`: active TG count (default 0)"
+           --duration-ms N     `run`/`serve` duration (default 10 / 200)\n\
+           --tg N              `run`: active TG count (default 0)\n\
+         serve options:\n\
+           --replicas K        replicas per accelerator tile (default 2)\n\
+           --rps N             offered Poisson load in req/s (default 1000)\n\
+           --policy P          dispatch: rr | jsq | least (default jsq)\n\
+           --queue N           per-tile admission queue bound (default 32)\n\
+           --slo-ms N          p95 latency SLO in ms\n\
+           --governor          queue-driven DFS governor on the A1 island\n\
+           --tile T            serve one tile only: a1 | a2 (default both)\n\
+           --seed N            arrival seed (default 0xE5B)"
     );
 }
 
@@ -71,6 +86,7 @@ fn backend(args: &Args) -> vespa::Result<Box<dyn AccelCompute>> {
 fn dispatch(args: &Args) -> vespa::Result<()> {
     match args.subcommand.as_deref() {
         Some("run") => cmd_run(args),
+        Some("serve") => cmd_serve(args),
         Some("table1") => {
             let inv = args.opt_u64("invocations", 6)?;
             let (t, rows) = table1::run(inv)?;
@@ -203,6 +219,66 @@ fn cmd_run(args: &Args) -> vespa::Result<()> {
     Ok(())
 }
 
+/// Serve open-loop Poisson traffic on the paper SoC: the same
+/// accelerator in A1 and A2 (replica-aware dispatch across tiles, each
+/// tile spreading credited invocations across its own replicas), with
+/// optional SLO judging and the queue-driven DFS governor.
+fn cmd_serve(args: &Args) -> vespa::Result<()> {
+    use vespa::config::presets::{paper_soc, ISL_A1, ISL_A2};
+
+    let accel = args.opt_str("accel", "dfmul");
+    AccelTiming::lookup(&accel)?; // clean error before the preset panics
+    let replicas = args.opt_usize("replicas", 2)?;
+    anyhow::ensure!(
+        (1..=16).contains(&replicas),
+        "--replicas {replicas} out of [1, 16]"
+    );
+    let rps = args.opt_u64("rps", 1000)? as f64;
+    let duration = args.opt_u64("duration-ms", 200)? * 1_000_000_000;
+    let policy = DispatchPolicy::parse(&args.opt_str("policy", "jsq"))?;
+    let queue = args.opt_usize("queue", 32)?;
+    let seed = args.opt_u64("seed", 0xE5B)?;
+    let slo_ms = args.opt_u64("slo-ms", 0)?;
+
+    let cfg = paper_soc((accel.as_str(), replicas), (accel.as_str(), replicas));
+    let mut session = Session::with_backend(cfg, backend(args)?)?;
+    let a1 = session.tile_at(A1_POS.0, A1_POS.1);
+    let a2 = session.tile_at(A2_POS.0, A2_POS.1);
+    let (tiles, gov_island) = match args.opt("tile") {
+        None => (vec![a1, a2], ISL_A1),
+        Some("a1") => (vec![a1], ISL_A1),
+        Some("a2") => (vec![a2], ISL_A2),
+        Some(other) => anyhow::bail!("--tile must be a1 or a2, got {other:?}"),
+    };
+
+    let mut spec = ServeSpec::new(Arrival::Poisson { rps }, duration)
+        .tiles(tiles)
+        .policy(policy)
+        .queue_capacity(queue)
+        .seed(seed);
+    if slo_ms > 0 {
+        spec = spec.slo(slo_ms * 1_000_000_000);
+    }
+    if args.flag("governor") {
+        // The governor needs a latency target; default the SLO to 5 ms.
+        let slo_eff_ms = if slo_ms > 0 { slo_ms } else { 5 };
+        let slo = slo_eff_ms * 1_000_000_000;
+        if slo_ms == 0 {
+            spec = spec.slo(slo);
+        }
+        spec = spec.governor(GovernorSpec::new(gov_island, slo));
+    }
+
+    let report = session.serve(&spec)?;
+    println!("{}", report.render());
+    let depth_refs: Vec<&vespa::monitor::TimeSeries> = report.queue_depth.iter().collect();
+    if depth_refs.iter().any(|s| s.samples.len() > 1) {
+        println!("queue depth over time:");
+        println!("{}", plot(&depth_refs, 70, 12));
+    }
+    Ok(())
+}
+
 fn cmd_dse(args: &Args) -> vespa::Result<()> {
     let accel = args.opt_str("accel", "dfmul");
     let mut p = SweepParams::quick(&accel);
@@ -226,6 +302,27 @@ fn cmd_dse(args: &Args) -> vespa::Result<()> {
             !args.flag("serial"),
             "--warm and --serial are mutually exclusive (--serial is the cold reference path)"
         );
+    }
+    let serve_rps = args.opt_u64("serve-rps", 0)?;
+    if serve_rps > 0 {
+        // Rank by p99-under-SLO: serve traffic at every point instead
+        // of measuring a steady-state window.
+        anyhow::ensure!(
+            !args.flag("warm"),
+            "--serve-rps and --warm are mutually exclusive (serving sweeps evaluate cold)"
+        );
+        let slo = args.opt_u64("slo-ms", 10)? * 1_000_000_000;
+        let dur = args.opt_u64("serve-ms", 100)? * 1_000_000_000;
+        p.objective = Objective::TailLatency {
+            spec: ServeSpec::new(
+                Arrival::Poisson {
+                    rps: serve_rps as f64,
+                },
+                dur,
+            )
+            .policy(DispatchPolicy::JoinShortestQueue)
+            .slo(slo),
+        };
     }
     // Parallel across cores by default; --serial for the reference path
     // (results are bit-identical either way).
@@ -256,6 +353,35 @@ fn cmd_dse(args: &Args) -> vespa::Result<()> {
         ]);
     }
     println!("{}", t.render());
+    if matches!(p.objective, Objective::TailLatency { .. }) {
+        let order = rank_by_p99_under_slo(&pts);
+        let mut t2 = Table::new(
+            "serving rank — p99 under SLO",
+            &["rank", "K", "accel MHz", "NoC MHz", "p99 ms", "rps", "SLO"],
+        );
+        for (rank, &i) in order.iter().enumerate() {
+            let pt = &pts[i];
+            t2.row(&[
+                (rank + 1).to_string(),
+                pt.replicas.to_string(),
+                pt.accel_mhz.to_string(),
+                pt.noc_mhz.to_string(),
+                pt.p99_latency_ps
+                    .map(|v| format!("{:.3}", v / 1e9))
+                    .unwrap_or_else(|| "-".to_string()),
+                pt.achieved_rps
+                    .map(|v| format!("{v:.0}"))
+                    .unwrap_or_else(|| "-".to_string()),
+                match pt.slo_met {
+                    Some(true) => "met",
+                    Some(false) => "miss",
+                    None => "-",
+                }
+                .to_string(),
+            ]);
+        }
+        println!("{}", t2.render());
+    }
     // The evaluator floors warmup/window to the accelerator's invocation
     // time; report what was actually simulated (spread over the sweep's
     // frequency range when points disagree).

@@ -11,7 +11,7 @@ pub struct Sample {
 }
 
 /// A named time series.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct TimeSeries {
     pub name: String,
     pub samples: Vec<Sample>,

@@ -30,12 +30,25 @@ pub trait DfsPolicy {
 
 /// Drive a policy over a simulation run: invokes `policy.on_sample`
 /// every `interval` ps while advancing the SoC to `t_end`.
+///
+/// Errors on `interval == 0` (the loop could never advance past its
+/// first sample point — historically an infinite loop). A horizon at or
+/// before `soc.now` is a no-op: the simulation never runs backwards and
+/// no samples fire.
 pub fn run_with_policy(
     soc: &mut Soc,
     policy: &mut dyn DfsPolicy,
     interval: Ps,
     t_end: Ps,
-) {
+) -> crate::Result<()> {
+    anyhow::ensure!(
+        interval > 0,
+        "run_with_policy: interval must be positive (policy {:?} would never advance)",
+        policy.name()
+    );
+    if t_end <= soc.now {
+        return Ok(());
+    }
     let mut next = soc.now + interval;
     while soc.now < t_end {
         let target = next.min(t_end);
@@ -44,5 +57,69 @@ pub fn run_with_policy(
             policy.on_sample(soc, soc.now);
             next += interval;
         }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::RefCompute;
+    use crate::scenario::Scenario;
+
+    struct CountingPolicy(usize);
+
+    impl DfsPolicy for CountingPolicy {
+        fn on_sample(&mut self, _soc: &mut Soc, _now: Ps) {
+            self.0 += 1;
+        }
+
+        fn name(&self) -> &'static str {
+            "counting"
+        }
+    }
+
+    fn tiny_soc() -> Soc {
+        let cfg = Scenario::grid(2, 2)
+            .island("noc", 100)
+            .noc_island("noc")
+            .mem_at(0, 0)
+            .io_at(1, 0)
+            .fill_tg("noc")
+            .build()
+            .unwrap();
+        Soc::build(cfg, Box::new(RefCompute::new())).unwrap()
+    }
+
+    /// Regression: `interval == 0` used to loop forever (`next` never
+    /// advanced past `soc.now`); it must now be a clean error.
+    #[test]
+    fn zero_interval_is_an_error_not_a_hang() {
+        let mut soc = tiny_soc();
+        let mut pol = CountingPolicy(0);
+        let err = run_with_policy(&mut soc, &mut pol, 0, 1_000_000).unwrap_err();
+        assert!(err.to_string().contains("interval"), "{err}");
+        assert_eq!(pol.0, 0, "no samples fired");
+        assert_eq!(soc.now, 0, "time did not advance");
+    }
+
+    #[test]
+    fn horizon_at_or_before_now_is_a_noop() {
+        let mut soc = tiny_soc();
+        soc.run_until(5_000_000);
+        let mut pol = CountingPolicy(0);
+        run_with_policy(&mut soc, &mut pol, 1_000, 5_000_000).unwrap();
+        run_with_policy(&mut soc, &mut pol, 1_000, 1_000_000).unwrap();
+        assert_eq!(pol.0, 0);
+        assert_eq!(soc.now, 5_000_000, "time never runs backwards");
+    }
+
+    #[test]
+    fn samples_fire_on_the_interval_grid() {
+        let mut soc = tiny_soc();
+        let mut pol = CountingPolicy(0);
+        run_with_policy(&mut soc, &mut pol, 1_000_000, 10_000_000).unwrap();
+        assert_eq!(pol.0, 10);
+        assert_eq!(soc.now, 10_000_000);
     }
 }

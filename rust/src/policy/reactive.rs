@@ -109,7 +109,7 @@ mod tests {
         soc.run_until(30_000_000); // let the DFS swap + traffic build
 
         let mut pol = ReactiveDfs::new(0, vec![a2], 2_000.0, 100.0);
-        run_with_policy(&mut soc, &mut pol, 50_000_000, 500_000_000);
+        run_with_policy(&mut soc, &mut pol, 50_000_000, 500_000_000).unwrap();
         assert!(
             !pol.actions.is_empty(),
             "policy should have boosted the NoC island"
@@ -129,8 +129,101 @@ mod tests {
         // NoC at 100 MHz, one lazy accelerator: RTTs are far below the
         // relax threshold, so the policy steps the island down.
         let mut pol = ReactiveDfs::new(0, vec![a2], 100_000.0, 20_000.0);
-        run_with_policy(&mut soc, &mut pol, 100_000_000, 2_000_000_000);
+        run_with_policy(&mut soc, &mut pol, 100_000_000, 2_000_000_000).unwrap();
         assert!(!pol.actions.is_empty(), "policy should relax the NoC");
         assert!(pol.actions.iter().all(|&(_, f)| f < 100));
+    }
+
+    // -----------------------------------------------------------------
+    // Direct unit tests of the control law: drive the monitor counters
+    // by hand and call `on_sample` — no traffic, no policy-loop driver.
+    // -----------------------------------------------------------------
+
+    /// A paper SoC with the NoC island settled at `noc_mhz`.
+    fn soc_at_noc_mhz(noc_mhz: u64) -> (Soc, usize) {
+        let cfg = paper_soc(("dfadd", 1), ("dfadd", 1));
+        let mut soc = Soc::build(cfg, Box::new(RefCompute::new())).unwrap();
+        let a2 = soc.cfg.node_of(A2_POS.0, A2_POS.1);
+        if noc_mhz != 100 {
+            soc.host_write_freq(0, noc_mhz).unwrap();
+            soc.run_until(20_000_000); // past the actuator swap
+        }
+        (soc, a2)
+    }
+
+    /// Push one synthetic DMA round-trip of `rtt_ns` into the tile's
+    /// counters (exactly what the hardware monitor would accumulate).
+    fn inject_rtt(soc: &mut Soc, tile: usize, rtt_ns: u64) {
+        let c = soc.mon.tile_mut(tile);
+        c.rtt_sum += rtt_ns * 1_000; // ns -> ps
+        c.rtt_count += 1;
+    }
+
+    #[test]
+    fn boosts_one_step_when_window_rtt_degrades() {
+        let (mut soc, a2) = soc_at_noc_mhz(50);
+        let mut pol = ReactiveDfs::new(0, vec![a2], 2_000.0, 100.0);
+        // Degraded window: 5 us mean RTT >> 2 us boost threshold.
+        inject_rtt(&mut soc, a2, 5_000);
+        pol.on_sample(&mut soc, soc.now);
+        assert_eq!(pol.actions.len(), 1);
+        assert_eq!(pol.actions[0].1, 60, "one step_mhz up from 50");
+    }
+
+    #[test]
+    fn relaxes_one_step_when_under_utilized() {
+        let (mut soc, a2) = soc_at_noc_mhz(50);
+        let mut pol = ReactiveDfs::new(0, vec![a2], 2_000.0, 100.0);
+        // 50 ns mean RTT: far below the 100 ns relax threshold.
+        inject_rtt(&mut soc, a2, 50);
+        pol.on_sample(&mut soc, soc.now);
+        assert_eq!(pol.actions.len(), 1);
+        assert_eq!(pol.actions[0].1, 40, "one step_mhz down from 50");
+    }
+
+    #[test]
+    fn holds_between_thresholds_and_without_round_trips() {
+        let (mut soc, a2) = soc_at_noc_mhz(50);
+        let mut pol = ReactiveDfs::new(0, vec![a2], 2_000.0, 100.0);
+        // No completed round-trips in the window: no decision at all.
+        pol.on_sample(&mut soc, soc.now);
+        assert!(pol.actions.is_empty());
+        // In-band RTT (hysteresis): still no action.
+        inject_rtt(&mut soc, a2, 1_000);
+        pol.on_sample(&mut soc, soc.now);
+        assert!(pol.actions.is_empty());
+    }
+
+    #[test]
+    fn window_deltas_reset_between_samples() {
+        let (mut soc, a2) = soc_at_noc_mhz(50);
+        let mut pol = ReactiveDfs::new(0, vec![a2], 2_000.0, 100.0);
+        // A degraded first window boosts...
+        inject_rtt(&mut soc, a2, 5_000);
+        pol.on_sample(&mut soc, soc.now);
+        assert_eq!(pol.actions.len(), 1);
+        // ...but the *cumulative* counters must not leak into the next
+        // window: a calm second window (fast RTT) relaxes instead of
+        // re-boosting on the stale 5 us sum.
+        inject_rtt(&mut soc, a2, 50);
+        pol.on_sample(&mut soc, soc.now);
+        assert_eq!(pol.actions.len(), 2);
+        assert!(pol.actions[1].1 < pol.actions[0].1, "{:?}", pol.actions);
+    }
+
+    #[test]
+    fn clamps_at_the_island_range() {
+        // At the 100 MHz NoC maximum a degraded RTT has nowhere to go.
+        let (mut soc, a2) = soc_at_noc_mhz(100);
+        let mut pol = ReactiveDfs::new(0, vec![a2], 2_000.0, 100.0);
+        inject_rtt(&mut soc, a2, 5_000);
+        pol.on_sample(&mut soc, soc.now);
+        assert!(pol.actions.is_empty(), "no boost past the range max");
+        // At the 10 MHz minimum an idle NoC has nowhere to relax to.
+        let (mut soc, a2) = soc_at_noc_mhz(10);
+        let mut pol = ReactiveDfs::new(0, vec![a2], 2_000.0, 100.0);
+        inject_rtt(&mut soc, a2, 50);
+        pol.on_sample(&mut soc, soc.now);
+        assert!(pol.actions.is_empty(), "no relax below the range min");
     }
 }

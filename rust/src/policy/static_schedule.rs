@@ -63,7 +63,7 @@ mod tests {
             (50_000_000, 1, 10),
             (10_000_000, 3, 25),
         ]);
-        run_with_policy(&mut soc, &mut sched, 5_000_000, 100_000_000);
+        run_with_policy(&mut soc, &mut sched, 5_000_000, 100_000_000).unwrap();
         assert_eq!(sched.pending(), 0);
         assert_eq!(sched.rejected, 0);
         // After actuator latency both islands run the new frequencies.
@@ -78,7 +78,7 @@ mod tests {
         let mut soc = Soc::build(cfg, Box::new(RefCompute::new())).unwrap();
         // A1 island max is 50 MHz.
         let mut sched = StaticSchedule::new(vec![(1_000_000, 1, 100)]);
-        run_with_policy(&mut soc, &mut sched, 1_000_000, 5_000_000);
+        run_with_policy(&mut soc, &mut sched, 1_000_000, 5_000_000).unwrap();
         assert_eq!(sched.rejected, 1);
     }
 }

@@ -1,0 +1,193 @@
+//! Arrival processes: when requests hit the SoC.
+//!
+//! All randomness comes from [`SplitMix64`] seeded by the
+//! [`ServeSpec`](super::ServeSpec), so the same seed and spec always
+//! produce the same arrival instants — the foundation of the serve
+//! engine's deterministic-replay guarantee.
+
+use crate::util::{Ps, SplitMix64};
+
+/// How request arrivals are generated over the offered-load horizon.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Arrival {
+    /// Open-loop Poisson process at `rps` requests per second
+    /// (exponential inter-arrival times).
+    Poisson { rps: f64 },
+    /// Open-loop on/off Poisson: within each `period`, the first
+    /// `duty` fraction runs at `burst_rps`, the rest at `base_rps`.
+    /// (The rate used for an inter-arrival draw is the rate in effect
+    /// at the draw instant — a standard piecewise approximation.)
+    Burst {
+        base_rps: f64,
+        burst_rps: f64,
+        period: Ps,
+        duty: f64,
+    },
+    /// Explicit arrival instants relative to serve start (unsorted and
+    /// out-of-horizon entries are handled: the generator sorts and
+    /// truncates). Seed-independent.
+    Trace(Vec<Ps>),
+    /// Closed loop: `clients` concurrent clients, each issuing its next
+    /// request `think` after its previous one completes. The generator
+    /// yields only the initial batch (one request per client at t=0);
+    /// the serve engine schedules every follow-up from the observed
+    /// completion times.
+    ClosedLoop { clients: usize, think: Ps },
+}
+
+impl Arrival {
+    /// Arrival instants in `[0, horizon)`, relative to serve start,
+    /// sorted ascending. Deterministic in `(self, seed)`.
+    pub fn times(&self, seed: u64, horizon: Ps) -> Vec<Ps> {
+        let mut rng = SplitMix64::new(seed ^ 0xA221_7A15_0F5E_11ED);
+        match self {
+            Arrival::Poisson { rps } => {
+                let mut out = Vec::new();
+                let mut t: Ps = 0;
+                loop {
+                    let Some(dt) = exp_interval_ps(&mut rng, *rps) else {
+                        break;
+                    };
+                    t = t.saturating_add(dt);
+                    if t >= horizon {
+                        break;
+                    }
+                    out.push(t);
+                }
+                out
+            }
+            Arrival::Burst {
+                base_rps,
+                burst_rps,
+                period,
+                duty,
+            } => {
+                let period = (*period).max(1);
+                let on_span = (duty.clamp(0.0, 1.0) * period as f64) as Ps;
+                let mut out = Vec::new();
+                let mut t: Ps = 0;
+                loop {
+                    let rate = if t % period < on_span {
+                        *burst_rps
+                    } else {
+                        *base_rps
+                    };
+                    let Some(dt) = exp_interval_ps(&mut rng, rate) else {
+                        // Zero-rate phase: jump to the next phase edge.
+                        let next_edge = (t / period) * period
+                            + if t % period < on_span { on_span } else { period };
+                        if next_edge <= t || next_edge >= horizon {
+                            break;
+                        }
+                        t = next_edge;
+                        continue;
+                    };
+                    t = t.saturating_add(dt);
+                    if t >= horizon {
+                        break;
+                    }
+                    out.push(t);
+                }
+                out
+            }
+            Arrival::Trace(times) => {
+                let mut out: Vec<Ps> = times.iter().copied().filter(|&t| t < horizon).collect();
+                out.sort_unstable();
+                out
+            }
+            Arrival::ClosedLoop { clients, .. } => vec![0; *clients],
+        }
+    }
+
+    /// Think time for closed-loop respawns (`None` for open loop).
+    /// (The serve report's `offered_rps` comes from the *actual*
+    /// generated arrival count, never from a nominal-rate formula.)
+    pub fn think_time(&self) -> Option<Ps> {
+        match self {
+            Arrival::ClosedLoop { think, .. } => Some(*think),
+            _ => None,
+        }
+    }
+}
+
+/// One exponential inter-arrival draw at `rate` requests/second, in ps.
+/// `None` when the rate is not positive (no arrivals in this regime).
+fn exp_interval_ps(rng: &mut SplitMix64, rate: f64) -> Option<Ps> {
+    if rate <= 0.0 {
+        return None;
+    }
+    // u in [0, 1) => 1-u in (0, 1]; -ln(1-u)/rate is a proper
+    // exponential sample with no ln(0) hazard.
+    let u = rng.next_f64();
+    let dt_s = -(1.0 - u).ln() / rate;
+    Some((dt_s * 1e12) as Ps)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scenario::ms;
+
+    #[test]
+    fn poisson_is_deterministic_and_near_rate() {
+        let a = Arrival::Poisson { rps: 1000.0 };
+        let x = a.times(42, ms(1000)); // 1 s
+        let y = a.times(42, ms(1000));
+        assert_eq!(x, y, "same seed, same arrivals");
+        // ~1000 arrivals +- 15%.
+        assert!((850..=1150).contains(&x.len()), "{}", x.len());
+        assert!(x.windows(2).all(|w| w[0] <= w[1]), "sorted");
+        let z = a.times(43, ms(1000));
+        assert_ne!(x, z, "different seed, different stream");
+    }
+
+    #[test]
+    fn burst_means_more_than_base() {
+        let quiet = Arrival::Poisson { rps: 100.0 };
+        let bursty = Arrival::Burst {
+            base_rps: 100.0,
+            burst_rps: 2000.0,
+            period: ms(10),
+            duty: 0.3,
+        };
+        let nq = quiet.times(7, ms(500)).len();
+        let nb = bursty.times(7, ms(500)).len();
+        assert!(nb > 2 * nq, "burst {nb} vs base {nq}");
+    }
+
+    #[test]
+    fn burst_with_zero_base_rate_terminates() {
+        let a = Arrival::Burst {
+            base_rps: 0.0,
+            burst_rps: 1000.0,
+            period: ms(10),
+            duty: 0.5,
+        };
+        let times = a.times(1, ms(100));
+        assert!(!times.is_empty());
+        // Arrivals concentrate in the on-phases (a draw from late in an
+        // on-phase may overshoot into the off-phase, but no draws
+        // *originate* there).
+        let on = times.iter().filter(|t| *t % ms(10) < ms(5)).count();
+        let off = times.len() - on;
+        assert!(on > 3 * off, "on {on} vs off {off}");
+    }
+
+    #[test]
+    fn trace_sorts_and_truncates() {
+        let a = Arrival::Trace(vec![ms(5), ms(1), ms(99), ms(3)]);
+        assert_eq!(a.times(0, ms(10)), vec![ms(1), ms(3), ms(5)]);
+        assert_eq!(a.times(77, ms(10)), a.times(0, ms(10)), "seed-free");
+    }
+
+    #[test]
+    fn closed_loop_initial_batch() {
+        let a = Arrival::ClosedLoop {
+            clients: 4,
+            think: ms(1),
+        };
+        assert_eq!(a.times(9, ms(100)), vec![0, 0, 0, 0]);
+        assert_eq!(a.think_time(), Some(ms(1)));
+        assert_eq!(Arrival::Poisson { rps: 1.0 }.think_time(), None);
+    }
+}

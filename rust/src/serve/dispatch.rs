@@ -1,0 +1,293 @@
+//! Replica-aware dispatch: which accelerator tile serves each request.
+//!
+//! Replication exists on two levels in the paper's architecture — `K`
+//! replicas behind one NoC node (the MRA bridge arbitrates those) and
+//! replicated MRA *tiles* across the grid. The dispatcher balances the
+//! second level: each admitted request is bound to one tile and granted
+//! one invocation credit there; the tile's bridge then spreads credited
+//! invocations across its replicas exactly as the hardware would.
+//!
+//! Admission queues are bounded: a tile holds at most `queue_capacity`
+//! granted-but-uncompleted requests, and a request that finds every
+//! candidate tile full is dropped (counted, never silently lost).
+
+use std::collections::VecDeque;
+
+use crate::sim::Soc;
+use crate::util::Ps;
+
+/// Tile-selection policy for admitted requests.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum DispatchPolicy {
+    /// Cycle through the tiles in index order, skipping full ones.
+    #[default]
+    RoundRobin,
+    /// Bind to the tile with the fewest outstanding requests
+    /// (ties break on the lower tile index).
+    JoinShortestQueue,
+    /// Bind to the tile with the least *estimated drain time*:
+    /// outstanding work weighted by the tile's invocation cycles at its
+    /// island's current DFS frequency — replica- and frequency-aware
+    /// where [`DispatchPolicy::JoinShortestQueue`] only counts heads.
+    LeastLoadedTile,
+}
+
+impl DispatchPolicy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            DispatchPolicy::RoundRobin => "round-robin",
+            DispatchPolicy::JoinShortestQueue => "join-shortest-queue",
+            DispatchPolicy::LeastLoadedTile => "least-loaded-tile",
+        }
+    }
+
+    /// Parse a CLI spelling (`rr` / `jsq` / `least`, or the full names).
+    pub fn parse(s: &str) -> crate::Result<Self> {
+        match s {
+            "rr" | "round-robin" => Ok(DispatchPolicy::RoundRobin),
+            "jsq" | "join-shortest-queue" => Ok(DispatchPolicy::JoinShortestQueue),
+            "least" | "least-loaded" | "least-loaded-tile" => Ok(DispatchPolicy::LeastLoadedTile),
+            other => anyhow::bail!(
+                "unknown dispatch policy {other:?} (expected rr, jsq, or least)"
+            ),
+        }
+    }
+}
+
+/// Per-tile dispatch state.
+#[derive(Debug, Clone)]
+pub(crate) struct TileQueue {
+    /// Tile (node) index in the SoC.
+    pub tile: usize,
+    /// Frequency island the tile clocks on (for load estimation).
+    pub island: usize,
+    /// Compute cycles of one invocation on this tile's accelerator.
+    pub compute_cycles: u64,
+    /// Replicas behind the tile's bridge.
+    pub replicas: usize,
+    /// Request ids granted to this tile and not yet completed, in
+    /// dispatch order (the tile completes credited invocations FIFO
+    /// up to replica overlap; attribution pops the front).
+    pub in_flight: VecDeque<usize>,
+    pub admitted: u64,
+    pub completed: u64,
+    /// Peak queue depth observed.
+    pub max_depth: usize,
+}
+
+/// The dispatcher: policy + bounded per-tile queues + drop accounting.
+#[derive(Debug, Clone)]
+pub(crate) struct Dispatcher {
+    pub policy: DispatchPolicy,
+    pub capacity: usize,
+    pub tiles: Vec<TileQueue>,
+    pub dropped: u64,
+    rr_cursor: usize,
+}
+
+impl Dispatcher {
+    pub fn new(policy: DispatchPolicy, capacity: usize, tiles: Vec<TileQueue>) -> Self {
+        Self {
+            policy,
+            capacity,
+            tiles,
+            dropped: 0,
+            rr_cursor: 0,
+        }
+    }
+
+    /// Pick the queue slot for a new request, or `None` (drop) when
+    /// every candidate tile is at capacity. `now` feeds the
+    /// frequency-aware load estimate.
+    pub fn pick(&mut self, soc: &Soc, now: Ps) -> Option<usize> {
+        let n = self.tiles.len();
+        let capacity = self.capacity;
+        let has_space = move |q: &TileQueue| q.in_flight.len() < capacity;
+        let choice = match self.policy {
+            DispatchPolicy::RoundRobin => {
+                let mut choice = None;
+                for off in 0..n {
+                    let i = (self.rr_cursor + off) % n;
+                    if has_space(&self.tiles[i]) {
+                        choice = Some(i);
+                        self.rr_cursor = (i + 1) % n;
+                        break;
+                    }
+                }
+                choice
+            }
+            DispatchPolicy::JoinShortestQueue => self
+                .tiles
+                .iter()
+                .enumerate()
+                .filter(|(_, q)| has_space(q))
+                .min_by_key(|(i, q)| (q.in_flight.len(), *i))
+                .map(|(i, _)| i),
+            DispatchPolicy::LeastLoadedTile => self
+                .tiles
+                .iter()
+                .enumerate()
+                .filter(|(_, q)| has_space(q))
+                .map(|(i, q)| {
+                    let mhz = soc.islands[q.island].freq(now).as_mhz().max(1);
+                    // Estimated time to drain this queue plus the new
+                    // request, spread across the tile's replicas.
+                    let backlog = (q.in_flight.len() + 1) as f64;
+                    let est = backlog * q.compute_cycles as f64
+                        / (mhz as f64 * q.replicas as f64);
+                    (i, est)
+                })
+                .min_by(|(ia, a), (ib, b)| a.total_cmp(b).then(ia.cmp(ib)))
+                .map(|(i, _)| i),
+        };
+        if choice.is_none() {
+            self.dropped += 1;
+        }
+        choice
+    }
+
+    /// Record that request `req` was granted to queue slot `slot`.
+    pub fn bind(&mut self, slot: usize, req: usize) {
+        let q = &mut self.tiles[slot];
+        q.in_flight.push_back(req);
+        q.admitted += 1;
+        q.max_depth = q.max_depth.max(q.in_flight.len());
+    }
+
+    /// Attribute one completion on queue slot `slot` to the oldest
+    /// outstanding request there (FIFO).
+    pub fn complete(&mut self, slot: usize) -> Option<usize> {
+        let q = &mut self.tiles[slot];
+        let req = q.in_flight.pop_front();
+        if req.is_some() {
+            q.completed += 1;
+        }
+        req
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::RefCompute;
+    use crate::scenario::Scenario;
+
+    fn mini_soc() -> Soc {
+        let cfg = Scenario::grid(2, 2)
+            .island("noc", 100)
+            .island_dfs("fast", 50, 10..=50, 5)
+            .island_dfs("slow", 20, 10..=50, 5)
+            .noc_island("noc")
+            .mem_at(0, 0)
+            .accel_at(1, 0, "dfmul", 1, "fast")
+            .accel_at(0, 1, "dfmul", 1, "slow")
+            .io_at_on(1, 1, "noc")
+            .build()
+            .unwrap();
+        Soc::build(cfg, Box::new(RefCompute::new())).unwrap()
+    }
+
+    fn queues(soc: &Soc) -> Vec<TileQueue> {
+        soc.mra_tiles()
+            .into_iter()
+            .map(|tile| {
+                let island = soc
+                    .cfg
+                    .tiles
+                    .iter()
+                    .find(|t| soc.cfg.node_of(t.x, t.y) == tile)
+                    .map(|t| t.island)
+                    .unwrap();
+                TileQueue {
+                    tile,
+                    island,
+                    compute_cycles: soc.mra(tile).timing.compute_cycles,
+                    replicas: soc.mra(tile).replica_count(),
+                    in_flight: VecDeque::new(),
+                    admitted: 0,
+                    completed: 0,
+                    max_depth: 0,
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn round_robin_alternates_and_skips_full() {
+        let soc = mini_soc();
+        let mut d = Dispatcher::new(DispatchPolicy::RoundRobin, 2, queues(&soc));
+        let a = d.pick(&soc, 0).unwrap();
+        d.bind(a, 0);
+        let b = d.pick(&soc, 0).unwrap();
+        d.bind(b, 1);
+        assert_ne!(a, b, "round robin alternates");
+        // Fill slot a to capacity; RR must skip it.
+        d.bind(a, 2);
+        let c = d.pick(&soc, 0).unwrap();
+        assert_eq!(c, b, "full tile skipped");
+    }
+
+    #[test]
+    fn jsq_prefers_shorter_queue_and_drops_when_full() {
+        let soc = mini_soc();
+        let mut d = Dispatcher::new(DispatchPolicy::JoinShortestQueue, 1, queues(&soc));
+        let a = d.pick(&soc, 0).unwrap();
+        assert_eq!(a, 0, "tie breaks on the lower index");
+        d.bind(a, 0);
+        let b = d.pick(&soc, 0).unwrap();
+        assert_eq!(b, 1, "shorter queue wins");
+        d.bind(b, 1);
+        assert_eq!(d.pick(&soc, 0), None, "everything full: drop");
+        assert_eq!(d.dropped, 1);
+        // A completion frees the slot again.
+        assert_eq!(d.complete(0), Some(0));
+        assert_eq!(d.pick(&soc, 0), Some(0));
+    }
+
+    #[test]
+    fn least_loaded_is_frequency_aware() {
+        let soc = mini_soc();
+        let mut d = Dispatcher::new(DispatchPolicy::LeastLoadedTile, 8, queues(&soc));
+        // Identical depths: the 50 MHz tile drains 2.5x faster than the
+        // 20 MHz one, so it absorbs the first several requests.
+        for i in 0..2 {
+            let s = d.pick(&soc, 0).unwrap();
+            assert_eq!(s, 0, "fast tile absorbs request {i}");
+            d.bind(s, i);
+        }
+        // Once the fast tile's estimated drain time exceeds the empty
+        // slow tile's, the slow tile gets its first request: 3 ahead on
+        // fast = 3/50 cycles-per-MHz > 1/20.
+        let s = d.pick(&soc, 0).unwrap();
+        assert_eq!(s, 1, "load estimate eventually routes to slow tile");
+    }
+
+    #[test]
+    fn completion_attribution_is_fifo() {
+        let soc = mini_soc();
+        let mut d = Dispatcher::new(DispatchPolicy::RoundRobin, 8, queues(&soc));
+        d.bind(0, 10);
+        d.bind(0, 11);
+        assert_eq!(d.complete(0), Some(10));
+        assert_eq!(d.complete(0), Some(11));
+        assert_eq!(d.complete(0), None);
+        assert_eq!(d.tiles[0].max_depth, 2);
+    }
+
+    #[test]
+    fn policy_parse_spellings() {
+        assert_eq!(
+            DispatchPolicy::parse("rr").unwrap(),
+            DispatchPolicy::RoundRobin
+        );
+        assert_eq!(
+            DispatchPolicy::parse("jsq").unwrap(),
+            DispatchPolicy::JoinShortestQueue
+        );
+        assert_eq!(
+            DispatchPolicy::parse("least-loaded-tile").unwrap(),
+            DispatchPolicy::LeastLoadedTile
+        );
+        assert!(DispatchPolicy::parse("zeal").is_err());
+    }
+}

@@ -1,0 +1,429 @@
+//! The serve engine: drives open- or closed-loop traffic through a
+//! running [`Session`], dispatching each request onto a gated MRA tile
+//! and attributing tile completion tags back to requests.
+//!
+//! The loop advances the SoC between *host events* — the next arrival,
+//! the next sample deadline, or the drain deadline — so queue decisions
+//! observe exact simulator state while latencies come from the tiles'
+//! per-invocation completion logs (exact timestamps, not event-loop
+//! granularity). Everything is deterministic in `(ServeSpec, SoC seed)`.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use crate::monitor::TimeSeries;
+use crate::policy::DfsPolicy;
+use crate::scenario::Session;
+use crate::util::Ps;
+
+use super::arrival::Arrival;
+use super::dispatch::{DispatchPolicy, Dispatcher, TileQueue};
+use super::governor::{GovernorSpec, QueueGovernor};
+use super::report::{LatencyStats, ServeReport, TileServeReport};
+
+/// Declarative description of one serving phase.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServeSpec {
+    /// Arrival process over the offered-load horizon.
+    pub arrival: Arrival,
+    /// Offered-load horizon (ps): arrivals are generated in `[0, duration)`.
+    pub duration: Ps,
+    /// Extra simulated time after the horizon to let queued work finish
+    /// before unfinished requests are counted.
+    pub drain: Ps,
+    /// Target tiles (empty = every MRA tile in the SoC).
+    pub tiles: Vec<usize>,
+    pub policy: DispatchPolicy,
+    /// Bounded admission queue per tile: at most this many
+    /// granted-but-uncompleted requests; beyond it, requests drop.
+    pub queue_capacity: usize,
+    /// p95 latency SLO (ps) the report and governor judge against.
+    pub slo: Option<Ps>,
+    /// Seed for the arrival process.
+    pub seed: u64,
+    /// Queue-depth / governor sampling cadence (0 = `duration / 100`,
+    /// at least 1 us).
+    pub sample_interval: Ps,
+    /// Optional queue-driven DFS governor.
+    pub governor: Option<GovernorSpec>,
+    /// Run the functional datapath on every invocation (default off:
+    /// serving measures timing, like Table I's perf mode).
+    pub functional: bool,
+}
+
+impl ServeSpec {
+    pub fn new(arrival: Arrival, duration: Ps) -> Self {
+        Self {
+            arrival,
+            duration,
+            drain: duration,
+            tiles: Vec::new(),
+            policy: DispatchPolicy::default(),
+            queue_capacity: 32,
+            slo: None,
+            seed: 0xE5B,
+            sample_interval: 0,
+            governor: None,
+            functional: false,
+        }
+    }
+
+    pub fn tiles(mut self, tiles: Vec<usize>) -> Self {
+        self.tiles = tiles;
+        self
+    }
+
+    pub fn policy(mut self, policy: DispatchPolicy) -> Self {
+        self.policy = policy;
+        self
+    }
+
+    pub fn queue_capacity(mut self, cap: usize) -> Self {
+        self.queue_capacity = cap;
+        self
+    }
+
+    pub fn slo(mut self, slo: Ps) -> Self {
+        self.slo = Some(slo);
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn drain(mut self, drain: Ps) -> Self {
+        self.drain = drain;
+        self
+    }
+
+    pub fn sample_interval(mut self, interval: Ps) -> Self {
+        self.sample_interval = interval;
+        self
+    }
+
+    pub fn governor(mut self, g: GovernorSpec) -> Self {
+        self.governor = Some(g);
+        self
+    }
+
+    pub fn functional(mut self, on: bool) -> Self {
+        self.functional = on;
+        self
+    }
+}
+
+impl Session {
+    /// Serve `spec`'s traffic and return the [`ServeReport`] — the
+    /// serving counterpart of [`Session::measure`]. See the
+    /// [module docs](crate::serve) for the model.
+    pub fn serve(&mut self, spec: &ServeSpec) -> crate::Result<ServeReport> {
+        serve_session(self, spec)
+    }
+}
+
+fn serve_session(session: &mut Session, spec: &ServeSpec) -> crate::Result<ServeReport> {
+    anyhow::ensure!(spec.duration > 0, "serve: duration must be positive");
+    anyhow::ensure!(
+        spec.queue_capacity > 0,
+        "serve: queue capacity must be at least 1"
+    );
+
+    // Resolve and validate the target tiles.
+    let tiles = if spec.tiles.is_empty() {
+        session.mra_tiles()
+    } else {
+        spec.tiles.clone()
+    };
+    anyhow::ensure!(!tiles.is_empty(), "serve: the SoC has no MRA tiles");
+    for &t in &tiles {
+        session.soc().try_mra(t)?;
+    }
+
+    // Prepare the tiles: staged inputs (functional datapath), perf mode,
+    // and the admission gate.
+    for &t in &tiles {
+        if session.staged(t).is_empty() {
+            session.stage(t, 1)?;
+        }
+        let m = session.soc_mut().try_mra_mut(t)?;
+        m.functional_every_invocation = spec.functional;
+        m.serve_begin();
+    }
+    settle_gated_tiles(session, &tiles)?;
+
+    // Dispatcher state, one bounded queue per tile.
+    let queues: Vec<TileQueue> = tiles
+        .iter()
+        .map(|&tile| {
+            let soc = session.soc();
+            let island = soc
+                .cfg
+                .tiles
+                .iter()
+                .find(|t| soc.cfg.node_of(t.x, t.y) == tile)
+                .map(|t| t.island)
+                .expect("every node has a tile spec");
+            let m = soc.mra(tile);
+            TileQueue {
+                tile,
+                island,
+                compute_cycles: m.timing.compute_cycles,
+                replicas: m.replica_count(),
+                in_flight: std::collections::VecDeque::new(),
+                admitted: 0,
+                completed: 0,
+                max_depth: 0,
+            }
+        })
+        .collect();
+    let mut disp = Dispatcher::new(spec.policy, spec.queue_capacity, queues);
+
+    let mut governor = spec
+        .governor
+        .as_ref()
+        .map(|g| QueueGovernor::new(g, tiles.clone()));
+
+    // Arrival schedule (absolute times). Closed-loop respawns are pushed
+    // as completions drain.
+    let t0 = session.soc().now;
+    let horizon = t0 + spec.duration;
+    let deadline = horizon + spec.drain;
+    let mut arrivals: BinaryHeap<Reverse<Ps>> = spec
+        .arrival
+        .times(spec.seed, spec.duration)
+        .into_iter()
+        .map(|rel| Reverse(t0 + rel))
+        .collect();
+    let think = spec.arrival.think_time();
+    let mut offered = arrivals.len() as u64;
+
+    let sample_interval = if spec.sample_interval > 0 {
+        spec.sample_interval
+    } else {
+        (spec.duration / 100).max(1_000_000)
+    };
+    let mut next_sample = t0;
+    let mut queue_series: Vec<TimeSeries> = disp
+        .tiles
+        .iter()
+        .map(|q| TimeSeries::new(format!("queue_t{}", q.tile)))
+        .collect();
+    let mut freq_series: Vec<TimeSeries> = session
+        .soc()
+        .islands
+        .iter()
+        .map(|d| TimeSeries::new(format!("freq_{}", d.name)))
+        .collect();
+
+    // Arrival time of each admitted request, indexed by request id.
+    let mut reqs: Vec<Ps> = Vec::new();
+    let mut latencies: Vec<f64> = Vec::new();
+
+    loop {
+        let now = session.soc().now;
+        let next_arrival = arrivals.peek().map(|Reverse(t)| *t);
+        let pending: usize = disp.tiles.iter().map(|q| q.in_flight.len()).sum();
+        if now >= deadline || (now >= horizon && next_arrival.is_none() && pending == 0) {
+            break;
+        }
+        let mut target = next_sample.min(deadline);
+        if let Some(a) = next_arrival {
+            target = target.min(a);
+        }
+        session.soc_mut().run_until(target.max(now));
+        let now = session.soc().now;
+
+        // 1) Attribute completions (exact tile-log timestamps). Peek
+        // immutably first: mutable tile access resets the engine's wake
+        // point, which would defeat a gated tile's idle sleep on every
+        // empty poll.
+        for slot in 0..disp.tiles.len() {
+            let tile = disp.tiles[slot].tile;
+            let has_completions = session
+                .soc()
+                .mra(tile)
+                .serve
+                .as_ref()
+                .is_some_and(|g| !g.completions.is_empty());
+            if !has_completions {
+                continue;
+            }
+            let log: Vec<Ps> = {
+                let m = session.soc_mut().try_mra_mut(tile)?;
+                match &mut m.serve {
+                    Some(g) => g.completions.drain(..).map(|(t, _replica)| t).collect(),
+                    None => Vec::new(),
+                }
+            };
+            for t_c in log {
+                let Some(req) = disp.complete(slot) else {
+                    debug_assert!(false, "completion without an outstanding request");
+                    continue;
+                };
+                let lat = t_c - reqs[req];
+                latencies.push(lat as f64);
+                if let Some(g) = &mut governor {
+                    g.observe_latency(lat);
+                }
+                if let Some(think) = think {
+                    let next = t_c + think;
+                    if next < horizon {
+                        arrivals.push(Reverse(next));
+                        offered += 1;
+                    }
+                }
+            }
+        }
+
+        // 2) Admit due arrivals: bind to a tile and grant one credit.
+        while arrivals.peek().is_some_and(|Reverse(t)| *t <= now) {
+            let Reverse(t_arr) = arrivals.pop().expect("peeked");
+            if let Some(slot) = disp.pick(session.soc(), now) {
+                let req = reqs.len();
+                reqs.push(t_arr);
+                disp.bind(slot, req);
+                let tile = disp.tiles[slot].tile;
+                session.soc_mut().try_mra_mut(tile)?.serve_grant(1);
+            } else if let Some(think) = think {
+                // A full system drops the request (the dispatcher
+                // counted it) — but a closed-loop *client* lives on:
+                // it thinks and retries, otherwise every drop would
+                // silently shrink the client population for the rest
+                // of the run.
+                let retry = now + think;
+                if retry < horizon {
+                    arrivals.push(Reverse(retry));
+                    offered += 1;
+                }
+            }
+            // Open loop: a drop is final; the dispatcher counted it.
+        }
+
+        // 3) Sample queue depths and frequencies; let the governor act.
+        if now >= next_sample {
+            for (i, q) in disp.tiles.iter().enumerate() {
+                queue_series[i].push(now, q.in_flight.len() as f64);
+            }
+            for (i, d) in session.soc().islands.iter().enumerate() {
+                freq_series[i].push(now, d.freq(now).as_mhz() as f64);
+            }
+            if let Some(g) = &mut governor {
+                g.on_sample(session.soc_mut(), now);
+            }
+            while next_sample <= now {
+                next_sample += sample_interval;
+            }
+        }
+    }
+
+    // Restore free-running mode for any later phases on this session.
+    for &t in &tiles {
+        session.soc_mut().try_mra_mut(t)?.serve_end();
+    }
+
+    // Assemble the report.
+    let elapsed = session.soc().now - t0;
+    let dur_s = spec.duration as f64 / 1e12;
+    let completed = latencies.len() as u64;
+    let admitted = reqs.len() as u64;
+    let latency = LatencyStats::from_latencies(&latencies)?;
+    let slo_met = match (spec.slo, completed) {
+        (Some(slo), c) if c > 0 => Some(latency.p95_ps <= slo as f64),
+        _ => None,
+    };
+    let slo_attainment = match (spec.slo, completed) {
+        (Some(slo), c) if c > 0 => {
+            latencies.iter().filter(|&&l| l <= slo as f64).count() as f64 / c as f64
+        }
+        // An SLO with zero completions is total failure, not perfection.
+        (Some(_), _) => 0.0,
+        (None, _) => 1.0,
+    };
+    let per_tile = disp
+        .tiles
+        .iter()
+        .map(|q| TileServeReport {
+            tile: q.tile,
+            replicas: q.replicas,
+            admitted: q.admitted,
+            completed: q.completed,
+            max_depth: q.max_depth,
+            unfinished: q.in_flight.len() as u64,
+        })
+        .collect();
+    let soc = session.soc();
+    Ok(ServeReport {
+        policy: spec.policy,
+        offered,
+        admitted,
+        dropped: disp.dropped,
+        completed,
+        unfinished: admitted - completed,
+        duration: spec.duration,
+        elapsed,
+        offered_rps: offered as f64 / dur_s,
+        achieved_rps: completed as f64 / dur_s,
+        latency,
+        slo: spec.slo,
+        slo_met,
+        slo_attainment,
+        per_tile,
+        queue_depth: queue_series,
+        freq_mhz: freq_series,
+        governor_actions: governor.map(|g| g.actions).unwrap_or_default(),
+        final_freq_mhz: soc
+            .islands
+            .iter()
+            .map(|d| d.freq(soc.now).as_mhz())
+            .collect(),
+    })
+}
+
+/// Run the SoC forward until every gated tile's pipeline is empty, so
+/// the completion ledger holds only credited work. A tile that was
+/// never run is idle already (zero cost); a warmed tile finishes its
+/// in-flight invocations (the gate blocks new ones) within a few
+/// invocation times.
+fn settle_gated_tiles(session: &mut Session, tiles: &[usize]) -> crate::Result<()> {
+    let all_idle =
+        |s: &Session| tiles.iter().all(|&t| s.soc().mra(t).pipeline_idle());
+    if all_idle(session) {
+        return Ok(());
+    }
+    // Worst case in flight per replica: buffered + computing + draining
+    // invocations, each as slow as the island's minimum frequency.
+    let max_inv_ps: Ps = tiles
+        .iter()
+        .map(|&t| {
+            let soc = session.soc();
+            let cycles = soc.mra(t).timing.compute_cycles;
+            let min_mhz = soc
+                .cfg
+                .tiles
+                .iter()
+                .find(|spec| soc.cfg.node_of(spec.x, spec.y) == t)
+                .map(|spec| soc.islands[spec.island].min.as_mhz().max(1))
+                .unwrap_or(1);
+            cycles * 1_000_000 / min_mhz
+        })
+        .max()
+        .unwrap_or(1_000_000);
+    let cap = session.soc().now + 8 * max_inv_ps + 1_000_000_000;
+    let slice = (max_inv_ps / 8).max(10_000_000);
+    while !all_idle(session) && session.soc().now < cap {
+        let next = (session.soc().now + slice).min(cap);
+        session.soc_mut().run_until(next);
+    }
+    anyhow::ensure!(
+        all_idle(session),
+        "serve: a gated tile failed to quiesce within {} ps",
+        cap
+    );
+    // Reset the gates: drop completions from pre-serve invocations.
+    for &t in tiles {
+        session.soc_mut().try_mra_mut(t)?.serve_begin();
+    }
+    Ok(())
+}

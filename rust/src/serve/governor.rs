@@ -1,0 +1,226 @@
+//! [`QueueGovernor`]: the serving-aware DFS policy that closes the
+//! paper's monitoring loop around tail latency instead of throughput.
+//!
+//! Control law (hysteresis bang-bang, like [`crate::policy::ReactiveDfs`]
+//! but driven by serving signals): at every sample,
+//!
+//! * **boost** the governed island one step when the window's p95
+//!   latency breaches the SLO *or* the mean tile backlog exceeds
+//!   `depth_high` (queues growing — latency is about to breach);
+//! * **relax** one step when the window's p95 sits below
+//!   `relax_margin * SLO` *and* the backlog is at most `depth_low`
+//!   (the island is faster than the traffic needs — spend less power).
+//!
+//! Backlog comes straight from the SoC
+//! ([`MraTile::serve_backlog`](crate::tiles::MraTile::serve_backlog)),
+//! so the governor works as a plain [`DfsPolicy`] too; latency samples
+//! are fed by the serve engine between samples via
+//! [`QueueGovernor::observe_latency`].
+
+use crate::policy::DfsPolicy;
+use crate::sim::Soc;
+use crate::util::{Percentiles, Ps};
+
+/// Declarative governor configuration carried by a
+/// [`ServeSpec`](super::ServeSpec).
+#[derive(Debug, Clone, PartialEq)]
+pub struct GovernorSpec {
+    /// Frequency island to actuate.
+    pub island: usize,
+    /// p95 latency target (ps).
+    pub slo: Ps,
+    /// Boost when the mean backlog across served tiles exceeds this.
+    pub depth_high: f64,
+    /// Relax only when the mean backlog is at most this.
+    pub depth_low: f64,
+    /// MHz per actuation step.
+    pub step_mhz: u64,
+}
+
+impl GovernorSpec {
+    /// A governor on `island` targeting p95 `slo`, with defaults sized
+    /// for a handful of replicas (boost above 4 queued, relax below 1).
+    pub fn new(island: usize, slo: Ps) -> Self {
+        Self {
+            island,
+            slo,
+            depth_high: 4.0,
+            depth_low: 1.0,
+            step_mhz: 5,
+        }
+    }
+}
+
+/// The governor. Construct directly or from a [`GovernorSpec`] plus the
+/// tiles being served.
+#[derive(Debug, Clone)]
+pub struct QueueGovernor {
+    pub island: usize,
+    /// Tiles whose backlog is watched.
+    pub tiles: Vec<usize>,
+    pub slo: Ps,
+    pub depth_high: f64,
+    pub depth_low: f64,
+    pub step_mhz: u64,
+    /// Relax only while window p95 < `relax_margin * slo` (hysteresis:
+    /// keeps boost/relax from oscillating around the SLO edge).
+    pub relax_margin: f64,
+    /// Latencies (ps) observed since the last decision.
+    window: Vec<f64>,
+    /// Decisions taken: (time, new MHz).
+    pub actions: Vec<(Ps, u64)>,
+}
+
+impl QueueGovernor {
+    pub fn new(spec: &GovernorSpec, tiles: Vec<usize>) -> Self {
+        Self {
+            island: spec.island,
+            tiles,
+            slo: spec.slo,
+            depth_high: spec.depth_high,
+            depth_low: spec.depth_low,
+            step_mhz: spec.step_mhz,
+            relax_margin: 0.5,
+            window: Vec::new(),
+            actions: Vec::new(),
+        }
+    }
+
+    /// Feed one completed request's end-to-end latency (ps). Called by
+    /// the serve engine as completions drain.
+    pub fn observe_latency(&mut self, latency: Ps) {
+        self.window.push(latency as f64);
+    }
+
+    /// Mean granted-but-uncompleted backlog across the watched tiles.
+    fn mean_backlog(&self, soc: &Soc) -> f64 {
+        if self.tiles.is_empty() {
+            return 0.0;
+        }
+        let sum: u64 = self.tiles.iter().map(|&t| soc.mra(t).serve_backlog()).sum();
+        sum as f64 / self.tiles.len() as f64
+    }
+}
+
+impl DfsPolicy for QueueGovernor {
+    fn on_sample(&mut self, soc: &mut Soc, now: Ps) {
+        let depth = self.mean_backlog(soc);
+        // p95 of the completions inside this window; None when nothing
+        // completed (deep overload counts as a breach via the backlog).
+        let p95 = Percentiles::from_samples(&self.window)
+            .ok()
+            .filter(|p| !p.is_empty())
+            .map(|p| p.p95());
+        self.window.clear();
+
+        let slo = self.slo as f64;
+        let breach = p95.is_some_and(|p| p > slo) || depth > self.depth_high;
+        let relaxed = p95.is_none_or(|p| p < self.relax_margin * slo) && depth <= self.depth_low;
+
+        let cur = soc.islands[self.island].freq(now).as_mhz();
+        let (min, max) = (
+            soc.islands[self.island].min.as_mhz(),
+            soc.islands[self.island].max.as_mhz(),
+        );
+        let target = if breach && cur < max {
+            (cur + self.step_mhz).min(max)
+        } else if relaxed && cur > min {
+            cur.saturating_sub(self.step_mhz).max(min)
+        } else {
+            return;
+        };
+        if target != cur && soc.host_write_freq(self.island, target).is_ok() {
+            self.actions.push((now, target));
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "queue-governor"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::RefCompute;
+    use crate::scenario::Scenario;
+
+    fn soc_with_gated_tile(start_mhz: u64) -> (Soc, usize) {
+        let cfg = Scenario::grid(2, 2)
+            .island("noc", 100)
+            .island_dfs("acc", start_mhz, 10..=50, 5)
+            .noc_island("noc")
+            .mem_at(0, 0)
+            .accel_at(1, 0, "dfmul", 1, "acc")
+            .io_at_on(0, 1, "noc")
+            .fill_tg("noc")
+            .build()
+            .unwrap();
+        let mut soc = Soc::build(cfg, Box::new(RefCompute::new())).unwrap();
+        let tile = soc.mra_tiles()[0];
+        soc.mra_mut(tile).serve_begin();
+        (soc, tile)
+    }
+
+    #[test]
+    fn boosts_on_slo_breach_and_on_backlog() {
+        let spec = GovernorSpec::new(1, 1_000_000_000); // p95 SLO 1 ms
+        let (mut soc, tile) = soc_with_gated_tile(20);
+        let mut g = QueueGovernor::new(&spec, vec![tile]);
+        // Latency breach: p95 over the SLO.
+        g.observe_latency(2_000_000_000);
+        g.on_sample(&mut soc, 0);
+        assert_eq!(g.actions.last(), Some(&(0, 25)));
+        // Backlog breach with no completions at all. (Run past the
+        // actuator swap first — the governor reads the *current* island
+        // frequency, which stays 20 MHz until the dual-MMCM swaps.)
+        soc.run_until(20_000_000);
+        let now = soc.now;
+        soc.mra_mut(tile).serve_grant(10); // backlog 10 > depth_high
+        g.on_sample(&mut soc, now);
+        assert_eq!(g.actions.last(), Some(&(now, 30)));
+    }
+
+    #[test]
+    fn relaxes_when_idle_and_fast() {
+        let spec = GovernorSpec::new(1, 1_000_000_000);
+        let (mut soc, tile) = soc_with_gated_tile(50);
+        let mut g = QueueGovernor::new(&spec, vec![tile]);
+        // Fast completions, empty queue: step down.
+        g.observe_latency(100_000_000); // 0.1 ms << 0.5 * SLO
+        g.on_sample(&mut soc, 0);
+        assert_eq!(g.actions.last(), Some(&(0, 45)));
+        // No completions and no backlog (idle): also steps down, once
+        // the first retune has actually swapped in.
+        soc.run_until(20_000_000);
+        let now = soc.now;
+        g.on_sample(&mut soc, now);
+        assert_eq!(g.actions.last(), Some(&(now, 40)));
+    }
+
+    #[test]
+    fn holds_inside_the_hysteresis_band() {
+        let spec = GovernorSpec::new(1, 1_000_000_000);
+        let (mut soc, _tile) = soc_with_gated_tile(30);
+        let mut g = QueueGovernor::new(&spec, vec![]);
+        // p95 between relax margin and SLO: no action either way.
+        g.observe_latency(700_000_000);
+        g.on_sample(&mut soc, 0);
+        assert!(g.actions.is_empty());
+    }
+
+    #[test]
+    fn clamps_at_island_bounds() {
+        let spec = GovernorSpec::new(1, 1_000_000_000);
+        let (mut soc, tile) = soc_with_gated_tile(50);
+        let mut g = QueueGovernor::new(&spec, vec![tile]);
+        g.observe_latency(5_000_000_000);
+        g.on_sample(&mut soc, 0); // breach at max: nothing to boost to
+        assert!(g.actions.is_empty());
+        let (mut soc, tile) = soc_with_gated_tile(10);
+        let mut g = QueueGovernor::new(&spec, vec![tile]);
+        g.observe_latency(1_000_000); // far under SLO at min
+        g.on_sample(&mut soc, 0);
+        assert!(g.actions.is_empty(), "nothing to relax to at min");
+    }
+}

@@ -1,0 +1,61 @@
+//! Traffic serving: requests arriving over time, replica-aware
+//! dispatch, tail-latency SLOs, and a queue-driven DFS governor.
+//!
+//! The rest of the crate measures *steady-state throughput* — fixed
+//! warmup/measure windows, as Table I and Fig. 3 do. Real workloads
+//! arrive as *requests over time*: they queue, they have deadlines, and
+//! the paper's headline features (accelerator replication, per-island
+//! fine-grained DFS, run-time monitoring) exist to serve them well.
+//! This module closes that gap:
+//!
+//! * [`Arrival`] — open-loop Poisson/bursty/trace arrivals and a
+//!   closed-loop client model, all deterministic in the spec's seed;
+//! * [`DispatchPolicy`] — binds each request to one MRA tile
+//!   (round-robin, join-shortest-queue, or frequency-aware least-loaded)
+//!   with bounded admission queues and drop accounting; the tile's AXI
+//!   bridge then spreads credited invocations across its replicas,
+//!   exactly as the hardware arbitrates;
+//! * [`ServeReport`] — offered vs. achieved rps, per-tile queue-depth
+//!   timelines, and *exact* p50/p95/p99/max end-to-end latency
+//!   ([`crate::util::Percentiles`]);
+//! * [`QueueGovernor`] — a [`DfsPolicy`](crate::policy::DfsPolicy) that
+//!   boosts an island when queue depth or windowed p95 breaches the SLO
+//!   and relaxes it when the island runs faster than the traffic needs
+//!   — DFS paying off in tail latency, not just throughput.
+//!
+//! # Quickstart
+//!
+//! ```text
+//! let mut session = Session::new(paper_soc(("dfmul", 2), ("dfmul", 2)))?;
+//! let spec = ServeSpec::new(Arrival::Poisson { rps: 1200.0 }, ms(200))
+//!     .policy(DispatchPolicy::JoinShortestQueue)
+//!     .slo(ms(5))
+//!     .governor(GovernorSpec::new(ISL_A1, ms(5)));
+//! let report = session.serve(&spec)?;
+//! println!("{}", report.render());
+//! assert_eq!(report.slo_met, Some(true));
+//! ```
+//!
+//! # Mechanics
+//!
+//! Serving gates the target tiles ([`crate::tiles::ServeGate`]): a
+//! replica may start a new invocation only against a credit granted
+//! when a request is admitted, and every credited invocation that
+//! finishes draining is tagged `(time, replica)` in the tile's
+//! completion log. The engine attributes completions to requests FIFO
+//! per tile, so latencies are exact simulator timestamps — arrival to
+//! final DMA writeback — independent of the host loop's event
+//! granularity. Same seed + same spec ⇒ identical [`ServeReport`],
+//! which `rust/tests/serve.rs` asserts.
+
+pub mod arrival;
+pub mod dispatch;
+pub mod engine;
+pub mod governor;
+pub mod report;
+
+pub use arrival::Arrival;
+pub use dispatch::DispatchPolicy;
+pub use engine::ServeSpec;
+pub use governor::{GovernorSpec, QueueGovernor};
+pub use report::{LatencyStats, ServeReport, TileServeReport};

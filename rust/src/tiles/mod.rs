@@ -14,7 +14,7 @@ pub mod ni;
 pub mod tg;
 pub mod timing;
 
-pub use mra::{MraTile, ReplicaState};
+pub use mra::{MraTile, ReplicaState, ServeGate};
 pub use ni::NetIface;
 pub use timing::{AccelTiming, DmaParams, StreamSpec};
 

@@ -32,6 +32,28 @@ use crate::util::Ps;
 use super::timing::{AccelTiming, DmaParams};
 use super::{ni::NetIface, TickOutcome, TileCtx};
 
+/// Host-side admission state for traffic serving (see [`crate::serve`]).
+///
+/// When installed ([`MraTile::serve_begin`]) the tile's replicas may
+/// start a *new* invocation (the first read burst of a fresh prefetch
+/// round) only by consuming one host-granted credit; invocations already
+/// in flight always run to completion. Each credited invocation that
+/// finishes draining is tagged into [`ServeGate::completions`] with its
+/// completion time and replica, so the serve dispatcher can attribute it
+/// back to the request that paid the credit (FIFO per tile).
+#[derive(Debug, Clone, Default)]
+pub struct ServeGate {
+    /// Invocation starts granted by the host but not yet consumed by a
+    /// replica.
+    pub credits: u64,
+    /// Granted-but-not-completed invocations — the tile's serving queue
+    /// depth as DFS policies observe it ([`MraTile::serve_backlog`]).
+    pub backlog: u64,
+    /// Completion log: `(time, replica)` per finished credited
+    /// invocation, in completion order. Drained by the host.
+    pub completions: VecDeque<(Ps, u8)>,
+}
+
 /// Snapshot of a replica's pipeline occupancy (debug/reporting).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct ReplicaState {
@@ -150,6 +172,11 @@ pub struct MraTile {
     cached_outputs: Vec<Option<Vec<Block>>>,
     /// Total functional invocations actually executed.
     pub functional_calls: u64,
+
+    // -- serving state -------------------------------------------------
+    /// Admission gate for traffic serving; `None` (the default) is the
+    /// classic free-running throughput mode.
+    pub serve: Option<ServeGate>,
 }
 
 impl MraTile {
@@ -186,11 +213,58 @@ impl MraTile {
             functional_every_invocation: true,
             cached_outputs: Vec::new(),
             functional_calls: 0,
+            serve: None,
         }
     }
 
     pub fn replica_count(&self) -> usize {
         self.replicas.len()
+    }
+
+    /// Install (or reset) the serving admission gate: from now on a
+    /// replica may start a new invocation only against a credit granted
+    /// through [`MraTile::serve_grant`]. Invocations already in flight
+    /// complete normally but are logged too — callers that need a clean
+    /// ledger should quiesce the pipeline first (see
+    /// [`MraTile::pipeline_idle`]) and call this again to reset.
+    pub fn serve_begin(&mut self) {
+        self.serve = Some(ServeGate::default());
+    }
+
+    /// Remove the admission gate, returning the tile to free-running
+    /// throughput mode.
+    pub fn serve_end(&mut self) {
+        self.serve = None;
+    }
+
+    /// Grant `n` invocation credits (no-op unless serving).
+    pub fn serve_grant(&mut self, n: u64) {
+        if let Some(g) = &mut self.serve {
+            g.credits += n;
+            g.backlog += n;
+        }
+    }
+
+    /// Granted-but-not-completed invocations (0 when not serving) — the
+    /// queue depth DFS policies such as
+    /// [`crate::serve::QueueGovernor`] read at sample time.
+    pub fn serve_backlog(&self) -> u64 {
+        self.serve.as_ref().map_or(0, |g| g.backlog)
+    }
+
+    /// Whether every replica pipeline and tile-level FIFO is empty — no
+    /// invocation is fetching, computing, or draining.
+    pub fn pipeline_idle(&self) -> bool {
+        self.replicas.iter().all(|r| {
+            r.bursts_issued == 0
+                && r.outstanding == 0
+                && r.beats_received == 0
+                && r.inputs_ready == 0
+                && r.compute_done_cycle.is_none()
+                && r.outputs_pending == 0
+        }) && self.rd_staging.is_empty()
+            && self.pending_writes.is_empty()
+            && self.wr_data_avail.iter().all(|&n| n == 0)
     }
 
     pub fn invocations(&self) -> u64 {
@@ -247,6 +321,10 @@ impl MraTile {
     /// event is a running computation's completion cycle.
     fn outcome(&self, cycle: u64) -> TickOutcome {
         let read_bursts = self.timing.read_bursts(self.dma.burst_beats);
+        // A gated tile with zero credits cannot start a new prefetch
+        // round, so it must not stay restless on that account (a credit
+        // grant goes through host access, which wakes the tile).
+        let can_start = self.serve.as_ref().is_none_or(|g| g.credits > 0);
         let restless = self.ni.tx_backlog() > 0
             || !self.rd_staging.is_empty()
             || !self.pending_writes.is_empty()
@@ -256,7 +334,7 @@ impl MraTile {
                 // Draining, startable, or able to issue another fetch.
                 r.outputs_pending > 0
                     || (r.compute_done_cycle.is_none() && r.inputs_ready > 0)
-                    || ((r.bursts_issued > 0 || r.inputs_ready < INPUT_BUFFERS)
+                    || ((r.bursts_issued > 0 || (r.inputs_ready < INPUT_BUFFERS && can_start))
                         && r.bursts_issued < read_bursts
                         && r.outstanding < self.dma.max_outstanding)
             });
@@ -384,8 +462,15 @@ impl MraTile {
             {
                 let rep = &mut self.replicas[r];
                 // Continue the in-flight prefetch round, or start a new
-                // one only while a ping-pong buffer is free.
-                let may_fetch = rep.bursts_issued > 0 || rep.inputs_ready < INPUT_BUFFERS;
+                // one only while a ping-pong buffer is free — and, when
+                // the serving gate is installed, only against a credit.
+                let starting = rep.bursts_issued == 0;
+                let credit_ok = match &self.serve {
+                    Some(g) => !starting || g.credits > 0,
+                    None => true,
+                };
+                let may_fetch =
+                    (rep.bursts_issued > 0 || rep.inputs_ready < INPUT_BUFFERS) && credit_ok;
                 if may_fetch
                     && rep.bursts_issued < read_bursts
                     && rep.outstanding < self.dma.max_outstanding
@@ -402,6 +487,11 @@ impl MraTile {
                         },
                     );
                     debug_assert!(ok);
+                    if starting {
+                        if let Some(g) = &mut self.serve {
+                            g.credits -= 1;
+                        }
+                    }
                     let rep = &mut self.replicas[r];
                     rep.inflight.push_back(ctx.now);
                     rep.bursts_issued += 1;
@@ -481,6 +571,12 @@ impl MraTile {
                     rep.wr_bursts_pushed = 0;
                     rep.wr_beats_pushed = 0;
                     ctx.mon.tile_mut(self.tile_index).on_invocation();
+                    // Serving: tag the completed invocation so the
+                    // dispatcher can attribute it to a request.
+                    if let Some(g) = &mut self.serve {
+                        g.backlog = g.backlog.saturating_sub(1);
+                        g.completions.push_back((ctx.now, r as u8));
+                    }
                 }
             }
         }

@@ -11,5 +11,5 @@ pub mod stats;
 pub mod time;
 
 pub use rng::SplitMix64;
-pub use stats::{Histogram, OnlineStats};
+pub use stats::{Histogram, OnlineStats, Percentiles};
 pub use time::{Freq, Ps, MHZ};

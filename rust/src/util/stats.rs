@@ -1,6 +1,7 @@
 //! Online statistics used by the monitoring infrastructure and the
-//! benchmark harness: Welford mean/variance, min/max, and a fixed-bucket
-//! histogram with percentile queries.
+//! benchmark harness: Welford mean/variance, min/max, a fixed-bucket
+//! histogram with approximate percentile queries, and exact sample
+//! percentiles ([`Percentiles`]) for tail-latency reporting.
 
 /// Streaming mean/variance/min/max accumulator (Welford's algorithm).
 #[derive(Debug, Clone, Default)]
@@ -160,6 +161,77 @@ impl Histogram {
     }
 }
 
+/// Exact empirical quantiles over a finite sample set (nearest-rank
+/// method: the q-quantile of n sorted samples is the `ceil(q*n)`-th
+/// smallest). Unlike [`Histogram::percentile`] there is no bucketing
+/// error — the returned value is always one of the observed samples —
+/// which is what tail-latency SLO checks need (`crate::serve` reports
+/// p50/p95/p99 through this type).
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct Percentiles {
+    sorted: Vec<f64>,
+}
+
+impl Percentiles {
+    /// Build from raw samples. Rejects NaN (a NaN would poison the sort
+    /// order and every quantile after it); infinities are allowed and
+    /// sort to the extremes.
+    pub fn from_samples(samples: &[f64]) -> crate::Result<Self> {
+        if let Some(bad) = samples.iter().position(|x| x.is_nan()) {
+            anyhow::bail!("percentiles: sample #{bad} is NaN");
+        }
+        let mut sorted = samples.to_vec();
+        sorted.sort_by(f64::total_cmp);
+        Ok(Self { sorted })
+    }
+
+    pub fn count(&self) -> usize {
+        self.sorted.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sorted.is_empty()
+    }
+
+    /// Exact nearest-rank quantile; `q` is clamped to `[0, 1]`. Returns
+    /// 0.0 on an empty sample (matching [`OnlineStats`]'s conventions).
+    pub fn quantile(&self, q: f64) -> f64 {
+        let n = self.sorted.len();
+        if n == 0 {
+            return 0.0;
+        }
+        let rank = (q.clamp(0.0, 1.0) * n as f64).ceil() as usize;
+        self.sorted[rank.clamp(1, n) - 1]
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.quantile(0.50)
+    }
+
+    pub fn p95(&self) -> f64 {
+        self.quantile(0.95)
+    }
+
+    pub fn p99(&self) -> f64 {
+        self.quantile(0.99)
+    }
+
+    pub fn min(&self) -> f64 {
+        self.sorted.first().copied().unwrap_or(0.0)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.sorted.last().copied().unwrap_or(0.0)
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.sorted.is_empty() {
+            return 0.0;
+        }
+        self.sorted.iter().sum::<f64>() / self.sorted.len() as f64
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -227,5 +299,86 @@ mod tests {
         h.push(5.0);
         assert_eq!(h.count(), 3);
         assert_eq!(h.percentile(1.0), 10.0);
+    }
+
+    #[test]
+    fn percentiles_exact_on_small_samples() {
+        // Nearest-rank: on one sample every quantile is that sample.
+        let p = Percentiles::from_samples(&[7.0]).unwrap();
+        assert_eq!(p.quantile(0.0), 7.0);
+        assert_eq!(p.p50(), 7.0);
+        assert_eq!(p.p99(), 7.0);
+        assert_eq!(p.max(), 7.0);
+        // Two samples: p50 is the 1st (ceil(0.5*2) = 1), p99 the 2nd.
+        let p = Percentiles::from_samples(&[10.0, 20.0]).unwrap();
+        assert_eq!(p.p50(), 10.0);
+        assert_eq!(p.p99(), 20.0);
+    }
+
+    #[test]
+    fn percentiles_exact_on_odd_counts() {
+        // 1..=5: p50 = ceil(0.5*5) = 3rd smallest = 3.
+        let p = Percentiles::from_samples(&[5.0, 1.0, 4.0, 2.0, 3.0]).unwrap();
+        assert_eq!(p.count(), 5);
+        assert_eq!(p.p50(), 3.0);
+        assert_eq!(p.quantile(0.2), 1.0);
+        assert_eq!(p.quantile(0.21), 2.0);
+        assert_eq!(p.min(), 1.0);
+        assert_eq!(p.max(), 5.0);
+        assert_eq!(p.mean(), 3.0);
+    }
+
+    #[test]
+    fn percentiles_duplicate_heavy() {
+        // 97 zeros and 3 spikes: p95 must still be 0, p99 a spike —
+        // exactly where bucketed histograms smear.
+        let mut xs = vec![0.0; 97];
+        xs.extend([100.0, 100.0, 100.0]);
+        let p = Percentiles::from_samples(&xs).unwrap();
+        assert_eq!(p.p50(), 0.0);
+        assert_eq!(p.p95(), 0.0);
+        assert_eq!(p.p99(), 100.0);
+        assert_eq!(p.max(), 100.0);
+    }
+
+    #[test]
+    fn percentiles_reject_nan() {
+        let err = Percentiles::from_samples(&[1.0, f64::NAN, 2.0]).unwrap_err();
+        assert!(err.to_string().contains("NaN"), "{err}");
+        assert!(err.to_string().contains("#1"), "{err}");
+    }
+
+    #[test]
+    fn percentiles_empty_and_clamped_q() {
+        let p = Percentiles::from_samples(&[]).unwrap();
+        assert!(p.is_empty());
+        assert_eq!(p.quantile(0.5), 0.0);
+        assert_eq!(p.max(), 0.0);
+        let p = Percentiles::from_samples(&[3.0, 9.0]).unwrap();
+        assert_eq!(p.quantile(-1.0), 3.0);
+        assert_eq!(p.quantile(2.0), 9.0);
+    }
+
+    /// Property: quantiles are monotone in q (p50 <= p95 <= p99 <= max)
+    /// on arbitrary sample sets, including duplicate-heavy ones.
+    #[test]
+    fn percentiles_monotone_property() {
+        use crate::util::proptest::forall;
+        forall(
+            0x9E7C,
+            200,
+            |r| {
+                let n = 1 + r.index(64);
+                // Coarse values force heavy duplication in many cases.
+                (0..n).map(|_| r.index(8) as f64 * 2.5).collect::<Vec<f64>>()
+            },
+            |xs| {
+                let p = Percentiles::from_samples(xs).unwrap();
+                assert!(p.p50() <= p.p95());
+                assert!(p.p95() <= p.p99());
+                assert!(p.p99() <= p.max());
+                assert!(p.min() <= p.p50());
+            },
+        );
     }
 }

@@ -1,0 +1,246 @@
+//! System tests for the `serve` subsystem — the ISSUE's acceptance
+//! criteria: (a) deterministic replay, (b) JSQ tail latency beats
+//! round-robin on a replicated-accelerator SoC, (c) the queue governor
+//! meets an SLO a static low frequency misses while ending below the
+//! always-max frequency — plus drop accounting, closed-loop clients,
+//! and trace arrivals.
+
+use vespa::scenario::{ms, Scenario, Session};
+use vespa::serve::{Arrival, DispatchPolicy, GovernorSpec, ServeSpec};
+
+/// Two single-replica dfmul tiles on independent DFS islands — the
+/// "replicated accelerator across NoC nodes" scenario. Heterogeneous
+/// frequencies make dispatch policy quality visible.
+fn two_tile_session(fast_mhz: u64, slow_mhz: u64) -> Session {
+    let cfg = Scenario::grid(2, 2)
+        .name("serve-2x2")
+        .seed(0xE5B)
+        .island("noc", 100)
+        .island_dfs("fast", fast_mhz, 10..=50, 5)
+        .island_dfs("slow", slow_mhz, 10..=50, 5)
+        .noc_island("noc")
+        .mem_at(0, 0)
+        .accel_at(1, 0, "dfmul", 1, "fast")
+        .accel_at(0, 1, "dfmul", 1, "slow")
+        .io_at_on(1, 1, "noc")
+        .build()
+        .unwrap();
+    Session::new(cfg).unwrap()
+}
+
+/// One 2-replica dfmul tile on a governable island (10..=50 MHz).
+fn governed_session(start_mhz: u64) -> (Session, usize, usize) {
+    let cfg = Scenario::grid(2, 2)
+        .name("serve-governed")
+        .seed(0xE5B)
+        .island("noc", 100)
+        .island_dfs("acc", start_mhz, 10..=50, 5)
+        .noc_island("noc")
+        .mem_at(0, 0)
+        .accel_at(1, 0, "dfmul", 2, "acc")
+        .io_at_on(0, 1, "noc")
+        .fill_tg("noc")
+        .build()
+        .unwrap();
+    let session = Session::new(cfg).unwrap();
+    let tile = session.mra_tiles()[0];
+    (session, tile, 1) // island index 1 = "acc"
+}
+
+// ---------------------------------------------------------------------
+// (a) Deterministic replay.
+// ---------------------------------------------------------------------
+
+#[test]
+fn same_seed_and_spec_replay_identically() {
+    let spec = ServeSpec::new(Arrival::Poisson { rps: 900.0 }, ms(80))
+        .policy(DispatchPolicy::JoinShortestQueue)
+        .slo(ms(10))
+        .seed(0xABCD);
+    let r1 = two_tile_session(50, 25).serve(&spec).unwrap();
+    let r2 = two_tile_session(50, 25).serve(&spec).unwrap();
+    assert!(r1.completed > 20, "enough traffic to be meaningful");
+    assert_eq!(r1, r2, "same seed + spec => identical ServeReport");
+
+    let r3 = two_tile_session(50, 25)
+        .serve(&spec.clone().seed(0x1234))
+        .unwrap();
+    assert_ne!(r1, r3, "a different seed is a different run");
+}
+
+// ---------------------------------------------------------------------
+// (b) JSQ p99 <= round-robin p99 at equal offered load.
+// ---------------------------------------------------------------------
+
+#[test]
+fn jsq_tail_beats_round_robin_on_heterogeneous_tiles() {
+    // 2000 req/s against 50 MHz + 15 MHz dfmul tiles: round-robin
+    // insists on feeding the slow tile ~half the load (far past its
+    // ~640 req/s capacity), so its queue pegs and the tail explodes;
+    // JSQ balances by observed depth.
+    let load = |policy| {
+        ServeSpec::new(Arrival::Poisson { rps: 2000.0 }, ms(150))
+            .policy(policy)
+            .seed(0xFEED)
+    };
+    let rr = two_tile_session(50, 15)
+        .serve(&load(DispatchPolicy::RoundRobin))
+        .unwrap();
+    let jsq = two_tile_session(50, 15)
+        .serve(&load(DispatchPolicy::JoinShortestQueue))
+        .unwrap();
+    assert_eq!(rr.offered, jsq.offered, "equal offered load");
+    assert!(rr.completed > 100 && jsq.completed > 100);
+    assert!(
+        jsq.latency.p99_ps <= rr.latency.p99_ps,
+        "JSQ p99 {:.3} ms must not exceed RR p99 {:.3} ms",
+        jsq.latency.p99_ms(),
+        rr.latency.p99_ms()
+    );
+    // The gap should be structural, not noise.
+    assert!(
+        jsq.latency.p99_ps < 0.8 * rr.latency.p99_ps,
+        "JSQ {:.3} ms vs RR {:.3} ms",
+        jsq.latency.p99_ms(),
+        rr.latency.p99_ms()
+    );
+}
+
+#[test]
+fn least_loaded_routes_by_service_rate() {
+    // At equal queue depths the frequency-aware policy prefers the tile
+    // that drains faster, so the fast tile must absorb well over half
+    // the admitted requests.
+    let spec = ServeSpec::new(Arrival::Poisson { rps: 1500.0 }, ms(100))
+        .policy(DispatchPolicy::LeastLoadedTile)
+        .seed(0xBEEF);
+    let r = two_tile_session(50, 15).serve(&spec).unwrap();
+    let fast = &r.per_tile[0]; // tile order follows ServeSpec resolution
+    let slow = &r.per_tile[1];
+    assert!(fast.admitted > 2 * slow.admitted, "{r:#?}");
+    assert!(r.completed > 50);
+}
+
+// ---------------------------------------------------------------------
+// (c) The governor meets an SLO a static low frequency misses, ending
+//     below the always-max frequency.
+// ---------------------------------------------------------------------
+
+#[test]
+fn queue_governor_meets_slo_static_low_misses() {
+    let slo = ms(10); // p95 target
+    let spec = |governed: bool, island: usize| {
+        let s = ServeSpec::new(Arrival::Poisson { rps: 1200.0 }, ms(400))
+            .policy(DispatchPolicy::JoinShortestQueue)
+            .slo(slo)
+            .sample_interval(ms(2))
+            .seed(0x50C);
+        if governed {
+            // Boost as soon as ~one invocation per replica is queued:
+            // the earlier the climb, the shorter the overloaded tail.
+            s.governor(GovernorSpec {
+                depth_high: 2.0,
+                ..GovernorSpec::new(island, slo)
+            })
+        } else {
+            s
+        }
+    };
+
+    // Static low: 10 MHz serves ~850 req/s against 1200 offered —
+    // permanently overloaded, tail far past the SLO.
+    let (mut low, _tile, island) = governed_session(10);
+    let r_low = low.serve(&spec(false, island)).unwrap();
+    assert_eq!(r_low.slo_met, Some(false), "p95 {:.3} ms", r_low.latency.p95_ms());
+    assert!(r_low.latency.p95_ps > slo as f64);
+
+    // Always-max: meets the SLO trivially but burns 50 MHz forever.
+    let (mut max, _tile, island_max) = governed_session(50);
+    let r_max = max.serve(&spec(false, island_max)).unwrap();
+    assert_eq!(r_max.slo_met, Some(true));
+    assert_eq!(r_max.final_freq_mhz[island_max], 50);
+
+    // Governed: starts at the same 10 MHz, boosts until the queue and
+    // tail recover, relaxes when over-provisioned.
+    let (mut gov, _tile, island_gov) = governed_session(10);
+    let r_gov = gov.serve(&spec(true, island_gov)).unwrap();
+    assert_eq!(
+        r_gov.slo_met,
+        Some(true),
+        "governor p95 {:.3} ms vs SLO {:.1} ms (actions {:?})",
+        r_gov.latency.p95_ms(),
+        slo as f64 / 1e9,
+        r_gov.governor_actions
+    );
+    assert!(!r_gov.governor_actions.is_empty(), "the governor acted");
+    assert!(
+        r_gov.final_freq_mhz[island_gov] < r_max.final_freq_mhz[island_max],
+        "governor settled at {} MHz, below the always-max {} MHz",
+        r_gov.final_freq_mhz[island_gov],
+        r_max.final_freq_mhz[island_max]
+    );
+}
+
+// ---------------------------------------------------------------------
+// Bounded queues, closed loop, traces.
+// ---------------------------------------------------------------------
+
+#[test]
+fn bounded_queues_drop_and_account_exactly() {
+    // A tiny queue in front of a slow tile under heavy load: most
+    // requests must be rejected, and every request must be accounted
+    // for (admitted + dropped = offered; completed + unfinished =
+    // admitted).
+    let (mut session, tile, _island) = governed_session(10);
+    let spec = ServeSpec::new(Arrival::Poisson { rps: 2000.0 }, ms(50))
+        .tiles(vec![tile])
+        .queue_capacity(2)
+        .seed(3);
+    let r = session.serve(&spec).unwrap();
+    assert!(r.dropped > 0, "overload must drop");
+    assert_eq!(r.admitted + r.dropped, r.offered);
+    assert_eq!(r.completed + r.unfinished, r.admitted);
+    assert!(r.per_tile[0].max_depth <= 2, "bounded queue respected");
+    let tile_sum: u64 = r.per_tile.iter().map(|t| t.admitted).sum();
+    assert_eq!(tile_sum, r.admitted);
+}
+
+#[test]
+fn closed_loop_clients_self_limit() {
+    let (mut session, tile, _island) = governed_session(50);
+    let spec = ServeSpec::new(
+        Arrival::ClosedLoop {
+            clients: 3,
+            think: ms(1),
+        },
+        ms(60),
+    )
+    .tiles(vec![tile])
+    .seed(11);
+    let r = session.serve(&spec).unwrap();
+    // Three clients can never queue deeper than three.
+    assert!(r.per_tile[0].max_depth <= 3, "{r:#?}");
+    assert_eq!(r.dropped, 0);
+    assert_eq!(r.unfinished, 0, "drain finishes the last in-flight batch");
+    assert_eq!(r.completed, r.admitted);
+    // Each client cycles roughly every think + service; expect dozens
+    // of completions, far fewer than an open loop would force.
+    assert!(r.completed > 30, "{}", r.completed);
+}
+
+#[test]
+fn trace_arrivals_run_exactly() {
+    let (mut session, tile, _island) = governed_session(50);
+    let spec = ServeSpec::new(Arrival::Trace(vec![ms(1), ms(2), ms(3)]), ms(10))
+        .tiles(vec![tile])
+        .seed(999); // irrelevant for traces
+    let r = session.serve(&spec).unwrap();
+    assert_eq!(r.offered, 3);
+    assert_eq!(r.completed, 3);
+    assert_eq!(r.latency.count, 3);
+    assert!(r.latency.p50_ps > 0.0);
+    assert!(r.latency.max_ps >= r.latency.p99_ps);
+    // Queue-depth timelines exist for the served tile.
+    assert_eq!(r.queue_depth.len(), 1);
+    assert!(!r.queue_depth[0].samples.is_empty());
+}

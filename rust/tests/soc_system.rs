@@ -157,7 +157,7 @@ fn static_schedule_fig4_style_run_with_sampler() {
         (5_000_000_000, ISL_NOC, 20),
         (20_000_000_000, ISL_NOC, 100),
     ]);
-    run_with_policy(&mut soc, &mut sched, 1_000_000_000, 40_000_000_000);
+    run_with_policy(&mut soc, &mut sched, 1_000_000_000, 40_000_000_000).unwrap();
     assert_eq!(sched.pending(), 0);
     let s = soc.sampler.as_ref().unwrap();
     let rate = s.series("mem_pkts_in").unwrap().to_rate();
