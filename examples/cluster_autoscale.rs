@@ -1,0 +1,99 @@
+//! Cluster example: one workload, an elastic fleet. A diurnal ramp
+//! (quiet base load with periodic bursts) plus a flash crowd drive a
+//! 4-slot fleet of paper SoCs; the SLO-driven autoscaler grows the
+//! fleet into each burst and drains it back through the troughs, and
+//! the merged report prices the run in replica-seconds against the
+//! fixed-maximum alternative.
+//!
+//!   cargo run --release --example cluster_autoscale
+
+use vespa::cluster::{AutoscaleSpec, ClusterSpec};
+use vespa::config::presets::paper_soc;
+use vespa::report::{plot, Table};
+use vespa::scenario::ms;
+use vespa::serve::{Arrival, DispatchPolicy, ServeSpec};
+
+fn main() -> vespa::Result<()> {
+    let slo = ms(5);
+    let cfg = || paper_soc(("dfmul", 2), ("dfmul", 2));
+
+    let mut summary = Table::new(
+        "elastic fleet vs fixed fleets — dfmul paper SoC, JSQ balancer",
+        &["fleet", "phase", "achieved rps", "p95 ms", "SLO", "repl-s", "final active"],
+    );
+    let mut row = |name: &str, phase: &str, r: &vespa::cluster::ClusterReport| {
+        summary.row(&[
+            name.to_string(),
+            phase.to_string(),
+            format!("{:.0}", r.achieved_rps),
+            format!("{:.3}", r.latency.p95_ms()),
+            match r.slo_met {
+                Some(true) => "met",
+                Some(false) => "miss",
+                None => "-",
+            }
+            .to_string(),
+            format!("{:.4}", r.replica_seconds),
+            r.final_active.to_string(),
+        ]);
+    };
+
+    // Phase 1 — diurnal ramp: 600 rps base, 5000 rps bursts for 40% of
+    // each 60 ms "day". One ~4250 req/s SoC overloads in every burst.
+    let diurnal = ServeSpec::new(
+        Arrival::Burst {
+            base_rps: 600.0,
+            burst_rps: 5000.0,
+            period: ms(60),
+            duty: 0.4,
+        },
+        ms(300),
+    )
+    .policy(DispatchPolicy::JoinShortestQueue)
+    .slo(slo)
+    .sample_interval(ms(2))
+    .seed(0xD1A);
+
+    let fixed_max = ClusterSpec::new(4, diurnal.clone()).run(cfg())?;
+    row("fixed-4", "diurnal", &fixed_max);
+    let elastic = ClusterSpec::new(4, diurnal)
+        .autoscale(AutoscaleSpec::new(1))
+        .run(cfg())?;
+    row("auto 1..4", "diurnal", &elastic);
+    println!("{}", elastic.render());
+    println!("fleet size during the diurnal phase:");
+    println!("{}", plot(&[&elastic.active_replicas], 70, 8));
+    println!(
+        "diurnal cost: autoscaled {:.4} replica-seconds vs fixed-max {:.4} ({:.0}% saved)\n",
+        elastic.replica_seconds,
+        fixed_max.replica_seconds,
+        100.0 * (1.0 - elastic.replica_seconds / fixed_max.replica_seconds)
+    );
+
+    // Phase 2 — flash crowd: a quiet 400 rps stream that spikes to
+    // 12000 rps for one 50 ms burst mid-run, then vanishes.
+    let mut arrivals = Arrival::Poisson { rps: 400.0 }.times(0xF1A5, ms(250));
+    arrivals.extend(Arrival::Poisson { rps: 12_000.0 }.times(0xC20, ms(50)).iter().map(|t| t + ms(100)));
+    arrivals.sort_unstable();
+    let flash = ServeSpec::new(Arrival::Trace(arrivals), ms(250))
+        .policy(DispatchPolicy::JoinShortestQueue)
+        .slo(slo)
+        .sample_interval(ms(2))
+        .seed(0xF1A5);
+
+    let crowd = ClusterSpec::new(4, flash)
+        .autoscale(AutoscaleSpec::new(1))
+        .run(cfg())?;
+    row("auto 1..4", "flash crowd", &crowd);
+    println!("fleet size through the flash crowd:");
+    println!("{}", plot(&[&crowd.active_replicas], 70, 8));
+    println!(
+        "flash crowd: {} autoscale actions, spilled {} at the balancer",
+        crowd.autoscale_actions.len(),
+        crowd.spilled
+    );
+
+    println!("{}", summary.render());
+    println!("cluster_autoscale OK");
+    Ok(())
+}

@@ -1,0 +1,146 @@
+//! Macro-bench: fleet serving under the `cluster` subsystem, with the
+//! two claims the ISSUE gates on:
+//!
+//! * a 4-replica fleet sustains >= 3x the achieved rps of a single SoC
+//!   at the same offered load (`cluster4_rps_over_single`, min-gated);
+//! * against a diurnal on/off load, the SLO-driven autoscaler finishes
+//!   with well under a fixed maximum fleet's replica-seconds
+//!   (`autoscale_replica_seconds_vs_fixed_max`, max-gated at 0.8).
+//!
+//! Every cluster run is single-threaded (one host loop drives the
+//! whole fleet in slot order — that's the determinism contract), so
+//! the timings measure simulation work, not core count. Writes
+//! `BENCH_cluster_scale.json` for the CI bench gate.
+
+use vespa::bench_harness::{Bench, BenchArgs, BenchReport};
+use vespa::cluster::{AutoscaleSpec, ClusterSpec};
+use vespa::config::SocConfig;
+use vespa::scenario::{ms, Scenario};
+use vespa::serve::{Arrival, DispatchPolicy, ServeSpec};
+
+/// One 2-replica dfmul tile at 50 MHz — ~4250 req/s per replica SoC,
+/// so fleet size is the only capacity knob under test.
+fn fleet_cfg() -> SocConfig {
+    Scenario::grid(2, 2)
+        .name("cluster-scale-2x2")
+        .seed(0xE5B)
+        .island("noc", 100)
+        .island_dfs("acc", 50, 10..=50, 5)
+        .noc_island("noc")
+        .mem_at(0, 0)
+        .accel_at(1, 0, "dfmul", 2, "acc")
+        .io_at_on(0, 1, "noc")
+        .build()
+        .unwrap()
+}
+
+fn main() {
+    let args = BenchArgs::from_env();
+    let quick = args.quick;
+    let duration_ms: u64 = if quick { 100 } else { 200 };
+
+    println!(
+        "cluster_scale: {duration_ms} ms horizons ({} mode, threads=1)",
+        if quick { "quick" } else { "full" }
+    );
+
+    let bench = Bench::new(1, args.iters.unwrap_or(if quick { 2 } else { 3 }));
+    let mut report = BenchReport::new("cluster_scale");
+
+    // ---- Scaling claim: 16000 rps vs one ~4250 rps SoC. ----
+    let scale_spec = ServeSpec::new(Arrival::Poisson { rps: 16_000.0 }, ms(duration_ms))
+        .policy(DispatchPolicy::JoinShortestQueue)
+        .slo(ms(20))
+        .seed(0xF1EE);
+    let r_single = bench.run("cluster/single-soc", |_| {
+        ClusterSpec::new(1, scale_spec.clone())
+            .run(fleet_cfg())
+            .expect("single-SoC run")
+    });
+    println!("{}", r_single.report());
+    let r_fleet = bench.run("cluster/fleet-4", |_| {
+        ClusterSpec::new(4, scale_spec.clone())
+            .run(fleet_cfg())
+            .expect("fleet run")
+    });
+    println!("{}", r_fleet.report());
+
+    let single = ClusterSpec::new(1, scale_spec.clone())
+        .run(fleet_cfg())
+        .expect("single-SoC run");
+    let fleet4 = ClusterSpec::new(4, scale_spec)
+        .run(fleet_cfg())
+        .expect("fleet run");
+    assert_eq!(single.offered, fleet4.offered, "equal offered load");
+    let rps_ratio = fleet4.achieved_rps / single.achieved_rps;
+    println!(
+        "scaling: single {:.0} rps, fleet-4 {:.0} rps ({rps_ratio:.2}x), attainment {:.3} vs {:.3}",
+        single.achieved_rps, fleet4.achieved_rps, fleet4.slo_attainment, single.slo_attainment
+    );
+    assert!(
+        fleet4.slo_attainment >= single.slo_attainment,
+        "scaling out must not trade tail quality for throughput"
+    );
+
+    // ---- Autoscaler cost claim: diurnal on/off load. ----
+    // Bursts to 6000 rps (past one SoC) for 40% of each 50 ms period,
+    // idling at 800 rps between — elasticity pays exactly when the
+    // fleet can shrink through the troughs.
+    let diurnal = ServeSpec::new(
+        Arrival::Burst {
+            base_rps: 800.0,
+            burst_rps: 6000.0,
+            period: ms(50),
+            duty: 0.4,
+        },
+        ms(2 * duration_ms),
+    )
+    .policy(DispatchPolicy::JoinShortestQueue)
+    .slo(ms(5))
+    .sample_interval(ms(2))
+    .seed(0x50C);
+    let r_auto_t = bench.run("cluster/autoscale-diurnal", |_| {
+        ClusterSpec::new(4, diurnal.clone())
+            .autoscale(AutoscaleSpec::new(1))
+            .run(fleet_cfg())
+            .expect("autoscaled run")
+    });
+    println!("{}", r_auto_t.report());
+
+    let r_max = ClusterSpec::new(4, diurnal.clone())
+        .run(fleet_cfg())
+        .expect("fixed-max run");
+    let r_auto = ClusterSpec::new(4, diurnal)
+        .autoscale(AutoscaleSpec::new(1))
+        .run(fleet_cfg())
+        .expect("autoscaled run");
+    let cost_ratio = r_auto.replica_seconds / r_max.replica_seconds;
+    println!(
+        "autoscale: {:.4} replica-seconds vs fixed-max {:.4} ({cost_ratio:.2}x), p95 {:.3} ms, {} actions",
+        r_auto.replica_seconds,
+        r_max.replica_seconds,
+        r_auto.latency.p95_ms(),
+        r_auto.autoscale_actions.len()
+    );
+    assert!(
+        !r_auto.autoscale_actions.is_empty(),
+        "the autoscaler must act under a diurnal load"
+    );
+
+    report.metric("cluster4_rps_over_single", rps_ratio);
+    report.metric("single_achieved_rps", single.achieved_rps);
+    report.metric("fleet4_achieved_rps", fleet4.achieved_rps);
+    report.metric("fleet4_slo_attainment", fleet4.slo_attainment);
+    report.metric("autoscale_replica_seconds_vs_fixed_max", cost_ratio);
+    report.metric("autoscale_replica_seconds", r_auto.replica_seconds);
+    report.metric("fixed_max_replica_seconds", r_max.replica_seconds);
+    report.metric("autoscale_p95_ms", r_auto.latency.p95_ms());
+    report.metric("autoscale_actions", r_auto.autoscale_actions.len() as f64);
+    report.push(r_single);
+    report.push(r_fleet);
+    report.push(r_auto_t);
+
+    let path = report.write(args.json_path()).expect("write bench report");
+    println!("wrote {}", path.display());
+    println!("cluster_scale OK");
+}

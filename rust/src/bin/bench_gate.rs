@@ -15,11 +15,15 @@
 //! * `min_metrics` — machine-independent lower bounds on report
 //!   metrics, keyed `<bench>.<metric>` (e.g. the idle-aware engine's
 //!   `noc_microbench.sparse_speedup_vs_reference >= 3`).
+//! * `max_metrics` — machine-independent *upper* bounds, same key
+//!   scheme (e.g. the autoscaler's cost claim
+//!   `cluster_scale.autoscale_replica_seconds_vs_fixed_max <= 0.8`).
 //!
 //! Output is a GitHub-flavoured markdown table (append to
 //! `$GITHUB_STEP_SUMMARY` in CI). `--update` rewrites the baseline's
 //! `mean_ns` section from the current reports instead of gating —
-//! the refresh flow after an intentional perf change.
+//! the refresh flow after an intentional perf change (`min_metrics`
+//! and `max_metrics` are hand-edited claims and are preserved).
 
 use std::collections::BTreeMap;
 use std::process::ExitCode;
@@ -119,6 +123,7 @@ fn run() -> vespa::Result<ExitCode> {
     };
     let base_means = num_map(&baseline, "mean_ns");
     let min_metrics = num_map(&baseline, "min_metrics");
+    let max_metrics = num_map(&baseline, "max_metrics");
 
     if update {
         // Refresh `mean_ns` only: the baseline's own tolerance (not a
@@ -142,6 +147,12 @@ fn run() -> vespa::Result<ExitCode> {
             .map(|(k, v)| format!("    {}: {}", json::fmt_str(k), json::fmt_f64(*v)))
             .collect();
         out.push_str(&mins.join(",\n"));
+        out.push_str("\n  },\n  \"max_metrics\": {\n");
+        let maxs: Vec<String> = max_metrics
+            .iter()
+            .map(|(k, v)| format!("    {}: {}", json::fmt_str(k), json::fmt_f64(*v)))
+            .collect();
+        out.push_str(&maxs.join(",\n"));
         out.push_str("\n  }\n}\n");
         std::fs::write(&baseline_path, out)
             .with_context(|| format!("writing baseline {baseline_path}"))?;
@@ -188,6 +199,24 @@ fn run() -> vespa::Result<ExitCode> {
                 println!(
                     "| {name} | ≥ {bound:.2} | {cur:.2} | — | {} |",
                     if ok { "✅" } else { "❌ below bound" }
+                );
+            }
+        }
+    }
+    for (name, bound) in &max_metrics {
+        match current.metrics.get(name) {
+            None => {
+                failures += 1;
+                println!("| {name} | ≤ {bound:.2} | missing | — | ❌ missing |");
+            }
+            Some(cur) => {
+                let ok = cur <= bound;
+                if !ok {
+                    failures += 1;
+                }
+                println!(
+                    "| {name} | ≤ {bound:.2} | {cur:.2} | — | {} |",
+                    if ok { "✅" } else { "❌ above bound" }
                 );
             }
         }

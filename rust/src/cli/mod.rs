@@ -6,6 +6,44 @@ use std::collections::BTreeMap;
 
 use anyhow::{bail, Context};
 
+/// Every `vespa` subcommand with its one-line description — the single
+/// registry behind the usage banner, so `--help` can never silently
+/// omit a subcommand (`rust/src/main.rs` smoke-tests that each entry
+/// appears and dispatches).
+pub const SUBCOMMANDS: &[(&str, &str)] = &[
+    ("run", "simulate a SoC described by a config file"),
+    ("serve", "serve open-loop traffic with replica-aware dispatch"),
+    ("cluster", "serve one workload across a fleet of SoC replicas"),
+    ("table1", "reproduce Table I (area + throughput, 1x/2x/4x)"),
+    ("fig2", "reproduce Fig. 2 (floorplan)"),
+    ("fig3", "reproduce Fig. 3 (throughput vs TG pressure)"),
+    ("fig4", "reproduce Fig. 4 (memory traffic vs DFS)"),
+    ("dse", "replication/frequency/fleet design-space sweep"),
+    ("validate", "parse + validate a config file"),
+    ("accels", "list the accelerator DB"),
+    ("artifacts-check", "load artifacts and cross-check PJRT vs native"),
+];
+
+/// The `usage:` header line listing every registered subcommand.
+pub fn usage_header() -> String {
+    let names: Vec<&str> = SUBCOMMANDS.iter().map(|(name, _)| *name).collect();
+    format!("usage: vespa <{}> [options]", names.join("|"))
+}
+
+/// One indented `name  description` line per registered subcommand.
+pub fn subcommand_lines() -> String {
+    let width = SUBCOMMANDS
+        .iter()
+        .map(|(name, _)| name.len())
+        .max()
+        .unwrap_or(0);
+    SUBCOMMANDS
+        .iter()
+        .map(|(name, desc)| format!("  {name:width$}  {desc}"))
+        .collect::<Vec<_>>()
+        .join("\n")
+}
+
 /// Parsed command line.
 #[derive(Debug, Clone, Default)]
 pub struct Args {
@@ -176,5 +214,22 @@ mod tests {
     fn trailing_flag() {
         let a = parse("x --verbose");
         assert!(a.flag("verbose"));
+    }
+
+    #[test]
+    fn usage_lists_every_subcommand() {
+        let header = usage_header();
+        let lines = subcommand_lines();
+        for (name, desc) in SUBCOMMANDS {
+            assert!(header.contains(name), "usage header missing {name:?}");
+            assert!(lines.contains(name), "subcommand lines missing {name:?}");
+            assert!(lines.contains(desc), "description missing for {name:?}");
+        }
+        for known in ["serve", "cluster", "dse"] {
+            assert!(
+                SUBCOMMANDS.iter().any(|(name, _)| *name == known),
+                "registry must include {known:?}"
+            );
+        }
     }
 }

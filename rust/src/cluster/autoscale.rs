@@ -1,0 +1,196 @@
+//! [`Autoscaler`]: the fleet-size control loop.
+//!
+//! Same shape as the [`crate::serve::QueueGovernor`] — windowed p95 +
+//! backlog hysteresis — but its actuator is replica count, and its
+//! decisions are *suggestions* the engine realizes (promote a draining
+//! slot, resume a standby slot from the warm base, or mark a victim
+//! draining). Keeping the decision pure makes it unit-testable without
+//! a fleet.
+
+use crate::util::{Percentiles, Ps};
+
+use super::spec::AutoscaleSpec;
+
+/// What the autoscaler wants done after a sample window.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScaleDecision {
+    Hold,
+    /// Activate one more replica (promote draining or resume standby).
+    Up,
+    /// Drain-then-retire one active replica.
+    Down,
+}
+
+/// The control loop. Feed completions with
+/// [`observe_latency`](Autoscaler::observe_latency), then call
+/// [`decide`](Autoscaler::decide) once per sample window.
+#[derive(Debug, Clone)]
+pub struct Autoscaler {
+    pub min: usize,
+    pub max: usize,
+    /// p95 latency target (ps).
+    pub slo: Ps,
+    up_windows: usize,
+    down_windows: usize,
+    backlog_high: f64,
+    backlog_low: f64,
+    relax_margin: f64,
+    breach_streak: usize,
+    calm_streak: usize,
+    /// Latencies (ps) observed since the last decision.
+    window: Vec<f64>,
+    /// Fleet-size actions taken: `(time, new active count)`.
+    pub actions: Vec<(Ps, usize)>,
+}
+
+impl Autoscaler {
+    pub fn new(spec: &AutoscaleSpec, max: usize, slo: Ps) -> Self {
+        Self {
+            min: spec.min_replicas.min(max),
+            max,
+            slo,
+            up_windows: spec.up_windows.max(1),
+            down_windows: spec.down_windows.max(1),
+            backlog_high: spec.backlog_high,
+            backlog_low: spec.backlog_low,
+            relax_margin: spec.relax_margin,
+            breach_streak: 0,
+            calm_streak: 0,
+            window: Vec::new(),
+            actions: Vec::new(),
+        }
+    }
+
+    pub fn observe_latency(&mut self, latency: Ps) {
+        self.window.push(latency as f64);
+    }
+
+    /// Judge the window that just closed and clear it. `active` is the
+    /// current active-replica count, `mean_backlog` the mean outstanding
+    /// requests per active replica.
+    pub fn decide(&mut self, active: usize, mean_backlog: f64) -> ScaleDecision {
+        let p95 = if self.window.is_empty() {
+            None
+        } else {
+            Percentiles::from_samples(&self.window).ok().map(|p| p.p95())
+        };
+        self.window.clear();
+        let slo = self.slo as f64;
+        let breach = p95.is_some_and(|p| p > slo) || mean_backlog > self.backlog_high;
+        // An empty window with an empty queue is calm (nothing to do is
+        // the definition of over-provisioned).
+        let relaxed = match p95 {
+            Some(p) => p < self.relax_margin * slo,
+            None => true,
+        };
+        let calm = relaxed && mean_backlog <= self.backlog_low;
+        if breach {
+            self.calm_streak = 0;
+            self.breach_streak += 1;
+            if self.breach_streak >= self.up_windows && active < self.max {
+                self.breach_streak = 0;
+                return ScaleDecision::Up;
+            }
+        } else if calm {
+            self.breach_streak = 0;
+            self.calm_streak += 1;
+            if self.calm_streak >= self.down_windows && active > self.min {
+                self.calm_streak = 0;
+                return ScaleDecision::Down;
+            }
+        } else {
+            self.breach_streak = 0;
+            self.calm_streak = 0;
+        }
+        ScaleDecision::Hold
+    }
+
+    /// Record a realized fleet-size change.
+    pub fn record(&mut self, now: Ps, active: usize) {
+        self.actions.push((now, active));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scaler(up: usize, down: usize) -> Autoscaler {
+        let spec = AutoscaleSpec::new(1).up_windows(up).down_windows(down);
+        Autoscaler::new(&spec, 4, 1_000_000) // SLO 1 us
+    }
+
+    fn breach(a: &mut Autoscaler, active: usize) -> ScaleDecision {
+        a.observe_latency(2_000_000); // 2x the SLO
+        a.decide(active, 0.0)
+    }
+
+    fn calm(a: &mut Autoscaler, active: usize) -> ScaleDecision {
+        a.observe_latency(100_000); // well under relax_margin * SLO
+        a.decide(active, 0.0)
+    }
+
+    #[test]
+    fn scale_up_needs_sustained_breach() {
+        let mut a = scaler(3, 5);
+        assert_eq!(breach(&mut a, 1), ScaleDecision::Hold);
+        assert_eq!(breach(&mut a, 1), ScaleDecision::Hold);
+        assert_eq!(breach(&mut a, 1), ScaleDecision::Up);
+        // Streak reset by the action: the next breach starts over.
+        assert_eq!(breach(&mut a, 2), ScaleDecision::Hold);
+    }
+
+    #[test]
+    fn calm_window_resets_breach_streak() {
+        let mut a = scaler(2, 5);
+        assert_eq!(breach(&mut a, 1), ScaleDecision::Hold);
+        assert_eq!(calm(&mut a, 1), ScaleDecision::Hold);
+        assert_eq!(breach(&mut a, 1), ScaleDecision::Hold);
+        assert_eq!(breach(&mut a, 1), ScaleDecision::Up);
+    }
+
+    #[test]
+    fn scale_down_needs_sustained_calm_and_respects_min() {
+        let mut a = scaler(2, 3);
+        assert_eq!(calm(&mut a, 2), ScaleDecision::Hold);
+        assert_eq!(calm(&mut a, 2), ScaleDecision::Hold);
+        assert_eq!(calm(&mut a, 2), ScaleDecision::Down);
+        // At the min bound calm never retires the last replica.
+        for _ in 0..10 {
+            assert_eq!(calm(&mut a, 1), ScaleDecision::Hold);
+        }
+    }
+
+    #[test]
+    fn scale_up_respects_max() {
+        let mut a = scaler(1, 5);
+        for _ in 0..10 {
+            assert_eq!(breach(&mut a, 4), ScaleDecision::Hold);
+        }
+        // Drop below max and the standing breach fires immediately.
+        assert_eq!(breach(&mut a, 3), ScaleDecision::Up);
+    }
+
+    #[test]
+    fn backlog_alone_breaches_and_blocks_calm() {
+        let mut a = scaler(1, 1);
+        // No latencies at all: backlog above high is still a breach...
+        assert_eq!(a.decide(1, 10.0), ScaleDecision::Up);
+        // ...and a quiet window with backlog above low is neutral, not
+        // calm (queues are holding work; don't retire capacity).
+        assert_eq!(a.decide(2, 2.0), ScaleDecision::Hold);
+        // Empty window + empty queue is calm.
+        assert_eq!(a.decide(2, 0.0), ScaleDecision::Down);
+    }
+
+    #[test]
+    fn neutral_window_resets_both_streaks() {
+        let mut a = scaler(2, 2);
+        assert_eq!(breach(&mut a, 1), ScaleDecision::Hold);
+        // p95 between relax_margin*slo and slo: neither breach nor calm.
+        a.observe_latency(700_000);
+        assert_eq!(a.decide(1, 0.0), ScaleDecision::Hold);
+        assert_eq!(breach(&mut a, 1), ScaleDecision::Hold);
+        assert_eq!(breach(&mut a, 1), ScaleDecision::Up);
+    }
+}

@@ -1,0 +1,543 @@
+//! The cluster engine: one open-loop arrival stream fanned across N
+//! independent SoC replicas by a front-end balancer, with an optional
+//! SLO-driven autoscaler resizing the active fleet.
+//!
+//! Each replica is a full [`Session`] — its own SoC, NoC, DFS islands,
+//! and per-replica [`QueueGovernor`] — advanced in lockstep on a shared
+//! *cluster clock*. The clock starts at 0; replica-local SoC time is an
+//! affine map fixed at activation (`local = local_base + (t - base)`),
+//! so completions keep their exact tile-log timestamps when attributed
+//! back to cluster-time arrivals.
+//!
+//! Elasticity uses the warm-base trick from the sweep engine: the spec's
+//! tiles are staged, gated, and settled **once**, then snapshotted;
+//! every (re)activation forks that [`Session::snapshot`] and skips
+//! warmup entirely. Retiring is drain-then-retire — a draining replica
+//! takes no new work but finishes its queue before going standby.
+//!
+//! Everything iterates in slot-index order and the arrival schedule is
+//! derived only from `(spec.seed, spec.duration)`, so the same
+//! [`ClusterSpec`] + config reproduces a bit-identical
+//! [`ClusterReport`].
+
+use crate::config::SocConfig;
+use crate::monitor::TimeSeries;
+use crate::policy::DfsPolicy;
+use crate::scenario::{Session, SocSnapshot};
+use crate::serve::dispatch::{DispatchPolicy, Dispatcher};
+use crate::serve::engine::{prepare_serve_tiles, resolve_tiles, tile_queues};
+use crate::serve::governor::QueueGovernor;
+use crate::serve::report::LatencyStats;
+use crate::serve::ServeSpec;
+use crate::util::{Percentiles, Ps};
+
+use super::autoscale::{Autoscaler, ScaleDecision};
+use super::report::{ClusterReport, ReplicaReport};
+use super::spec::ClusterSpec;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum SlotState {
+    Active,
+    /// No new work; retires to standby once its queue and pipeline are
+    /// empty.
+    Draining,
+    /// No live SoC; costs nothing until reactivated from the warm base.
+    Standby,
+}
+
+/// One replica slot of the fleet.
+struct Replica {
+    state: SlotState,
+    session: Option<Session>,
+    disp: Dispatcher,
+    governor: Option<QueueGovernor>,
+    /// Replica-local SoC time at `cluster_base` (the warm snapshot's
+    /// clock for the current activation).
+    local_base: Ps,
+    /// Cluster time of the current activation.
+    cluster_base: Ps,
+    activated_at: Ps,
+    /// Accumulated active/draining time over finished activations (ps).
+    active_ps: Ps,
+    activations: u64,
+    /// Completed-request latencies (ps) across all activations.
+    latencies: Vec<f64>,
+    // Counters carried over from finished activations (live ones are on
+    // `disp`, which is rebuilt per activation).
+    done_admitted: u64,
+    done_completed: u64,
+    done_dropped: u64,
+    queue_depth: TimeSeries,
+    freq_mhz: TimeSeries,
+    active_state: TimeSeries,
+}
+
+impl Replica {
+    fn backlog(&self) -> usize {
+        self.disp.tiles.iter().map(|q| q.in_flight.len()).sum()
+    }
+
+    fn has_space(&self) -> bool {
+        self.disp
+            .tiles
+            .iter()
+            .any(|q| q.in_flight.len() < self.disp.capacity)
+    }
+
+    fn to_local(&self, tc: Ps) -> Ps {
+        self.local_base + (tc - self.cluster_base)
+    }
+
+    /// Cheapest estimated drain time among this replica's tiles for one
+    /// more request: the tile-level [`DispatchPolicy::LeastLoadedTile`]
+    /// estimate lifted to cluster scope — gate backlog
+    /// ([`serve_backlog`](crate::tiles::MraTile::serve_backlog)) weighted
+    /// by invocation cycles at the island's live DFS frequency.
+    fn estimated_drain(&self, tc: Ps) -> f64 {
+        let Some(session) = self.session.as_ref() else {
+            return f64::INFINITY;
+        };
+        let local = self.to_local(tc);
+        let soc = session.soc();
+        self.disp
+            .tiles
+            .iter()
+            .map(|q| {
+                let mhz = soc.islands[q.island].freq(local).as_mhz().max(1) as f64;
+                let backlog = (soc.mra(q.tile).serve_backlog() + 1) as f64;
+                backlog * q.compute_cycles as f64 / (mhz * q.replicas as f64)
+            })
+            .fold(f64::INFINITY, f64::min)
+    }
+}
+
+/// Fork the warm base into `slot` and mark it active at cluster time
+/// `tc`. The snapshot is already staged + gated + settled, so the
+/// replica serves its first request without any warmup.
+fn activate(
+    slot: &mut Replica,
+    snap: &SocSnapshot,
+    spec: &ServeSpec,
+    tiles: &[usize],
+    tc: Ps,
+) -> crate::Result<()> {
+    let session = Session::resume(snap)?;
+    slot.disp = Dispatcher::new(
+        spec.policy,
+        spec.queue_capacity,
+        tile_queues(&session, tiles),
+    );
+    slot.governor = spec
+        .governor
+        .as_ref()
+        .map(|g| QueueGovernor::new(g, tiles.to_vec()));
+    slot.local_base = snap.now();
+    slot.cluster_base = tc;
+    slot.activated_at = tc;
+    slot.activations += 1;
+    slot.state = SlotState::Active;
+    slot.session = Some(session);
+    Ok(())
+}
+
+/// The front-end balancer: pick an active replica with queue space, or
+/// `None` (spill) when the whole fleet is saturated. Reuses
+/// [`DispatchPolicy`] semantics one level up.
+fn pick_slot(
+    balancer: DispatchPolicy,
+    slots: &[Replica],
+    rr_cursor: &mut usize,
+    tc: Ps,
+) -> Option<usize> {
+    let eligible = |s: &Replica| s.state == SlotState::Active && s.has_space();
+    let n = slots.len();
+    match balancer {
+        DispatchPolicy::RoundRobin => {
+            for off in 0..n {
+                let i = (*rr_cursor + off) % n;
+                if eligible(&slots[i]) {
+                    *rr_cursor = (i + 1) % n;
+                    return Some(i);
+                }
+            }
+            None
+        }
+        DispatchPolicy::JoinShortestQueue => slots
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| eligible(s))
+            .min_by_key(|(i, s)| (s.backlog(), *i))
+            .map(|(i, _)| i),
+        DispatchPolicy::LeastLoadedTile => slots
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| eligible(s))
+            .map(|(i, s)| (i, s.estimated_drain(tc)))
+            .min_by(|(ia, a), (ib, b)| a.total_cmp(b).then(ia.cmp(ib)))
+            .map(|(i, _)| i),
+    }
+}
+
+impl ClusterSpec {
+    /// Run this cluster on `cfg`. Convenience for [`serve_cluster`].
+    pub fn run(&self, cfg: SocConfig) -> crate::Result<ClusterReport> {
+        serve_cluster(cfg, self)
+    }
+}
+
+/// Serve `cspec.spec`'s traffic across the fleet and return the merged
+/// [`ClusterReport`]. See the [module docs](self) for the model.
+pub fn serve_cluster(cfg: SocConfig, cspec: &ClusterSpec) -> crate::Result<ClusterReport> {
+    cspec.validate()?;
+    let spec = &cspec.spec;
+
+    // Warm base: build, stage, gate, and settle one session, then
+    // snapshot it. Every activation forks this.
+    let mut base = Session::new(cfg)?;
+    let tiles = resolve_tiles(&base, spec)?;
+    prepare_serve_tiles(&mut base, spec, &tiles)?;
+    let snap = base.snapshot()?;
+    drop(base);
+
+    let mut scaler = cspec
+        .autoscale
+        .as_ref()
+        .map(|a| Autoscaler::new(a, cspec.replicas, spec.slo.expect("validated: autoscale needs an SLO")));
+    let initial_active = match &cspec.autoscale {
+        Some(a) => a.min_replicas,
+        None => cspec.replicas,
+    };
+
+    let mut slots: Vec<Replica> = (0..cspec.replicas)
+        .map(|i| Replica {
+            state: SlotState::Standby,
+            session: None,
+            disp: Dispatcher::new(spec.policy, spec.queue_capacity, Vec::new()),
+            governor: None,
+            local_base: 0,
+            cluster_base: 0,
+            activated_at: 0,
+            active_ps: 0,
+            activations: 0,
+            latencies: Vec::new(),
+            done_admitted: 0,
+            done_completed: 0,
+            done_dropped: 0,
+            queue_depth: TimeSeries::new(format!("r{i}_queue")),
+            freq_mhz: TimeSeries::new(format!("r{i}_freq")),
+            active_state: TimeSeries::new(format!("r{i}_active")),
+        })
+        .collect();
+    for slot in slots.iter_mut().take(initial_active) {
+        activate(slot, &snap, spec, &tiles, 0)?;
+    }
+
+    // The cluster-level arrival schedule: exactly what a lone SoC would
+    // see from the same spec — the balancer splits it, the seed doesn't.
+    let mut arrivals = spec.arrival.times(spec.seed, spec.duration);
+    arrivals.sort_unstable();
+    let offered = arrivals.len() as u64;
+    let mut next_arr = 0usize;
+
+    let duration = spec.duration;
+    let deadline = duration + spec.drain;
+    let sample_interval = if spec.sample_interval > 0 {
+        spec.sample_interval
+    } else {
+        (duration / 100).max(1_000_000)
+    };
+    let mut next_sample: Ps = 0;
+    let mut active_series = TimeSeries::new("active_replicas");
+
+    // Arrival time of each admitted request, indexed by request id
+    // (ids are globally unique across the fleet).
+    let mut reqs: Vec<Ps> = Vec::new();
+    let mut completed: u64 = 0;
+    let mut within_slo: u64 = 0;
+    let mut spilled: u64 = 0;
+    let mut rr_cursor = 0usize;
+    let mut tc: Ps = 0;
+
+    loop {
+        let pending: usize = slots.iter().map(|s| s.backlog()).sum();
+        let draining = slots.iter().any(|s| s.state == SlotState::Draining);
+        let next_arrival = arrivals.get(next_arr).copied();
+        if tc >= deadline
+            || (tc >= duration && next_arrival.is_none() && pending == 0 && !draining)
+        {
+            break;
+        }
+        let mut target = next_sample.min(deadline);
+        if let Some(a) = next_arrival {
+            target = target.min(a);
+        }
+        let target = target.max(tc);
+
+        // 1) Advance every live replica to the cluster target, in slot
+        // order (replicas are independent, so order only matters for
+        // determinism).
+        for slot in slots.iter_mut() {
+            if slot.session.is_some() {
+                let local = slot.to_local(target);
+                slot.session.as_mut().expect("checked").run_until(local);
+            }
+        }
+        tc = target;
+
+        // 2) Attribute completions (exact tile-log timestamps mapped
+        // onto the cluster clock). Same peek-then-drain dance as the
+        // single-SoC engine: a mutable tile poke resets the idle wake
+        // point, so only touch tiles that actually completed something.
+        for slot in slots.iter_mut() {
+            let Some(session) = slot.session.as_mut() else {
+                continue;
+            };
+            for ti in 0..slot.disp.tiles.len() {
+                let tile = slot.disp.tiles[ti].tile;
+                let has_completions = session
+                    .soc()
+                    .mra(tile)
+                    .serve
+                    .as_ref()
+                    .is_some_and(|g| !g.completions.is_empty());
+                if !has_completions {
+                    continue;
+                }
+                let log: Vec<Ps> = {
+                    let m = session.soc_mut().try_mra_mut(tile)?;
+                    match &mut m.serve {
+                        Some(g) => g.completions.drain(..).map(|(t, _replica)| t).collect(),
+                        None => Vec::new(),
+                    }
+                };
+                for t_local in log {
+                    let Some(req) = slot.disp.complete(ti) else {
+                        debug_assert!(false, "completion without an outstanding request");
+                        continue;
+                    };
+                    let t_c = slot.cluster_base + (t_local - slot.local_base);
+                    let lat = t_c - reqs[req];
+                    slot.latencies.push(lat as f64);
+                    completed += 1;
+                    if let Some(slo) = spec.slo {
+                        if lat <= slo {
+                            within_slo += 1;
+                        }
+                    }
+                    if let Some(g) = &mut slot.governor {
+                        g.observe_latency(lat);
+                    }
+                    if let Some(a) = &mut scaler {
+                        a.observe_latency(lat);
+                    }
+                }
+            }
+        }
+
+        // 3) Drained replicas retire to standby: queue empty and every
+        // pipeline idle. Their session is dropped — a standby replica
+        // costs nothing until the warm base revives it.
+        for slot in slots.iter_mut() {
+            if slot.state != SlotState::Draining || slot.backlog() > 0 {
+                continue;
+            }
+            let idle = slot
+                .session
+                .as_ref()
+                .is_some_and(|s| tiles.iter().all(|&t| s.soc().mra(t).pipeline_idle()));
+            if !idle {
+                continue;
+            }
+            slot.active_ps += tc - slot.activated_at;
+            slot.done_admitted += slot.disp.tiles.iter().map(|q| q.admitted).sum::<u64>();
+            slot.done_completed += slot.disp.tiles.iter().map(|q| q.completed).sum::<u64>();
+            slot.done_dropped += slot.disp.dropped;
+            slot.disp = Dispatcher::new(spec.policy, spec.queue_capacity, Vec::new());
+            slot.governor = None;
+            slot.session = None;
+            slot.state = SlotState::Standby;
+        }
+
+        // 4) Admit due arrivals through the balancer. No active replica
+        // with space means a front-end spill — final, like any
+        // open-loop drop.
+        while next_arr < arrivals.len() && arrivals[next_arr] <= tc {
+            let t_arr = arrivals[next_arr];
+            next_arr += 1;
+            match pick_slot(cspec.balancer, &slots, &mut rr_cursor, tc) {
+                Some(si) => {
+                    let slot = &mut slots[si];
+                    let local_now = slot.to_local(tc);
+                    let session = slot.session.as_mut().expect("active slot has a live session");
+                    let ti = slot
+                        .disp
+                        .pick(session.soc(), local_now)
+                        .expect("picked replica has queue space");
+                    let req = reqs.len();
+                    reqs.push(t_arr);
+                    slot.disp.bind(ti, req);
+                    let tile = slot.disp.tiles[ti].tile;
+                    session.soc_mut().try_mra_mut(tile)?.serve_grant(1);
+                }
+                None => spilled += 1,
+            }
+        }
+
+        // 5) Sample timelines, run per-replica governors, and let the
+        // autoscaler resize the fleet.
+        if tc >= next_sample {
+            for slot in slots.iter_mut() {
+                slot.queue_depth.push(tc, slot.backlog() as f64);
+                slot.active_state.push(
+                    tc,
+                    match slot.state {
+                        SlotState::Active => 1.0,
+                        SlotState::Draining => 0.5,
+                        SlotState::Standby => 0.0,
+                    },
+                );
+                let isl = slot.disp.tiles.first().map(|q| q.island);
+                match (&mut slot.session, isl) {
+                    (Some(session), Some(isl)) => {
+                        let local = slot.to_local(tc);
+                        slot.freq_mhz
+                            .push(tc, session.soc().islands[isl].freq(local).as_mhz() as f64);
+                        if let Some(g) = &mut slot.governor {
+                            g.on_sample(session.soc_mut(), local);
+                        }
+                    }
+                    _ => slot.freq_mhz.push(tc, 0.0),
+                }
+            }
+            let active = slots.iter().filter(|s| s.state == SlotState::Active).count();
+            active_series.push(tc, active as f64);
+            if let Some(a) = &mut scaler {
+                let backlog: usize = slots
+                    .iter()
+                    .filter(|s| s.state == SlotState::Active)
+                    .map(|s| s.backlog())
+                    .sum();
+                let mean_backlog = backlog as f64 / active.max(1) as f64;
+                match a.decide(active, mean_backlog) {
+                    // Don't add capacity for traffic that can no longer
+                    // arrive — past the horizon only drain-downs apply.
+                    ScaleDecision::Up if tc < duration => {
+                        // A draining slot is still warm and live:
+                        // promote it before waking a standby one.
+                        let pick = slots
+                            .iter()
+                            .position(|s| s.state == SlotState::Draining)
+                            .or_else(|| {
+                                slots.iter().position(|s| s.state == SlotState::Standby)
+                            });
+                        if let Some(i) = pick {
+                            if slots[i].state == SlotState::Draining {
+                                slots[i].state = SlotState::Active;
+                            } else {
+                                activate(&mut slots[i], &snap, spec, &tiles, tc)?;
+                            }
+                            a.record(tc, active + 1);
+                        }
+                    }
+                    ScaleDecision::Down => {
+                        // Retire the least-backlogged active slot; ties
+                        // pick the highest index so slot 0 stays pinned.
+                        let victim = slots
+                            .iter()
+                            .enumerate()
+                            .filter(|(_, s)| s.state == SlotState::Active)
+                            .min_by_key(|(i, s)| (s.backlog(), std::cmp::Reverse(*i)))
+                            .map(|(i, _)| i);
+                        if let Some(i) = victim {
+                            slots[i].state = SlotState::Draining;
+                            a.record(tc, active - 1);
+                        }
+                    }
+                    _ => {}
+                }
+            }
+            while next_sample <= tc {
+                next_sample += sample_interval;
+            }
+        }
+    }
+
+    // Close out live replicas: ungate their tiles and count their final
+    // activation span into the cost proxy.
+    for slot in slots.iter_mut() {
+        if let Some(session) = slot.session.as_mut() {
+            for &t in &tiles {
+                session.soc_mut().try_mra_mut(t)?.serve_end();
+            }
+        }
+        if slot.state != SlotState::Standby {
+            slot.active_ps += tc - slot.activated_at;
+        }
+    }
+
+    // Merge per-replica latency distributions exactly.
+    let admitted = reqs.len() as u64;
+    let dur_s = duration as f64 / 1e12;
+    let mut merged = Percentiles::default();
+    let mut replica_dropped: u64 = 0;
+    let mut per_replica = Vec::with_capacity(slots.len());
+    let final_active = slots.iter().filter(|s| s.state == SlotState::Active).count();
+    let replica_seconds = slots.iter().map(|s| s.active_ps).sum::<Ps>() as f64 / 1e12;
+    for (i, slot) in slots.into_iter().enumerate() {
+        let p = Percentiles::from_samples(&slot.latencies)?;
+        merged = merged.merge(&p);
+        let live_admitted: u64 = slot.disp.tiles.iter().map(|q| q.admitted).sum();
+        let live_completed: u64 = slot.disp.tiles.iter().map(|q| q.completed).sum();
+        let unfinished: u64 = slot.disp.tiles.iter().map(|q| q.in_flight.len() as u64).sum();
+        let dropped = slot.done_dropped + slot.disp.dropped;
+        replica_dropped += dropped;
+        per_replica.push(ReplicaReport {
+            slot: i,
+            activations: slot.activations,
+            admitted: slot.done_admitted + live_admitted,
+            completed: slot.done_completed + live_completed,
+            dropped,
+            unfinished,
+            latency: LatencyStats::from_percentiles(&p),
+            active_ps: slot.active_ps,
+            queue_depth: slot.queue_depth,
+            freq_mhz: slot.freq_mhz,
+            active_state: slot.active_state,
+        });
+    }
+    let latency = LatencyStats::from_percentiles(&merged);
+    let slo_met = match (spec.slo, completed) {
+        (Some(slo), c) if c > 0 => Some(latency.p95_ps <= slo as f64),
+        _ => None,
+    };
+    let slo_attainment = match (spec.slo, completed) {
+        (Some(_), c) if c > 0 => within_slo as f64 / c as f64,
+        // An SLO with zero completions is total failure, not perfection.
+        (Some(_), _) => 0.0,
+        (None, _) => 1.0,
+    };
+
+    Ok(ClusterReport {
+        fleet: cspec.replicas,
+        balancer: cspec.balancer,
+        offered,
+        admitted,
+        dropped: spilled + replica_dropped,
+        spilled,
+        completed,
+        unfinished: admitted - completed,
+        duration,
+        elapsed: tc,
+        offered_rps: offered as f64 / dur_s,
+        achieved_rps: completed as f64 / dur_s,
+        latency,
+        slo: spec.slo,
+        slo_met,
+        slo_attainment,
+        per_replica,
+        active_replicas: active_series,
+        replica_seconds,
+        autoscale_actions: scaler.map(|a| a.actions).unwrap_or_default(),
+        final_active,
+    })
+}

@@ -1,0 +1,54 @@
+//! Multi-SoC fleet serving: one workload, N replicas, one report.
+//!
+//! The paper's prototype is a single 4x4 SoC; its monitoring + DFS
+//! story scales by multiplying *instances*, not grid size (the axis
+//! ANDROMEDA and Open ESP both explore). This module serves one
+//! [`ServeSpec`](crate::serve::ServeSpec) across a fleet of identical,
+//! independent SoC replicas:
+//!
+//! * a **front-end balancer** reusing
+//!   [`DispatchPolicy`](crate::serve::DispatchPolicy) semantics at
+//!   cluster scope — round-robin, join-shortest-backlog, or
+//!   least-loaded-replica (gate backlogs weighted by invocation cycles
+//!   at each island's live DFS frequency);
+//! * per-replica [`QueueGovernor`](crate::serve::QueueGovernor)s
+//!   running unchanged underneath — frequency inside the box, fleet
+//!   size outside it;
+//! * an optional [`Autoscaler`] that activates and retires replicas
+//!   against the SLO with hysteresis, using
+//!   [`Session::snapshot`](crate::scenario::Session::snapshot) warm
+//!   bases so a reactivated replica skips warmup entirely.
+//!
+//! Determinism contract: arrivals come from the spec seed via
+//! [`util::rng`](crate::util::rng), every fleet iteration is in slot
+//! order, and [`Percentiles::merge`](crate::util::Percentiles::merge)
+//! combines per-replica sample sets exactly — so the same seed + spec
+//! + config yields a **bit-identical** [`ClusterReport`].
+//!
+//! ```no_run
+//! use vespa::cluster::{AutoscaleSpec, ClusterSpec};
+//! use vespa::config::presets::paper_soc;
+//! use vespa::scenario::ms;
+//! use vespa::serve::{Arrival, ServeSpec};
+//!
+//! # fn main() -> vespa::Result<()> {
+//! let cfg = paper_soc(("dfmul", 2), ("dfadd", 1));
+//! let spec = ServeSpec::new(Arrival::Poisson { rps: 4000.0 }, ms(50))
+//!     .slo(ms(5));
+//! let report = ClusterSpec::new(4, spec)
+//!     .autoscale(AutoscaleSpec::new(1))
+//!     .run(cfg)?;
+//! println!("{}", report.render());
+//! # Ok(())
+//! # }
+//! ```
+
+pub mod autoscale;
+pub mod engine;
+pub mod report;
+pub mod spec;
+
+pub use autoscale::{Autoscaler, ScaleDecision};
+pub use engine::serve_cluster;
+pub use report::{ClusterReport, ReplicaReport};
+pub use spec::{AutoscaleSpec, ClusterSpec};

@@ -1,0 +1,149 @@
+//! [`ClusterSpec`]: one serving workload across a fleet of SoC replicas.
+
+use crate::serve::{Arrival, DispatchPolicy, ServeSpec};
+
+/// SLO-driven elasticity bounds and hysteresis for a cluster run.
+///
+/// The autoscaler samples on the cluster's `sample_interval` cadence and
+/// judges each window exactly like a [`crate::serve::QueueGovernor`]
+/// does — windowed p95 against the SLO plus mean backlog per active
+/// replica — but actuates *fleet size* instead of frequency:
+///
+/// * **scale up** one replica after `up_windows` consecutive breached
+///   windows (windowed p95 over the SLO, or backlog above
+///   `backlog_high`);
+/// * **scale down** one replica after `down_windows` consecutive calm
+///   windows (windowed p95 under `relax_margin * SLO` and backlog at
+///   most `backlog_low`). The victim drains its queue before retiring.
+///
+/// Streaks reset on any opposite or neutral window, so a noisy boundary
+/// can't flap the fleet. Active count stays in
+/// `[min_replicas, ClusterSpec::replicas]`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AutoscaleSpec {
+    /// Never drain below this many active replicas.
+    pub min_replicas: usize,
+    /// Consecutive breached windows before a scale-up.
+    pub up_windows: usize,
+    /// Consecutive calm windows before a drain-then-retire.
+    pub down_windows: usize,
+    /// Breach when mean backlog per active replica exceeds this.
+    pub backlog_high: f64,
+    /// Calm only when mean backlog per active replica is at most this.
+    pub backlog_low: f64,
+    /// Calm only while windowed p95 < `relax_margin * SLO`.
+    pub relax_margin: f64,
+}
+
+impl AutoscaleSpec {
+    /// Defaults mirror [`crate::serve::GovernorSpec`]: react fast to
+    /// breaches (2 windows), retire reluctantly (5 windows).
+    pub fn new(min_replicas: usize) -> Self {
+        Self {
+            min_replicas,
+            up_windows: 2,
+            down_windows: 5,
+            backlog_high: 4.0,
+            backlog_low: 1.0,
+            relax_margin: 0.5,
+        }
+    }
+
+    pub fn up_windows(mut self, n: usize) -> Self {
+        self.up_windows = n;
+        self
+    }
+
+    pub fn down_windows(mut self, n: usize) -> Self {
+        self.down_windows = n;
+        self
+    }
+}
+
+impl Default for AutoscaleSpec {
+    fn default() -> Self {
+        Self::new(1)
+    }
+}
+
+/// One [`ServeSpec`] served by a fleet of up to `replicas` identical,
+/// independent SoCs behind a front-end balancer.
+///
+/// The cluster clock starts at 0; arrivals come from
+/// `spec.arrival.times(spec.seed, spec.duration)` exactly as a single
+/// SoC's would, so the same seed + spec is bit-identical — fleet-level
+/// determinism is the whole contract of
+/// [`serve_cluster`](super::serve_cluster).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterSpec {
+    /// Fleet size: total replica slots (the autoscaler's upper bound).
+    pub replicas: usize,
+    /// The per-replica serving spec. `arrival`, `duration`, `drain`,
+    /// `seed`, and `slo` describe the *cluster-level* workload; `tiles`,
+    /// `policy`, `queue_capacity`, and `governor` configure each replica
+    /// exactly as they would a lone [`Session::serve`](crate::scenario::Session::serve).
+    pub spec: ServeSpec,
+    /// Front-end balancer across replicas. Reuses [`DispatchPolicy`]
+    /// semantics one level up: round-robin over replicas with space,
+    /// join-shortest-backlog, or least-loaded (gate backlogs weighted by
+    /// invocation cycles at each island's live DFS frequency).
+    pub balancer: DispatchPolicy,
+    /// Optional SLO-driven elasticity. Requires `spec.slo`.
+    pub autoscale: Option<AutoscaleSpec>,
+}
+
+impl ClusterSpec {
+    pub fn new(replicas: usize, spec: ServeSpec) -> Self {
+        Self {
+            replicas,
+            spec,
+            balancer: DispatchPolicy::default(),
+            autoscale: None,
+        }
+    }
+
+    pub fn balancer(mut self, policy: DispatchPolicy) -> Self {
+        self.balancer = policy;
+        self
+    }
+
+    pub fn autoscale(mut self, spec: AutoscaleSpec) -> Self {
+        self.autoscale = Some(spec);
+        self
+    }
+
+    pub(crate) fn validate(&self) -> crate::Result<()> {
+        anyhow::ensure!(
+            (1..=64).contains(&self.replicas),
+            "cluster: replicas must be in 1..=64, got {}",
+            self.replicas
+        );
+        anyhow::ensure!(self.spec.duration > 0, "cluster: duration must be positive");
+        anyhow::ensure!(
+            self.spec.queue_capacity > 0,
+            "cluster: queue capacity must be at least 1"
+        );
+        anyhow::ensure!(
+            !matches!(self.spec.arrival, Arrival::ClosedLoop { .. }),
+            "cluster: the front-end balancer is open-loop; closed-loop \
+             arrivals belong to a single-SoC serve phase"
+        );
+        if let Some(a) = &self.autoscale {
+            anyhow::ensure!(
+                (1..=self.replicas).contains(&a.min_replicas),
+                "cluster: autoscale min_replicas must be in 1..={}, got {}",
+                self.replicas,
+                a.min_replicas
+            );
+            anyhow::ensure!(
+                a.up_windows >= 1 && a.down_windows >= 1,
+                "cluster: autoscale windows must be at least 1"
+            );
+            anyhow::ensure!(
+                self.spec.slo.is_some(),
+                "cluster: autoscaling needs an SLO to judge against (set spec.slo)"
+            );
+        }
+        Ok(())
+    }
+}

@@ -7,14 +7,18 @@
 //! Points are scored by steady-state throughput by default; set
 //! [`SweepParams::objective`] to [`Objective::TailLatency`] to serve
 //! traffic at every point instead and rank by p99-under-SLO
-//! ([`rank_by_p99_under_slo`], `vespa dse --serve-rps N --slo-ms M`).
+//! ([`rank_by_p99_under_slo`], `vespa dse --serve-rps N --slo-ms M`), or
+//! to [`Objective::Cluster`] to evaluate each point as a fleet of
+//! replica SoCs and rank by replica-seconds-under-SLO
+//! ([`rank_by_replica_seconds_under_slo`],
+//! `vespa dse --serve-rps N --slo-ms M --fleets 1,2,4`).
 
 pub mod pareto;
 pub mod sweep;
 
 pub use pareto::pareto_front;
 pub use sweep::{
-    clear_memo, effective_phases, evaluate_point, evaluate_point_serving, memo_len,
-    rank_by_p99_under_slo, sweep_replication, sweep_replication_serial, DsePoint, Objective,
-    SweepMode, SweepParams,
+    clear_memo, effective_phases, evaluate_point, evaluate_point_cluster, evaluate_point_serving,
+    memo_len, rank_by_p99_under_slo, rank_by_replica_seconds_under_slo, sweep_replication,
+    sweep_replication_serial, DsePoint, Objective, SweepMode, SweepParams,
 };

@@ -29,10 +29,11 @@ use std::collections::HashMap;
 use std::sync::{Mutex, OnceLock};
 
 use crate::clock::domain::FreqError;
+use crate::cluster::{serve_cluster, AutoscaleSpec, ClusterSpec};
 use crate::config::presets::ISL_NOC;
 use crate::resources::{mra_area, AccelArea, Utilization, XC7V2000T};
 use crate::scenario::{ScenarioSet, ScenarioSpec, Session, SocSnapshot};
-use crate::serve::ServeSpec;
+use crate::serve::{DispatchPolicy, ServeSpec};
 use crate::tiles::AccelTiming;
 use crate::util::Ps;
 
@@ -52,6 +53,24 @@ pub enum Objective {
         /// Serving phase run at every point (`tiles` is overridden with
         /// the point's accelerator-under-test).
         spec: ServeSpec,
+    },
+    /// Fleet sizing: every design point is evaluated as a *cluster* of
+    /// `fleets[i]` replica SoCs serving `serve`'s arrivals behind
+    /// `balancer`, and ranked by replica-seconds-under-SLO
+    /// ([`rank_by_replica_seconds_under_slo`]) — the fleet-size axis
+    /// joins frequency and replication as a sweepable knob. Like
+    /// [`Objective::TailLatency`], always evaluates cold.
+    Cluster {
+        /// Serving phase run at every (point, fleet) pair (`tiles` is
+        /// overridden with the point's accelerator-under-test).
+        serve: ServeSpec,
+        /// Front-end balancer across replicas.
+        balancer: DispatchPolicy,
+        /// Optional elasticity; `min_replicas` is clamped to each fleet
+        /// size.
+        autoscale: Option<AutoscaleSpec>,
+        /// Fleet sizes to sweep (each spec evaluates once per entry).
+        fleets: Vec<usize>,
     },
 }
 
@@ -82,6 +101,12 @@ pub struct DsePoint {
     pub achieved_rps: Option<f64>,
     /// Whether the serving SLO was met (p95 within the spec's SLO).
     pub slo_met: Option<bool>,
+    /// Fleet size (replica SoCs) under [`Objective::Cluster`]; `None`
+    /// for single-SoC points.
+    pub fleet: Option<usize>,
+    /// Cost proxy under [`Objective::Cluster`]: total active replica
+    /// time in seconds ([`ClusterReport::replica_seconds`](crate::cluster::ClusterReport)).
+    pub replica_seconds: Option<f64>,
 }
 
 /// How a sweep turns design points into simulations.
@@ -205,6 +230,14 @@ fn objective_fingerprint(objective: &Objective) -> String {
     match objective {
         Objective::Throughput => String::new(),
         Objective::TailLatency { spec } => format!("{spec:?}"),
+        // The fleet size is appended per work item by the sweep driver
+        // (one spec evaluates once per entry in `fleets`).
+        Objective::Cluster {
+            serve,
+            balancer,
+            autoscale,
+            fleets: _,
+        } => format!("cluster:{serve:?}/{balancer:?}/{autoscale:?}"),
     }
 }
 
@@ -314,6 +347,44 @@ pub fn evaluate_point_serving(
     Ok(pt)
 }
 
+/// Evaluate one design point as a fleet: `fleet` replicas of the
+/// point's SoC serve `serve`'s arrivals behind `balancer` (optionally
+/// autoscaled, with `min_replicas` clamped to the fleet). Scored like a
+/// serving point — p99, achieved rps, SLO — plus the cluster's
+/// replica-seconds cost proxy. `area` stays per-SoC; multiply by
+/// [`DsePoint::fleet`] for fleet totals.
+pub fn evaluate_point_cluster(
+    spec: &ScenarioSpec,
+    serve: &ServeSpec,
+    balancer: DispatchPolicy,
+    autoscale: Option<&AutoscaleSpec>,
+    fleet: usize,
+) -> crate::Result<DsePoint> {
+    let cfg = spec.to_config()?;
+    let pos = spec.position();
+    let mut sspec = serve.clone();
+    sspec.tiles = vec![cfg.node_of(pos.0, pos.1)];
+    let mut cspec = ClusterSpec::new(fleet, sspec).balancer(balancer);
+    if let Some(a) = autoscale {
+        let mut a = a.clone();
+        a.min_replicas = a.min_replicas.clamp(1, fleet.max(1));
+        cspec = cspec.autoscale(a);
+    }
+    let report = serve_cluster(cfg, &cspec)?;
+
+    let timing = AccelTiming::lookup(&spec.accel)?;
+    let dur_s = report.duration as f64 / 1e12;
+    let throughput_mbs =
+        report.completed as f64 * timing.credit_bytes as f64 / 1e6 / dur_s;
+    let mut pt = point_from_report(spec, 0, report.elapsed, throughput_mbs)?;
+    pt.p99_latency_ps = (report.completed > 0).then_some(report.latency.p99_ps);
+    pt.achieved_rps = Some(report.achieved_rps);
+    pt.slo_met = report.slo_met;
+    pt.fleet = Some(fleet);
+    pt.replica_seconds = Some(report.replica_seconds);
+    Ok(pt)
+}
+
 fn point_from_report(
     spec: &ScenarioSpec,
     eff_warmup_ps: Ps,
@@ -334,6 +405,8 @@ fn point_from_report(
         p99_latency_ps: None,
         achieved_rps: None,
         slo_met: None,
+        fleet: None,
+        replica_seconds: None,
     })
 }
 
@@ -358,6 +431,34 @@ pub fn rank_by_p99_under_slo(points: &[DsePoint]) -> Vec<usize> {
                 pa.p99_latency_ps
                     .unwrap_or(f64::INFINITY)
                     .total_cmp(&pb.p99_latency_ps.unwrap_or(f64::INFINITY)),
+            )
+            .then(a.cmp(&b))
+    });
+    idx
+}
+
+/// Rank points for a fleet-sizing sweep: SLO-met points first by
+/// replica-seconds ascending (the cheapest fleet that holds the SLO
+/// wins), then points with cost data but a missed or unjudged SLO, then
+/// points with no cost data; index order breaks exact ties. Returns
+/// indices into `points`, best first.
+pub fn rank_by_replica_seconds_under_slo(points: &[DsePoint]) -> Vec<usize> {
+    let group = |p: &DsePoint| -> u8 {
+        match (p.slo_met, p.replica_seconds) {
+            (Some(true), _) => 0,
+            (_, Some(_)) => 1,
+            _ => 2,
+        }
+    };
+    let mut idx: Vec<usize> = (0..points.len()).collect();
+    idx.sort_by(|&a, &b| {
+        let (pa, pb) = (&points[a], &points[b]);
+        group(pa)
+            .cmp(&group(pb))
+            .then(
+                pa.replica_seconds
+                    .unwrap_or(f64::INFINITY)
+                    .total_cmp(&pb.replica_seconds.unwrap_or(f64::INFINITY)),
             )
             .then(a.cmp(&b))
     });
@@ -539,6 +640,34 @@ pub fn sweep_replication(p: &SweepParams) -> crate::Result<Vec<DsePoint>> {
                 Ok(pt)
             })
         }
+        // Cluster sweeps evaluate (spec x fleet) pairs, also always
+        // cold; the memo key gets the fleet size appended since one
+        // spec yields one point per fleet entry.
+        (
+            Objective::Cluster {
+                serve,
+                balancer,
+                autoscale,
+                fleets,
+            },
+            _,
+        ) => {
+            let work: Vec<(ScenarioSpec, usize)> = specs
+                .iter()
+                .flat_map(|s| fleets.iter().map(move |&f| (s.clone(), f)))
+                .collect();
+            ScenarioSet::new(work).run_with_threads(p.threads, |(spec, fleet)| {
+                let mut key = memo_key(spec, SweepMode::Cold, &p.objective)?;
+                key.10 = format!("{}#fleet={fleet}", key.10);
+                if let Some(hit) = memo_get(&key) {
+                    return Ok(hit);
+                }
+                let pt =
+                    evaluate_point_cluster(spec, serve, *balancer, autoscale.as_ref(), *fleet)?;
+                memo_put(key, &pt);
+                Ok(pt)
+            })
+        }
         (Objective::Throughput, SweepMode::WarmFork) => sweep_warm_fork(&specs, p.threads),
     }
 }
@@ -551,6 +680,21 @@ pub fn sweep_replication_serial(p: &SweepParams) -> crate::Result<Vec<DsePoint>>
         Objective::Throughput => ScenarioSet::new(p.specs()).run_serial(evaluate_point),
         Objective::TailLatency { spec: serve } => ScenarioSet::new(p.specs())
             .run_serial(|spec| evaluate_point_serving(spec, serve)),
+        Objective::Cluster {
+            serve,
+            balancer,
+            autoscale,
+            fleets,
+        } => {
+            let work: Vec<(ScenarioSpec, usize)> = p
+                .specs()
+                .iter()
+                .flat_map(|s| fleets.iter().map(move |&f| (s.clone(), f)))
+                .collect();
+            ScenarioSet::new(work).run_serial(|(spec, fleet)| {
+                evaluate_point_cluster(spec, serve, *balancer, autoscale.as_ref(), *fleet)
+            })
+        }
     }
 }
 
@@ -700,6 +844,8 @@ mod tests {
             p99_latency_ps: None,
             achieved_rps: None,
             slo_met: None,
+            fleet: None,
+            replica_seconds: None,
         };
         let mut fast_met = base();
         fast_met.p99_latency_ps = Some(1e9);
@@ -713,6 +859,61 @@ mod tests {
         let no_data = base();
         let pts = vec![no_data, missed, slow_met, fast_met];
         assert_eq!(rank_by_p99_under_slo(&pts), vec![3, 2, 1, 0]);
+    }
+
+    #[test]
+    fn rank_by_replica_seconds_orders_cheapest_met_fleet_first() {
+        let base = |fleet: usize, secs: Option<f64>, met: Option<bool>| DsePoint {
+            accel: "dfmul".into(),
+            replicas: 1,
+            accel_mhz: 50,
+            noc_mhz: 100,
+            near_mem: true,
+            area: Utilization::default(),
+            throughput_mbs: 0.0,
+            eff_warmup_ps: 0,
+            eff_window_ps: 0,
+            p99_latency_ps: None,
+            achieved_rps: None,
+            slo_met: met,
+            fleet: Some(fleet),
+            replica_seconds: secs,
+        };
+        let pts = vec![
+            base(1, None, None),                // no data -> last
+            base(4, Some(0.4), Some(true)),     // met but pricier
+            base(2, Some(0.2), Some(true)),     // cheapest met -> first
+            base(1, Some(0.1), Some(false)),    // cheap but missed
+        ];
+        assert_eq!(rank_by_replica_seconds_under_slo(&pts), vec![2, 1, 3, 0]);
+    }
+
+    #[test]
+    fn memo_fingerprints_distinguish_cluster_objectives() {
+        use crate::serve::Arrival;
+        let serve = ServeSpec::new(Arrival::Poisson { rps: 1000.0 }, 50_000_000_000);
+        let a = Objective::Cluster {
+            serve: serve.clone(),
+            balancer: DispatchPolicy::RoundRobin,
+            autoscale: None,
+            fleets: vec![1, 2],
+        };
+        let b = Objective::Cluster {
+            serve: serve.clone(),
+            balancer: DispatchPolicy::JoinShortestQueue,
+            autoscale: None,
+            fleets: vec![1, 2],
+        };
+        let c = Objective::Cluster {
+            serve,
+            balancer: DispatchPolicy::RoundRobin,
+            autoscale: Some(AutoscaleSpec::new(1)),
+            fleets: vec![1, 2],
+        };
+        let fa = objective_fingerprint(&a);
+        assert_ne!(fa, objective_fingerprint(&b), "balancer must key the cache");
+        assert_ne!(fa, objective_fingerprint(&c), "autoscale must key the cache");
+        assert_ne!(fa, objective_fingerprint(&Objective::Throughput));
     }
 
     #[test]

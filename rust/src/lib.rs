@@ -77,6 +77,23 @@
 //! p99-under-SLO via [`dse::Objective::TailLatency`]. See
 //! `docs/API.md` ("Serving traffic").
 //!
+//! ## Cluster serving
+//!
+//! [`cluster`] scales serving past one SoC: a
+//! [`cluster::ClusterSpec`] fans one workload across N identical
+//! replicas behind a front-end balancer (the
+//! [`serve::DispatchPolicy`] semantics lifted to fleet scope), with an
+//! optional SLO-driven [`cluster::Autoscaler`] that activates and
+//! retires replicas with hysteresis — reactivations fork a
+//! [`scenario::Session::snapshot`] warm base, so elasticity costs no
+//! warmup. The merged [`cluster::ClusterReport`] keeps percentiles
+//! exact via [`util::stats::Percentiles::merge`] and prices the run in
+//! replica-seconds; `dse` ranks fleet sizes with
+//! [`dse::Objective::Cluster`] and
+//! [`dse::rank_by_replica_seconds_under_slo`]. Drive it with
+//! `vespa cluster` or [`cluster::serve_cluster`]. See `docs/API.md`
+//! ("Cluster serving").
+//!
 //! ## The idle-aware engine
 //!
 //! Simulation runs on an idle-aware event engine ([`sim::Soc`],
@@ -103,6 +120,7 @@ pub mod axi;
 pub mod bench_harness;
 pub mod cli;
 pub mod clock;
+pub mod cluster;
 pub mod config;
 pub mod dse;
 pub mod experiments;

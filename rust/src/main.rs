@@ -1,26 +1,23 @@
 //! `vespa` — the framework launcher.
 //!
-//! Subcommands:
-//!   run <config.toml>   simulate a SoC described by a config file
-//!   serve               serve open-loop traffic with replica-aware dispatch
-//!   table1              reproduce Table I (area + throughput, 1x/2x/4x)
-//!   fig2 | floorplan    reproduce Fig. 2 (floorplan)
-//!   fig3                reproduce Fig. 3 (throughput vs TG pressure)
-//!   fig4                reproduce Fig. 4 (memory traffic vs DFS)
-//!   dse                 replication/frequency design-space sweep
-//!   validate <config>   parse + validate a config file
-//!   accels              list the accelerator DB
-//!   artifacts-check     load artifacts and cross-check PJRT vs native
+//! Subcommands come from the [`vespa::cli::SUBCOMMANDS`] registry (one
+//! name + one-line description each); `vespa` with no subcommand or an
+//! unknown one prints the full list. Highlights: `run` a config file,
+//! `serve` open-loop traffic on one SoC, `cluster` a fleet of replica
+//! SoCs behind a front-end balancer with an optional autoscaler, `dse`
+//! replication/frequency/fleet sweeps, and the paper's `table1` /
+//! `fig2`..`fig4` reproductions.
 //!
 //! Global options: --artifacts <dir> to use the PJRT backend where
 //! applicable; experiments default to the native reference backend.
 
 use vespa::cli::Args;
+use vespa::cluster::{AutoscaleSpec, ClusterSpec};
 use vespa::config::presets::{A1_POS, A2_POS};
 use vespa::config::SocConfig;
 use vespa::dse::{
-    pareto_front, rank_by_p99_under_slo, sweep_replication, sweep_replication_serial, Objective,
-    SweepMode, SweepParams,
+    pareto_front, rank_by_p99_under_slo, rank_by_replica_seconds_under_slo, sweep_replication,
+    sweep_replication_serial, Objective, SweepMode, SweepParams,
 };
 use vespa::experiments::{fig2, fig3, fig4, table1};
 use vespa::mem::Block;
@@ -51,28 +48,41 @@ fn main() {
 
 fn usage() {
     eprintln!(
-        "usage: vespa <run|serve|table1|fig2|fig3|fig4|dse|validate|accels|artifacts-check> [options]\n\
+        "{header}\n\
+         subcommands:\n\
+         {subs}\n\
          options:\n\
            --invocations N     Table I measurement window (default 6)\n\
            --window-ms N       Fig. 3 window per point (default 10)\n\
            --phase-ms N        Fig. 4 phase length (default 30)\n\
-           --accel NAME        DSE/serve target accelerator (default dfmul)\n\
+           --accel NAME        DSE/serve/cluster target accelerator (default dfmul)\n\
            --serial            DSE: disable the parallel scenario runner\n\
            --warm              DSE: warm-fork sweep (snapshot + DFS retune per point)\n\
            --serve-rps N       DSE: rank points by p99-under-SLO at N req/s\n\
            --serve-ms N        DSE: serving horizon per point in ms (default 100)\n\
+           --fleets A,B,..     DSE: evaluate fleet sizes, rank by replica-seconds\n\
            --artifacts DIR     use the PJRT backend from DIR\n\
-           --duration-ms N     `run`/`serve` duration (default 10 / 200)\n\
+           --duration-ms N     `run`/`serve`/`cluster` duration (default 10/200/100)\n\
            --tg N              `run`: active TG count (default 0)\n\
-         serve options:\n\
-           --replicas K        replicas per accelerator tile (default 2)\n\
-           --rps N             offered Poisson load in req/s (default 1000)\n\
-           --policy P          dispatch: rr | jsq | least (default jsq)\n\
+         serve/cluster options:\n\
+           --rps N             offered Poisson load in req/s (default 1000 / 4000)\n\
+           --policy P          per-SoC dispatch: rr | jsq | least (default jsq)\n\
            --queue N           per-tile admission queue bound (default 32)\n\
            --slo-ms N          p95 latency SLO in ms\n\
            --governor          queue-driven DFS governor on the A1 island\n\
+           --seed N            arrival seed (default 0xE5B)\n\
+           --json PATH         also write the report as JSON to PATH\n\
+         serve options:\n\
+           --replicas K        replicas per accelerator tile (default 2)\n\
            --tile T            serve one tile only: a1 | a2 (default both)\n\
-           --seed N            arrival seed (default 0xE5B)"
+         cluster options:\n\
+           --replicas N        fleet size / autoscale ceiling (default 4)\n\
+           --tile-replicas K   replicas per accelerator tile (default 2)\n\
+           --balancer P        front-end: rr | jsq | least (default jsq)\n\
+           --autoscale         SLO-driven autoscaler (defaults --slo-ms to 5)\n\
+           --min-replicas N    autoscale floor (default 1)",
+        header = vespa::cli::usage_header(),
+        subs = vespa::cli::subcommand_lines()
     );
 }
 
@@ -87,6 +97,7 @@ fn dispatch(args: &Args) -> vespa::Result<()> {
     match args.subcommand.as_deref() {
         Some("run") => cmd_run(args),
         Some("serve") => cmd_serve(args),
+        Some("cluster") => cmd_cluster(args),
         Some("table1") => {
             let inv = args.opt_u64("invocations", 6)?;
             let (t, rows) = table1::run(inv)?;
@@ -276,6 +287,70 @@ fn cmd_serve(args: &Args) -> vespa::Result<()> {
         println!("queue depth over time:");
         println!("{}", plot(&depth_refs, 70, 12));
     }
+    if let Some(path) = args.opt("json") {
+        std::fs::write(path, report.to_json())
+            .map_err(|e| anyhow::anyhow!("--json {path}: {e}"))?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+/// Serve one open-loop workload across a fleet of identical paper SoCs:
+/// a front-end balancer picks the replica (`--balancer`), each replica
+/// keeps its own dispatch + optional DFS governor, and an optional
+/// SLO-driven autoscaler (`--autoscale`) grows/retires the fleet
+/// between `--min-replicas` and `--replicas`.
+fn cmd_cluster(args: &Args) -> vespa::Result<()> {
+    use vespa::config::presets::{paper_soc, ISL_A1};
+
+    let accel = args.opt_str("accel", "dfmul");
+    AccelTiming::lookup(&accel)?; // clean error before the preset panics
+    let tile_replicas = args.opt_usize("tile-replicas", 2)?;
+    anyhow::ensure!(
+        (1..=16).contains(&tile_replicas),
+        "--tile-replicas {tile_replicas} out of [1, 16]"
+    );
+    let fleet = args.opt_usize("replicas", 4)?;
+    let rps = args.opt_u64("rps", 4000)? as f64;
+    let duration = args.opt_u64("duration-ms", 100)? * 1_000_000_000;
+    let balancer = DispatchPolicy::parse(&args.opt_str("balancer", "jsq"))?;
+    let policy = DispatchPolicy::parse(&args.opt_str("policy", "jsq"))?;
+    let queue = args.opt_usize("queue", 32)?;
+    let seed = args.opt_u64("seed", 0xE5B)?;
+    let slo_ms = args.opt_u64("slo-ms", 0)?;
+    let autoscale = args.flag("autoscale");
+
+    let mut spec = ServeSpec::new(Arrival::Poisson { rps }, duration)
+        .policy(policy)
+        .queue_capacity(queue)
+        .seed(seed);
+    // The autoscaler and the governor both need a latency target;
+    // default the SLO to 5 ms when either is on without --slo-ms.
+    let slo_eff = if slo_ms > 0 { slo_ms } else { 5 } * 1_000_000_000;
+    if slo_ms > 0 || autoscale || args.flag("governor") {
+        spec = spec.slo(slo_eff);
+    }
+    if args.flag("governor") {
+        spec = spec.governor(GovernorSpec::new(ISL_A1, slo_eff));
+    }
+
+    let mut cspec = ClusterSpec::new(fleet, spec).balancer(balancer);
+    if autoscale {
+        cspec = cspec.autoscale(AutoscaleSpec::new(args.opt_usize("min-replicas", 1)?));
+    }
+
+    let cfg = paper_soc((accel.as_str(), tile_replicas), (accel.as_str(), tile_replicas));
+    let report = cspec.run(cfg)?;
+    println!("{}", report.render());
+    if report.active_replicas.samples.len() > 1 && !report.autoscale_actions.is_empty() {
+        println!("active replicas over time:");
+        println!("{}", plot(&[&report.active_replicas], 70, 8));
+    }
+    if let Some(path) = args.opt("json") {
+        std::fs::write(path, report.to_json())
+            .map_err(|e| anyhow::anyhow!("--json {path}: {e}"))?;
+        println!("wrote {path}");
+    }
     Ok(())
 }
 
@@ -304,25 +379,56 @@ fn cmd_dse(args: &Args) -> vespa::Result<()> {
         );
     }
     let serve_rps = args.opt_u64("serve-rps", 0)?;
+    let fleets: Vec<usize> = match args.opt("fleets") {
+        None => Vec::new(),
+        Some(raw) => {
+            let sizes: Vec<usize> = raw
+                .split(',')
+                .map(|s| {
+                    s.trim().parse().map_err(|_| {
+                        anyhow::anyhow!(
+                            "--fleets must be a comma-separated list of fleet sizes, got {raw:?}"
+                        )
+                    })
+                })
+                .collect::<Result<_, _>>()?;
+            anyhow::ensure!(!sizes.is_empty(), "--fleets: empty list");
+            sizes
+        }
+    };
     if serve_rps > 0 {
-        // Rank by p99-under-SLO: serve traffic at every point instead
-        // of measuring a steady-state window.
+        // Rank by p99-under-SLO (or, with --fleets, by
+        // replica-seconds-under-SLO across fleet sizes): serve traffic
+        // at every point instead of measuring a steady-state window.
         anyhow::ensure!(
             !args.flag("warm"),
             "--serve-rps and --warm are mutually exclusive (serving sweeps evaluate cold)"
         );
         let slo = args.opt_u64("slo-ms", 10)? * 1_000_000_000;
         let dur = args.opt_u64("serve-ms", 100)? * 1_000_000_000;
-        p.objective = Objective::TailLatency {
-            spec: ServeSpec::new(
-                Arrival::Poisson {
-                    rps: serve_rps as f64,
-                },
-                dur,
-            )
-            .policy(DispatchPolicy::JoinShortestQueue)
-            .slo(slo),
+        let spec = ServeSpec::new(
+            Arrival::Poisson {
+                rps: serve_rps as f64,
+            },
+            dur,
+        )
+        .policy(DispatchPolicy::JoinShortestQueue)
+        .slo(slo);
+        p.objective = if fleets.is_empty() {
+            Objective::TailLatency { spec }
+        } else {
+            Objective::Cluster {
+                serve: spec,
+                balancer: DispatchPolicy::JoinShortestQueue,
+                autoscale: args.flag("autoscale").then(|| AutoscaleSpec::new(1)),
+                fleets,
+            }
         };
+    } else {
+        anyhow::ensure!(
+            fleets.is_empty(),
+            "--fleets requires --serve-rps N (cluster sweeps serve traffic)"
+        );
     }
     // Parallel across cores by default; --serial for the reference path
     // (results are bit-identical either way).
@@ -371,6 +477,40 @@ fn cmd_dse(args: &Args) -> vespa::Result<()> {
                     .unwrap_or_else(|| "-".to_string()),
                 pt.achieved_rps
                     .map(|v| format!("{v:.0}"))
+                    .unwrap_or_else(|| "-".to_string()),
+                match pt.slo_met {
+                    Some(true) => "met",
+                    Some(false) => "miss",
+                    None => "-",
+                }
+                .to_string(),
+            ]);
+        }
+        println!("{}", t2.render());
+    }
+    if matches!(p.objective, Objective::Cluster { .. }) {
+        let order = rank_by_replica_seconds_under_slo(&pts);
+        let mut t2 = Table::new(
+            "cluster rank — replica-seconds under SLO",
+            &["rank", "K", "accel MHz", "fleet", "rps", "p99 ms", "repl-s", "SLO"],
+        );
+        for (rank, &i) in order.iter().enumerate() {
+            let pt = &pts[i];
+            t2.row(&[
+                (rank + 1).to_string(),
+                pt.replicas.to_string(),
+                pt.accel_mhz.to_string(),
+                pt.fleet
+                    .map(|f| f.to_string())
+                    .unwrap_or_else(|| "-".to_string()),
+                pt.achieved_rps
+                    .map(|v| format!("{v:.0}"))
+                    .unwrap_or_else(|| "-".to_string()),
+                pt.p99_latency_ps
+                    .map(|v| format!("{:.3}", v / 1e9))
+                    .unwrap_or_else(|| "-".to_string()),
+                pt.replica_seconds
+                    .map(|v| format!("{v:.3}"))
                     .unwrap_or_else(|| "-".to_string()),
                 match pt.slo_met {
                     Some(true) => "met",

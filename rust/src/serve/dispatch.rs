@@ -275,6 +275,58 @@ mod tests {
     }
 
     #[test]
+    fn zero_capacity_queues_drop_everything_exactly() {
+        // A zero-capacity dispatcher admits nothing: every pick is a
+        // drop, under every policy, and the accounting is exact.
+        let soc = mini_soc();
+        for policy in [
+            DispatchPolicy::RoundRobin,
+            DispatchPolicy::JoinShortestQueue,
+            DispatchPolicy::LeastLoadedTile,
+        ] {
+            let mut d = Dispatcher::new(policy, 0, queues(&soc));
+            for _ in 0..17 {
+                assert_eq!(d.pick(&soc, 0), None, "{policy:?} must drop at cap 0");
+            }
+            assert_eq!(d.dropped, 17, "{policy:?} counts every drop");
+            assert!(d.tiles.iter().all(|q| q.admitted == 0 && q.in_flight.is_empty()));
+            assert!(d.tiles.iter().all(|q| q.max_depth == 0));
+        }
+    }
+
+    #[test]
+    fn saturated_tiles_drop_then_recover_per_policy() {
+        // Fill every tile to capacity: each policy must drop (not stall,
+        // not overfill); a single completion re-opens exactly one slot.
+        let soc = mini_soc();
+        for policy in [
+            DispatchPolicy::RoundRobin,
+            DispatchPolicy::JoinShortestQueue,
+            DispatchPolicy::LeastLoadedTile,
+        ] {
+            let cap = 2;
+            let mut d = Dispatcher::new(policy, cap, queues(&soc));
+            let mut req = 0;
+            while let Some(slot) = d.pick(&soc, 0) {
+                d.bind(slot, req);
+                req += 1;
+                assert!(req <= cap * d.tiles.len(), "{policy:?} overfilled a queue");
+            }
+            assert_eq!(req, cap * d.tiles.len(), "{policy:?} filled every slot");
+            assert_eq!(d.dropped, 1, "{policy:?}: the failed pick was counted");
+            assert!(d.tiles.iter().all(|q| q.in_flight.len() == cap));
+            // One completion frees exactly one slot; the next pick must
+            // land there and the one after must drop again.
+            assert!(d.complete(1).is_some());
+            let slot = d.pick(&soc, 0).expect("freed capacity is usable");
+            assert_eq!(slot, 1, "{policy:?} routes to the only open tile");
+            d.bind(slot, req);
+            assert_eq!(d.pick(&soc, 0), None);
+            assert_eq!(d.dropped, 2);
+        }
+    }
+
+    #[test]
     fn policy_parse_spellings() {
         assert_eq!(
             DispatchPolicy::parse("rr").unwrap(),
@@ -289,5 +341,19 @@ mod tests {
             DispatchPolicy::LeastLoadedTile
         );
         assert!(DispatchPolicy::parse("zeal").is_err());
+    }
+
+    #[test]
+    fn policy_parse_rejects_unknowns_actionably() {
+        // The error must name the bad input AND list the valid
+        // spellings, so a CLI user can fix their invocation from the
+        // message alone.
+        for bad in ["zeal", "", "JSQ", "round robin"] {
+            let err = DispatchPolicy::parse(bad).unwrap_err().to_string();
+            assert!(err.contains(&format!("{bad:?}")), "{err}");
+            for spelling in ["rr", "jsq", "least"] {
+                assert!(err.contains(spelling), "{err} must suggest {spelling}");
+            }
+        }
     }
 }

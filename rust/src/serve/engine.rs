@@ -123,14 +123,10 @@ impl Session {
     }
 }
 
-fn serve_session(session: &mut Session, spec: &ServeSpec) -> crate::Result<ServeReport> {
-    anyhow::ensure!(spec.duration > 0, "serve: duration must be positive");
-    anyhow::ensure!(
-        spec.queue_capacity > 0,
-        "serve: queue capacity must be at least 1"
-    );
-
-    // Resolve and validate the target tiles.
+/// Resolve and validate `spec`'s target tiles against `session` (empty
+/// = every MRA tile). Shared with the cluster engine, which resolves
+/// once on the warm base session.
+pub(crate) fn resolve_tiles(session: &Session, spec: &ServeSpec) -> crate::Result<Vec<usize>> {
     let tiles = if spec.tiles.is_empty() {
         session.mra_tiles()
     } else {
@@ -140,10 +136,20 @@ fn serve_session(session: &mut Session, spec: &ServeSpec) -> crate::Result<Serve
     for &t in &tiles {
         session.soc().try_mra(t)?;
     }
+    Ok(tiles)
+}
 
-    // Prepare the tiles: staged inputs (functional datapath), perf mode,
-    // and the admission gate.
-    for &t in &tiles {
+/// Prepare `tiles` for serving: staged inputs (functional datapath),
+/// the per-invocation functional flag, the admission gate, and a settle
+/// pass so the completion ledgers start empty. The cluster engine runs
+/// this once on its warm base session before snapshotting, so replica
+/// (re)activations fork an already-prepared SoC.
+pub(crate) fn prepare_serve_tiles(
+    session: &mut Session,
+    spec: &ServeSpec,
+    tiles: &[usize],
+) -> crate::Result<()> {
+    for &t in tiles {
         if session.staged(t).is_empty() {
             session.stage(t, 1)?;
         }
@@ -151,10 +157,13 @@ fn serve_session(session: &mut Session, spec: &ServeSpec) -> crate::Result<Serve
         m.functional_every_invocation = spec.functional;
         m.serve_begin();
     }
-    settle_gated_tiles(session, &tiles)?;
+    settle_gated_tiles(session, tiles)
+}
 
-    // Dispatcher state, one bounded queue per tile.
-    let queues: Vec<TileQueue> = tiles
+/// Dispatcher state for `tiles`: one bounded queue per tile, seeded
+/// with the tile's island, invocation cycles, and replica count.
+pub(crate) fn tile_queues(session: &Session, tiles: &[usize]) -> Vec<TileQueue> {
+    tiles
         .iter()
         .map(|&tile| {
             let soc = session.soc();
@@ -177,8 +186,19 @@ fn serve_session(session: &mut Session, spec: &ServeSpec) -> crate::Result<Serve
                 max_depth: 0,
             }
         })
-        .collect();
-    let mut disp = Dispatcher::new(spec.policy, spec.queue_capacity, queues);
+        .collect()
+}
+
+fn serve_session(session: &mut Session, spec: &ServeSpec) -> crate::Result<ServeReport> {
+    anyhow::ensure!(spec.duration > 0, "serve: duration must be positive");
+    anyhow::ensure!(
+        spec.queue_capacity > 0,
+        "serve: queue capacity must be at least 1"
+    );
+
+    let tiles = resolve_tiles(session, spec)?;
+    prepare_serve_tiles(session, spec, &tiles)?;
+    let mut disp = Dispatcher::new(spec.policy, spec.queue_capacity, tile_queues(session, &tiles));
 
     let mut governor = spec
         .governor
@@ -386,7 +406,7 @@ fn serve_session(session: &mut Session, spec: &ServeSpec) -> crate::Result<Serve
 /// never run is idle already (zero cost); a warmed tile finishes its
 /// in-flight invocations (the gate blocks new ones) within a few
 /// invocation times.
-fn settle_gated_tiles(session: &mut Session, tiles: &[usize]) -> crate::Result<()> {
+pub(crate) fn settle_gated_tiles(session: &mut Session, tiles: &[usize]) -> crate::Result<()> {
     let all_idle =
         |s: &Session| tiles.iter().all(|&t| s.soc().mra(t).pipeline_idle());
     if all_idle(session) {

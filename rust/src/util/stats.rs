@@ -230,6 +230,32 @@ impl Percentiles {
         }
         self.sorted.iter().sum::<f64>() / self.sorted.len() as f64
     }
+
+    /// Exact merge of two sample sets: the result holds every sample of
+    /// both inputs, so `a.merge(&b)` is identical to
+    /// [`Percentiles::from_samples`] over the concatenated raw samples —
+    /// no summarization error, unlike mergeable sketches. A linear
+    /// two-pointer merge of the already-sorted vectors (`O(n + m)`,
+    /// cheaper than re-sorting). This is how
+    /// [`crate::cluster::ClusterReport`] combines per-replica latency
+    /// distributions into fleet-wide percentiles.
+    pub fn merge(&self, other: &Percentiles) -> Percentiles {
+        let (a, b) = (&self.sorted, &other.sorted);
+        let mut out = Vec::with_capacity(a.len() + b.len());
+        let (mut i, mut j) = (0, 0);
+        while i < a.len() && j < b.len() {
+            if a[i].total_cmp(&b[j]).is_le() {
+                out.push(a[i]);
+                i += 1;
+            } else {
+                out.push(b[j]);
+                j += 1;
+            }
+        }
+        out.extend_from_slice(&a[i..]);
+        out.extend_from_slice(&b[j..]);
+        Percentiles { sorted: out }
+    }
 }
 
 #[cfg(test)]
@@ -357,6 +383,68 @@ mod tests {
         let p = Percentiles::from_samples(&[3.0, 9.0]).unwrap();
         assert_eq!(p.quantile(-1.0), 3.0);
         assert_eq!(p.quantile(2.0), 9.0);
+    }
+
+    #[test]
+    fn percentiles_merge_equals_from_concat() {
+        let a = Percentiles::from_samples(&[5.0, 1.0, 9.0]).unwrap();
+        let b = Percentiles::from_samples(&[2.0, 9.0, 0.5, 7.0]).unwrap();
+        let merged = a.merge(&b);
+        let concat =
+            Percentiles::from_samples(&[5.0, 1.0, 9.0, 2.0, 9.0, 0.5, 7.0]).unwrap();
+        assert_eq!(merged, concat, "merge is exact, not a sketch");
+        assert_eq!(merged.count(), a.count() + b.count());
+        // Merging with an empty set is the identity.
+        let empty = Percentiles::default();
+        assert_eq!(a.merge(&empty), a);
+        assert_eq!(empty.merge(&a), a);
+        assert_eq!(empty.merge(&empty).count(), 0);
+    }
+
+    /// Property: for arbitrary sample-set pairs, merge(a, b) equals
+    /// from_samples(a ++ b) exactly, and the merged quantiles are
+    /// monotone in q and bracketed by the inputs' extremes.
+    #[test]
+    fn percentiles_merge_property() {
+        use crate::util::proptest::forall;
+        forall(
+            0x4E16,
+            200,
+            |r| {
+                let gen_one = |r: &mut crate::util::SplitMix64| {
+                    let n = r.index(48);
+                    (0..n).map(|_| r.index(16) as f64 * 1.25).collect::<Vec<f64>>()
+                };
+                let a = gen_one(r);
+                let b = gen_one(r);
+                (a, b)
+            },
+            |(xs, ys)| {
+                let a = Percentiles::from_samples(xs).unwrap();
+                let b = Percentiles::from_samples(ys).unwrap();
+                let merged = a.merge(&b);
+                let mut concat = xs.clone();
+                concat.extend_from_slice(ys);
+                assert_eq!(merged, Percentiles::from_samples(&concat).unwrap());
+                assert_eq!(merged.count(), xs.len() + ys.len());
+                // Monotone quantiles on the merged set.
+                assert!(merged.p50() <= merged.p95());
+                assert!(merged.p95() <= merged.p99());
+                assert!(merged.p99() <= merged.max());
+                // Extremes come from the inputs.
+                if !merged.is_empty() {
+                    let lo = if a.is_empty() {
+                        b.min()
+                    } else if b.is_empty() {
+                        a.min()
+                    } else {
+                        a.min().min(b.min())
+                    };
+                    assert_eq!(merged.min(), lo);
+                    assert_eq!(merged.max(), a.max().max(b.max()));
+                }
+            },
+        );
     }
 
     /// Property: quantiles are monotone in q (p50 <= p95 <= p99 <= max)

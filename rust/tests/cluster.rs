@@ -1,0 +1,214 @@
+//! System tests for the `cluster` subsystem — the ISSUE's acceptance
+//! criteria: (a) bit-identical replay from the same seed + spec,
+//! (b) a 4-replica fleet sustains >= 3x the achieved rps of a single
+//! SoC at the same SLO attainment, (c) the autoscaler meets an SLO a
+//! fixed minimum fleet misses while finishing with fewer
+//! replica-seconds than a fixed maximum fleet — plus fleet-wide drop
+//! accounting and spec validation.
+
+use vespa::cluster::{AutoscaleSpec, ClusterSpec};
+use vespa::config::SocConfig;
+use vespa::scenario::{ms, Scenario};
+use vespa::serve::{Arrival, DispatchPolicy, ServeSpec};
+
+/// One 2-replica dfmul tile on a governable island — the per-replica
+/// SoC every fleet slot clones. At 50 MHz the tile serves ~4250 req/s
+/// (42.5 req/s per MHz per replica), so fleet size is the only
+/// capacity knob the cluster layer controls.
+fn fleet_cfg(accel_mhz: u64) -> SocConfig {
+    Scenario::grid(2, 2)
+        .name("cluster-2x2")
+        .seed(0xE5B)
+        .island("noc", 100)
+        .island_dfs("acc", accel_mhz, 10..=50, 5)
+        .noc_island("noc")
+        .mem_at(0, 0)
+        .accel_at(1, 0, "dfmul", 2, "acc")
+        .io_at_on(0, 1, "noc")
+        .build()
+        .unwrap()
+}
+
+// ---------------------------------------------------------------------
+// (a) Deterministic replay.
+// ---------------------------------------------------------------------
+
+#[test]
+fn same_seed_spec_and_fleet_replay_identically() {
+    let spec = ServeSpec::new(Arrival::Poisson { rps: 5000.0 }, ms(60))
+        .policy(DispatchPolicy::JoinShortestQueue)
+        .slo(ms(5))
+        .sample_interval(ms(2))
+        .seed(0xABCD);
+    let cspec = ClusterSpec::new(3, spec)
+        .balancer(DispatchPolicy::JoinShortestQueue)
+        .autoscale(AutoscaleSpec::new(1));
+    let r1 = cspec.run(fleet_cfg(50)).unwrap();
+    let r2 = cspec.run(fleet_cfg(50)).unwrap();
+    assert!(r1.completed > 20, "enough traffic to be meaningful");
+    assert_eq!(r1, r2, "same seed + spec + config => identical ClusterReport");
+
+    let other = ClusterSpec {
+        spec: cspec.spec.clone().seed(0x1234),
+        ..cspec.clone()
+    };
+    let r3 = other.run(fleet_cfg(50)).unwrap();
+    assert_ne!(r1, r3, "a different seed is a different run");
+}
+
+// ---------------------------------------------------------------------
+// (b) Fleet scaling: 4 replicas >= 3x one SoC's achieved rps.
+// ---------------------------------------------------------------------
+
+#[test]
+fn four_replicas_triple_single_soc_throughput() {
+    // 16000 req/s against a ~4250 req/s SoC: a single replica saturates
+    // and sheds most of the load, while a 4-slot fleet splits it into
+    // ~4000 req/s per replica — inside each box's capacity.
+    let spec = ServeSpec::new(Arrival::Poisson { rps: 16_000.0 }, ms(100))
+        .policy(DispatchPolicy::JoinShortestQueue)
+        .slo(ms(20))
+        .seed(0xF1EE);
+    let single = ClusterSpec::new(1, spec.clone()).run(fleet_cfg(50)).unwrap();
+    let fleet4 = ClusterSpec::new(4, spec).run(fleet_cfg(50)).unwrap();
+
+    assert_eq!(single.offered, fleet4.offered, "equal offered load");
+    assert!(single.completed > 100 && fleet4.completed > 400);
+    assert!(
+        fleet4.achieved_rps >= 3.0 * single.achieved_rps,
+        "fleet {:.0} rps vs single {:.0} rps",
+        fleet4.achieved_rps,
+        single.achieved_rps
+    );
+    // "At the same SLO attainment": scaling out must not trade
+    // throughput for tail quality.
+    assert!(
+        fleet4.slo_attainment >= single.slo_attainment,
+        "fleet attainment {:.3} vs single {:.3}",
+        fleet4.slo_attainment,
+        single.slo_attainment
+    );
+}
+
+// ---------------------------------------------------------------------
+// (c) Autoscaler: meets an SLO the fixed minimum misses, for fewer
+//     replica-seconds than the fixed maximum.
+// ---------------------------------------------------------------------
+
+#[test]
+fn autoscaler_meets_slo_cheaper_than_fixed_max() {
+    let slo = ms(5);
+    let spec = ServeSpec::new(Arrival::Poisson { rps: 6000.0 }, ms(200))
+        .policy(DispatchPolicy::JoinShortestQueue)
+        .slo(slo)
+        .sample_interval(ms(2))
+        .seed(0x50C);
+
+    // Fixed minimum: one ~4250 req/s SoC against 6000 offered — the
+    // queue pegs at capacity and the p95 tail sits past the SLO.
+    let r_min = ClusterSpec::new(1, spec.clone()).run(fleet_cfg(50)).unwrap();
+    assert_eq!(
+        r_min.slo_met,
+        Some(false),
+        "fixed-min p95 {:.3} ms",
+        r_min.latency.p95_ms()
+    );
+
+    // Fixed maximum: four replicas meet the SLO trivially but stay
+    // active (and billed) for the whole run.
+    let r_max = ClusterSpec::new(4, spec.clone()).run(fleet_cfg(50)).unwrap();
+    assert_eq!(r_max.slo_met, Some(true));
+    assert_eq!(r_max.final_active, 4);
+
+    // Autoscaled: starts at the fixed minimum, grows only while the
+    // SLO demands it.
+    let r_auto = ClusterSpec::new(4, spec)
+        .autoscale(AutoscaleSpec::new(1))
+        .run(fleet_cfg(50))
+        .unwrap();
+    assert_eq!(
+        r_auto.slo_met,
+        Some(true),
+        "autoscaled p95 {:.3} ms (actions {:?})",
+        r_auto.latency.p95_ms(),
+        r_auto.autoscale_actions
+    );
+    assert!(!r_auto.autoscale_actions.is_empty(), "the autoscaler acted");
+    assert!(
+        r_auto.replica_seconds < 0.8 * r_max.replica_seconds,
+        "autoscaled {:.4} replica-seconds vs fixed-max {:.4}",
+        r_auto.replica_seconds,
+        r_max.replica_seconds
+    );
+}
+
+// ---------------------------------------------------------------------
+// Fleet-wide accounting.
+// ---------------------------------------------------------------------
+
+#[test]
+fn accounting_invariants_hold_fleet_wide() {
+    // Tiny queues in front of slow replicas under heavy load: the
+    // balancer must spill once every replica is full, and every request
+    // must be accounted for exactly once.
+    let spec = ServeSpec::new(Arrival::Poisson { rps: 4000.0 }, ms(50))
+        .queue_capacity(2)
+        .seed(3);
+    let r = ClusterSpec::new(2, spec).run(fleet_cfg(10)).unwrap();
+    assert!(r.spilled > 0, "overload must spill at the balancer");
+    assert_eq!(r.admitted + r.dropped, r.offered);
+    assert_eq!(r.completed + r.unfinished, r.admitted);
+    let repl_admitted: u64 = r.per_replica.iter().map(|p| p.admitted).sum();
+    let repl_completed: u64 = r.per_replica.iter().map(|p| p.completed).sum();
+    let repl_dropped: u64 = r.per_replica.iter().map(|p| p.dropped).sum();
+    assert_eq!(repl_admitted, r.admitted);
+    assert_eq!(repl_completed, r.completed);
+    assert_eq!(r.spilled + repl_dropped, r.dropped);
+    assert!(r.replica_seconds > 0.0);
+    assert!(!r.active_replicas.samples.is_empty());
+    assert_eq!(r.per_replica.len(), 2);
+}
+
+// ---------------------------------------------------------------------
+// Validation.
+// ---------------------------------------------------------------------
+
+#[test]
+fn closed_loop_arrivals_are_rejected() {
+    let spec = ServeSpec::new(
+        Arrival::ClosedLoop {
+            clients: 3,
+            think: ms(1),
+        },
+        ms(10),
+    );
+    let err = ClusterSpec::new(2, spec)
+        .run(fleet_cfg(50))
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("open-loop"), "unexpected error: {err}");
+}
+
+#[test]
+fn spec_bounds_are_validated() {
+    let spec = || ServeSpec::new(Arrival::Poisson { rps: 100.0 }, ms(10));
+
+    let err = ClusterSpec::new(0, spec()).run(fleet_cfg(50)).unwrap_err();
+    assert!(err.to_string().contains("replicas"), "{err}");
+    let err = ClusterSpec::new(65, spec()).run(fleet_cfg(50)).unwrap_err();
+    assert!(err.to_string().contains("replicas"), "{err}");
+
+    // Autoscale floor above the fleet ceiling.
+    let err = ClusterSpec::new(2, spec().slo(ms(5)))
+        .autoscale(AutoscaleSpec::new(3))
+        .run(fleet_cfg(50))
+        .unwrap_err();
+    assert!(err.to_string().contains("min_replicas"), "{err}");
+
+    // Autoscaling needs an SLO to scale against.
+    let err = ClusterSpec::new(2, spec())
+        .autoscale(AutoscaleSpec::new(1))
+        .run(fleet_cfg(50))
+        .unwrap_err();
+    assert!(err.to_string().to_lowercase().contains("slo"), "{err}");
+}
