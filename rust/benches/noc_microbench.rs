@@ -1,11 +1,13 @@
 //! Microbench: raw simulator performance on the NoC hot path —
 //! router-cycles per second under TG saturation (the §Perf L3 metric) —
-//! plus the idle-aware engine's coalescing win on low-utilization
-//! traffic, measured against the `reference` tick-everything engine.
+//! plus the idle-aware and event-driven engines' wins on
+//! low-utilization traffic, measured against the `reference`
+//! tick-everything engine.
 //!
 //! Writes `BENCH_noc_microbench.json` (override with `--json <path>`);
-//! the `sparse_speedup_vs_reference` metric is the CI-gated proof that
-//! idle-aware coalescing pays off (>= 3x required).
+//! the `sparse_speedup_vs_reference` (>= 3x) and
+//! `sparse_event_speedup_vs_reference` (>= 10x) metrics are the
+//! CI-gated proof that deadline coalescing and heap scheduling pay off.
 
 use vespa::bench_harness::{Bench, BenchArgs, BenchReport};
 use vespa::config::presets::paper_soc;
@@ -94,6 +96,12 @@ fn main() {
         soc.edges
     });
     println!("{}", r_idle.report());
+    let r_event = bench.run("noc/low-util-sparse-event", |_| {
+        let mut soc = build_sparse(EngineMode::EventDriven, 11);
+        soc.run_for(sim_ps);
+        soc.edges
+    });
+    println!("{}", r_event.report());
     let r_ref = bench.run("noc/low-util-sparse-reference", |_| {
         let mut soc = build_sparse(EngineMode::Reference, 11);
         soc.run_for(sim_ps);
@@ -104,17 +112,29 @@ fn main() {
     // Equivalence spot-check on the bench scenario itself.
     let mut a = build_sparse(EngineMode::IdleAware, 11);
     let mut b = build_sparse(EngineMode::Reference, 11);
+    let mut c = build_sparse(EngineMode::EventDriven, 11);
     a.run_for(sim_ps);
     b.run_for(sim_ps);
+    c.run_for(sim_ps);
     assert_eq!(a.edges, b.edges, "engines disagree on delivered edges");
+    assert_eq!(c.edges, b.edges, "event engine disagrees on edges");
     assert_eq!(
         a.mon.mem_pkts_in, b.mon.mem_pkts_in,
         "engines disagree on memory traffic"
     );
     assert_eq!(
+        c.mon.mem_pkts_in, b.mon.mem_pkts_in,
+        "event engine disagrees on memory traffic"
+    );
+    assert_eq!(
         a.fabric.total_flits(),
         b.fabric.total_flits(),
         "engines disagree on flits"
+    );
+    assert_eq!(
+        c.fabric.total_flits(),
+        b.fabric.total_flits(),
+        "event engine disagrees on flits"
     );
     println!(
         "sparse scenario: {} edges, {} coalesced over {} spans, {} tile ticks ({} skipped)",
@@ -131,9 +151,13 @@ fn main() {
 
     let speedup = r_ref.mean.as_secs_f64() / r_idle.mean.as_secs_f64();
     println!("idle-aware speedup on low-utilization traffic: {speedup:.1}x");
+    let event_speedup = r_ref.mean.as_secs_f64() / r_event.mean.as_secs_f64();
+    println!("event-driven speedup on low-utilization traffic: {event_speedup:.1}x");
     report.metric("sparse_speedup_vs_reference", speedup);
+    report.metric("sparse_event_speedup_vs_reference", event_speedup);
     report.metric("sparse_coalesced_edges", a.engine_stats.coalesced_edges as f64);
     report.push(r_idle);
+    report.push(r_event);
     report.push(r_ref);
 
     // Idle SoC (engine overhead floor, MRA tiles self-driving).
@@ -152,6 +176,10 @@ fn main() {
     assert!(
         speedup >= 3.0,
         "idle-aware engine must be >= 3x on low-utilization traffic, got {speedup:.2}x"
+    );
+    assert!(
+        event_speedup >= 10.0,
+        "event engine must be >= 10x on low-utilization traffic, got {event_speedup:.2}x"
     );
     println!("noc_microbench OK");
 }

@@ -192,8 +192,10 @@ pub fn serve_cluster(cfg: SocConfig, cspec: &ClusterSpec) -> crate::Result<Clust
     let spec = &cspec.spec;
 
     // Warm base: build, stage, gate, and settle one session, then
-    // snapshot it. Every activation forks this.
+    // snapshot it. Every activation forks this (the engine mode rides
+    // along in the snapshot).
     let mut base = Session::new(cfg)?;
+    base.engine(cspec.engine);
     let tiles = resolve_tiles(&base, spec)?;
     prepare_serve_tiles(&mut base, spec, &tiles)?;
     let snap = base.snapshot()?;

@@ -1,6 +1,7 @@
 //! [`ClusterSpec`]: one serving workload across a fleet of SoC replicas.
 
 use crate::serve::{Arrival, DispatchPolicy, ServeSpec};
+use crate::sim::EngineMode;
 
 /// SLO-driven elasticity bounds and hysteresis for a cluster run.
 ///
@@ -90,6 +91,9 @@ pub struct ClusterSpec {
     pub balancer: DispatchPolicy,
     /// Optional SLO-driven elasticity. Requires `spec.slo`.
     pub autoscale: Option<AutoscaleSpec>,
+    /// Simulation engine for every replica (all three are bit-identical;
+    /// see [`crate::sim::EngineMode`]). Default: idle-aware.
+    pub engine: EngineMode,
 }
 
 impl ClusterSpec {
@@ -99,6 +103,7 @@ impl ClusterSpec {
             spec,
             balancer: DispatchPolicy::default(),
             autoscale: None,
+            engine: EngineMode::IdleAware,
         }
     }
 
@@ -109,6 +114,11 @@ impl ClusterSpec {
 
     pub fn autoscale(mut self, spec: AutoscaleSpec) -> Self {
         self.autoscale = Some(spec);
+        self
+    }
+
+    pub fn engine(mut self, mode: EngineMode) -> Self {
+        self.engine = mode;
         self
     }
 

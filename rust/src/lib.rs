@@ -94,19 +94,25 @@
 //! `vespa cluster` or [`cluster::serve_cluster`]. See `docs/API.md`
 //! ("Cluster serving").
 //!
-//! ## The idle-aware engine
+//! ## The engine core
 //!
-//! Simulation runs on an idle-aware event engine ([`sim::Soc`],
-//! [`sim::EngineMode`]): tiles report per-cycle [`tiles::TickOutcome`]
-//! wake points, routers report activity, and globally quiescent spans
-//! are coalesced by jumping time straight to the next event (tile wake,
-//! flit ready-time, DFS swap, schedule entry, or sampler deadline) —
-//! bit-identical to edge-by-edge stepping, but ~orders faster on
-//! low-utilization workloads. The original tick-everything loop remains
-//! as `EngineMode::Reference`, the equivalence oracle
-//! (`rust/tests/engine_equivalence.rs`). Engine architecture, bench
-//! workflow, `BENCH_*.json` schema, and the CI perf gate are documented
-//! in `docs/PERF.md`.
+//! Simulation runs on an activity-tracking multi-clock engine
+//! ([`sim::Soc`], [`sim::EngineMode`]): every tile, router, and sampler
+//! speaks the unified [`sim::EventSource`] contract, promising its next
+//! wake point as a typed [`sim::Deadline`] (island cycle, absolute
+//! time, input-armed, or never). `EngineMode::IdleAware` scans those
+//! deadlines per edge and coalesces globally quiescent spans by jumping
+//! time straight to the next event (tile wake, flit ready-time, DFS
+//! swap, schedule entry, or sampler deadline); `EngineMode::EventDriven`
+//! goes further and keys every component into per-island updateable
+//! min-heaps ([`sim::UpdateableMinHeap`]) so each edge touches only the
+//! components that are actually due — cost scales with *activity*, not
+//! grid size. Both are bit-identical to edge-by-edge stepping; the
+//! original tick-everything loop remains as `EngineMode::Reference`,
+//! the equivalence oracle (`rust/tests/engine_equivalence.rs`). Select
+//! with [`scenario::Session::engine`] or `--engine reference|idle|event`
+//! on the CLI. Engine architecture, bench workflow, `BENCH_*.json`
+//! schema, and the CI perf gate are documented in `docs/PERF.md`.
 //!
 //! ## Functional datapaths
 //!

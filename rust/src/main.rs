@@ -64,6 +64,7 @@ fn usage() {
            --artifacts DIR     use the PJRT backend from DIR\n\
            --duration-ms N     `run`/`serve`/`cluster` duration (default 10/200/100)\n\
            --tg N              `run`: active TG count (default 0)\n\
+           --engine E          `run`/`serve`/`cluster` engine: reference | idle | event\n\
          serve/cluster options:\n\
            --rps N             offered Poisson load in req/s (default 1000 / 4000)\n\
            --policy P          per-SoC dispatch: rr | jsq | least (default jsq)\n\
@@ -90,6 +91,15 @@ fn backend(args: &Args) -> vespa::Result<Box<dyn AccelCompute>> {
     match args.opt("artifacts") {
         Some(dir) => Ok(Box::new(PjrtCompute::load(dir)?)),
         None => Ok(Box::new(RefCompute::new())),
+    }
+}
+
+/// `--engine reference|idle|event` — simulation engine for `run`,
+/// `serve`, and `cluster` (default: idle-aware).
+fn engine_arg(args: &Args) -> vespa::Result<vespa::sim::EngineMode> {
+    match args.opt("engine") {
+        Some(s) => vespa::sim::EngineMode::parse(s),
+        None => Ok(vespa::sim::EngineMode::IdleAware),
     }
 }
 
@@ -195,6 +205,7 @@ fn cmd_run(args: &Args) -> vespa::Result<()> {
     let mut session = Session::with_backend(cfg, backend(args)?)?;
     let dur = args.opt_u64("duration-ms", 10)? * 1_000_000_000;
     session
+        .engine(engine_arg(args)?)
         .stage_all(1)?
         .with_tg_load(args.opt_usize("tg", 0)?)
         .warmup(dur);
@@ -253,6 +264,7 @@ fn cmd_serve(args: &Args) -> vespa::Result<()> {
 
     let cfg = paper_soc((accel.as_str(), replicas), (accel.as_str(), replicas));
     let mut session = Session::with_backend(cfg, backend(args)?)?;
+    session.engine(engine_arg(args)?);
     let a1 = session.tile_at(A1_POS.0, A1_POS.1);
     let a2 = session.tile_at(A2_POS.0, A2_POS.1);
     let (tiles, gov_island) = match args.opt("tile") {
@@ -334,7 +346,9 @@ fn cmd_cluster(args: &Args) -> vespa::Result<()> {
         spec = spec.governor(GovernorSpec::new(ISL_A1, slo_eff));
     }
 
-    let mut cspec = ClusterSpec::new(fleet, spec).balancer(balancer);
+    let mut cspec = ClusterSpec::new(fleet, spec)
+        .balancer(balancer)
+        .engine(engine_arg(args)?);
     if autoscale {
         cspec = cspec.autoscale(AutoscaleSpec::new(args.opt_usize("min-replicas", 1)?));
     }

@@ -114,6 +114,25 @@ impl Sampler {
     }
 }
 
+/// The sampler as an engine [`EventSource`]: its deadline is the next
+/// sampling instant and firing records one row. `Ctx` is the value row,
+/// aligned with the configured series names.
+impl crate::sim::event::EventSource for Sampler {
+    type Ctx<'a> = &'a [f64];
+
+    fn next_deadline(&self, _ctx: &Self::Ctx<'_>) -> crate::sim::event::Deadline {
+        crate::sim::event::Deadline::At(self.next_at)
+    }
+
+    fn fire(&mut self, now: Ps, ctx: &mut Self::Ctx<'_>) -> crate::sim::event::Outcome {
+        if !self.due(now) {
+            return crate::sim::event::Outcome::at(false, self.next_at);
+        }
+        self.record(now, *ctx);
+        crate::sim::event::Outcome::at(true, self.next_at)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -139,6 +158,22 @@ mod tests {
         assert!(s.due(100));
         s.record(100, &[2.0]);
         assert_eq!(s.series("a").unwrap().samples.len(), 2);
+    }
+
+    #[test]
+    fn sampler_as_event_source() {
+        use crate::sim::event::{Deadline, EventSource};
+        let mut s = Sampler::new(100, &["a"]);
+        let row = [7.0];
+        let mut ctx: &[f64] = &row;
+        assert_eq!(s.next_deadline(&ctx), Deadline::At(0));
+        let out = s.fire(0, &mut ctx);
+        assert!(out.did_work);
+        assert_eq!(out.next, Deadline::At(100));
+        // Early fire before the cadence point records nothing.
+        let out = s.fire(99, &mut ctx);
+        assert!(!out.did_work);
+        assert_eq!(s.series("a").unwrap().samples.len(), 1);
     }
 
     #[test]

@@ -17,5 +17,5 @@ pub mod topology;
 
 pub use link::{LinkFifo, LinkId};
 pub use packet::{Flit, FlitKind, Msg, Packet, PacketArena, PacketId, Plane, NUM_PLANES};
-pub use router::{ClockView, OutputRef, Router, RouterStats};
+pub use router::{ClockView, OutputRef, Router, RouterCtx, RouterStats};
 pub use topology::{Mesh, NodeId, Port, NUM_PORTS};

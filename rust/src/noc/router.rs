@@ -13,6 +13,7 @@
 
 use super::link::{LinkFifo, LinkId};
 use super::topology::{Mesh, NodeId, Port, NUM_PORTS};
+use crate::sim::event::{Deadline, EventSource, Outcome};
 use crate::util::Ps;
 
 /// Where an output port sends flits, and how the push is timestamped.
@@ -204,6 +205,59 @@ impl Router {
         }
         true
     }
+
+    /// Earliest instant any buffered input head flit becomes visible.
+    fn next_input_ready(&self, links: &[LinkFifo]) -> Option<Ps> {
+        let mut next: Option<Ps> = None;
+        for l in &self.inputs {
+            if let Some(rt) = links[l.0 as usize].head_ready_at() {
+                next = Some(next.map_or(rt, |n| n.min(rt)));
+            }
+        }
+        next
+    }
+}
+
+/// Shared engine state a router touches during one cycle, packaged for
+/// the [`EventSource`] contract.
+pub struct RouterCtx<'a> {
+    /// NoC-island cycle count at this edge.
+    pub cycle: u64,
+    pub mesh: &'a Mesh,
+    /// The fabric's link-FIFO arena.
+    pub links: &'a mut [LinkFifo],
+    pub view: &'a ClockView,
+}
+
+impl EventSource for Router {
+    type Ctx<'a> = RouterCtx<'a>;
+
+    fn next_deadline(&self, ctx: &RouterCtx<'_>) -> Deadline {
+        if self.holds_grant() {
+            // A held wormhole grant accrues stall statistics every
+            // cycle; the router must run each edge until it releases.
+            return Deadline::Cycle(0);
+        }
+        match self.next_input_ready(&*ctx.links) {
+            Some(rt) => Deadline::At(rt),
+            None => Deadline::OnInput,
+        }
+    }
+
+    fn fire(&mut self, now: Ps, ctx: &mut RouterCtx<'_>) -> Outcome {
+        let did_work = self.tick(now, ctx.mesh, ctx.links, ctx.view);
+        let next = if self.holds_grant() {
+            Deadline::Cycle(ctx.cycle + 1)
+        } else {
+            // A remaining buffered head (possibly already visible, if
+            // two were queued) re-arms the router at its `ready_at`.
+            match self.next_input_ready(ctx.links) {
+                Some(rt) => Deadline::At(rt),
+                None => Deadline::OnInput,
+            }
+        };
+        Outcome { did_work, next }
+    }
 }
 
 #[cfg(test)]
@@ -314,6 +368,39 @@ mod tests {
         assert_eq!(r.stats.flits, 0);
         r.tick(500, &mesh, &mut links, &view());
         assert_eq!(r.stats.flits, 1);
+    }
+
+    #[test]
+    fn event_source_deadlines_track_state() {
+        let (mesh, mut r, mut links) = setup();
+        let v = view();
+        {
+            let ctx = RouterCtx {
+                cycle: 0,
+                mesh: &mesh,
+                links: &mut links,
+                view: &v,
+            };
+            assert_eq!(r.next_deadline(&ctx), Deadline::OnInput, "idle router");
+        }
+        // A buffered future flit arms an At deadline; firing early is a
+        // no-op that keeps it armed.
+        links[Port::Local.index()].push(flit(1, 0, 2, NodeId(1)), 500);
+        let mut ctx = RouterCtx {
+            cycle: 3,
+            mesh: &mesh,
+            links: &mut links,
+            view: &v,
+        };
+        assert_eq!(r.next_deadline(&ctx), Deadline::At(500));
+        let out = r.fire(400, &mut ctx);
+        assert_eq!(out.next, Deadline::At(500));
+        assert_eq!(r.stats.flits, 0, "head not visible yet: nothing moved");
+        // Once visible, firing routes the head and the held wormhole
+        // demands a next-cycle deadline.
+        let out = r.fire(500, &mut ctx);
+        assert!(out.did_work);
+        assert_eq!(out.next, Deadline::Cycle(4), "grant held until tail");
     }
 
     #[test]

@@ -245,12 +245,20 @@ impl Session {
         self.staged.get(&tile).map(Vec::as_slice).unwrap_or(&[])
     }
 
-    /// Select the simulation engine (default: idle-aware). The
-    /// [`Reference`](crate::sim::EngineMode::Reference) engine ticks
-    /// every component on every edge — the equivalence oracle the
-    /// idle-aware engine is tested against.
+    /// Select the simulation engine (default: idle-aware). This is the
+    /// single engine-selection surface — the CLI's `--engine` flag and
+    /// [`crate::cluster::ClusterSpec::engine`] both route here.
+    ///
+    /// [`Reference`](crate::sim::EngineMode::Reference) ticks every
+    /// component on every edge — the equivalence oracle the other two
+    /// are tested against. [`IdleAware`](crate::sim::EngineMode::IdleAware)
+    /// scans component deadlines per edge and coalesces quiescent
+    /// spans. [`EventDriven`](crate::sim::EngineMode::EventDriven) pops
+    /// components from per-island min-heaps so each edge costs only the
+    /// work that is actually due. Safe to call mid-run: the scheduler
+    /// conservatively re-arms every component.
     pub fn engine(&mut self, mode: crate::sim::EngineMode) -> &mut Self {
-        self.soc.engine = mode;
+        self.soc.set_engine(mode);
         self
     }
 

@@ -1,0 +1,114 @@
+//! The unified component-stepping contract.
+//!
+//! Before this module, every schedulable component spoke its own wake
+//! dialect: tiles returned a `TickOutcome { did_work, wake_cycle }` with
+//! a `WAKE_ON_INPUT` sentinel, routers returned a bare `bool`, link
+//! FIFOs exposed `head_ready_at`, and the sampler had `due`/`next_due`.
+//! [`EventSource`] replaces all of them: a component reports *when it
+//! next needs to run* as a typed [`Deadline`] and is stepped through
+//! [`fire`](EventSource::fire), which returns an [`Outcome`] carrying
+//! the next deadline.
+//!
+//! # The deadline contract
+//!
+//! A deadline is a *conservative promise*: running the component any
+//! time **before** its deadline must be a provable no-op, and the engine
+//! is free to run it early (it does, whenever an input wake arrives).
+//! The two timed variants deliberately use different clocks:
+//!
+//! * [`Deadline::Cycle`] counts **island cycles** (the component's own
+//!   clock), so a DFS retune of the island never invalidates a sleeping
+//!   component — cycles convert to absolute time only transiently, when
+//!   the engine probes for a coalescable quiescent span, and spans never
+//!   cross a retiming.
+//! * [`Deadline::At`] is **absolute picoseconds** — the `ready_at` stamp
+//!   of a buffered flit, or the sampler's next due time. These come from
+//!   producers and are exact, not period-derived.
+//!
+//! [`Deadline::OnInput`] parks the component entirely: only a producer
+//! pushing into one of its input FIFOs can give it work, and the engine
+//! re-arms it from that push notification. [`Deadline::Never`] is the
+//! same minus the input edge (nothing will ever wake it).
+
+use crate::util::Ps;
+
+/// When a component next needs to run. See the [module](self) contract.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Deadline {
+    /// Run at/after this island-cycle count (the component's own clock;
+    /// immune to DFS retunes). `Cycle(0)` means "due at the next edge".
+    Cycle(u64),
+    /// Run at/after this absolute simulation time (flit `ready_at` or
+    /// sampler cadence).
+    At(Ps),
+    /// Nothing to do until a producer pushes into an input FIFO.
+    OnInput,
+    /// Nothing will ever give this component work.
+    Never,
+}
+
+/// What a [`fire`](EventSource::fire) did and when to run next.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Outcome {
+    /// The step changed observable state (packets, counters, compute).
+    pub did_work: bool,
+    /// Next deadline, replacing the component's previous registration.
+    pub next: Deadline,
+}
+
+impl Outcome {
+    /// Run me again next cycle.
+    pub fn active(did_work: bool, cycle: u64) -> Self {
+        Self {
+            did_work,
+            next: Deadline::Cycle(cycle + 1),
+        }
+    }
+
+    /// Nothing to do before island cycle `wake_cycle` (barring input).
+    pub fn sleep_until(did_work: bool, wake_cycle: u64) -> Self {
+        Self {
+            did_work,
+            next: Deadline::Cycle(wake_cycle),
+        }
+    }
+
+    /// Nothing to do until an input flit arrives.
+    pub fn on_input(did_work: bool) -> Self {
+        Self {
+            did_work,
+            next: Deadline::OnInput,
+        }
+    }
+
+    /// Nothing to do before absolute time `at`.
+    pub fn at(did_work: bool, at: Ps) -> Self {
+        Self {
+            did_work,
+            next: Deadline::At(at),
+        }
+    }
+}
+
+/// A schedulable simulation component.
+///
+/// Implementors: [`Tile`](crate::tiles::Tile) (`Ctx` =
+/// [`TileCtx`](crate::tiles::TileCtx)), [`Router`](crate::noc::Router)
+/// (`Ctx` = [`RouterCtx`](crate::noc::RouterCtx)), and
+/// [`Sampler`](crate::monitor::Sampler) (`Ctx` = the sample row).
+///
+/// `Ctx` is a generic-associated type because each component borrows a
+/// different slice of engine state for the duration of one step; the
+/// engine assembles the right context per fire.
+pub trait EventSource {
+    /// Shared engine state this component touches while stepping.
+    type Ctx<'a>;
+
+    /// Current registration deadline, derived from component state.
+    /// Must be conservative: running before it is a no-op.
+    fn next_deadline(&self, ctx: &Self::Ctx<'_>) -> Deadline;
+
+    /// Step the component once at time `now`. The returned
+    /// [`Outcome::next`] replaces its registration.
+    fn fire(&mut self, now: Ps, ctx: &mut Self::Ctx<'_>) -> Outcome;
+}

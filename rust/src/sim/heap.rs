@@ -1,0 +1,315 @@
+//! Updateable binary min-heap keyed by dense component ids.
+//!
+//! The event-driven engine needs three operations the standard library's
+//! `BinaryHeap` cannot do: *update-or-push* (re-key a component already
+//! in the heap), *remove-one* (drop a specific component's entry), and
+//! keyed membership tests — all in `O(log n)`. This heap pairs the
+//! entry array with a dense `component -> slot` position map, so keyed
+//! access never scans.
+//!
+//! Determinism: entries order by `(key, component)`, so equal deadlines
+//! pop in ascending component order — the engine relies on this to
+//! reproduce the reference engine's intra-edge tick order exactly.
+
+/// Position-map sentinel: the component holds no entry.
+const ABSENT: u32 = u32::MAX;
+
+/// A binary min-heap over `(key, component)` with `O(log n)` keyed
+/// update and removal via a dense position map.
+///
+/// Components are dense `u32` ids in `[0, n_comps)`; each holds at most
+/// one entry. `Clone` deep-copies the full scheduler state (simulation
+/// forking).
+#[derive(Debug, Clone)]
+pub struct UpdateableMinHeap<K> {
+    /// Heap-ordered `(key, comp)` pairs; index 0 is the minimum.
+    entries: Vec<(K, u32)>,
+    /// `pos[comp]` = index of that component's entry, or [`ABSENT`].
+    pos: Vec<u32>,
+}
+
+impl<K: Copy + Ord> UpdateableMinHeap<K> {
+    /// An empty heap able to hold components `0..n_comps`.
+    pub fn new(n_comps: usize) -> Self {
+        Self {
+            entries: Vec::with_capacity(n_comps),
+            pos: vec![ABSENT; n_comps],
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn contains(&self, comp: u32) -> bool {
+        self.pos[comp as usize] != ABSENT
+    }
+
+    /// Current key of `comp`, if it holds an entry.
+    pub fn key_of(&self, comp: u32) -> Option<K> {
+        let i = self.pos[comp as usize];
+        if i == ABSENT {
+            None
+        } else {
+            Some(self.entries[i as usize].0)
+        }
+    }
+
+    /// The minimum `(key, comp)` without removing it.
+    pub fn peek(&self) -> Option<(K, u32)> {
+        self.entries.first().copied()
+    }
+
+    /// Remove and return the minimum `(key, comp)`.
+    pub fn pop(&mut self) -> Option<(K, u32)> {
+        let top = *self.entries.first()?;
+        self.remove_index(0);
+        Some(top)
+    }
+
+    /// Update-or-push: (re)key `comp`, inserting it if absent.
+    pub fn set(&mut self, comp: u32, key: K) {
+        let i = self.pos[comp as usize];
+        if i == ABSENT {
+            self.entries.push((key, comp));
+            let last = self.entries.len() - 1;
+            self.pos[comp as usize] = last as u32;
+            self.sift_up(last);
+        } else {
+            let i = i as usize;
+            let old = self.entries[i].0;
+            self.entries[i].0 = key;
+            if key < old {
+                self.sift_up(i);
+            } else {
+                self.sift_down(i);
+            }
+        }
+    }
+
+    /// Decrease-only update: key `comp` to `key` unless it already holds
+    /// an earlier (or equal) deadline. The engine's input-wake discipline
+    /// — a notification may only move a wake *earlier* — is enforced
+    /// here, so a pending earlier wake can never be lost.
+    pub fn update_min(&mut self, comp: u32, key: K) {
+        if let Some(k) = self.key_of(comp) {
+            if k <= key {
+                return;
+            }
+        }
+        self.set(comp, key);
+    }
+
+    /// Remove-one: drop `comp`'s entry if present. Returns whether an
+    /// entry was removed.
+    pub fn remove(&mut self, comp: u32) -> bool {
+        let i = self.pos[comp as usize];
+        if i == ABSENT {
+            return false;
+        }
+        self.remove_index(i as usize);
+        true
+    }
+
+    /// Drop every entry (position map included).
+    pub fn clear(&mut self) {
+        for &(_, c) in &self.entries {
+            self.pos[c as usize] = ABSENT;
+        }
+        self.entries.clear();
+    }
+
+    fn remove_index(&mut self, i: usize) {
+        let last = self.entries.len() - 1;
+        let removed = self.entries[i].1;
+        if i != last {
+            self.swap(i, last);
+        }
+        self.entries.pop();
+        self.pos[removed as usize] = ABSENT;
+        if i < self.entries.len() {
+            // The displaced entry may need to move either way.
+            let i = self.sift_up(i);
+            self.sift_down(i);
+        }
+    }
+
+    fn swap(&mut self, a: usize, b: usize) {
+        self.entries.swap(a, b);
+        self.pos[self.entries[a].1 as usize] = a as u32;
+        self.pos[self.entries[b].1 as usize] = b as u32;
+    }
+
+    fn sift_up(&mut self, mut i: usize) -> usize {
+        while i > 0 {
+            let parent = (i - 1) / 2;
+            if self.entries[parent] <= self.entries[i] {
+                break;
+            }
+            self.swap(parent, i);
+            i = parent;
+        }
+        i
+    }
+
+    fn sift_down(&mut self, mut i: usize) {
+        loop {
+            let l = 2 * i + 1;
+            let mut m = i;
+            if l < self.entries.len() && self.entries[l] < self.entries[m] {
+                m = l;
+            }
+            let r = l + 1;
+            if r < self.entries.len() && self.entries[r] < self.entries[m] {
+                m = r;
+            }
+            if m == i {
+                return;
+            }
+            self.swap(i, m);
+            i = m;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::SplitMix64;
+    use std::collections::BTreeSet;
+
+    #[test]
+    fn pops_in_key_order_with_comp_tiebreak() {
+        let mut h = UpdateableMinHeap::new(8);
+        h.set(3, 50u64);
+        h.set(1, 20);
+        h.set(7, 20);
+        h.set(0, 90);
+        assert_eq!(h.peek(), Some((20, 1)));
+        assert_eq!(h.pop(), Some((20, 1)));
+        assert_eq!(h.pop(), Some((20, 7)));
+        assert_eq!(h.pop(), Some((50, 3)));
+        assert_eq!(h.pop(), Some((90, 0)));
+        assert_eq!(h.pop(), None);
+        assert!(h.is_empty());
+    }
+
+    #[test]
+    fn update_or_push_rekeys_in_place() {
+        let mut h = UpdateableMinHeap::new(4);
+        h.set(2, 100u64);
+        h.set(1, 200);
+        // Decrease: comp 1 overtakes comp 2.
+        h.set(1, 10);
+        assert_eq!(h.peek(), Some((10, 1)));
+        assert_eq!(h.key_of(1), Some(10));
+        // Increase: comp 1 falls behind again; still exactly one entry.
+        h.set(1, 300);
+        assert_eq!(h.len(), 2);
+        assert_eq!(h.pop(), Some((100, 2)));
+        assert_eq!(h.pop(), Some((300, 1)));
+    }
+
+    #[test]
+    fn update_min_never_delays() {
+        let mut h = UpdateableMinHeap::new(4);
+        h.update_min(0, 50u64);
+        assert_eq!(h.key_of(0), Some(50));
+        h.update_min(0, 80); // later: ignored
+        assert_eq!(h.key_of(0), Some(50));
+        h.update_min(0, 30); // earlier: applied
+        assert_eq!(h.key_of(0), Some(30));
+    }
+
+    #[test]
+    fn remove_one_from_the_middle() {
+        let mut h = UpdateableMinHeap::new(8);
+        for c in 0..8u32 {
+            h.set(c, (c as u64) * 10 + 5);
+        }
+        assert!(h.remove(3));
+        assert!(!h.remove(3), "second removal is a no-op");
+        assert!(!h.contains(3));
+        let popped: Vec<u32> = std::iter::from_fn(|| h.pop()).map(|(_, c)| c).collect();
+        assert_eq!(popped, vec![0, 1, 2, 4, 5, 6, 7]);
+    }
+
+    #[test]
+    fn clear_resets_membership() {
+        let mut h = UpdateableMinHeap::new(4);
+        h.set(0, 1u64);
+        h.set(3, 2);
+        h.clear();
+        assert!(h.is_empty());
+        assert!(!h.contains(0) && !h.contains(3));
+        h.set(3, 7); // usable again after clear
+        assert_eq!(h.pop(), Some((7, 3)));
+    }
+
+    /// Randomized model check: set/update_min/remove/pop against a
+    /// `BTreeSet<(key, comp)>` oracle.
+    #[test]
+    fn matches_ordered_set_model() {
+        const COMPS: u32 = 24;
+        let mut rng = SplitMix64::new(0xB0A7_5EED);
+        let mut h = UpdateableMinHeap::new(COMPS as usize);
+        let mut model: BTreeSet<(u64, u32)> = BTreeSet::new();
+        let mut key: Vec<Option<u64>> = vec![None; COMPS as usize];
+
+        for _ in 0..4000 {
+            let comp = rng.next_below(COMPS as u64) as u32;
+            let k = rng.next_below(1000);
+            match rng.next_below(4) {
+                0 => {
+                    if let Some(old) = key[comp as usize] {
+                        model.remove(&(old, comp));
+                    }
+                    model.insert((k, comp));
+                    key[comp as usize] = Some(k);
+                    h.set(comp, k);
+                }
+                1 => {
+                    let effective = match key[comp as usize] {
+                        Some(old) if old <= k => old,
+                        Some(old) => {
+                            model.remove(&(old, comp));
+                            model.insert((k, comp));
+                            k
+                        }
+                        None => {
+                            model.insert((k, comp));
+                            k
+                        }
+                    };
+                    key[comp as usize] = Some(effective);
+                    h.update_min(comp, k);
+                }
+                2 => {
+                    let had = key[comp as usize].take();
+                    if let Some(old) = had {
+                        model.remove(&(old, comp));
+                    }
+                    assert_eq!(h.remove(comp), had.is_some());
+                }
+                _ => {
+                    let want = model.iter().next().copied();
+                    assert_eq!(h.pop(), want);
+                    if let Some((_, c)) = want {
+                        model.remove(&want.unwrap());
+                        key[c as usize] = None;
+                    }
+                }
+            }
+            assert_eq!(h.len(), model.len());
+            assert_eq!(h.peek(), model.iter().next().copied());
+            for c in 0..COMPS {
+                assert_eq!(h.key_of(c), key[c as usize]);
+                assert_eq!(h.contains(c), key[c as usize].is_some());
+            }
+        }
+    }
+}

@@ -2,9 +2,14 @@
 //! and the host-side workload driver.
 
 pub mod driver;
+pub mod event;
 pub mod fabric;
+pub mod heap;
+mod sched;
 pub mod soc;
 
 pub use driver::{input_shapes, stage_inputs_for, ThroughputProbe};
+pub use event::{Deadline, EventSource, Outcome};
 pub use fabric::Fabric;
+pub use heap::UpdateableMinHeap;
 pub use soc::{EngineMode, EngineStats, Soc};

@@ -1,0 +1,143 @@
+//! Scheduler state for the event-driven engine: per-island updateable
+//! min-heaps of component deadlines plus the link-to-consumer map that
+//! turns producer pushes into input wakes.
+//!
+//! # Component ids
+//!
+//! Routers occupy ids `0..n_routers` in fabric order
+//! (`plane * nodes + node`); tile `ti` is id `n_routers + ti`. Sorting a
+//! due-set ascending therefore reproduces the reference engine's
+//! intra-edge order exactly — all routers (plane-major), then tiles in
+//! node order — which is what keeps [`EngineMode::EventDriven`] bit-
+//! identical to [`EngineMode::Reference`].
+//!
+//! # Why two heaps per island
+//!
+//! [`Deadline::Cycle`] keys count island cycles and survive DFS retunes
+//! untouched; [`Deadline::At`] keys are absolute flit `ready_at` stamps.
+//! Keeping them in separate heaps means a retune never has to re-key
+//! anything — the engine just pops whichever heads are due at each edge.
+//!
+//! # The wake invariant
+//!
+//! Every non-empty link FIFO's consumer always holds a heap entry keyed
+//! at or before the instant its head flit becomes visible. Producers
+//! maintain it through [`EventSched::wake_input`] after every push, and
+//! consumers re-arm their own inputs when they fire. The invariant is
+//! what makes the engine's `O(islands)` quiescence probe sound: if no
+//! heap head is due, no component can do work.
+//!
+//! [`EngineMode::EventDriven`]: super::soc::EngineMode::EventDriven
+//! [`EngineMode::Reference`]: super::soc::EngineMode::Reference
+//! [`Deadline::Cycle`]: super::event::Deadline::Cycle
+//! [`Deadline::At`]: super::event::Deadline::At
+
+use crate::noc::LinkId;
+use crate::util::Ps;
+
+use super::fabric::Fabric;
+use super::heap::UpdateableMinHeap;
+
+/// Per-island deadline heaps plus component/link topology maps.
+/// `Clone` deep-copies the full scheduler (simulation forking).
+#[derive(Clone)]
+pub(crate) struct EventSched {
+    /// Routers are components `0..n_routers`; tile `ti` is
+    /// `n_routers + ti`.
+    pub n_routers: usize,
+    /// Frequency island of each component (routers: the NoC island).
+    island: Vec<u32>,
+    /// `link -> component consuming that FIFO`: router input FIFOs
+    /// (inject links included — they are the local input) feed their
+    /// router; eject FIFOs feed the tile at that node.
+    link_consumer: Vec<u32>,
+    /// Per island: cycle-keyed deadlines (island cycles).
+    pub cycle: Vec<UpdateableMinHeap<u64>>,
+    /// Per island: absolute-time input wakes (`ready_at` stamps).
+    pub at: Vec<UpdateableMinHeap<Ps>>,
+    /// Scratch: components due at the edge being stepped.
+    pub due: Vec<u32>,
+}
+
+impl EventSched {
+    /// Build the scheduler for a fabric and arm every component at its
+    /// island's next edge.
+    pub fn build(
+        fabric: &Fabric,
+        tile_islands: &[usize],
+        noc_island: usize,
+        n_islands: usize,
+    ) -> Self {
+        let n_routers = fabric.routers.len();
+        let n_comps = n_routers + tile_islands.len();
+
+        let mut island = vec![0u32; n_comps];
+        for isl in island.iter_mut().take(n_routers) {
+            *isl = noc_island as u32;
+        }
+        for (ti, &isl) in tile_islands.iter().enumerate() {
+            island[n_routers + ti] = isl as u32;
+        }
+
+        let mut link_consumer = vec![0u32; fabric.links.len()];
+        for (r, router) in fabric.routers.iter().enumerate() {
+            for l in router.inputs {
+                link_consumer[l.0 as usize] = r as u32;
+            }
+        }
+        for (n, planes) in fabric.eject.iter().enumerate() {
+            for l in planes {
+                link_consumer[l.0 as usize] = (n_routers + n) as u32;
+            }
+        }
+
+        let mut sched = Self {
+            n_routers,
+            island,
+            link_consumer,
+            cycle: (0..n_islands).map(|_| UpdateableMinHeap::new(n_comps)).collect(),
+            at: (0..n_islands).map(|_| UpdateableMinHeap::new(n_comps)).collect(),
+            due: Vec::with_capacity(n_comps),
+        };
+        sched.rearm();
+        sched
+    }
+
+    /// Forget everything and mark every component due at its island's
+    /// next edge. Conservative by construction: each component
+    /// re-derives its true deadline from the [`Outcome`] of that first
+    /// fire, so re-arming is always safe (engine switches, resumes).
+    ///
+    /// [`Outcome`]: super::event::Outcome
+    pub fn rearm(&mut self) {
+        for h in &mut self.cycle {
+            h.clear();
+        }
+        for h in &mut self.at {
+            h.clear();
+        }
+        for comp in 0..self.island.len() as u32 {
+            self.cycle[self.island[comp as usize] as usize].set(comp, 0);
+        }
+    }
+
+    /// Component id of tile `ti`.
+    pub fn tile_comp(&self, tile: usize) -> u32 {
+        (self.n_routers + tile) as u32
+    }
+
+    /// Host code mutated tile `tile`: its sleep reasoning is void, so it
+    /// must re-evaluate at its island's next edge.
+    pub fn wake_tile(&mut self, tile: usize) {
+        let comp = self.tile_comp(tile);
+        self.cycle[self.island[comp as usize] as usize].set(comp, 0);
+    }
+
+    /// A producer pushed into `link` (head visible from `ready_at`):
+    /// ensure the consumer runs no later than that. Decrease-only, so an
+    /// earlier pending wake is never lost.
+    pub fn wake_input(&mut self, link: LinkId, ready_at: Ps) {
+        let comp = self.link_consumer[link.0 as usize];
+        self.at[self.island[comp as usize] as usize].update_min(comp, ready_at);
+    }
+}

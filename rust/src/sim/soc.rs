@@ -7,29 +7,33 @@
 //! period). Determinism: heap ties break on island index; all randomness
 //! is seeded from the config.
 //!
-//! # The idle-aware engine
+//! # The three engines
 //!
-//! The default [`EngineMode::IdleAware`] engine keeps the same edge
-//! heap but avoids provably no-op work on two levels (see
+//! All three modes share the edge heap, host schedule, and sampler
+//! plumbing and differ only in how much per-edge work they elide (see
 //! `docs/PERF.md` for the full architecture):
 //!
-//! * **Component skipping.** Every tile tick returns a
-//!   [`TickOutcome`](crate::tiles::TickOutcome) naming the island cycle
-//!   at which it next needs an unconditional tick (its per-island wake
-//!   set); a sleeping tile is only ticked early when a flit becomes
-//!   visible in one of its eject FIFOs. Routers keep their empty-FIFO
-//!   fast path and report whether they had work.
-//! * **Span coalescing.** After a fully quiet edge, the engine probes
-//!   global quiescence (no router grants, no visible flits, every tile
-//!   asleep) and bulk-delivers all edges up to the next *event* — the
-//!   earliest tile wake, buffered-flit `ready_at`, DFS actuator swap,
-//!   host schedule entry, or sampler deadline — via
-//!   [`ClockDomain::advance_span`], instead of stepping each edge.
+//! * [`EngineMode::Reference`] ticks every router and every tile of the
+//!   edge's island, unconditionally — the bit-exactness oracle.
+//! * [`EngineMode::IdleAware`] (the default) skips components that are
+//!   provably idle: every tile tick returns an
+//!   [`Outcome`](crate::tiles::Outcome) naming its next
+//!   [`Deadline`](crate::tiles::Deadline), routers keep their
+//!   empty-FIFO fast path, and after a fully quiet edge the engine
+//!   probes global quiescence and bulk-delivers edges up to the next
+//!   event via [`ClockDomain::advance_span`].
+//! * [`EngineMode::EventDriven`] inverts the loop: components register
+//!   their deadlines in per-island updateable min-heaps (see
+//!   [`super::heap::UpdateableMinHeap`]) and each edge pops only the
+//!   components actually due, so per-edge cost scales with *activity*,
+//!   not grid size. Producer pushes re-arm consumers through the
+//!   link-to-consumer map; quiescence probing is `O(islands)` because
+//!   the heap heads already bound every component's next wake.
 //!
-//! Both levels only elide work that is a no-op by construction, so the
-//! engine is bit-identical to [`EngineMode::Reference`] (the original
-//! tick-everything loop, kept as the equivalence oracle — see
-//! `rust/tests/engine_equivalence.rs`).
+//! Every elision is a no-op by construction, so all engines are
+//! bit-identical to [`EngineMode::Reference`] — enforced across serve,
+//! cluster, and mid-run retune paths in
+//! `rust/tests/engine_equivalence.rs`.
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
@@ -40,14 +44,16 @@ use crate::clock::domain::{ClockDomain, IslandId};
 use crate::config::{SocConfig, TileKind};
 use crate::mem::BlockStore;
 use crate::monitor::{MonitorFile, Sampler};
-use crate::noc::{ClockView, NodeId, PacketArena};
+use crate::noc::{ClockView, NodeId, PacketArena, RouterCtx};
 use crate::runtime::AccelCompute;
 use crate::tiles::{cpu::CpuTile, io::IoTile, mem_tile::MemTile, mra::MraTile, tg::TgTile};
-use crate::tiles::{AccelTiming, NetIface, Tile, TileCtx, WAKE_ON_INPUT};
+use crate::tiles::{AccelTiming, NetIface, Tile, TileCtx};
 use crate::util::time::Freq;
 use crate::util::{Ps, SplitMix64};
 
+use super::event::{Deadline, EventSource};
 use super::fabric::Fabric;
+use super::sched::EventSched;
 
 /// Which step loop the engine runs.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -59,6 +65,22 @@ pub enum EngineMode {
     /// Tick every router and every tile on every edge — the
     /// pre-idle-aware engine, kept as the equivalence oracle.
     Reference,
+    /// Pop only due components from per-island updateable min-heaps of
+    /// [`Deadline`]s — per-edge cost scales with activity, not grid
+    /// size.
+    EventDriven,
+}
+
+impl EngineMode {
+    /// Parse a CLI engine name (the `--engine` flag).
+    pub fn parse(s: &str) -> crate::Result<Self> {
+        Ok(match s {
+            "reference" | "ref" => Self::Reference,
+            "idle" | "idle-aware" => Self::IdleAware,
+            "event" | "event-driven" => Self::EventDriven,
+            other => bail!("unknown engine {other:?} (expected reference|idle|event)"),
+        })
+    }
 }
 
 /// Idle-aware engine telemetry (all zero under [`EngineMode::Reference`]).
@@ -96,14 +118,17 @@ pub struct Soc {
     /// Total edges processed (engine throughput metric). Bulk-delivered
     /// edges count exactly as stepped ones, so this is engine-invariant.
     pub edges: u64,
-    /// Engine selection. Pick before running; switching mid-run keeps
-    /// correctness (wake state is conservative) but is not supported as
-    /// a tested configuration.
+    /// Engine selection. Prefer [`Soc::set_engine`] (it re-arms the
+    /// event scheduler); direct assignment is safe only before the
+    /// first `run_*`/`step` call, while the scheduler still holds its
+    /// conservative build-time state.
     pub engine: EngineMode,
     pub engine_stats: EngineStats,
-    /// Per-tile wake point in island cycles ([`WAKE_ON_INPUT`] = only a
-    /// NoC arrival wakes it). 0 = due immediately.
-    tile_wake: Vec<u64>,
+    /// Per-tile registration [`Deadline`] (the idle-aware engine's wake
+    /// set). `Cycle(0)` = due immediately.
+    tile_next: Vec<Deadline>,
+    /// Event-driven scheduler state (per-island deadline heaps).
+    sched: EventSched,
     /// Scratch: tiles due this edge (reused to avoid per-edge allocs).
     due_tiles: Vec<usize>,
     /// The last processed edge did no work — gates coalescing attempts.
@@ -223,6 +248,8 @@ impl Soc {
             heap.push(Reverse((d.next_edge(0), i)));
         }
 
+        let sched = EventSched::build(&fabric, &tile_islands, cfg.noc.island, islands.len());
+
         let mon = MonitorFile::new(cfg.tiles.len());
         let n_tiles = cfg.tiles.len();
         Ok(Self {
@@ -244,7 +271,8 @@ impl Soc {
             edges: 0,
             engine: EngineMode::default(),
             engine_stats: EngineStats::default(),
-            tile_wake: vec![0; n_tiles],
+            tile_next: vec![Deadline::Cycle(0); n_tiles],
+            sched,
             due_tiles: Vec::with_capacity(n_tiles),
             quiet_edge: false,
         })
@@ -284,7 +312,8 @@ impl Soc {
             edges: self.edges,
             engine: self.engine,
             engine_stats: self.engine_stats,
-            tile_wake: self.tile_wake.clone(),
+            tile_next: self.tile_next.clone(),
+            sched: self.sched.clone(),
             due_tiles: self.due_tiles.clone(),
             quiet_edge: self.quiet_edge,
         })
@@ -319,9 +348,12 @@ impl Soc {
 
     /// Force a tile awake (any direct mutation of tile state from host
     /// code invalidates the engine's sleep reasoning for that tile).
+    /// Updates both engines' wake state — cheap, and keeps a later
+    /// engine switch sound.
     fn wake_tile(&mut self, tile: usize) {
-        if let Some(w) = self.tile_wake.get_mut(tile) {
-            *w = 0;
+        if let Some(w) = self.tile_next.get_mut(tile) {
+            *w = Deadline::Cycle(0);
+            self.sched.wake_tile(tile);
         }
     }
 
@@ -390,7 +422,8 @@ impl Soc {
                 seen += 1;
                 // A just-enabled (or disabled) TG must re-evaluate its
                 // wake point on the next edge.
-                self.tile_wake[ti] = 0;
+                self.tile_next[ti] = Deadline::Cycle(0);
+                self.sched.wake_tile(ti);
             }
         }
     }
@@ -433,11 +466,25 @@ impl Soc {
     // Engine
     // ---------------------------------------------------------------
 
+    /// Select the engine. Safe at any point, including mid-run: the
+    /// event scheduler re-arms conservatively (every component due at
+    /// its island's next edge), so each re-derives its true deadline on
+    /// first fire.
+    pub fn set_engine(&mut self, mode: EngineMode) {
+        self.engine = mode;
+        self.sched.rearm();
+        for w in &mut self.tile_next {
+            *w = Deadline::Cycle(0);
+        }
+        self.quiet_edge = false;
+    }
+
     /// Process one clock edge; returns the new simulation time.
     pub fn step(&mut self) -> Ps {
         match self.engine {
             EngineMode::IdleAware => self.step_idle_aware(),
             EngineMode::Reference => self.reference_step(),
+            EngineMode::EventDriven => self.step_event(),
         }
     }
 
@@ -565,12 +612,15 @@ impl Soc {
         let cycle = self.islands[i].cycles;
         self.due_tiles.clear();
         for &ti in &self.island_tiles[i] {
-            let due = self.tile_wake[ti] <= cycle
-                || self.fabric.eject[ti].iter().any(|l| {
-                    self.fabric.links[l.0 as usize]
-                        .head_ready_at()
-                        .is_some_and(|rt| rt <= t)
-                });
+            let due = match self.tile_next[ti] {
+                Deadline::Cycle(w) => w <= cycle,
+                Deadline::At(at) => at <= t,
+                Deadline::OnInput | Deadline::Never => false,
+            } || self.fabric.eject[ti].iter().any(|l| {
+                self.fabric.links[l.0 as usize]
+                    .head_ready_at()
+                    .is_some_and(|rt| rt <= t)
+            });
             if due {
                 self.due_tiles.push(ti);
             } else {
@@ -590,7 +640,7 @@ impl Soc {
                 islands,
                 view,
                 due_tiles,
-                tile_wake,
+                tile_next,
                 ..
             } = self;
             let mut ctx = TileCtx {
@@ -606,12 +656,156 @@ impl Soc {
                 islands,
             };
             for &ti in due_tiles.iter() {
-                let out = tiles[ti].tick(&mut ctx);
-                tile_wake[ti] = out.wake_cycle;
-                if out.did_work || out.wake_cycle <= cycle + 1 {
+                let out = tiles[ti].fire(t, &mut ctx);
+                tile_next[ti] = out.next;
+                let imminent = matches!(out.next, Deadline::Cycle(w) if w <= cycle + 1)
+                    || matches!(out.next, Deadline::At(at) if at <= t);
+                if out.did_work || imminent {
                     restless = true;
                 }
             }
+        }
+
+        if self.end_edge(t, i) {
+            restless = true;
+        }
+        self.quiet_edge = !restless;
+        t
+    }
+
+    /// The event-driven engine: pop only components whose registered
+    /// [`Deadline`] is due at this edge from the island's updateable
+    /// min-heaps, fire them in component order (routers in fabric
+    /// order, then tiles in node order — the reference engine's exact
+    /// intra-edge order), and re-register each from its
+    /// [`Outcome`](super::event::Outcome). Producer pushes re-arm
+    /// consumers through the link-to-consumer map, preserving the wake
+    /// invariant the `O(islands)` coalescing probe relies on.
+    fn step_event(&mut self) -> Ps {
+        let (t, i, scheduled) = self.begin_edge();
+        let mut restless = scheduled;
+        let cycle = self.islands[i].cycles;
+
+        {
+            let Self {
+                fabric,
+                tiles,
+                arena,
+                blocks,
+                mon,
+                compute,
+                islands,
+                view,
+                sched,
+                engine_stats,
+                ..
+            } = self;
+
+            // Drain this island's due set: cycle deadlines reached and
+            // input wakes whose `ready_at` has passed. Flits pushed
+            // *during* this edge carry strictly-future stamps, so the
+            // pre-drained set is exact — nothing fired here can make
+            // another component due at this same edge.
+            sched.due.clear();
+            while let Some((w, c)) = sched.cycle[i].peek() {
+                if w > cycle {
+                    break;
+                }
+                sched.cycle[i].pop();
+                sched.due.push(c);
+            }
+            while let Some((at, c)) = sched.at[i].peek() {
+                if at > t {
+                    break;
+                }
+                sched.at[i].pop();
+                sched.due.push(c);
+            }
+            sched.due.sort_unstable();
+            sched.due.dedup();
+
+            let due = std::mem::take(&mut sched.due);
+            for &comp in &due {
+                // A component drained from one heap may still hold an
+                // entry in the other; drop it so the post-fire
+                // reschedule below is its sole registration (outcomes
+                // and link scans re-derive everything from state).
+                sched.cycle[i].remove(comp);
+                sched.at[i].remove(comp);
+                let out;
+                if (comp as usize) < sched.n_routers {
+                    let r = comp as usize;
+                    let mut rctx = RouterCtx {
+                        cycle,
+                        mesh: &fabric.mesh,
+                        links: &mut fabric.links,
+                        view,
+                    };
+                    out = fabric.routers[r].fire(t, &mut rctx);
+                    // Producer-side wakes: whoever consumes this
+                    // router's output links is due when the (possibly
+                    // new) head turns visible.
+                    for out_ref in fabric.routers[r].outputs.iter().flatten() {
+                        if let Some(rt) = fabric.links[out_ref.link.0 as usize].head_ready_at() {
+                            sched.wake_input(out_ref.link, rt);
+                        }
+                    }
+                } else {
+                    let ti = comp as usize - sched.n_routers;
+                    engine_stats.tile_ticks += 1;
+                    let mut ctx = TileCtx {
+                        now: t,
+                        cycle,
+                        mesh: &fabric.mesh,
+                        links: &mut fabric.links,
+                        view: &*view,
+                        arena: &mut *arena,
+                        blocks: &mut *blocks,
+                        compute: compute.as_mut(),
+                        mon: &mut *mon,
+                        islands: &mut *islands,
+                    };
+                    out = tiles[ti].fire(t, &mut ctx);
+                    // The tile may have left flits it could not take in
+                    // its eject FIFOs — re-arm on the earliest head.
+                    let mut pending: Option<Ps> = None;
+                    for l in fabric.eject[ti] {
+                        if let Some(rt) = fabric.links[l.0 as usize].head_ready_at() {
+                            pending = Some(pending.map_or(rt, |p| p.min(rt)));
+                        }
+                    }
+                    if let Some(rt) = pending {
+                        sched.at[i].update_min(comp, rt);
+                    }
+                    // Whatever it injected wakes the local router when
+                    // the head becomes visible.
+                    for l in fabric.inject[ti] {
+                        if let Some(rt) = fabric.links[l.0 as usize].head_ready_at() {
+                            sched.wake_input(l, rt);
+                        }
+                    }
+                }
+
+                if out.did_work {
+                    restless = true;
+                }
+                match out.next {
+                    Deadline::Cycle(w) => {
+                        sched.cycle[i].set(comp, w);
+                        if w <= cycle + 1 {
+                            restless = true;
+                        }
+                    }
+                    Deadline::At(at) => {
+                        sched.at[i].update_min(comp, at);
+                        if at <= t {
+                            restless = true;
+                        }
+                    }
+                    Deadline::OnInput | Deadline::Never => {}
+                }
+            }
+            sched.due = due; // hand the scratch allocation back
         }
 
         if self.end_edge(t, i) {
@@ -645,36 +839,95 @@ impl Soc {
             }
             let p = d.period(self.now);
             for &ti in &self.island_tiles[i] {
-                let w = self.tile_wake[ti];
-                if w == WAKE_ON_INPUT {
-                    continue;
+                match self.tile_next[ti] {
+                    Deadline::OnInput | Deadline::Never => {}
+                    Deadline::At(at) => {
+                        if at <= self.now {
+                            return false;
+                        }
+                        next_event = next_event.min(at);
+                    }
+                    Deadline::Cycle(w) => {
+                        if w <= d.cycles {
+                            return false; // an awake tile: no span
+                        }
+                        let dt = (w - d.cycles).saturating_mul(p);
+                        next_event = next_event.min(d.last_edge().saturating_add(dt));
+                    }
                 }
-                if w <= d.cycles {
-                    return false; // an awake tile: no span
-                }
-                let dt = (w - d.cycles).saturating_mul(p);
-                next_event = next_event.min(d.last_edge().saturating_add(dt));
             }
         }
 
-        // Host schedule entries and sampler deadlines are events too.
+        let Some(next_event) = self.host_event_bound(next_event) else {
+            return false;
+        };
+        self.advance_all(t_end, next_event)
+    }
+
+    /// Event-mode quiescence probe — `O(islands)`, no component scan.
+    ///
+    /// The scheduler's wake invariant (every component with possible
+    /// work holds a heap entry at or before the instant that work turns
+    /// actionable) means the per-island heap heads already bound the
+    /// whole system's next activity. Cycle keys convert to absolute
+    /// times under the current period, valid because the span is also
+    /// bounded by any pending DFS retiming — the same argument the
+    /// idle-aware probe makes per tile.
+    fn try_coalesce_event(&mut self, t_end: Ps) -> bool {
+        let mut next_event = Ps::MAX;
+        for (i, d) in self.islands.iter().enumerate() {
+            if let Some(swap) = d.pending_retime() {
+                if swap <= self.now {
+                    return false;
+                }
+                next_event = next_event.min(swap);
+            }
+            if let Some((w, _)) = self.sched.cycle[i].peek() {
+                if w <= d.cycles {
+                    return false; // a due component: no span
+                }
+                let dt = (w - d.cycles).saturating_mul(d.period(self.now));
+                next_event = next_event.min(d.last_edge().saturating_add(dt));
+            }
+            if let Some((at, _)) = self.sched.at[i].peek() {
+                if at <= self.now {
+                    return false;
+                }
+                next_event = next_event.min(at);
+            }
+        }
+
+        let Some(next_event) = self.host_event_bound(next_event) else {
+            return false;
+        };
+        self.advance_all(t_end, next_event)
+    }
+
+    /// Host schedule entries and sampler deadlines bound any quiescent
+    /// span. Returns `None` when one is already due (no span possible).
+    fn host_event_bound(&self, mut next_event: Ps) -> Option<Ps> {
         if self.schedule_next < self.schedule.len() {
             let at = self.schedule[self.schedule_next].0;
             if at <= self.now {
-                return false;
+                return None;
             }
             next_event = next_event.min(at);
         }
         if let Some(s) = &self.sampler {
             let at = s.next_due();
             if at <= self.now {
-                return false;
+                return None;
             }
             next_event = next_event.min(at);
         }
+        Some(next_event)
+    }
 
-        // Deliver every edge strictly before the event (the event's own
-        // edge runs through the normal step path).
+    /// Bulk-deliver every island edge strictly before `next_event`
+    /// (bounded by `t_end`; the event's own edge runs through the
+    /// normal step path) and resync the view and edge heap. Returns
+    /// true if any edges were delivered.
+    fn advance_all(&mut self, t_end: Ps, next_event: Ps) -> bool {
         let target = t_end.min(next_event.saturating_sub(1));
         if target <= self.now {
             return false;
@@ -704,10 +957,18 @@ impl Soc {
     /// Run the engine until simulated time `t_end`.
     pub fn run_until(&mut self, t_end: Ps) {
         loop {
-            if self.quiet_edge && self.engine == EngineMode::IdleAware {
-                self.try_coalesce(t_end);
+            if self.quiet_edge {
                 // One attempt per quiet edge: a failed probe stays
                 // failed until some edge does work again.
+                match self.engine {
+                    EngineMode::IdleAware => {
+                        self.try_coalesce(t_end);
+                    }
+                    EngineMode::EventDriven => {
+                        self.try_coalesce_event(t_end);
+                    }
+                    EngineMode::Reference => {}
+                }
                 self.quiet_edge = false;
             }
             let due = self
@@ -861,6 +1122,64 @@ mod tests {
         soc.run_until(1_000_000); // 1 us
         assert_eq!(soc.engine_stats.coalesced_edges, 0);
         assert_eq!(soc.islands[0].cycles, 100);
+    }
+
+    #[test]
+    fn event_engine_coalesces_quiescent_spans() {
+        let mut soc = quiet_soc();
+        soc.set_engine(EngineMode::EventDriven);
+        soc.run_until(10_000_000_000); // 10 ms
+        assert_eq!(soc.now, 10_000_000_000);
+        assert!(
+            soc.engine_stats.coalesced_edges > 0,
+            "{:?}",
+            soc.engine_stats
+        );
+        // Bulk-delivered edges keep the counters exact.
+        assert_eq!(soc.islands[0].cycles, 1_000_000);
+        assert_eq!(soc.islands[1].cycles, 500_000);
+        assert_eq!(soc.edges, 1_500_000);
+    }
+
+    #[test]
+    fn event_engine_carries_traffic_and_host_wakes() {
+        let mut soc = build_paper(("dfadd", 1), ("dfadd", 1));
+        soc.set_engine(EngineMode::EventDriven);
+        soc.host_set_tg_active(4);
+        soc.run_until(200_000_000); // 200 us
+        assert!(soc.mon.mem_pkts_in > 50, "mem pkts {}", soc.mon.mem_pkts_in);
+        let completed: u64 = soc
+            .tiles
+            .iter()
+            .map(|t| match t {
+                Tile::Tg(tg) => tg.completed,
+                _ => 0,
+            })
+            .sum();
+        assert!(completed > 20, "completed {completed}");
+    }
+
+    #[test]
+    fn event_engine_applies_schedule_entries() {
+        let mut soc = quiet_soc();
+        soc.set_engine(EngineMode::EventDriven);
+        soc.schedule_freq(4_000_000_000, 0, 100); // no-op write, fixed island
+        soc.run_until(10_000_000_000);
+        assert_eq!(soc.schedule_next, 1);
+        assert!(soc.engine_stats.coalesced_edges > 0);
+    }
+
+    #[test]
+    fn engine_switch_mid_run_stays_exact() {
+        let mut soc = quiet_soc();
+        soc.run_until(2_000_000_000); // idle-aware
+        soc.set_engine(EngineMode::EventDriven);
+        soc.run_until(6_000_000_000);
+        soc.set_engine(EngineMode::IdleAware);
+        soc.run_until(10_000_000_000);
+        assert_eq!(soc.islands[0].cycles, 1_000_000);
+        assert_eq!(soc.islands[1].cycles, 500_000);
+        assert_eq!(soc.edges, 1_500_000);
     }
 
     #[test]

@@ -6,7 +6,7 @@
 use crate::monitor::mmio::{counter_addr, CounterReg};
 use crate::noc::{Msg, NodeId};
 
-use super::{ni::NetIface, TickOutcome, TileCtx};
+use super::{ni::NetIface, Outcome, TileCtx};
 
 /// The CPU tile.
 #[derive(Debug, Clone)]
@@ -45,7 +45,7 @@ impl CpuTile {
         }
     }
 
-    pub fn tick(&mut self, ctx: &mut TileCtx<'_>) -> TickOutcome {
+    pub fn tick(&mut self, ctx: &mut TileCtx<'_>) -> Outcome {
         let mut did_work = false;
         for pkt in self.ni.tick_rx(ctx.links, ctx.now, 0) {
             if let Msg::MmioResp { value, .. } = ctx.arena.get(pkt).msg {
@@ -79,11 +79,11 @@ impl CpuTile {
 
         if self.ni.tx_backlog() > 0 {
             // Flits still to inject (or a poll deferred on backlog).
-            TickOutcome::active(true, ctx.cycle)
+            Outcome::active(true, ctx.cycle)
         } else if polling {
-            TickOutcome::sleep_until(did_work, self.next_poll_cycle)
+            Outcome::sleep_until(did_work, self.next_poll_cycle)
         } else {
-            TickOutcome::on_input(did_work)
+            Outcome::on_input(did_work)
         }
     }
 }

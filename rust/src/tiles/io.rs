@@ -9,7 +9,7 @@ use crate::monitor::mmio::{decode, MmioTarget};
 use crate::noc::Msg;
 use crate::util::time::Freq;
 
-use super::{ni::NetIface, TickOutcome, TileCtx};
+use super::{ni::NetIface, Outcome, TileCtx};
 
 /// The I/O tile.
 #[derive(Debug, Clone)]
@@ -45,7 +45,7 @@ impl IoTile {
         islands[island].request_freq(Freq::mhz(mhz), now).is_ok()
     }
 
-    pub fn tick(&mut self, ctx: &mut TileCtx<'_>) -> TickOutcome {
+    pub fn tick(&mut self, ctx: &mut TileCtx<'_>) -> Outcome {
         let mut did_work = false;
         for pkt in self.ni.tick_rx(ctx.links, ctx.now, 0) {
             did_work = true;
@@ -81,9 +81,9 @@ impl IoTile {
         }
         self.ni.tick_tx(ctx.links, ctx.arena, ctx.view, ctx.now);
         if self.ni.tx_backlog() > 0 {
-            TickOutcome::active(true, ctx.cycle)
+            Outcome::active(true, ctx.cycle)
         } else {
-            TickOutcome::on_input(did_work)
+            Outcome::on_input(did_work)
         }
     }
 }

@@ -4,7 +4,7 @@
 use crate::mem::{MemController, MemParams, MemRequest};
 use crate::noc::{Msg, Plane};
 
-use super::{ni::NetIface, TickOutcome, TileCtx};
+use super::{ni::NetIface, Outcome, TileCtx};
 
 /// The MEM tile.
 #[derive(Debug, Clone)]
@@ -23,7 +23,7 @@ impl MemTile {
         }
     }
 
-    pub fn tick(&mut self, ctx: &mut TileCtx<'_>) -> TickOutcome {
+    pub fn tick(&mut self, ctx: &mut TileCtx<'_>) -> Outcome {
         let mut did_work = false;
         // The controller clocks with the tile's island (NoC+MEM share a
         // frequency island in the paper instance).
@@ -109,9 +109,9 @@ impl MemTile {
             || self.ctrl.pending_responses() > 0
             || self.ni.tx_backlog() > 0;
         if busy {
-            TickOutcome::active(true, ctx.cycle)
+            Outcome::active(true, ctx.cycle)
         } else {
-            TickOutcome::on_input(did_work)
+            Outcome::on_input(did_work)
         }
     }
 }

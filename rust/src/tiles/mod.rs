@@ -18,60 +18,17 @@ pub use mra::{MraTile, ReplicaState, ServeGate};
 pub use ni::NetIface;
 pub use timing::{AccelTiming, DmaParams, StreamSpec};
 
+/// Tiles speak the engine-wide stepping contract — see
+/// [`crate::sim::event`] for the deadline semantics. Re-exported here
+/// because every tile implementation returns an [`Outcome`].
+pub use crate::sim::event::{Deadline, EventSource, Outcome};
+
 use crate::clock::domain::ClockDomain;
 use crate::mem::BlockStore;
 use crate::monitor::MonitorFile;
 use crate::noc::{ClockView, LinkFifo, Mesh, PacketArena};
 use crate::runtime::AccelCompute;
 use crate::util::Ps;
-
-/// Sentinel wake cycle: the tile needs no unconditional tick — only a
-/// flit arriving in one of its eject FIFOs can give it work.
-pub const WAKE_ON_INPUT: u64 = u64::MAX;
-
-/// What a tile's tick did and when the engine next has to tick it.
-///
-/// `wake_cycle` is expressed in *island cycles* (the tile's own clock),
-/// not picoseconds, so a DFS retune of the island never invalidates a
-/// sleeping tile's wake point — the engine converts cycles to time only
-/// when it coalesces a quiescent span, and spans never cross a retiming.
-/// The contract: until island cycle `wake_cycle`, ticking the tile is a
-/// provable no-op *unless* a flit becomes visible in one of its eject
-/// FIFOs first (the engine checks those each edge).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub struct TickOutcome {
-    /// The tick changed observable state (packets, counters, compute).
-    pub did_work: bool,
-    /// Island cycle at/after which the tile next needs an unconditional
-    /// tick; [`WAKE_ON_INPUT`] = sleep until NoC input arrives.
-    pub wake_cycle: u64,
-}
-
-impl TickOutcome {
-    /// Tick me again next cycle.
-    pub fn active(did_work: bool, cycle: u64) -> Self {
-        Self {
-            did_work,
-            wake_cycle: cycle + 1,
-        }
-    }
-
-    /// Nothing to do before island cycle `wake_cycle` (barring input).
-    pub fn sleep_until(did_work: bool, wake_cycle: u64) -> Self {
-        Self {
-            did_work,
-            wake_cycle,
-        }
-    }
-
-    /// Nothing to do until a flit arrives for this tile.
-    pub fn on_input(did_work: bool) -> Self {
-        Self {
-            did_work,
-            wake_cycle: WAKE_ON_INPUT,
-        }
-    }
-}
 
 /// Shared state a tile may touch during its tick.
 pub struct TileCtx<'a> {
@@ -120,9 +77,9 @@ impl Tile {
         }
     }
 
-    /// One island-clock cycle. The returned [`TickOutcome`] tells the
+    /// One island-clock cycle. The returned [`Outcome`] tells the
     /// engine when this tile next needs ticking.
-    pub fn tick(&mut self, ctx: &mut TileCtx<'_>) -> TickOutcome {
+    pub fn tick(&mut self, ctx: &mut TileCtx<'_>) -> Outcome {
         match self {
             Tile::Cpu(t) => t.tick(ctx),
             Tile::Mem(t) => t.tick(ctx),
@@ -140,5 +97,22 @@ impl Tile {
             Tile::Tg(_) => "tg",
             Tile::Mra(_) => "mra",
         }
+    }
+}
+
+impl EventSource for Tile {
+    type Ctx<'a> = TileCtx<'a>;
+
+    /// Registration deadline for a freshly (re)armed tile: due at its
+    /// island's next edge. Conservative on purpose — the first fire's
+    /// [`Outcome`] re-derives the true wake point from tile state, so
+    /// the engine never has to reason about tile internals here.
+    fn next_deadline(&self, _ctx: &TileCtx<'_>) -> Deadline {
+        Deadline::Cycle(0)
+    }
+
+    fn fire(&mut self, now: Ps, ctx: &mut TileCtx<'_>) -> Outcome {
+        debug_assert_eq!(now, ctx.now);
+        self.tick(ctx)
     }
 }

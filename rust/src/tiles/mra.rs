@@ -30,7 +30,7 @@ use crate::noc::{Msg, NodeId};
 use crate::util::Ps;
 
 use super::timing::{AccelTiming, DmaParams};
-use super::{ni::NetIface, TickOutcome, TileCtx};
+use super::{ni::NetIface, Outcome, TileCtx};
 
 /// Host-side admission state for traffic serving (see [`crate::serve`]).
 ///
@@ -294,7 +294,7 @@ impl MraTile {
     }
 
     /// One tile-clock cycle.
-    pub fn tick(&mut self, ctx: &mut TileCtx<'_>) -> TickOutcome {
+    pub fn tick(&mut self, ctx: &mut TileCtx<'_>) -> Outcome {
         // Credit exec-time for skipped cycles: the engine only skips a
         // computing tile while every other engine is frozen, so each
         // missed cycle would have counted exactly one exec cycle.
@@ -319,7 +319,7 @@ impl MraTile {
     /// while any engine can make progress on its own; with everything
     /// drained and all replicas waiting, the only self-driven future
     /// event is a running computation's completion cycle.
-    fn outcome(&self, cycle: u64) -> TickOutcome {
+    fn outcome(&self, cycle: u64) -> Outcome {
         let read_bursts = self.timing.read_bursts(self.dma.burst_beats);
         // A gated tile with zero credits cannot start a new prefetch
         // round, so it must not stay restless on that account (a credit
@@ -339,7 +339,7 @@ impl MraTile {
                         && r.outstanding < self.dma.max_outstanding)
             });
         if restless {
-            return TickOutcome::active(true, cycle);
+            return Outcome::active(true, cycle);
         }
         match self
             .replicas
@@ -347,8 +347,8 @@ impl MraTile {
             .filter_map(|r| r.compute_done_cycle)
             .min()
         {
-            Some(done) => TickOutcome::sleep_until(true, done),
-            None => TickOutcome::on_input(false),
+            Some(done) => Outcome::sleep_until(true, done),
+            None => Outcome::on_input(false),
         }
     }
 

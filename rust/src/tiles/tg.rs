@@ -12,7 +12,7 @@ use std::collections::VecDeque;
 use crate::noc::{Msg, NodeId};
 use crate::util::{Ps, SplitMix64};
 
-use super::{ni::NetIface, TickOutcome, TileCtx};
+use super::{ni::NetIface, Outcome, TileCtx};
 
 /// The TG tile.
 #[derive(Debug, Clone)]
@@ -64,7 +64,7 @@ impl TgTile {
         }
     }
 
-    pub fn tick(&mut self, ctx: &mut TileCtx<'_>) -> TickOutcome {
+    pub fn tick(&mut self, ctx: &mut TileCtx<'_>) -> Outcome {
         let mut did_work = false;
         // Receive responses.
         for pkt in self.ni.tick_rx(ctx.links, ctx.now, 0) {
@@ -113,13 +113,13 @@ impl TgTile {
         self.ni.tick_tx(ctx.links, ctx.arena, ctx.view, ctx.now);
 
         if self.ni.tx_backlog() > 0 {
-            TickOutcome::active(true, ctx.cycle)
+            Outcome::active(true, ctx.cycle)
         } else if self.enabled && self.outstanding < self.max_outstanding {
             // Next issue is gated only by the gap (backlog is clear).
-            TickOutcome::sleep_until(did_work, self.gap_until.max(ctx.cycle + 1))
+            Outcome::sleep_until(did_work, self.gap_until.max(ctx.cycle + 1))
         } else {
             // Saturated or disabled: a response (NoC input) unblocks us.
-            TickOutcome::on_input(did_work)
+            Outcome::on_input(did_work)
         }
     }
 }

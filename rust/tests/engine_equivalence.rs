@@ -1,15 +1,19 @@
-//! Engine equivalence suite: the idle-aware engine must be bit-identical
-//! to the `reference` tick-everything engine on every observable —
-//! simulation time, delivered edges, island cycle counts, frequencies,
-//! all monitor counters, router statistics, sampler rows, and typed
-//! `PhaseReport`s — across the paper SoC, an all-idle SoC, and a
-//! mid-run DFS retune, plus a property sweep showing coalescing never
-//! jumps past a host schedule entry or a sampler deadline.
+//! Engine equivalence suite: the idle-aware and event-driven engines
+//! must be bit-identical to the `reference` tick-everything engine on
+//! every observable — simulation time, delivered edges, island cycle
+//! counts, frequencies, all monitor counters, router statistics,
+//! sampler rows, and typed `PhaseReport`s / `ServeReport`s /
+//! `ClusterReport`s — across the paper SoC, an all-idle SoC, mid-run
+//! DFS retunes, the serving and cluster paths, plus a property sweep
+//! showing coalescing never jumps past a host schedule entry or a
+//! sampler deadline.
 
-use vespa::config::presets::{paper_soc, A1_POS, ISL_TG};
+use vespa::cluster::{ClusterReport, ClusterSpec};
+use vespa::config::presets::{paper_soc, A1_POS, A2_POS, ISL_A1, ISL_TG};
 use vespa::config::SocConfig;
 use vespa::runtime::RefCompute;
 use vespa::scenario::{ms, PhaseReport, Scenario, Session};
+use vespa::serve::{Arrival, DispatchPolicy, GovernorSpec, ServeReport, ServeSpec};
 use vespa::sim::{EngineMode, Soc};
 use vespa::tiles::Tile;
 use vespa::util::proptest::forall;
@@ -113,8 +117,11 @@ fn run_paper_session(mode: EngineMode) -> (Snapshot, PhaseReport) {
 fn paper_soc_session_is_bit_identical() {
     let (snap_idle, rep_idle) = run_paper_session(EngineMode::IdleAware);
     let (snap_ref, rep_ref) = run_paper_session(EngineMode::Reference);
+    let (snap_event, rep_event) = run_paper_session(EngineMode::EventDriven);
     assert_eq!(snap_idle, snap_ref);
+    assert_eq!(snap_event, snap_ref, "event engine drifted from reference");
     assert_eq!(rep_idle, rep_ref, "PhaseReports must match exactly");
+    assert_eq!(rep_event, rep_ref, "PhaseReports must match exactly");
     assert!(rep_idle.invocations > 0, "workload actually ran");
 }
 
@@ -152,14 +159,22 @@ fn build_quiet(mode: EngineMode, tgs: usize, gap: u32) -> Soc {
 #[test]
 fn all_idle_soc_is_bit_identical_and_coalesces() {
     let mut idle = build_quiet(EngineMode::IdleAware, 0, 0);
+    let mut event = build_quiet(EngineMode::EventDriven, 0, 0);
     let mut reference = build_quiet(EngineMode::Reference, 0, 0);
     idle.run_until(50_000_000_000); // 50 ms
+    event.run_until(50_000_000_000);
     reference.run_until(50_000_000_000);
     assert_eq!(snapshot(&idle), snapshot(&reference));
+    assert_eq!(snapshot(&event), snapshot(&reference));
     assert!(
         idle.engine_stats.coalesced_edges as f64 > idle.edges as f64 * 0.99,
         "an idle SoC should be almost entirely coalesced: {:?}",
         idle.engine_stats
+    );
+    assert!(
+        event.engine_stats.coalesced_edges as f64 > event.edges as f64 * 0.99,
+        "an idle SoC should be almost entirely coalesced: {:?}",
+        event.engine_stats
     );
     assert_eq!(reference.engine_stats.coalesced_edges, 0);
 }
@@ -167,16 +182,24 @@ fn all_idle_soc_is_bit_identical_and_coalesces() {
 #[test]
 fn sparse_bursty_tgs_are_bit_identical() {
     let mut idle = build_quiet(EngineMode::IdleAware, 3, 800);
+    let mut event = build_quiet(EngineMode::EventDriven, 3, 800);
     let mut reference = build_quiet(EngineMode::Reference, 3, 800);
     idle.run_until(20_000_000_000); // 20 ms
+    event.run_until(20_000_000_000);
     reference.run_until(20_000_000_000);
     assert_eq!(snapshot(&idle), snapshot(&reference));
+    assert_eq!(snapshot(&event), snapshot(&reference));
     let snap = snapshot(&idle);
     assert!(snap.mem_pkts_in > 0, "bursts actually flowed");
     assert!(
         idle.engine_stats.coalesced_edges > 0 && idle.engine_stats.skipped_tile_ticks > 0,
         "{:?}",
         idle.engine_stats
+    );
+    assert!(
+        event.engine_stats.coalesced_edges > 0,
+        "{:?}",
+        event.engine_stats
     );
 }
 
@@ -202,13 +225,74 @@ fn run_retune(mode: EngineMode) -> Snapshot {
 #[test]
 fn dfs_retune_with_sampler_is_bit_identical() {
     let idle = run_retune(EngineMode::IdleAware);
+    let event = run_retune(EngineMode::EventDriven);
     let reference = run_retune(EngineMode::Reference);
     assert_eq!(idle, reference);
+    assert_eq!(event, reference, "event engine drifted across retunes");
     // The retunes really happened and the sampler really sampled.
     assert_eq!(idle.freq_mhz[0], 100);
     assert_eq!(idle.freq_mhz[ISL_TG], 20);
     let rows = idle.sampler.as_ref().unwrap();
     assert!(rows[0].1.len() > 100, "sampler rows: {}", rows[0].1.len());
+}
+
+// ---------------------------------------------------------------------
+// (d) The serving path: open-loop Poisson traffic with the queue-driven
+// DFS governor, judged by the full typed ServeReport.
+// ---------------------------------------------------------------------
+
+fn run_serve(mode: EngineMode) -> ServeReport {
+    let cfg = paper_soc(("dfmul", 2), ("dfmul", 2));
+    let mut s = Session::new(cfg).unwrap();
+    s.engine(mode);
+    let a1 = s.tile_at(A1_POS.0, A1_POS.1);
+    let a2 = s.tile_at(A2_POS.0, A2_POS.1);
+    let slo = 5_000_000_000; // 5 ms
+    let spec = ServeSpec::new(Arrival::Poisson { rps: 1200.0 }, ms(15))
+        .tiles(vec![a1, a2])
+        .policy(DispatchPolicy::JoinShortestQueue)
+        .queue_capacity(16)
+        .slo(slo)
+        .seed(0xE5B)
+        .governor(GovernorSpec::new(ISL_A1, slo));
+    s.serve(&spec).unwrap()
+}
+
+#[test]
+fn serve_path_is_bit_identical() {
+    let idle = run_serve(EngineMode::IdleAware);
+    let event = run_serve(EngineMode::EventDriven);
+    let reference = run_serve(EngineMode::Reference);
+    assert_eq!(idle, reference, "idle-aware ServeReport drifted");
+    assert_eq!(event, reference, "event ServeReport drifted");
+    assert!(reference.completed > 0, "requests actually served");
+}
+
+// ---------------------------------------------------------------------
+// (e) The cluster path: a replica fleet behind the front-end balancer,
+// judged by the merged typed ClusterReport.
+// ---------------------------------------------------------------------
+
+fn run_cluster(mode: EngineMode) -> ClusterReport {
+    let spec = ServeSpec::new(Arrival::Poisson { rps: 2500.0 }, ms(10))
+        .policy(DispatchPolicy::JoinShortestQueue)
+        .queue_capacity(16)
+        .slo(5_000_000_000)
+        .seed(0x77);
+    let cspec = ClusterSpec::new(2, spec)
+        .balancer(DispatchPolicy::JoinShortestQueue)
+        .engine(mode);
+    cspec.run(paper_soc(("dfmul", 2), ("dfmul", 2))).unwrap()
+}
+
+#[test]
+fn cluster_path_is_bit_identical() {
+    let idle = run_cluster(EngineMode::IdleAware);
+    let event = run_cluster(EngineMode::EventDriven);
+    let reference = run_cluster(EngineMode::Reference);
+    assert_eq!(idle, reference, "idle-aware ClusterReport drifted");
+    assert_eq!(event, reference, "event ClusterReport drifted");
+    assert!(reference.completed > 0, "requests actually served");
 }
 
 // ---------------------------------------------------------------------
@@ -238,8 +322,10 @@ fn prop_coalescing_respects_schedule_and_sampler() {
                 snapshot(&soc)
             };
             let idle = run(EngineMode::IdleAware);
+            let event = run(EngineMode::EventDriven);
             let reference = run(EngineMode::Reference);
             assert_eq!(idle, reference);
+            assert_eq!(event, reference, "event engine drifted");
             // The sample cadence is exact: rows at every deadline edge.
             let rows = &idle.sampler.as_ref().unwrap()[0].1;
             assert!(rows.len() as u64 >= 5_000_000_000 / interval / 2);
