@@ -1,16 +1,20 @@
 //! Macro-bench: fleet serving under the `cluster` subsystem, with the
-//! two claims the ISSUE gates on:
+//! three claims CI gates on:
 //!
 //! * a 4-replica fleet sustains >= 3x the achieved rps of a single SoC
 //!   at the same offered load (`cluster4_rps_over_single`, min-gated);
 //! * against a diurnal on/off load, the SLO-driven autoscaler finishes
 //!   with well under a fixed maximum fleet's replica-seconds
-//!   (`autoscale_replica_seconds_vs_fixed_max`, max-gated at 0.8).
+//!   (`autoscale_replica_seconds_vs_fixed_max`, max-gated at 0.8);
+//! * stepping an 8-replica fleet on a worker pool
+//!   (`ClusterSpec::threads`) beats the serial reference wall-clock
+//!   (`parallel_speedup_vs_serial`, min-gated at 2.0 on CI's
+//!   multi-core runners) while producing a bit-identical report.
 //!
-//! Every cluster run is single-threaded (one host loop drives the
-//! whole fleet in slot order — that's the determinism contract), so
-//! the timings measure simulation work, not core count. Writes
-//! `BENCH_cluster_scale.json` for the CI bench gate.
+//! The scaling and autoscale sections run serial (`threads = 1`) so
+//! their timings track simulation work, not core count; the parallel
+//! section times the same work on `--threads N` workers (default 0 =
+//! all cores). Writes `BENCH_cluster_scale.json` for the CI bench gate.
 
 use vespa::bench_harness::{Bench, BenchArgs, BenchReport};
 use vespa::cluster::{AutoscaleSpec, ClusterSpec};
@@ -38,9 +42,10 @@ fn main() {
     let args = BenchArgs::from_env();
     let quick = args.quick;
     let duration_ms: u64 = if quick { 100 } else { 200 };
+    let par_threads = args.threads.unwrap_or(0);
 
     println!(
-        "cluster_scale: {duration_ms} ms horizons ({} mode, threads=1)",
+        "cluster_scale: {duration_ms} ms horizons ({} mode, parallel section --threads {par_threads})",
         if quick { "quick" } else { "full" }
     );
 
@@ -127,6 +132,41 @@ fn main() {
         "the autoscaler must act under a diurnal load"
     );
 
+    // ---- Parallel fleet execution: 8 replicas, serial vs workers. ----
+    // Round-robin balancer at ~94% utilization: between sample barriers
+    // the wide-span fast path pre-bins arrivals per slot, so every
+    // replica's window of simulation runs on its own worker.
+    let par_spec = ServeSpec::new(Arrival::Poisson { rps: 32_000.0 }, ms(duration_ms))
+        .slo(ms(20))
+        .sample_interval(ms(2))
+        .seed(0x8F1E);
+    let fleet8_serial = ClusterSpec::new(8, par_spec)
+        .balancer(DispatchPolicy::RoundRobin)
+        .threads(1);
+    let fleet8_parallel = fleet8_serial.clone().threads(par_threads);
+    let r_f8s = bench.run("cluster/fleet-8-serial", |_| {
+        fleet8_serial.run(fleet_cfg()).expect("fleet-8 serial run")
+    });
+    println!("{}", r_f8s.report());
+    let r_f8p = bench.run("cluster/fleet-8-parallel", |_| {
+        fleet8_parallel.run(fleet_cfg()).expect("fleet-8 parallel run")
+    });
+    println!("{}", r_f8p.report());
+
+    let serial = fleet8_serial.run(fleet_cfg()).expect("fleet-8 serial run");
+    let parallel = fleet8_parallel
+        .run(fleet_cfg())
+        .expect("fleet-8 parallel run");
+    assert_eq!(
+        serial, parallel,
+        "parallel report must be bit-identical to the serial reference"
+    );
+    let speedup = r_f8s.mean.as_secs_f64() / r_f8p.mean.as_secs_f64();
+    println!(
+        "parallel: serial {:?} vs parallel {:?} ({speedup:.2}x), reports bit-identical ({} completed)",
+        r_f8s.mean, r_f8p.mean, serial.completed
+    );
+
     report.metric("cluster4_rps_over_single", rps_ratio);
     report.metric("single_achieved_rps", single.achieved_rps);
     report.metric("fleet4_achieved_rps", fleet4.achieved_rps);
@@ -136,9 +176,13 @@ fn main() {
     report.metric("fixed_max_replica_seconds", r_max.replica_seconds);
     report.metric("autoscale_p95_ms", r_auto.latency.p95_ms());
     report.metric("autoscale_actions", r_auto.autoscale_actions.len() as f64);
+    report.metric("parallel_speedup_vs_serial", speedup);
+    report.metric("fleet8_completed", serial.completed as f64);
     report.push(r_single);
     report.push(r_fleet);
     report.push(r_auto_t);
+    report.push(r_f8s);
+    report.push(r_f8p);
 
     let path = report.write(args.json_path()).expect("write bench report");
     println!("wrote {}", path.display());

@@ -56,8 +56,8 @@ fn main() {
     let bench = Bench::new(1, args.iters.unwrap_or(if quick { 3 } else { 5 }));
     let mut report = BenchReport::new("noc_microbench");
 
-    // Saturated: all TGs on, NoC at 100 MHz (no-regression guard for
-    // the idle-aware engine: nothing to skip here).
+    // Saturated: all TGs on, NoC at 100 MHz — the default engine's
+    // (event-driven) worst case: nothing idle, every deadline fires.
     let r = bench.run("noc/saturated-11tg", |_| {
         let cfg = paper_soc(("dfadd", 1), ("dfadd", 1));
         let mut soc = Soc::build(cfg, Box::new(RefCompute::new())).unwrap();

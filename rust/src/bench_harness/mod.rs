@@ -8,10 +8,10 @@
 //! CI's bench-smoke job feeds to the `bench_gate` comparator (see
 //! `docs/PERF.md` for the schema and the baseline-refresh flow).
 //!
-//! CLI: every bench accepts `--quick`, `--iters N` and `--json <path>`
-//! in both `--key value` and `--key=value` forms ([`BenchArgs`] reuses
-//! the [`crate::cli`] parser, so bench binaries and the main CLI accept
-//! the same syntax).
+//! CLI: every bench accepts `--quick`, `--iters N`, `--threads N` and
+//! `--json <path>` in both `--key value` and `--key=value` forms
+//! ([`BenchArgs`] reuses the [`crate::cli`] parser, so bench binaries
+//! and the main CLI accept the same syntax).
 
 pub mod json;
 
@@ -196,6 +196,10 @@ pub struct BenchArgs {
     pub quick: bool,
     /// Explicit iteration-count override.
     pub iters: Option<usize>,
+    /// Worker-thread override for benches with a parallel section
+    /// (`0` = all cores, matching
+    /// [`ClusterSpec::threads`](field@crate::cluster::ClusterSpec::threads)).
+    pub threads: Option<usize>,
     /// Output path override for the bench's JSON report
     /// (default: `BENCH_<name>.json`).
     pub json: Option<PathBuf>,
@@ -205,16 +209,18 @@ impl BenchArgs {
     /// Parse from raw args (excluding argv[0]).
     pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> crate::Result<Self> {
         let args = crate::cli::Args::parse_from(raw)?;
-        let iters = match args.opt("iters") {
-            None => None,
-            Some(v) => Some(
-                v.parse()
-                    .with_context(|| format!("--iters must be an integer, got {v:?}"))?,
-            ),
+        let parse_usize = |key: &str| -> crate::Result<Option<usize>> {
+            match args.opt(key) {
+                None => Ok(None),
+                Some(v) => Ok(Some(v.parse().with_context(|| {
+                    format!("--{key} must be an integer, got {v:?}")
+                })?)),
+            }
         };
         Ok(Self {
             quick: args.flag("quick"),
-            iters,
+            iters: parse_usize("iters")?,
+            threads: parse_usize("threads")?,
             json: args.opt("json").map(PathBuf::from),
         })
     }
@@ -225,7 +231,9 @@ impl BenchArgs {
         match Self::parse(std::env::args().skip(1)) {
             Ok(a) => a,
             Err(e) => {
-                eprintln!("bench arguments: {e:#}\nusage: [--quick] [--iters N] [--json PATH]");
+                eprintln!(
+                    "bench arguments: {e:#}\nusage: [--quick] [--iters N] [--threads N] [--json PATH]"
+                );
                 std::process::exit(2);
             }
         }
@@ -295,6 +303,14 @@ mod tests {
     fn bench_args_rejects_bad_iters() {
         assert!(BenchArgs::parse(["--iters".to_string(), "abc".to_string()]).is_err());
         assert!(BenchArgs::parse(["--iters=1.5".to_string()]).is_err());
+    }
+
+    #[test]
+    fn bench_args_threads() {
+        assert_eq!(parse("--threads 0").threads, Some(0));
+        assert_eq!(parse("--threads=4").threads, Some(4));
+        assert_eq!(parse("").threads, None);
+        assert!(BenchArgs::parse(["--threads=two".to_string()]).is_err());
     }
 
     #[test]

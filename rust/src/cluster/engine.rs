@@ -15,14 +15,46 @@
 //! warmup entirely. Retiring is drain-then-retire — a draining replica
 //! takes no new work but finishes its queue before going standby.
 //!
+//! # Parallel execution
+//!
+//! Replicas share nothing between cluster-clock barriers, so with
+//! [`ClusterSpec::threads`](field@ClusterSpec::threads) > 1 the
+//! per-replica `run_until` spans fan
+//! out across a persistent scoped worker pool
+//! (`scenario::set::with_round_pool`) while every decision
+//! that couples replicas — balancing, autoscaling, completion
+//! attribution feeding the autoscaler — stays on the coordinating
+//! thread in slot-index order. Two modes:
+//!
+//! * **narrow barriers** (any balancer, governor, autoscaler): workers
+//!   only advance sessions to the barrier target; draining, admission,
+//!   and sampling run serially exactly as the `threads = 1` reference.
+//! * **wide spans** (round-robin balancer, no autoscaler): a
+//!   round-robin front end with guaranteed queue space is *oblivious* —
+//!   its choices are a pure modular function of the arrival index. The
+//!   whole sample window's arrivals are pre-binned per slot, and each
+//!   worker replays its slot's exact serial choreography
+//!   (advance → drain → admit per arrival) in one long span. A per-slot
+//!   precheck (`backlog + assigned <= capacity x tiles`) guarantees no
+//!   slot can fill mid-window; windows that fail it fall back to narrow
+//!   barriers.
+//!
+//! Both modes are bit-identical to the serial engine: per-slot latency
+//! sets feed order-insensitive consumers ([`Percentiles`] sorts,
+//! governor windows take exact percentiles, SLO counters sum), and
+//! everything else merges in slot-index order.
+//!
 //! Everything iterates in slot-index order and the arrival schedule is
 //! derived only from `(spec.seed, spec.duration)`, so the same
 //! [`ClusterSpec`] + config reproduces a bit-identical
-//! [`ClusterReport`].
+//! [`ClusterReport`] for every thread count.
+
+use std::sync::{Mutex, MutexGuard};
 
 use crate::config::SocConfig;
 use crate::monitor::TimeSeries;
 use crate::policy::DfsPolicy;
+use crate::scenario::set::{resolve_threads, with_round_pool, RoundPool};
 use crate::scenario::{Session, SocSnapshot};
 use crate::serve::dispatch::{DispatchPolicy, Dispatcher};
 use crate::serve::engine::{prepare_serve_tiles, resolve_tiles, tile_queues};
@@ -45,6 +77,16 @@ enum SlotState {
     Standby,
 }
 
+/// One worker assignment for a barrier round, parked on its replica.
+struct Task {
+    /// Replica-local advance target.
+    local: Ps,
+    /// Wide span only: this slot's pre-binned cluster-time arrivals to
+    /// replay (advance → drain → admit each). `None` = narrow barrier,
+    /// advance only.
+    inbox: Option<Vec<Ps>>,
+}
+
 /// One replica slot of the fleet.
 struct Replica {
     state: SlotState,
@@ -62,6 +104,15 @@ struct Replica {
     activations: u64,
     /// Completed-request latencies (ps) across all activations.
     latencies: Vec<f64>,
+    /// Completions within the SLO across all activations (summed
+    /// fleet-wide at the end — order-insensitive by construction).
+    within_slo: u64,
+    /// Replica-local time of the last completion drain: a session that
+    /// hasn't advanced past this can't have completed anything new, so
+    /// the O(tiles) gate peek is skipped.
+    drained_at: Ps,
+    /// Work parked for the next pool round (taken by a worker).
+    task: Option<Task>,
     // Counters carried over from finished activations (live ones are on
     // `disp`, which is rebuilt per activation).
     done_admitted: u64,
@@ -72,16 +123,13 @@ struct Replica {
     active_state: TimeSeries,
 }
 
-impl Replica {
-    fn backlog(&self) -> usize {
-        self.disp.tiles.iter().map(|q| q.in_flight.len()).sum()
-    }
+fn lock(m: &Mutex<Replica>) -> MutexGuard<'_, Replica> {
+    m.lock().expect("replica mutex poisoned")
+}
 
+impl Replica {
     fn has_space(&self) -> bool {
-        self.disp
-            .tiles
-            .iter()
-            .any(|q| q.in_flight.len() < self.disp.capacity)
+        self.disp.has_space()
     }
 
     fn to_local(&self, tc: Ps) -> Ps {
@@ -109,6 +157,114 @@ impl Replica {
             })
             .fold(f64::INFINITY, f64::min)
     }
+
+    /// Attribute this replica's pending tile completions (exact
+    /// tile-log timestamps mapped onto the cluster clock). Same
+    /// peek-then-drain dance as the single-SoC engine: a mutable tile
+    /// poke resets the idle wake point, so only touch tiles that
+    /// actually completed something. `scratch` is the reused
+    /// completion-log buffer; `scaler` is fed per completion on the
+    /// serial/narrow path (wide spans never run with an autoscaler).
+    fn drain_completions(
+        &mut self,
+        slo: Option<Ps>,
+        mut scaler: Option<&mut Autoscaler>,
+        scratch: &mut Vec<Ps>,
+    ) -> crate::Result<()> {
+        // O(1) skips: no outstanding request means no undrained
+        // completion (every granted credit holds a queue entry until
+        // attributed), and a session that hasn't advanced since the
+        // last drain can't have completed anything new (an invocation
+        // takes at least one island cycle past its grant).
+        if self.disp.backlog == 0 || self.session.is_none() {
+            return Ok(());
+        }
+        if self.session.as_ref().expect("checked").soc().now == self.drained_at {
+            return Ok(());
+        }
+        for ti in 0..self.disp.tiles.len() {
+            let tile = self.disp.tiles[ti].tile;
+            let session = self.session.as_mut().expect("checked");
+            let has_completions = session
+                .soc()
+                .mra(tile)
+                .serve
+                .as_ref()
+                .is_some_and(|g| !g.completions.is_empty());
+            if !has_completions {
+                continue;
+            }
+            scratch.clear();
+            {
+                let m = session.soc_mut().try_mra_mut(tile)?;
+                if let Some(g) = &mut m.serve {
+                    scratch.extend(g.completions.drain(..).map(|(t, _replica)| t));
+                }
+            }
+            for &t_local in scratch.iter() {
+                let Some(t_arr) = self.disp.complete(ti) else {
+                    debug_assert!(false, "completion without an outstanding request");
+                    continue;
+                };
+                let t_c = self.cluster_base + (t_local - self.local_base);
+                let lat = t_c - t_arr;
+                self.latencies.push(lat as f64);
+                if let Some(slo) = slo {
+                    if lat <= slo {
+                        self.within_slo += 1;
+                    }
+                }
+                if let Some(g) = &mut self.governor {
+                    g.observe_latency(lat);
+                }
+                if let Some(a) = scaler.as_deref_mut() {
+                    a.observe_latency(lat);
+                }
+            }
+        }
+        self.drained_at = self.session.as_ref().expect("checked").soc().now;
+        Ok(())
+    }
+}
+
+/// Execute one parked [`Task`] against its replica — the only work
+/// worker threads do. Narrow tasks advance the session to the barrier;
+/// wide tasks replay the slot's serial choreography for a whole sample
+/// window: per binned arrival, advance to it, drain completions, pick a
+/// tile, bind, and grant, then advance to the window end and drain.
+fn run_task(
+    rep: &mut Replica,
+    task: Task,
+    slo: Option<Ps>,
+    scratch: &mut Vec<Ps>,
+) -> crate::Result<()> {
+    let Some(inbox) = task.inbox else {
+        if let Some(session) = rep.session.as_mut() {
+            session.run_until(task.local);
+        }
+        return Ok(());
+    };
+    for t_arr in inbox {
+        let local_arr = rep.to_local(t_arr);
+        rep.session
+            .as_mut()
+            .expect("wide-span replicas are live")
+            .run_until(local_arr);
+        rep.drain_completions(slo, None, scratch)?;
+        let session = rep.session.as_mut().expect("wide-span replicas are live");
+        let ti = rep.disp.pick(session.soc(), local_arr).ok_or_else(|| {
+            anyhow::anyhow!("cluster: wide-span precheck failed to guarantee queue space")
+        })?;
+        rep.disp.bind(ti, t_arr);
+        let tile = rep.disp.tiles[ti].tile;
+        session.soc_mut().try_mra_mut(tile)?.serve_grant(1);
+    }
+    rep.session
+        .as_mut()
+        .expect("wide-span replicas are live")
+        .run_until(task.local);
+    rep.drain_completions(slo, None, scratch)?;
+    Ok(())
 }
 
 /// Fork the warm base into `slot` and mark it active at cluster time
@@ -137,6 +293,8 @@ fn activate(
     slot.activations += 1;
     slot.state = SlotState::Active;
     slot.session = Some(session);
+    slot.drained_at = 0;
+    slot.task = None;
     Ok(())
 }
 
@@ -145,7 +303,7 @@ fn activate(
 /// [`DispatchPolicy`] semantics one level up.
 fn pick_slot(
     balancer: DispatchPolicy,
-    slots: &[Replica],
+    slots: &[Mutex<Replica>],
     rr_cursor: &mut usize,
     tc: Ps,
 ) -> Option<usize> {
@@ -155,7 +313,7 @@ fn pick_slot(
         DispatchPolicy::RoundRobin => {
             for off in 0..n {
                 let i = (*rr_cursor + off) % n;
-                if eligible(&slots[i]) {
+                if eligible(&lock(&slots[i])) {
                     *rr_cursor = (i + 1) % n;
                     return Some(i);
                 }
@@ -165,14 +323,19 @@ fn pick_slot(
         DispatchPolicy::JoinShortestQueue => slots
             .iter()
             .enumerate()
-            .filter(|(_, s)| eligible(s))
-            .min_by_key(|(i, s)| (s.backlog(), *i))
-            .map(|(i, _)| i),
+            .filter_map(|(i, m)| {
+                let s = lock(m);
+                eligible(&s).then_some((s.disp.backlog, i))
+            })
+            .min()
+            .map(|(_, i)| i),
         DispatchPolicy::LeastLoadedTile => slots
             .iter()
             .enumerate()
-            .filter(|(_, s)| eligible(s))
-            .map(|(i, s)| (i, s.estimated_drain(tc)))
+            .filter_map(|(i, m)| {
+                let s = lock(m);
+                eligible(&s).then(|| (i, s.estimated_drain(tc)))
+            })
             .min_by(|(ia, a), (ib, b)| a.total_cmp(b).then(ia.cmp(ib)))
             .map(|(i, _)| i),
     }
@@ -185,53 +348,398 @@ impl ClusterSpec {
     }
 }
 
+/// The barrier loop's coordinating state: everything the main thread
+/// owns exclusively (workers only ever touch `slots` entries, behind
+/// their mutexes, during a round).
+struct ClusterEngine<'a> {
+    cspec: &'a ClusterSpec,
+    spec: &'a ServeSpec,
+    tiles: &'a [usize],
+    snap: &'a SocSnapshot,
+    slots: &'a [Mutex<Replica>],
+    /// First worker error of a round (workers can't return `Result`s
+    /// through the pool).
+    err: &'a Mutex<Option<anyhow::Error>>,
+    scaler: Option<Autoscaler>,
+    arrivals: Vec<Ps>,
+    next_arr: usize,
+    admitted: u64,
+    spilled: u64,
+    rr_cursor: usize,
+    tc: Ps,
+    next_sample: Ps,
+    sample_interval: Ps,
+    duration: Ps,
+    deadline: Ps,
+    active_series: TimeSeries,
+    /// Serial-path completion-log buffer (workers carry their own).
+    scratch: Vec<Ps>,
+}
+
+impl ClusterEngine<'_> {
+    /// Drive the cluster clock to completion. `pool` is `Some` when a
+    /// worker pool is live; `None` runs every task inline (the
+    /// `threads = 1` reference path).
+    fn run(&mut self, pool: Option<&RoundPool>) -> crate::Result<()> {
+        // A round-robin front end that never sees a full replica is a
+        // pure modular function of the arrival index — wide spans
+        // replay it per slot. Autoscaling changes slot eligibility at
+        // arbitrary barriers, so it forces narrow mode.
+        let wide_ok = pool.is_some()
+            && self.cspec.balancer == DispatchPolicy::RoundRobin
+            && self.cspec.autoscale.is_none();
+        loop {
+            let slots = self.slots;
+            let mut pending = 0usize;
+            let mut draining = false;
+            for m in slots {
+                let s = lock(m);
+                pending += s.disp.backlog;
+                draining |= s.state == SlotState::Draining;
+            }
+            let next_arrival = self.arrivals.get(self.next_arr).copied();
+            if self.tc >= self.deadline
+                || (self.tc >= self.duration
+                    && next_arrival.is_none()
+                    && pending == 0
+                    && !draining)
+            {
+                break;
+            }
+
+            if wide_ok {
+                let target = self.next_sample.min(self.deadline).max(self.tc);
+                if self.wide_window(pool, target)? {
+                    self.sample()?;
+                    continue;
+                }
+            }
+
+            // Narrow barrier: the serial reference choreography, with
+            // step 1 (advance) optionally fanned across the pool.
+            let mut target = self.next_sample.min(self.deadline);
+            if let Some(a) = next_arrival {
+                target = target.min(a);
+            }
+            let target = target.max(self.tc);
+            self.narrow_barrier(pool, target)?;
+            self.retire_drained()?;
+            self.admit_due()?;
+            self.sample()?;
+        }
+        Ok(())
+    }
+
+    /// Run one pool round over every parked task (inline when no pool
+    /// is live), then surface the first worker error.
+    fn exec_round(&mut self, pool: Option<&RoundPool>) -> crate::Result<()> {
+        match pool {
+            Some(p) => p.round(self.slots.len()),
+            None => {
+                for m in self.slots {
+                    let mut rep = lock(m);
+                    let Some(task) = rep.task.take() else { continue };
+                    run_task(&mut rep, task, self.spec.slo, &mut self.scratch)?;
+                }
+            }
+        }
+        if let Some(e) = self.err.lock().expect("error slot poisoned").take() {
+            return Err(e);
+        }
+        Ok(())
+    }
+
+    /// Try to run one whole sample window `(tc, target]` as a wide
+    /// span: pre-bin its arrivals per slot by pure modular round-robin
+    /// and let each worker replay its slot independently. Returns
+    /// `false` (fall back to narrow barriers) when some slot could run
+    /// out of queue space mid-window, which would make serial
+    /// round-robin skip it.
+    fn wide_window(&mut self, pool: Option<&RoundPool>, target: Ps) -> crate::Result<bool> {
+        let n = self.slots.len();
+        let start = self.next_arr;
+        let mut end = start;
+        while end < self.arrivals.len() && self.arrivals[end] <= target {
+            end += 1;
+        }
+        let mut inboxes: Vec<Vec<Ps>> = (0..n).map(|_| Vec::new()).collect();
+        for (off, &t) in self.arrivals[start..end].iter().enumerate() {
+            inboxes[(self.rr_cursor + off) % n].push(t);
+        }
+        for (i, inbox) in inboxes.iter().enumerate() {
+            let s = lock(&self.slots[i]);
+            debug_assert_eq!(s.state, SlotState::Active, "wide spans need a fixed fleet");
+            // Worst case (no completions) this slot peaks at
+            // backlog + |inbox| outstanding requests; past the
+            // replica's total queue space the modular-RR replay would
+            // diverge from the skipping serial balancer.
+            if s.disp.backlog + inbox.len() > s.disp.capacity * s.disp.tiles.len() {
+                return Ok(false);
+            }
+        }
+        for (i, inbox) in inboxes.into_iter().enumerate() {
+            let mut s = lock(&self.slots[i]);
+            let local = s.to_local(target);
+            s.task = Some(Task {
+                local,
+                inbox: Some(inbox),
+            });
+        }
+        self.rr_cursor = (self.rr_cursor + (end - start)) % n;
+        self.admitted += (end - start) as u64;
+        self.next_arr = end;
+        self.exec_round(pool)?;
+        self.tc = target;
+        Ok(true)
+    }
+
+    /// Steps 1–2 of the reference barrier: advance every live replica
+    /// to the cluster target (in parallel when a pool is live — order
+    /// only matters for determinism, and replicas are independent),
+    /// then attribute completions serially in slot order so the
+    /// autoscaler's latency window matches the serial engine exactly.
+    fn narrow_barrier(&mut self, pool: Option<&RoundPool>, target: Ps) -> crate::Result<()> {
+        let slots = self.slots;
+        for m in slots {
+            let mut s = lock(m);
+            if s.session.is_some() {
+                let local = s.to_local(target);
+                s.task = Some(Task { local, inbox: None });
+            }
+        }
+        self.exec_round(pool)?;
+        self.tc = target;
+        for m in slots {
+            let mut s = lock(m);
+            s.drain_completions(self.spec.slo, self.scaler.as_mut(), &mut self.scratch)?;
+        }
+        Ok(())
+    }
+
+    /// Step 3: drained replicas retire to standby — queue empty and
+    /// every pipeline idle. Their session is dropped; a standby replica
+    /// costs nothing until the warm base revives it.
+    fn retire_drained(&mut self) -> crate::Result<()> {
+        for m in self.slots {
+            let mut s = lock(m);
+            if s.state != SlotState::Draining || s.disp.backlog > 0 {
+                continue;
+            }
+            let idle = s
+                .session
+                .as_ref()
+                .is_some_and(|sess| self.tiles.iter().all(|&t| sess.soc().mra(t).pipeline_idle()));
+            if !idle {
+                continue;
+            }
+            s.active_ps += self.tc - s.activated_at;
+            s.done_admitted += s.disp.tiles.iter().map(|q| q.admitted).sum::<u64>();
+            s.done_completed += s.disp.tiles.iter().map(|q| q.completed).sum::<u64>();
+            s.done_dropped += s.disp.dropped;
+            s.disp = Dispatcher::new(self.spec.policy, self.spec.queue_capacity, Vec::new());
+            s.governor = None;
+            s.session = None;
+            s.state = SlotState::Standby;
+        }
+        Ok(())
+    }
+
+    /// Step 4: admit due arrivals through the balancer. No active
+    /// replica with space means a front-end spill — final, like any
+    /// open-loop drop.
+    fn admit_due(&mut self) -> crate::Result<()> {
+        let slots = self.slots;
+        while self.next_arr < self.arrivals.len() && self.arrivals[self.next_arr] <= self.tc {
+            let t_arr = self.arrivals[self.next_arr];
+            self.next_arr += 1;
+            match pick_slot(self.cspec.balancer, slots, &mut self.rr_cursor, self.tc) {
+                Some(si) => {
+                    let mut s = lock(&slots[si]);
+                    let local_now = s.to_local(self.tc);
+                    let rep = &mut *s;
+                    let session =
+                        rep.session.as_mut().expect("active slot has a live session");
+                    let ti = rep
+                        .disp
+                        .pick(session.soc(), local_now)
+                        .expect("picked replica has queue space");
+                    rep.disp.bind(ti, t_arr);
+                    let tile = rep.disp.tiles[ti].tile;
+                    session.soc_mut().try_mra_mut(tile)?.serve_grant(1);
+                    self.admitted += 1;
+                }
+                None => self.spilled += 1,
+            }
+        }
+        Ok(())
+    }
+
+    /// Step 5: sample timelines, run per-replica governors, and let the
+    /// autoscaler resize the fleet. No-op between sample deadlines.
+    fn sample(&mut self) -> crate::Result<()> {
+        if self.tc < self.next_sample {
+            return Ok(());
+        }
+        let slots = self.slots;
+        let tc = self.tc;
+        for m in slots {
+            let mut s = lock(m);
+            let depth = s.disp.backlog as f64;
+            s.queue_depth.push(tc, depth);
+            let state = match s.state {
+                SlotState::Active => 1.0,
+                SlotState::Draining => 0.5,
+                SlotState::Standby => 0.0,
+            };
+            s.active_state.push(tc, state);
+            let isl = s.disp.tiles.first().map(|q| q.island);
+            let rep = &mut *s;
+            match (&mut rep.session, isl) {
+                (Some(session), Some(isl)) => {
+                    let local = rep.local_base + (tc - rep.cluster_base);
+                    rep.freq_mhz
+                        .push(tc, session.soc().islands[isl].freq(local).as_mhz() as f64);
+                    if let Some(g) = &mut rep.governor {
+                        g.on_sample(session.soc_mut(), local);
+                    }
+                }
+                _ => rep.freq_mhz.push(tc, 0.0),
+            }
+        }
+        let active = slots
+            .iter()
+            .filter(|m| lock(m).state == SlotState::Active)
+            .count();
+        self.active_series.push(tc, active as f64);
+        if let Some(a) = &mut self.scaler {
+            let backlog: usize = slots
+                .iter()
+                .map(|m| {
+                    let s = lock(m);
+                    if s.state == SlotState::Active {
+                        s.disp.backlog
+                    } else {
+                        0
+                    }
+                })
+                .sum();
+            let mean_backlog = backlog as f64 / active.max(1) as f64;
+            match a.decide(active, mean_backlog) {
+                // Don't add capacity for traffic that can no longer
+                // arrive — past the horizon only drain-downs apply.
+                ScaleDecision::Up if tc < self.duration => {
+                    // A draining slot is still warm and live: promote it
+                    // before waking a standby one.
+                    let pick = slots
+                        .iter()
+                        .position(|m| lock(m).state == SlotState::Draining)
+                        .or_else(|| {
+                            slots
+                                .iter()
+                                .position(|m| lock(m).state == SlotState::Standby)
+                        });
+                    if let Some(i) = pick {
+                        let mut s = lock(&slots[i]);
+                        if s.state == SlotState::Draining {
+                            s.state = SlotState::Active;
+                        } else {
+                            activate(&mut s, self.snap, self.spec, self.tiles, tc)?;
+                        }
+                        a.record(tc, active + 1);
+                    }
+                }
+                ScaleDecision::Down => {
+                    // Retire the least-backlogged active slot; ties pick
+                    // the highest index so slot 0 stays pinned.
+                    let victim = slots
+                        .iter()
+                        .enumerate()
+                        .filter_map(|(i, m)| {
+                            let s = lock(m);
+                            (s.state == SlotState::Active)
+                                .then_some((s.disp.backlog, std::cmp::Reverse(i), i))
+                        })
+                        .min()
+                        .map(|(_, _, i)| i);
+                    if let Some(i) = victim {
+                        lock(&slots[i]).state = SlotState::Draining;
+                        a.record(tc, active - 1);
+                    }
+                }
+                _ => {}
+            }
+        }
+        while self.next_sample <= tc {
+            self.next_sample += self.sample_interval;
+        }
+        Ok(())
+    }
+}
+
 /// Serve `cspec.spec`'s traffic across the fleet and return the merged
-/// [`ClusterReport`]. See the [module docs](self) for the model.
+/// [`ClusterReport`]. See the [module docs](self) for the model and the
+/// parallel-execution contract.
 pub fn serve_cluster(cfg: SocConfig, cspec: &ClusterSpec) -> crate::Result<ClusterReport> {
     cspec.validate()?;
     let spec = &cspec.spec;
 
     // Warm base: build, stage, gate, and settle one session, then
-    // snapshot it. Every activation forks this (the engine mode rides
-    // along in the snapshot).
+    // snapshot it. Every activation forks this (the engine mode and any
+    // scheduled DFS retunes ride along in the snapshot).
     let mut base = Session::new(cfg)?;
     base.engine(cspec.engine);
     let tiles = resolve_tiles(&base, spec)?;
     prepare_serve_tiles(&mut base, spec, &tiles)?;
+    for &(at, island, mhz) in &cspec.freq_schedule {
+        anyhow::ensure!(
+            island < base.soc().islands.len(),
+            "cluster: freq_schedule island {island} out of range (SoC has {})",
+            base.soc().islands.len()
+        );
+        base.schedule_freq(at, island, mhz);
+    }
     let snap = base.snapshot()?;
     drop(base);
 
-    let mut scaler = cspec
-        .autoscale
-        .as_ref()
-        .map(|a| Autoscaler::new(a, cspec.replicas, spec.slo.expect("validated: autoscale needs an SLO")));
+    let scaler = cspec.autoscale.as_ref().map(|a| {
+        Autoscaler::new(
+            a,
+            cspec.replicas,
+            spec.slo.expect("validated: autoscale needs an SLO"),
+        )
+    });
     let initial_active = match &cspec.autoscale {
         Some(a) => a.min_replicas,
         None => cspec.replicas,
     };
 
-    let mut slots: Vec<Replica> = (0..cspec.replicas)
-        .map(|i| Replica {
-            state: SlotState::Standby,
-            session: None,
-            disp: Dispatcher::new(spec.policy, spec.queue_capacity, Vec::new()),
-            governor: None,
-            local_base: 0,
-            cluster_base: 0,
-            activated_at: 0,
-            active_ps: 0,
-            activations: 0,
-            latencies: Vec::new(),
-            done_admitted: 0,
-            done_completed: 0,
-            done_dropped: 0,
-            queue_depth: TimeSeries::new(format!("r{i}_queue")),
-            freq_mhz: TimeSeries::new(format!("r{i}_freq")),
-            active_state: TimeSeries::new(format!("r{i}_active")),
+    let slots: Vec<Mutex<Replica>> = (0..cspec.replicas)
+        .map(|i| {
+            Mutex::new(Replica {
+                state: SlotState::Standby,
+                session: None,
+                disp: Dispatcher::new(spec.policy, spec.queue_capacity, Vec::new()),
+                governor: None,
+                local_base: 0,
+                cluster_base: 0,
+                activated_at: 0,
+                active_ps: 0,
+                activations: 0,
+                latencies: Vec::new(),
+                within_slo: 0,
+                drained_at: 0,
+                task: None,
+                done_admitted: 0,
+                done_completed: 0,
+                done_dropped: 0,
+                queue_depth: TimeSeries::new(format!("r{i}_queue")),
+                freq_mhz: TimeSeries::new(format!("r{i}_freq")),
+                active_state: TimeSeries::new(format!("r{i}_active")),
+            })
         })
         .collect();
-    for slot in slots.iter_mut().take(initial_active) {
-        activate(slot, &snap, spec, &tiles, 0)?;
+    for m in slots.iter().take(initial_active) {
+        activate(&mut lock(m), &snap, spec, &tiles, 0)?;
     }
 
     // The cluster-level arrival schedule: exactly what a lone SoC would
@@ -239,7 +747,6 @@ pub fn serve_cluster(cfg: SocConfig, cspec: &ClusterSpec) -> crate::Result<Clust
     let mut arrivals = spec.arrival.times(spec.seed, spec.duration);
     arrivals.sort_unstable();
     let offered = arrivals.len() as u64;
-    let mut next_arr = 0usize;
 
     let duration = spec.duration;
     let deadline = duration + spec.drain;
@@ -248,246 +755,96 @@ pub fn serve_cluster(cfg: SocConfig, cspec: &ClusterSpec) -> crate::Result<Clust
     } else {
         (duration / 100).max(1_000_000)
     };
-    let mut next_sample: Ps = 0;
-    let mut active_series = TimeSeries::new("active_replicas");
 
-    // Arrival time of each admitted request, indexed by request id
-    // (ids are globally unique across the fleet).
-    let mut reqs: Vec<Ps> = Vec::new();
-    let mut completed: u64 = 0;
-    let mut within_slo: u64 = 0;
-    let mut spilled: u64 = 0;
-    let mut rr_cursor = 0usize;
-    let mut tc: Ps = 0;
+    let err: Mutex<Option<anyhow::Error>> = Mutex::new(None);
+    let mut eng = ClusterEngine {
+        cspec,
+        spec,
+        tiles: &tiles,
+        snap: &snap,
+        slots: &slots,
+        err: &err,
+        scaler,
+        arrivals,
+        next_arr: 0,
+        admitted: 0,
+        spilled: 0,
+        rr_cursor: 0,
+        tc: 0,
+        next_sample: 0,
+        sample_interval,
+        duration,
+        deadline,
+        active_series: TimeSeries::new("active_replicas"),
+        scratch: Vec::new(),
+    };
 
-    loop {
-        let pending: usize = slots.iter().map(|s| s.backlog()).sum();
-        let draining = slots.iter().any(|s| s.state == SlotState::Draining);
-        let next_arrival = arrivals.get(next_arr).copied();
-        if tc >= deadline
-            || (tc >= duration && next_arrival.is_none() && pending == 0 && !draining)
-        {
-            break;
-        }
-        let mut target = next_sample.min(deadline);
-        if let Some(a) = next_arrival {
-            target = target.min(a);
-        }
-        let target = target.max(tc);
-
-        // 1) Advance every live replica to the cluster target, in slot
-        // order (replicas are independent, so order only matters for
-        // determinism).
-        for slot in slots.iter_mut() {
-            if slot.session.is_some() {
-                let local = slot.to_local(target);
-                slot.session.as_mut().expect("checked").run_until(local);
-            }
-        }
-        tc = target;
-
-        // 2) Attribute completions (exact tile-log timestamps mapped
-        // onto the cluster clock). Same peek-then-drain dance as the
-        // single-SoC engine: a mutable tile poke resets the idle wake
-        // point, so only touch tiles that actually completed something.
-        for slot in slots.iter_mut() {
-            let Some(session) = slot.session.as_mut() else {
-                continue;
-            };
-            for ti in 0..slot.disp.tiles.len() {
-                let tile = slot.disp.tiles[ti].tile;
-                let has_completions = session
-                    .soc()
-                    .mra(tile)
-                    .serve
-                    .as_ref()
-                    .is_some_and(|g| !g.completions.is_empty());
-                if !has_completions {
-                    continue;
-                }
-                let log: Vec<Ps> = {
-                    let m = session.soc_mut().try_mra_mut(tile)?;
-                    match &mut m.serve {
-                        Some(g) => g.completions.drain(..).map(|(t, _replica)| t).collect(),
-                        None => Vec::new(),
-                    }
-                };
-                for t_local in log {
-                    let Some(req) = slot.disp.complete(ti) else {
-                        debug_assert!(false, "completion without an outstanding request");
-                        continue;
-                    };
-                    let t_c = slot.cluster_base + (t_local - slot.local_base);
-                    let lat = t_c - reqs[req];
-                    slot.latencies.push(lat as f64);
-                    completed += 1;
-                    if let Some(slo) = spec.slo {
-                        if lat <= slo {
-                            within_slo += 1;
-                        }
-                    }
-                    if let Some(g) = &mut slot.governor {
-                        g.observe_latency(lat);
-                    }
-                    if let Some(a) = &mut scaler {
-                        a.observe_latency(lat);
-                    }
+    let workers = resolve_threads(cspec.threads, cspec.replicas);
+    if workers <= 1 {
+        eng.run(None)?;
+    } else {
+        let scratches: Vec<Mutex<Vec<Ps>>> =
+            (0..workers).map(|_| Mutex::new(Vec::new())).collect();
+        let slo = spec.slo;
+        let slots_ref = &slots;
+        let err_ref = &err;
+        let work = move |wid: usize, k: usize| {
+            let mut rep = lock(&slots_ref[k]);
+            let Some(task) = rep.task.take() else { return };
+            let mut scratch = scratches[wid].lock().expect("scratch buffer poisoned");
+            if let Err(e) = run_task(&mut rep, task, slo, &mut scratch) {
+                let mut first = err_ref.lock().expect("error slot poisoned");
+                if first.is_none() {
+                    *first = Some(e);
                 }
             }
-        }
-
-        // 3) Drained replicas retire to standby: queue empty and every
-        // pipeline idle. Their session is dropped — a standby replica
-        // costs nothing until the warm base revives it.
-        for slot in slots.iter_mut() {
-            if slot.state != SlotState::Draining || slot.backlog() > 0 {
-                continue;
-            }
-            let idle = slot
-                .session
-                .as_ref()
-                .is_some_and(|s| tiles.iter().all(|&t| s.soc().mra(t).pipeline_idle()));
-            if !idle {
-                continue;
-            }
-            slot.active_ps += tc - slot.activated_at;
-            slot.done_admitted += slot.disp.tiles.iter().map(|q| q.admitted).sum::<u64>();
-            slot.done_completed += slot.disp.tiles.iter().map(|q| q.completed).sum::<u64>();
-            slot.done_dropped += slot.disp.dropped;
-            slot.disp = Dispatcher::new(spec.policy, spec.queue_capacity, Vec::new());
-            slot.governor = None;
-            slot.session = None;
-            slot.state = SlotState::Standby;
-        }
-
-        // 4) Admit due arrivals through the balancer. No active replica
-        // with space means a front-end spill — final, like any
-        // open-loop drop.
-        while next_arr < arrivals.len() && arrivals[next_arr] <= tc {
-            let t_arr = arrivals[next_arr];
-            next_arr += 1;
-            match pick_slot(cspec.balancer, &slots, &mut rr_cursor, tc) {
-                Some(si) => {
-                    let slot = &mut slots[si];
-                    let local_now = slot.to_local(tc);
-                    let session = slot.session.as_mut().expect("active slot has a live session");
-                    let ti = slot
-                        .disp
-                        .pick(session.soc(), local_now)
-                        .expect("picked replica has queue space");
-                    let req = reqs.len();
-                    reqs.push(t_arr);
-                    slot.disp.bind(ti, req);
-                    let tile = slot.disp.tiles[ti].tile;
-                    session.soc_mut().try_mra_mut(tile)?.serve_grant(1);
-                }
-                None => spilled += 1,
-            }
-        }
-
-        // 5) Sample timelines, run per-replica governors, and let the
-        // autoscaler resize the fleet.
-        if tc >= next_sample {
-            for slot in slots.iter_mut() {
-                slot.queue_depth.push(tc, slot.backlog() as f64);
-                slot.active_state.push(
-                    tc,
-                    match slot.state {
-                        SlotState::Active => 1.0,
-                        SlotState::Draining => 0.5,
-                        SlotState::Standby => 0.0,
-                    },
-                );
-                let isl = slot.disp.tiles.first().map(|q| q.island);
-                match (&mut slot.session, isl) {
-                    (Some(session), Some(isl)) => {
-                        let local = slot.to_local(tc);
-                        slot.freq_mhz
-                            .push(tc, session.soc().islands[isl].freq(local).as_mhz() as f64);
-                        if let Some(g) = &mut slot.governor {
-                            g.on_sample(session.soc_mut(), local);
-                        }
-                    }
-                    _ => slot.freq_mhz.push(tc, 0.0),
-                }
-            }
-            let active = slots.iter().filter(|s| s.state == SlotState::Active).count();
-            active_series.push(tc, active as f64);
-            if let Some(a) = &mut scaler {
-                let backlog: usize = slots
-                    .iter()
-                    .filter(|s| s.state == SlotState::Active)
-                    .map(|s| s.backlog())
-                    .sum();
-                let mean_backlog = backlog as f64 / active.max(1) as f64;
-                match a.decide(active, mean_backlog) {
-                    // Don't add capacity for traffic that can no longer
-                    // arrive — past the horizon only drain-downs apply.
-                    ScaleDecision::Up if tc < duration => {
-                        // A draining slot is still warm and live:
-                        // promote it before waking a standby one.
-                        let pick = slots
-                            .iter()
-                            .position(|s| s.state == SlotState::Draining)
-                            .or_else(|| {
-                                slots.iter().position(|s| s.state == SlotState::Standby)
-                            });
-                        if let Some(i) = pick {
-                            if slots[i].state == SlotState::Draining {
-                                slots[i].state = SlotState::Active;
-                            } else {
-                                activate(&mut slots[i], &snap, spec, &tiles, tc)?;
-                            }
-                            a.record(tc, active + 1);
-                        }
-                    }
-                    ScaleDecision::Down => {
-                        // Retire the least-backlogged active slot; ties
-                        // pick the highest index so slot 0 stays pinned.
-                        let victim = slots
-                            .iter()
-                            .enumerate()
-                            .filter(|(_, s)| s.state == SlotState::Active)
-                            .min_by_key(|(i, s)| (s.backlog(), std::cmp::Reverse(*i)))
-                            .map(|(i, _)| i);
-                        if let Some(i) = victim {
-                            slots[i].state = SlotState::Draining;
-                            a.record(tc, active - 1);
-                        }
-                    }
-                    _ => {}
-                }
-            }
-            while next_sample <= tc {
-                next_sample += sample_interval;
-            }
-        }
+        };
+        with_round_pool(workers, work, |pool| eng.run(Some(pool)))?;
     }
+
+    let ClusterEngine {
+        scaler,
+        admitted,
+        spilled,
+        tc,
+        active_series,
+        ..
+    } = eng;
 
     // Close out live replicas: ungate their tiles and count their final
     // activation span into the cost proxy.
-    for slot in slots.iter_mut() {
-        if let Some(session) = slot.session.as_mut() {
+    for m in &slots {
+        let mut s = lock(m);
+        let rep = &mut *s;
+        if let Some(session) = rep.session.as_mut() {
             for &t in &tiles {
                 session.soc_mut().try_mra_mut(t)?.serve_end();
             }
         }
-        if slot.state != SlotState::Standby {
-            slot.active_ps += tc - slot.activated_at;
+        if rep.state != SlotState::Standby {
+            rep.active_ps += tc - rep.activated_at;
         }
     }
 
     // Merge per-replica latency distributions exactly.
-    let admitted = reqs.len() as u64;
     let dur_s = duration as f64 / 1e12;
     let mut merged = Percentiles::default();
+    let mut completed: u64 = 0;
+    let mut within_slo: u64 = 0;
     let mut replica_dropped: u64 = 0;
     let mut per_replica = Vec::with_capacity(slots.len());
-    let final_active = slots.iter().filter(|s| s.state == SlotState::Active).count();
-    let replica_seconds = slots.iter().map(|s| s.active_ps).sum::<Ps>() as f64 / 1e12;
-    for (i, slot) in slots.into_iter().enumerate() {
+    let final_active = slots
+        .iter()
+        .filter(|m| lock(m).state == SlotState::Active)
+        .count();
+    let replica_seconds =
+        slots.iter().map(|m| lock(m).active_ps).sum::<Ps>() as f64 / 1e12;
+    for (i, m) in slots.into_iter().enumerate() {
+        let slot = m.into_inner().expect("replica mutex poisoned");
         let p = Percentiles::from_samples(&slot.latencies)?;
         merged = merged.merge(&p);
+        completed += slot.latencies.len() as u64;
+        within_slo += slot.within_slo;
         let live_admitted: u64 = slot.disp.tiles.iter().map(|q| q.admitted).sum();
         let live_completed: u64 = slot.disp.tiles.iter().map(|q| q.completed).sum();
         let unfinished: u64 = slot.disp.tiles.iter().map(|q| q.in_flight.len() as u64).sum();

@@ -23,7 +23,12 @@
 //! [`util::rng`](crate::util::rng), every fleet iteration is in slot
 //! order, and [`Percentiles::merge`](crate::util::Percentiles::merge)
 //! combines per-replica sample sets exactly — so the same seed + spec
-//! + config yields a **bit-identical** [`ClusterReport`].
+//! + config yields a **bit-identical** [`ClusterReport`]. The contract
+//! holds for every [`ClusterSpec::threads`](field@ClusterSpec::threads)
+//! value: replicas step on a
+//! worker pool between cluster-clock barriers, but all cross-replica
+//! decisions stay barrier-serialized in slot order (see
+//! `docs/PERF.md`, "Parallel fleet execution").
 //!
 //! ```no_run
 //! use vespa::cluster::{AutoscaleSpec, ClusterSpec};

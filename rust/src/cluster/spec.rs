@@ -2,6 +2,7 @@
 
 use crate::serve::{Arrival, DispatchPolicy, ServeSpec};
 use crate::sim::EngineMode;
+use crate::util::Ps;
 
 /// SLO-driven elasticity bounds and hysteresis for a cluster run.
 ///
@@ -92,8 +93,19 @@ pub struct ClusterSpec {
     /// Optional SLO-driven elasticity. Requires `spec.slo`.
     pub autoscale: Option<AutoscaleSpec>,
     /// Simulation engine for every replica (all three are bit-identical;
-    /// see [`crate::sim::EngineMode`]). Default: idle-aware.
+    /// see [`crate::sim::EngineMode`]). Default: event-driven.
     pub engine: EngineMode,
+    /// Worker threads advancing replicas between cluster-clock barriers:
+    /// `0` = all cores, `1` (the default) = the serial reference path.
+    /// Every thread count produces a bit-identical
+    /// [`ClusterReport`](super::ClusterReport) — parallelism only
+    /// changes wall time.
+    pub threads: usize,
+    /// DFS retunes applied to the warm base before it is snapshotted:
+    /// `(at, island, mhz)`, with `at` in replica-local time. Every
+    /// replica inherits the schedule through the snapshot fork, so a
+    /// mid-run retune hits each activation at the same local offset.
+    pub freq_schedule: Vec<(Ps, usize, u64)>,
 }
 
 impl ClusterSpec {
@@ -103,7 +115,9 @@ impl ClusterSpec {
             spec,
             balancer: DispatchPolicy::default(),
             autoscale: None,
-            engine: EngineMode::IdleAware,
+            engine: EngineMode::default(),
+            threads: 1,
+            freq_schedule: Vec::new(),
         }
     }
 
@@ -119,6 +133,20 @@ impl ClusterSpec {
 
     pub fn engine(mut self, mode: EngineMode) -> Self {
         self.engine = mode;
+        self
+    }
+
+    /// Worker threads for the barrier loop: `0` = all cores, `1` =
+    /// serial reference. The report is bit-identical either way.
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.threads = threads;
+        self
+    }
+
+    /// Schedule a DFS retune on the warm base at replica-local time
+    /// `at`: every replica (re)activation inherits it via the snapshot.
+    pub fn schedule_freq(mut self, at: Ps, island: usize, mhz: u64) -> Self {
+        self.freq_schedule.push((at, island, mhz));
         self
     }
 

@@ -71,6 +71,12 @@ pub enum Objective {
         autoscale: Option<AutoscaleSpec>,
         /// Fleet sizes to sweep (each spec evaluates once per entry).
         fleets: Vec<usize>,
+        /// Worker threads stepping each cluster's replicas
+        /// ([`ClusterSpec::threads`](field@ClusterSpec::threads)):
+        /// `0` = all cores, `1` = serial.
+        /// Reports are bit-identical for every value, so this does NOT
+        /// key the memo fingerprint.
+        threads: usize,
     },
 }
 
@@ -231,12 +237,16 @@ fn objective_fingerprint(objective: &Objective) -> String {
         Objective::Throughput => String::new(),
         Objective::TailLatency { spec } => format!("{spec:?}"),
         // The fleet size is appended per work item by the sweep driver
-        // (one spec evaluates once per entry in `fleets`).
+        // (one spec evaluates once per entry in `fleets`). `threads` is
+        // deliberately absent: every thread count produces a
+        // bit-identical ClusterReport, so memoized points are shared
+        // across serial and parallel sweeps.
         Objective::Cluster {
             serve,
             balancer,
             autoscale,
             fleets: _,
+            threads: _,
         } => format!("cluster:{serve:?}/{balancer:?}/{autoscale:?}"),
     }
 }
@@ -359,12 +369,15 @@ pub fn evaluate_point_cluster(
     balancer: DispatchPolicy,
     autoscale: Option<&AutoscaleSpec>,
     fleet: usize,
+    threads: usize,
 ) -> crate::Result<DsePoint> {
     let cfg = spec.to_config()?;
     let pos = spec.position();
     let mut sspec = serve.clone();
     sspec.tiles = vec![cfg.node_of(pos.0, pos.1)];
-    let mut cspec = ClusterSpec::new(fleet, sspec).balancer(balancer);
+    let mut cspec = ClusterSpec::new(fleet, sspec)
+        .balancer(balancer)
+        .threads(threads);
     if let Some(a) = autoscale {
         let mut a = a.clone();
         a.min_replicas = a.min_replicas.clamp(1, fleet.max(1));
@@ -649,6 +662,7 @@ pub fn sweep_replication(p: &SweepParams) -> crate::Result<Vec<DsePoint>> {
                 balancer,
                 autoscale,
                 fleets,
+                threads,
             },
             _,
         ) => {
@@ -662,8 +676,14 @@ pub fn sweep_replication(p: &SweepParams) -> crate::Result<Vec<DsePoint>> {
                 if let Some(hit) = memo_get(&key) {
                     return Ok(hit);
                 }
-                let pt =
-                    evaluate_point_cluster(spec, serve, *balancer, autoscale.as_ref(), *fleet)?;
+                let pt = evaluate_point_cluster(
+                    spec,
+                    serve,
+                    *balancer,
+                    autoscale.as_ref(),
+                    *fleet,
+                    *threads,
+                )?;
                 memo_put(key, &pt);
                 Ok(pt)
             })
@@ -685,6 +705,7 @@ pub fn sweep_replication_serial(p: &SweepParams) -> crate::Result<Vec<DsePoint>>
             balancer,
             autoscale,
             fleets,
+            threads,
         } => {
             let work: Vec<(ScenarioSpec, usize)> = p
                 .specs()
@@ -692,7 +713,7 @@ pub fn sweep_replication_serial(p: &SweepParams) -> crate::Result<Vec<DsePoint>>
                 .flat_map(|s| fleets.iter().map(move |&f| (s.clone(), f)))
                 .collect();
             ScenarioSet::new(work).run_serial(|(spec, fleet)| {
-                evaluate_point_cluster(spec, serve, *balancer, autoscale.as_ref(), *fleet)
+                evaluate_point_cluster(spec, serve, *balancer, autoscale.as_ref(), *fleet, *threads)
             })
         }
     }
@@ -897,23 +918,49 @@ mod tests {
             balancer: DispatchPolicy::RoundRobin,
             autoscale: None,
             fleets: vec![1, 2],
+            threads: 1,
         };
         let b = Objective::Cluster {
             serve: serve.clone(),
             balancer: DispatchPolicy::JoinShortestQueue,
             autoscale: None,
             fleets: vec![1, 2],
+            threads: 1,
         };
         let c = Objective::Cluster {
             serve,
             balancer: DispatchPolicy::RoundRobin,
             autoscale: Some(AutoscaleSpec::new(1)),
             fleets: vec![1, 2],
+            threads: 1,
+        };
+        let threaded = match a.clone() {
+            Objective::Cluster {
+                serve,
+                balancer,
+                autoscale,
+                fleets,
+                threads: _,
+            } => Objective::Cluster {
+                serve,
+                balancer,
+                autoscale,
+                fleets,
+                threads: 8,
+            },
+            other => other,
         };
         let fa = objective_fingerprint(&a);
         assert_ne!(fa, objective_fingerprint(&b), "balancer must key the cache");
         assert_ne!(fa, objective_fingerprint(&c), "autoscale must key the cache");
         assert_ne!(fa, objective_fingerprint(&Objective::Throughput));
+        // Thread count never changes the report, so memoized points are
+        // shared across thread counts.
+        assert_eq!(
+            fa,
+            objective_fingerprint(&threaded),
+            "threads must NOT key the cache"
+        );
     }
 
     #[test]

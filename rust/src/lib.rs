@@ -107,7 +107,8 @@
 //! goes further and keys every component into per-island updateable
 //! min-heaps ([`sim::UpdateableMinHeap`]) so each edge touches only the
 //! components that are actually due — cost scales with *activity*, not
-//! grid size. Both are bit-identical to edge-by-edge stepping; the
+//! grid size — and is the default. Both are bit-identical to
+//! edge-by-edge stepping; the
 //! original tick-everything loop remains as `EngineMode::Reference`,
 //! the equivalence oracle (`rust/tests/engine_equivalence.rs`). Select
 //! with [`scenario::Session::engine`] or `--engine reference|idle|event`

@@ -81,7 +81,9 @@ fn usage() {
            --tile-replicas K   replicas per accelerator tile (default 2)\n\
            --balancer P        front-end: rr | jsq | least (default jsq)\n\
            --autoscale         SLO-driven autoscaler (defaults --slo-ms to 5)\n\
-           --min-replicas N    autoscale floor (default 1)",
+           --min-replicas N    autoscale floor (default 1)\n\
+           --threads N         worker threads for replica stepping:\n\
+                               0 = all cores, 1 = serial (default; same report)",
         header = vespa::cli::usage_header(),
         subs = vespa::cli::subcommand_lines()
     );
@@ -95,11 +97,11 @@ fn backend(args: &Args) -> vespa::Result<Box<dyn AccelCompute>> {
 }
 
 /// `--engine reference|idle|event` — simulation engine for `run`,
-/// `serve`, and `cluster` (default: idle-aware).
+/// `serve`, and `cluster` (default: event-driven).
 fn engine_arg(args: &Args) -> vespa::Result<vespa::sim::EngineMode> {
     match args.opt("engine") {
         Some(s) => vespa::sim::EngineMode::parse(s),
-        None => Ok(vespa::sim::EngineMode::IdleAware),
+        None => Ok(vespa::sim::EngineMode::default()),
     }
 }
 
@@ -348,7 +350,8 @@ fn cmd_cluster(args: &Args) -> vespa::Result<()> {
 
     let mut cspec = ClusterSpec::new(fleet, spec)
         .balancer(balancer)
-        .engine(engine_arg(args)?);
+        .engine(engine_arg(args)?)
+        .threads(args.opt_usize("threads", 1)?);
     if autoscale {
         cspec = cspec.autoscale(AutoscaleSpec::new(args.opt_usize("min-replicas", 1)?));
     }
@@ -436,6 +439,7 @@ fn cmd_dse(args: &Args) -> vespa::Result<()> {
                 balancer: DispatchPolicy::JoinShortestQueue,
                 autoscale: args.flag("autoscale").then(|| AutoscaleSpec::new(1)),
                 fleets,
+                threads: args.opt_usize("threads", 1)?,
             }
         };
     } else {

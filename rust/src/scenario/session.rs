@@ -245,7 +245,7 @@ impl Session {
         self.staged.get(&tile).map(Vec::as_slice).unwrap_or(&[])
     }
 
-    /// Select the simulation engine (default: idle-aware). This is the
+    /// Select the simulation engine (default: event-driven). This is the
     /// single engine-selection surface — the CLI's `--engine` flag and
     /// [`crate::cluster::ClusterSpec::engine`] both route here.
     ///

@@ -5,9 +5,16 @@
 //! the result into that scenario's slot — so results come back in
 //! deterministic scenario-index order regardless of which worker ran
 //! what, and a parallel run is bit-identical to a serial one.
+//!
+//! The claim-loop pattern is generalized two ways for other subsystems:
+//! `resolve_threads` turns a `0 = all cores / n = exactly n` knob
+//! into a worker count, and `with_round_pool` keeps a pool of scoped
+//! workers alive across repeated barrier-synchronized *rounds* of
+//! index-claimed tasks — the shape the cluster engine needs, where
+//! spawning fresh threads per barrier would dominate the barrier work.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Condvar, Mutex};
 
 use anyhow::Context;
 
@@ -117,6 +124,136 @@ impl ScenarioSpec {
     }
 }
 
+/// Resolve a worker-count knob against a job count: `0` = all cores
+/// (`available_parallelism`), otherwise the value itself, clamped to
+/// `jobs` so no worker sits permanently idle.
+pub(crate) fn resolve_threads(threads: usize, jobs: usize) -> usize {
+    let t = if threads == 0 {
+        std::thread::available_parallelism()
+            .map(|p| p.get())
+            .unwrap_or(1)
+    } else {
+        threads
+    };
+    t.min(jobs.max(1))
+}
+
+/// Round-sequenced shared state for [`with_round_pool`] workers.
+struct RoundState {
+    /// Monotone round counter; workers wake when it moves past the last
+    /// round they completed.
+    epoch: u64,
+    /// Task count of the current round.
+    tasks: usize,
+    /// Workers that have exhausted the current round's cursor.
+    done: usize,
+    stop: bool,
+}
+
+/// A persistent pool of scoped worker threads that execute repeated
+/// *rounds* of index-claimed tasks. Created by [`with_round_pool`];
+/// each [`RoundPool::round`] call fans indices `0..n` across the
+/// workers (same atomic-cursor claim loop as
+/// [`ScenarioSet::run_with_threads`]) and blocks until every index has
+/// been processed — a barrier. The work closure is fixed at pool
+/// creation; per-round inputs travel through whatever shared state the
+/// caller gave it (e.g. a task slot per replica behind a `Mutex`).
+pub(crate) struct RoundPool {
+    state: Mutex<RoundState>,
+    start: Condvar,
+    finish: Condvar,
+    next: AtomicUsize,
+    workers: usize,
+}
+
+impl RoundPool {
+    fn new(workers: usize) -> Self {
+        Self {
+            state: Mutex::new(RoundState {
+                epoch: 0,
+                tasks: 0,
+                done: 0,
+                stop: false,
+            }),
+            start: Condvar::new(),
+            finish: Condvar::new(),
+            next: AtomicUsize::new(0),
+            workers,
+        }
+    }
+
+    /// Fan task indices `0..n` across the pool and block until every
+    /// worker has drained the round (all indices claimed and executed).
+    pub fn round(&self, n: usize) {
+        let mut st = self.state.lock().expect("round pool poisoned");
+        self.next.store(0, Ordering::SeqCst);
+        st.tasks = n;
+        st.done = 0;
+        st.epoch += 1;
+        self.start.notify_all();
+        while st.done < self.workers {
+            st = self.finish.wait(st).expect("round pool poisoned");
+        }
+    }
+
+    fn shutdown(&self) {
+        let mut st = self.state.lock().expect("round pool poisoned");
+        st.stop = true;
+        self.start.notify_all();
+    }
+
+    fn worker_loop(&self, id: usize, work: &(impl Fn(usize, usize) + Sync)) {
+        let mut seen = 0u64;
+        loop {
+            let n = {
+                let mut st = self.state.lock().expect("round pool poisoned");
+                while st.epoch == seen && !st.stop {
+                    st = self.start.wait(st).expect("round pool poisoned");
+                }
+                if st.stop {
+                    return;
+                }
+                seen = st.epoch;
+                st.tasks
+            };
+            loop {
+                let k = self.next.fetch_add(1, Ordering::SeqCst);
+                if k >= n {
+                    break;
+                }
+                work(id, k);
+            }
+            let mut st = self.state.lock().expect("round pool poisoned");
+            st.done += 1;
+            if st.done == self.workers {
+                self.finish.notify_one();
+            }
+        }
+    }
+}
+
+/// Run `body` with a live [`RoundPool`] of `workers` scoped threads,
+/// each executing `work(worker_id, task_index)` for every claimed
+/// index of every round. Workers are joined (via `std::thread::scope`)
+/// before this returns, so `work` may freely borrow from the caller.
+pub(crate) fn with_round_pool<R>(
+    workers: usize,
+    work: impl Fn(usize, usize) + Sync,
+    body: impl FnOnce(&RoundPool) -> R,
+) -> R {
+    let pool = RoundPool::new(workers);
+    let pool = &pool;
+    let work = &work;
+    std::thread::scope(|scope| {
+        for id in 0..workers {
+            scope.spawn(move || pool.worker_loop(id, work));
+        }
+        let out = body(pool);
+        pool.shutdown();
+        out
+    })
+}
+
 /// A batch of independent scenarios with serial and parallel runners.
 pub struct ScenarioSet<T> {
     items: Vec<T>,
@@ -171,14 +308,7 @@ impl<T: Sync> ScenarioSet<T> {
         f: impl Fn(&T) -> crate::Result<R> + Sync,
     ) -> crate::Result<Vec<R>> {
         let n = self.items.len();
-        let threads = if threads == 0 {
-            std::thread::available_parallelism()
-                .map(|p| p.get())
-                .unwrap_or(1)
-        } else {
-            threads
-        }
-        .min(n.max(1));
+        let threads = resolve_threads(threads, n);
         if threads <= 1 {
             return self.run_serial(f);
         }
@@ -246,6 +376,42 @@ mod tests {
         let empty: ScenarioSet<i32> = ScenarioSet::new(vec![]);
         assert!(empty.run_parallel(|&i| Ok(i)).unwrap().is_empty());
         assert!(empty.is_empty());
+    }
+
+    #[test]
+    fn resolve_threads_clamps_to_jobs() {
+        assert_eq!(resolve_threads(3, 100), 3);
+        assert_eq!(resolve_threads(8, 2), 2, "no idle workers past the jobs");
+        assert_eq!(resolve_threads(5, 0), 1, "zero jobs still resolves to 1");
+        assert!(resolve_threads(0, 100) >= 1, "auto is at least one worker");
+    }
+
+    #[test]
+    fn round_pool_runs_every_index_of_every_round() {
+        use std::sync::atomic::{AtomicU64, Ordering};
+        let hits: Vec<AtomicU64> = (0..13).map(|_| AtomicU64::new(0)).collect();
+        let rounds = 7usize;
+        with_round_pool(
+            3,
+            |_wid, k| {
+                hits[k].fetch_add(1, Ordering::SeqCst);
+            },
+            |pool| {
+                for _ in 0..rounds {
+                    pool.round(hits.len());
+                }
+                // A barrier: every prior round fully drained before the
+                // next starts, so counts are exact mid-stream too.
+                pool.round(0);
+            },
+        );
+        for (k, h) in hits.iter().enumerate() {
+            assert_eq!(
+                h.load(Ordering::SeqCst),
+                rounds as u64,
+                "index {k} ran once per round"
+            );
+        }
     }
 
     #[test]

@@ -65,10 +65,14 @@ pub(crate) struct TileQueue {
     pub compute_cycles: u64,
     /// Replicas behind the tile's bridge.
     pub replicas: usize,
-    /// Request ids granted to this tile and not yet completed, in
-    /// dispatch order (the tile completes credited invocations FIFO
-    /// up to replica overlap; attribution pops the front).
-    pub in_flight: VecDeque<usize>,
+    /// Arrival times of requests granted to this tile and not yet
+    /// completed, in dispatch order (the tile completes credited
+    /// invocations FIFO up to replica overlap; attribution pops the
+    /// front). Carrying the arrival time directly — instead of an index
+    /// into a shared request table — keeps latency attribution local to
+    /// the dispatcher, so cluster replicas can drain completions on
+    /// worker threads without sharing state.
+    pub in_flight: VecDeque<Ps>,
     pub admitted: u64,
     pub completed: u64,
     /// Peak queue depth observed.
@@ -82,6 +86,11 @@ pub(crate) struct Dispatcher {
     pub capacity: usize,
     pub tiles: Vec<TileQueue>,
     pub dropped: u64,
+    /// Outstanding requests across every tile queue, maintained by
+    /// [`Dispatcher::bind`] / [`Dispatcher::complete`] so hot paths
+    /// (cluster barriers, balancer eligibility) never re-sum per-tile
+    /// queue lengths.
+    pub backlog: usize,
     rr_cursor: usize,
 }
 
@@ -92,8 +101,16 @@ impl Dispatcher {
             capacity,
             tiles,
             dropped: 0,
+            backlog: 0,
             rr_cursor: 0,
         }
+    }
+
+    /// Whether any tile queue still has admission space. `backlog`
+    /// equals `capacity * tiles` exactly when every queue is full, so
+    /// this is O(1).
+    pub fn has_space(&self) -> bool {
+        self.backlog < self.capacity * self.tiles.len()
     }
 
     /// Pick the queue slot for a new request, or `None` (drop) when
@@ -146,23 +163,26 @@ impl Dispatcher {
         choice
     }
 
-    /// Record that request `req` was granted to queue slot `slot`.
-    pub fn bind(&mut self, slot: usize, req: usize) {
+    /// Record that a request that arrived at `t_arr` was granted to
+    /// queue slot `slot`.
+    pub fn bind(&mut self, slot: usize, t_arr: Ps) {
         let q = &mut self.tiles[slot];
-        q.in_flight.push_back(req);
+        q.in_flight.push_back(t_arr);
         q.admitted += 1;
         q.max_depth = q.max_depth.max(q.in_flight.len());
+        self.backlog += 1;
     }
 
     /// Attribute one completion on queue slot `slot` to the oldest
-    /// outstanding request there (FIFO).
-    pub fn complete(&mut self, slot: usize) -> Option<usize> {
+    /// outstanding request there (FIFO); returns its arrival time.
+    pub fn complete(&mut self, slot: usize) -> Option<Ps> {
         let q = &mut self.tiles[slot];
-        let req = q.in_flight.pop_front();
-        if req.is_some() {
+        let t_arr = q.in_flight.pop_front();
+        if t_arr.is_some() {
             q.completed += 1;
+            self.backlog -= 1;
         }
-        req
+        t_arr
     }
 }
 
@@ -239,8 +259,12 @@ mod tests {
         d.bind(b, 1);
         assert_eq!(d.pick(&soc, 0), None, "everything full: drop");
         assert_eq!(d.dropped, 1);
+        assert_eq!(d.backlog, 2);
+        assert!(!d.has_space());
         // A completion frees the slot again.
         assert_eq!(d.complete(0), Some(0));
+        assert_eq!(d.backlog, 1);
+        assert!(d.has_space());
         assert_eq!(d.pick(&soc, 0), Some(0));
     }
 
@@ -268,9 +292,11 @@ mod tests {
         let mut d = Dispatcher::new(DispatchPolicy::RoundRobin, 8, queues(&soc));
         d.bind(0, 10);
         d.bind(0, 11);
-        assert_eq!(d.complete(0), Some(10));
+        assert_eq!(d.backlog, 2, "bind maintains the backlog counter");
+        assert_eq!(d.complete(0), Some(10), "FIFO returns the oldest arrival");
         assert_eq!(d.complete(0), Some(11));
         assert_eq!(d.complete(0), None);
+        assert_eq!(d.backlog, 0, "complete maintains the backlog counter");
         assert_eq!(d.tiles[0].max_depth, 2);
     }
 
@@ -306,13 +332,14 @@ mod tests {
         ] {
             let cap = 2;
             let mut d = Dispatcher::new(policy, cap, queues(&soc));
-            let mut req = 0;
+            let mut req: usize = 0;
             while let Some(slot) = d.pick(&soc, 0) {
-                d.bind(slot, req);
+                d.bind(slot, req as Ps);
                 req += 1;
                 assert!(req <= cap * d.tiles.len(), "{policy:?} overfilled a queue");
             }
             assert_eq!(req, cap * d.tiles.len(), "{policy:?} filled every slot");
+            assert_eq!(d.backlog, req, "{policy:?} backlog counts every bind");
             assert_eq!(d.dropped, 1, "{policy:?}: the failed pick was counted");
             assert!(d.tiles.iter().all(|q| q.in_flight.len() == cap));
             // One completion frees exactly one slot; the next pick must
@@ -320,7 +347,7 @@ mod tests {
             assert!(d.complete(1).is_some());
             let slot = d.pick(&soc, 0).expect("freed capacity is usable");
             assert_eq!(slot, 1, "{policy:?} routes to the only open tile");
-            d.bind(slot, req);
+            d.bind(slot, req as Ps);
             assert_eq!(d.pick(&soc, 0), None);
             assert_eq!(d.dropped, 2);
         }

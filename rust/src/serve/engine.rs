@@ -237,15 +237,18 @@ fn serve_session(session: &mut Session, spec: &ServeSpec) -> crate::Result<Serve
         .map(|d| TimeSeries::new(format!("freq_{}", d.name)))
         .collect();
 
-    // Arrival time of each admitted request, indexed by request id.
-    let mut reqs: Vec<Ps> = Vec::new();
+    // Admitted-request count (each queue entry carries its own arrival
+    // time, so no shared request table is needed).
+    let mut admitted: u64 = 0;
     let mut latencies: Vec<f64> = Vec::new();
+    // Reused completion-log buffer — drained tiles fill it in place
+    // instead of collecting a fresh Vec every barrier.
+    let mut log: Vec<Ps> = Vec::new();
 
     loop {
         let now = session.soc().now;
         let next_arrival = arrivals.peek().map(|Reverse(t)| *t);
-        let pending: usize = disp.tiles.iter().map(|q| q.in_flight.len()).sum();
-        if now >= deadline || (now >= horizon && next_arrival.is_none() && pending == 0) {
+        if now >= deadline || (now >= horizon && next_arrival.is_none() && disp.backlog == 0) {
             break;
         }
         let mut target = next_sample.min(deadline);
@@ -270,19 +273,19 @@ fn serve_session(session: &mut Session, spec: &ServeSpec) -> crate::Result<Serve
             if !has_completions {
                 continue;
             }
-            let log: Vec<Ps> = {
+            log.clear();
+            {
                 let m = session.soc_mut().try_mra_mut(tile)?;
-                match &mut m.serve {
-                    Some(g) => g.completions.drain(..).map(|(t, _replica)| t).collect(),
-                    None => Vec::new(),
+                if let Some(g) = &mut m.serve {
+                    log.extend(g.completions.drain(..).map(|(t, _replica)| t));
                 }
-            };
-            for t_c in log {
-                let Some(req) = disp.complete(slot) else {
+            }
+            for &t_c in &log {
+                let Some(t_arr) = disp.complete(slot) else {
                     debug_assert!(false, "completion without an outstanding request");
                     continue;
                 };
-                let lat = t_c - reqs[req];
+                let lat = t_c - t_arr;
                 latencies.push(lat as f64);
                 if let Some(g) = &mut governor {
                     g.observe_latency(lat);
@@ -301,9 +304,8 @@ fn serve_session(session: &mut Session, spec: &ServeSpec) -> crate::Result<Serve
         while arrivals.peek().is_some_and(|Reverse(t)| *t <= now) {
             let Reverse(t_arr) = arrivals.pop().expect("peeked");
             if let Some(slot) = disp.pick(session.soc(), now) {
-                let req = reqs.len();
-                reqs.push(t_arr);
-                disp.bind(slot, req);
+                admitted += 1;
+                disp.bind(slot, t_arr);
                 let tile = disp.tiles[slot].tile;
                 session.soc_mut().try_mra_mut(tile)?.serve_grant(1);
             } else if let Some(think) = think {
@@ -347,7 +349,6 @@ fn serve_session(session: &mut Session, spec: &ServeSpec) -> crate::Result<Serve
     let elapsed = session.soc().now - t0;
     let dur_s = spec.duration as f64 / 1e12;
     let completed = latencies.len() as u64;
-    let admitted = reqs.len() as u64;
     let latency = LatencyStats::from_latencies(&latencies)?;
     let slo_met = match (spec.slo, completed) {
         (Some(slo), c) if c > 0 => Some(latency.p95_ps <= slo as f64),

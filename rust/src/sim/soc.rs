@@ -15,20 +15,21 @@
 //!
 //! * [`EngineMode::Reference`] ticks every router and every tile of the
 //!   edge's island, unconditionally — the bit-exactness oracle.
-//! * [`EngineMode::IdleAware`] (the default) skips components that are
+//! * [`EngineMode::IdleAware`] skips components that are
 //!   provably idle: every tile tick returns an
 //!   [`Outcome`](crate::tiles::Outcome) naming its next
 //!   [`Deadline`](crate::tiles::Deadline), routers keep their
 //!   empty-FIFO fast path, and after a fully quiet edge the engine
 //!   probes global quiescence and bulk-delivers edges up to the next
 //!   event via [`ClockDomain::advance_span`].
-//! * [`EngineMode::EventDriven`] inverts the loop: components register
-//!   their deadlines in per-island updateable min-heaps (see
-//!   [`super::heap::UpdateableMinHeap`]) and each edge pops only the
-//!   components actually due, so per-edge cost scales with *activity*,
-//!   not grid size. Producer pushes re-arm consumers through the
-//!   link-to-consumer map; quiescence probing is `O(islands)` because
-//!   the heap heads already bound every component's next wake.
+//! * [`EngineMode::EventDriven`] (the default) inverts the loop:
+//!   components register their deadlines in per-island updateable
+//!   min-heaps (see [`super::heap::UpdateableMinHeap`]) and each edge
+//!   pops only the components actually due, so per-edge cost scales
+//!   with *activity*, not grid size. Producer pushes re-arm consumers
+//!   through the link-to-consumer map; quiescence probing is
+//!   `O(islands)` because the heap heads already bound every
+//!   component's next wake.
 //!
 //! Every elision is a no-op by construction, so all engines are
 //! bit-identical to [`EngineMode::Reference`] — enforced across serve,
@@ -59,15 +60,15 @@ use super::sched::EventSched;
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum EngineMode {
     /// Skip provably no-op component ticks and coalesce globally
-    /// quiescent spans (the default).
-    #[default]
+    /// quiescent spans.
     IdleAware,
     /// Tick every router and every tile on every edge — the
     /// pre-idle-aware engine, kept as the equivalence oracle.
     Reference,
     /// Pop only due components from per-island updateable min-heaps of
     /// [`Deadline`]s — per-edge cost scales with activity, not grid
-    /// size.
+    /// size (the default).
+    #[default]
     EventDriven,
 }
 
@@ -1101,6 +1102,7 @@ mod tests {
     #[test]
     fn idle_engine_coalesces_quiescent_spans() {
         let mut soc = quiet_soc();
+        soc.set_engine(EngineMode::IdleAware);
         soc.run_until(10_000_000_000); // 10 ms
         assert_eq!(soc.now, 10_000_000_000);
         assert!(
@@ -1172,10 +1174,10 @@ mod tests {
     #[test]
     fn engine_switch_mid_run_stays_exact() {
         let mut soc = quiet_soc();
-        soc.run_until(2_000_000_000); // idle-aware
-        soc.set_engine(EngineMode::EventDriven);
-        soc.run_until(6_000_000_000);
+        soc.run_until(2_000_000_000); // event-driven (default)
         soc.set_engine(EngineMode::IdleAware);
+        soc.run_until(6_000_000_000);
+        soc.set_engine(EngineMode::EventDriven);
         soc.run_until(10_000_000_000);
         assert_eq!(soc.islands[0].cycles, 1_000_000);
         assert_eq!(soc.islands[1].cycles, 500_000);

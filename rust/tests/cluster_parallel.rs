@@ -1,0 +1,196 @@
+//! Parallel fleet execution: the barrier loop's bit-exactness contract.
+//!
+//! `ClusterSpec::threads` only changes *wall time* — for every balancer,
+//! with the governor on, under autoscaling, and across mid-run DFS
+//! retunes, the merged [`ClusterReport`] must be bit-identical to the
+//! serial reference (`threads = 1`). These tests pin that contract for
+//! `threads in {1, 2, 0 (= all cores)}`, covering both the wide-span
+//! round-robin fast path and the narrow per-arrival barrier path.
+
+use vespa::cluster::{AutoscaleSpec, ClusterReport, ClusterSpec};
+use vespa::config::SocConfig;
+use vespa::scenario::{ms, Scenario};
+use vespa::serve::{Arrival, DispatchPolicy, GovernorSpec, ServeSpec};
+
+/// Same per-replica SoC as `tests/cluster.rs`: one 2-replica dfmul tile
+/// on a governable island (~4250 req/s at 50 MHz). Island 0 is the NoC,
+/// island 1 is the DFS-capable accelerator island.
+fn fleet_cfg(accel_mhz: u64) -> SocConfig {
+    Scenario::grid(2, 2)
+        .name("cluster-par-2x2")
+        .seed(0xE5B)
+        .island("noc", 100)
+        .island_dfs("acc", accel_mhz, 10..=50, 5)
+        .noc_island("noc")
+        .mem_at(0, 0)
+        .accel_at(1, 0, "dfmul", 2, "acc")
+        .io_at_on(0, 1, "noc")
+        .build()
+        .unwrap()
+}
+
+/// Run `cspec` at each thread count and return the reports, asserting
+/// every parallel report equals the serial reference bit-for-bit.
+fn run_all_thread_counts(cspec: &ClusterSpec, mhz: u64) -> Vec<ClusterReport> {
+    let reports: Vec<ClusterReport> = [1usize, 2, 0]
+        .iter()
+        .map(|&t| {
+            cspec
+                .clone()
+                .threads(t)
+                .run(fleet_cfg(mhz))
+                .unwrap_or_else(|e| panic!("threads={t}: {e}"))
+        })
+        .collect();
+    for (i, r) in reports.iter().enumerate().skip(1) {
+        let t = [1usize, 2, 0][i];
+        assert_eq!(
+            &reports[0], r,
+            "threads={t} must reproduce the serial report bit-exactly"
+        );
+    }
+    reports
+}
+
+// ---------------------------------------------------------------------
+// Every balancer, governor off: wide path (round-robin) and narrow
+// paths (JSQ, least-loaded) all match serial.
+// ---------------------------------------------------------------------
+
+#[test]
+fn all_balancers_agree_across_thread_counts() {
+    for balancer in [
+        DispatchPolicy::RoundRobin,
+        DispatchPolicy::JoinShortestQueue,
+        DispatchPolicy::LeastLoadedTile,
+    ] {
+        let spec = ServeSpec::new(Arrival::Poisson { rps: 5000.0 }, ms(50))
+            .slo(ms(5))
+            .sample_interval(ms(2))
+            .seed(0xABCD);
+        let cspec = ClusterSpec::new(3, spec).balancer(balancer);
+        let reports = run_all_thread_counts(&cspec, 50);
+        assert!(
+            reports[0].completed > 100,
+            "{balancer:?}: enough traffic to be meaningful"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------
+// Governor on: the wide round-robin path replays arrivals inside a
+// whole sample window, so the governor's window must still see the
+// same latency population at every sample point.
+// ---------------------------------------------------------------------
+
+#[test]
+fn governor_retunes_identically_in_parallel() {
+    let spec = ServeSpec::new(Arrival::Poisson { rps: 5500.0 }, ms(60))
+        .slo(ms(5))
+        .sample_interval(ms(2))
+        .governor(GovernorSpec::new(1, ms(5)))
+        .seed(0x60F);
+    let cspec = ClusterSpec::new(3, spec).balancer(DispatchPolicy::RoundRobin);
+    // Start at 20 MHz (~1700 req/s per replica) against ~1830 req/s per
+    // replica of offered load: the backlog breaches and the governor
+    // must boost for the equivalence to mean anything.
+    let reports = run_all_thread_counts(&cspec, 20);
+    let freqs: std::collections::BTreeSet<u64> = reports[0]
+        .per_replica
+        .iter()
+        .flat_map(|p| p.freq_mhz.samples.iter())
+        .map(|s| s.value as u64)
+        .filter(|&v| v > 0)
+        .collect();
+    assert!(freqs.len() > 1, "governor must retune (saw {freqs:?})");
+}
+
+// ---------------------------------------------------------------------
+// Autoscaler under a flash crowd: scale-ups and drain-then-retire
+// decisions land on the same barriers regardless of thread count
+// (autoscaling forces the narrow path).
+// ---------------------------------------------------------------------
+
+#[test]
+fn autoscaler_flash_crowd_agrees_across_thread_counts() {
+    let spec = ServeSpec::new(
+        Arrival::Burst {
+            base_rps: 800.0,
+            burst_rps: 6000.0,
+            period: ms(20),
+            duty: 0.4,
+        },
+        ms(80),
+    )
+    .policy(DispatchPolicy::JoinShortestQueue)
+    .slo(ms(5))
+    .sample_interval(ms(2))
+    .seed(0x50C);
+    let cspec = ClusterSpec::new(4, spec)
+        .balancer(DispatchPolicy::JoinShortestQueue)
+        .autoscale(AutoscaleSpec::new(1));
+    let reports = run_all_thread_counts(&cspec, 50);
+    assert!(
+        !reports[0].autoscale_actions.is_empty(),
+        "the flash crowd must trigger the autoscaler"
+    );
+}
+
+// ---------------------------------------------------------------------
+// Mid-run DFS retune: a scheduled frequency swap hits every replica at
+// the same local offset whether replicas step serially or on workers.
+// ---------------------------------------------------------------------
+
+#[test]
+fn midrun_dfs_retune_agrees_across_thread_counts() {
+    let spec = ServeSpec::new(Arrival::Poisson { rps: 4000.0 }, ms(60))
+        .slo(ms(5))
+        .sample_interval(ms(2))
+        .seed(0xD0F5);
+    // Start slow, retune the accelerator island up mid-run: completions
+    // straddling the swap exercise frequency-dependent service times
+    // on both sides of a barrier.
+    let cspec = ClusterSpec::new(3, spec)
+        .balancer(DispatchPolicy::RoundRobin)
+        .schedule_freq(ms(20), 1, 50);
+    let reports = run_all_thread_counts(&cspec, 20);
+    assert!(reports[0].completed > 100, "retuned fleet still serves");
+}
+
+// ---------------------------------------------------------------------
+// Property: across seeds, threads {1, 2, all} agree on the merged
+// percentiles (and, stronger, on the whole report).
+// ---------------------------------------------------------------------
+
+#[test]
+fn merged_percentiles_agree_for_every_thread_count() {
+    for seed in [1u64, 7, 0xBEEF] {
+        let spec = ServeSpec::new(Arrival::Poisson { rps: 4500.0 }, ms(40))
+            .slo(ms(5))
+            .sample_interval(ms(2))
+            .seed(seed);
+        let cspec = ClusterSpec::new(3, spec).balancer(DispatchPolicy::RoundRobin);
+        let reports = run_all_thread_counts(&cspec, 50);
+        let base = &reports[0];
+        for r in &reports[1..] {
+            assert_eq!(base.latency.p50_ps, r.latency.p50_ps, "seed {seed:#x}: p50");
+            assert_eq!(base.latency.p95_ps, r.latency.p95_ps, "seed {seed:#x}: p95");
+            assert_eq!(base.latency.p99_ps, r.latency.p99_ps, "seed {seed:#x}: p99");
+            assert_eq!(base.slo_attainment, r.slo_attainment, "seed {seed:#x}");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// threads = 0 resolves to the machine's cores; absurd explicit counts
+// are clamped to the fleet, not an error.
+// ---------------------------------------------------------------------
+
+#[test]
+fn oversized_thread_counts_clamp_to_the_fleet() {
+    let spec = ServeSpec::new(Arrival::Poisson { rps: 3000.0 }, ms(30)).seed(9);
+    let cspec = ClusterSpec::new(2, spec);
+    let serial = cspec.clone().threads(1).run(fleet_cfg(50)).unwrap();
+    let absurd = cspec.clone().threads(64).run(fleet_cfg(50)).unwrap();
+    assert_eq!(serial, absurd, "64 workers on a 2-slot fleet clamps to 2");
+}
