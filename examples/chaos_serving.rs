@@ -1,0 +1,95 @@
+//! Chaos example: the same fleet, three postures toward failure. A
+//! deterministic fault plan — a tile slowdown, a stuck DFS actuator,
+//! then a full replica crash mid-run — hits a 2-slot fleet of paper
+//! SoCs serving steady Poisson traffic:
+//!
+//! * **bare** — no resilience: the crash kills a replica for good and
+//!   its in-flight requests with it;
+//! * **retry** — per-request deadlines with exponential backoff
+//!   re-admit interrupted requests, but the fleet stays down a slot;
+//! * **retry+health** — health checks spot the dead slot and replace
+//!   it from the warm-standby snapshot, so capacity (and the SLO)
+//!   recover too.
+//!
+//! The fault ledger in each report shows the arithmetic: what was
+//! injected, what was lost, what came back.
+//!
+//!   cargo run --release --example chaos_serving
+
+use vespa::cluster::ClusterSpec;
+use vespa::config::presets::paper_soc;
+use vespa::fault::{FaultPlan, HealthSpec, RetrySpec};
+use vespa::report::Table;
+use vespa::scenario::{ms, Session};
+use vespa::serve::{Arrival, DispatchPolicy, ServeSpec};
+
+fn main() -> vespa::Result<()> {
+    let cfg = || paper_soc(("dfmul", 2), ("dfmul", 2));
+
+    // Aim the component faults at the first accelerator tile and its
+    // DFS island — resolved from the config, not hard-coded.
+    let session = Session::new(cfg())?;
+    let tile = session.mra_tiles()[0];
+    let soc_cfg = &session.soc().cfg;
+    let island = soc_cfg
+        .tiles
+        .iter()
+        .find(|t| soc_cfg.node_of(t.x, t.y) == tile)
+        .map(|t| t.island)
+        .expect("the MRA tile has a spec");
+    drop(session);
+
+    // The plan: replica 0's accelerator runs at quarter speed from
+    // 20 ms, the island's DFS actuator wedges meanwhile, and at 60 ms
+    // the whole replica crashes. Same seed + plan => same run, every
+    // time, on every engine and thread count.
+    let plan = FaultPlan::parse(&format!(
+        "slow@t{tile}@r0:at=20ms,dur=30ms,factor=4;\
+         stuck@i{island}@r0:at=20ms,dur=30ms;\
+         crash@r0:at=60ms"
+    ))?;
+
+    let serve = ServeSpec::new(Arrival::Poisson { rps: 2500.0 }, ms(200))
+        .policy(DispatchPolicy::JoinShortestQueue)
+        .slo(ms(5))
+        .sample_interval(ms(2))
+        .seed(0xC4A05)
+        .faults(plan);
+    let retry = RetrySpec::new(4, 500_000_000).deadline(ms(50)); // 500 us backoff
+
+    let bare = ClusterSpec::new(2, serve.clone()).run(cfg())?;
+    let retried = ClusterSpec::new(2, serve.clone().retry(retry.clone())).run(cfg())?;
+    let healed = ClusterSpec::new(2, serve.retry(retry))
+        .health(HealthSpec::new())
+        .run(cfg())?;
+
+    let mut summary = Table::new(
+        "one crash, three postures — dfmul paper SoC, JSQ balancer",
+        &["posture", "completed", "p95 ms", "SLO", "lost", "rescued", "failed over"],
+    );
+    for (name, r) in [("bare", &bare), ("retry", &retried), ("retry+health", &healed)] {
+        summary.row(&[
+            name.to_string(),
+            r.completed.to_string(),
+            format!("{:.3}", r.latency.p95_ms()),
+            match r.slo_met {
+                Some(true) => "met",
+                Some(false) => "miss",
+                None => "-",
+            }
+            .to_string(),
+            r.faults.lost.to_string(),
+            r.faults.rescued.to_string(),
+            r.faults.failed_over.to_string(),
+        ]);
+    }
+    println!("{}", summary.render());
+
+    println!("full report, retry+health posture:\n");
+    println!("{}", healed.render());
+    println!(
+        "rescued fraction {:.3} — the ledger's bottom line",
+        healed.faults.rescued_fraction()
+    );
+    Ok(())
+}

@@ -1,0 +1,123 @@
+//! Chaos bench: a mid-run replica crash under the fault subsystem,
+//! with the claim CI gates on:
+//!
+//! * retry + health-check replacement rescue >= 90% of the requests
+//!   the crash interrupts (`rescued_fraction`, min-gated at 0.9) while
+//!   the fleet still meets its p95 SLO;
+//! * the same crash with no resilience loses requests for good and
+//!   misses the SLO (`chaos/bare`, reported for contrast).
+//!
+//! The horizon is fixed at 120 ms in both quick and full modes — the
+//! crash-then-recover arc needs the whole window, so `--quick` only
+//! trims iterations. Writes `BENCH_chaos_recovery.json` for the CI
+//! bench gate.
+
+use vespa::bench_harness::{Bench, BenchArgs, BenchReport};
+use vespa::cluster::ClusterSpec;
+use vespa::config::SocConfig;
+use vespa::fault::{FaultPlan, HealthSpec, RetrySpec};
+use vespa::scenario::{ms, Scenario, Session};
+use vespa::serve::{Arrival, DispatchPolicy, ServeSpec};
+
+/// One 2-replica dfmul tile at 50 MHz — ~4250 req/s per replica SoC,
+/// same box as the cluster benches.
+fn fleet_cfg() -> SocConfig {
+    Scenario::grid(2, 2)
+        .name("chaos-2x2")
+        .seed(0xE5B)
+        .island("noc", 100)
+        .island_dfs("acc", 50, 10..=50, 5)
+        .noc_island("noc")
+        .mem_at(0, 0)
+        .accel_at(1, 0, "dfmul", 2, "acc")
+        .io_at_on(0, 1, "noc")
+        .build()
+        .unwrap()
+}
+
+fn main() {
+    let args = BenchArgs::from_env();
+    let quick = args.quick;
+    println!(
+        "chaos_recovery: fixed 120 ms horizon ({} mode)",
+        if quick { "quick" } else { "full" }
+    );
+
+    let bench = Bench::new(1, args.iters.unwrap_or(if quick { 2 } else { 3 }));
+    let mut report = BenchReport::new("chaos_recovery");
+
+    // Slot 0's tile wedges at 36 ms so its queue is provably loaded,
+    // then the replica crashes at 40 ms. 6000 rps is comfortable for
+    // two ~4250 req/s replicas and hopeless for the lone survivor.
+    let tile = Session::new(fleet_cfg()).expect("base session").mra_tiles()[0];
+    let plan = FaultPlan::parse(&format!(
+        "hang@t{tile}@r0:at=36ms,dur=4ms;crash@r0:at=40ms"
+    ))
+    .expect("chaos plan");
+    let serve = ServeSpec::new(Arrival::Poisson { rps: 6000.0 }, ms(120))
+        .policy(DispatchPolicy::JoinShortestQueue)
+        .slo(ms(5))
+        .sample_interval(ms(2))
+        .seed(0x5AFE)
+        .faults(plan);
+
+    let resilient_spec = ClusterSpec::new(2, serve.clone().retry(RetrySpec::new(4, 500_000_000)))
+        .balancer(DispatchPolicy::RoundRobin)
+        .health(HealthSpec::new());
+    let bare_spec = ClusterSpec::new(2, serve).balancer(DispatchPolicy::RoundRobin);
+
+    let r_recover = bench.run("chaos/recovery", |_| {
+        resilient_spec.run(fleet_cfg()).expect("resilient run")
+    });
+    println!("{}", r_recover.report());
+    let r_bare = bench.run("chaos/bare", |_| {
+        bare_spec.run(fleet_cfg()).expect("bare run")
+    });
+    println!("{}", r_bare.report());
+
+    let resilient = resilient_spec.run(fleet_cfg()).expect("resilient run");
+    let bare = bare_spec.run(fleet_cfg()).expect("bare run");
+    let rescued_fraction = resilient.faults.rescued_fraction();
+    println!(
+        "recovery: rescued {}/{} ({rescued_fraction:.3}), retried {}, failed-over {}, p95 {:.3} ms, SLO {}",
+        resilient.faults.rescued,
+        resilient.faults.rescued + resilient.faults.lost,
+        resilient.faults.retried,
+        resilient.faults.failed_over,
+        resilient.latency.p95_ms(),
+        match resilient.slo_met {
+            Some(true) => "MET",
+            Some(false) => "MISSED",
+            None => "n/a",
+        }
+    );
+    println!(
+        "bare: lost {}, p95 {:.3} ms, completed {} vs {} resilient",
+        bare.faults.lost,
+        bare.latency.p95_ms(),
+        bare.completed,
+        resilient.completed
+    );
+    assert_eq!(
+        resilient.slo_met,
+        Some(true),
+        "resilience must keep the SLO through the crash"
+    );
+    assert_eq!(bare.slo_met, Some(false), "the bare fleet must feel it");
+    assert!(bare.faults.lost > 0, "the crash must lose work without retry");
+
+    report.metric("rescued_fraction", rescued_fraction);
+    report.metric("rescued", resilient.faults.rescued as f64);
+    report.metric("retried", resilient.faults.retried as f64);
+    report.metric("failed_over", resilient.faults.failed_over as f64);
+    report.metric("resilient_p95_ms", resilient.latency.p95_ms());
+    report.metric("resilient_completed", resilient.completed as f64);
+    report.metric("bare_p95_ms", bare.latency.p95_ms());
+    report.metric("bare_lost", bare.faults.lost as f64);
+    report.push(r_recover);
+    report.push(r_bare);
+
+    let path = report.write(args.json_path()).expect("write bench report");
+    println!("wrote {}", path.display());
+    println!("chaos_recovery OK");
+}

@@ -24,6 +24,147 @@ pub const SUBCOMMANDS: &[(&str, &str)] = &[
     ("artifacts-check", "load artifacts and cross-check PJRT vs native"),
 ];
 
+/// Known `--option`/`--flag` names per subcommand — the registry behind
+/// [`validate_known`], which rejects typos (`--replcas`) with a
+/// did-you-mean hint instead of silently falling back to defaults.
+/// Every [`SUBCOMMANDS`] entry (plus aliases) has a row; a subcommand
+/// absent from both lists skips validation entirely.
+pub const KNOWN_OPTIONS: &[(&str, &[&str])] = &[
+    ("run", &["artifacts", "duration-ms", "tg", "engine"]),
+    (
+        "serve",
+        &[
+            "artifacts",
+            "accel",
+            "replicas",
+            "rps",
+            "duration-ms",
+            "policy",
+            "queue",
+            "seed",
+            "slo-ms",
+            "tile",
+            "engine",
+            "json",
+            "governor",
+            "faults",
+            "retry",
+            "retry-backoff-us",
+            "deadline-ms",
+        ],
+    ),
+    (
+        "cluster",
+        &[
+            "artifacts",
+            "accel",
+            "tile-replicas",
+            "replicas",
+            "rps",
+            "duration-ms",
+            "balancer",
+            "policy",
+            "queue",
+            "seed",
+            "slo-ms",
+            "engine",
+            "threads",
+            "min-replicas",
+            "json",
+            "autoscale",
+            "governor",
+            "faults",
+            "retry",
+            "retry-backoff-us",
+            "deadline-ms",
+            "health",
+            "evict-after",
+            "drain-deadline-ms",
+        ],
+    ),
+    ("table1", &["invocations"]),
+    ("fig2", &[]),
+    ("floorplan", &[]),
+    ("fig3", &["window-ms", "warmup-ms"]),
+    ("fig4", &["phase-ms"]),
+    (
+        "dse",
+        &[
+            "accel",
+            "serve-rps",
+            "serve-ms",
+            "slo-ms",
+            "fleets",
+            "threads",
+            "wide",
+            "quick",
+            "warm",
+            "serial",
+            "autoscale",
+            "faults",
+            "retry",
+            "retry-backoff-us",
+            "deadline-ms",
+        ],
+    ),
+    ("validate", &[]),
+    ("accels", &[]),
+    ("artifacts-check", &["artifacts"]),
+];
+
+/// Reject any `--name` (option or flag) the subcommand does not read,
+/// with a did-you-mean hint for near misses. Unknown or absent
+/// subcommands pass through (the dispatcher prints usage for those).
+pub fn validate_known(args: &Args) -> crate::Result<()> {
+    let Some(sub) = args.subcommand.as_deref() else {
+        return Ok(());
+    };
+    let Some((_, known)) = KNOWN_OPTIONS.iter().find(|(name, _)| *name == sub) else {
+        return Ok(());
+    };
+    for key in args
+        .options
+        .keys()
+        .map(String::as_str)
+        .chain(args.flags.iter().map(String::as_str))
+    {
+        if !known.contains(&key) {
+            let hint = did_you_mean(key, known)
+                .map(|k| format!(" (did you mean --{k}?)"))
+                .unwrap_or_default();
+            bail!("{sub}: unknown option --{key}{hint}");
+        }
+    }
+    Ok(())
+}
+
+/// Closest known name within edit distance 2, preferring the smallest
+/// distance (ties break on registry order).
+fn did_you_mean(key: &str, known: &[&'static str]) -> Option<&'static str> {
+    known
+        .iter()
+        .map(|&k| (edit_distance(key, k), k))
+        .filter(|&(d, _)| d <= 2)
+        .min_by_key(|&(d, _)| d)
+        .map(|(_, k)| k)
+}
+
+/// Plain Levenshtein distance, O(|a|*|b|) with a rolling row.
+fn edit_distance(a: &str, b: &str) -> usize {
+    let a: Vec<char> = a.chars().collect();
+    let b: Vec<char> = b.chars().collect();
+    let mut prev: Vec<usize> = (0..=b.len()).collect();
+    for (i, &ca) in a.iter().enumerate() {
+        let mut cur = vec![i + 1];
+        for (j, &cb) in b.iter().enumerate() {
+            let sub = prev[j] + usize::from(ca != cb);
+            cur.push(sub.min(prev[j + 1] + 1).min(cur[j] + 1));
+        }
+        prev = cur;
+    }
+    prev[b.len()]
+}
+
 /// The `usage:` header line listing every registered subcommand.
 pub fn usage_header() -> String {
     let names: Vec<&str> = SUBCOMMANDS.iter().map(|(name, _)| *name).collect();
@@ -214,6 +355,55 @@ mod tests {
     fn trailing_flag() {
         let a = parse("x --verbose");
         assert!(a.flag("verbose"));
+    }
+
+    #[test]
+    fn unknown_option_rejected_with_hint() {
+        let a = parse("cluster --replcas 4");
+        let err = validate_known(&a).unwrap_err().to_string();
+        assert!(err.contains("unknown option --replcas"), "{err}");
+        assert!(err.contains("did you mean --replicas"), "{err}");
+        // Flags are validated too.
+        let a = parse("cluster --helth");
+        let err = validate_known(&a).unwrap_err().to_string();
+        assert!(err.contains("did you mean --health"), "{err}");
+        // Far-off names get no hint, just the rejection.
+        let a = parse("serve --zzzzzzzz 1");
+        let err = validate_known(&a).unwrap_err().to_string();
+        assert!(err.contains("unknown option --zzzzzzzz"), "{err}");
+        assert!(!err.contains("did you mean"), "{err}");
+    }
+
+    #[test]
+    fn known_options_pass_validation() {
+        for cmd in [
+            "serve --rps 500 --faults crash@r0:at=1ms --retry 3 --governor",
+            "cluster --replicas 4 --health --drain-deadline-ms 20 --autoscale",
+            "dse --serve-rps 1000 --fleets 1,2 --quick",
+            "run --duration-ms 5 --tg 2",
+            "nonsense --whatever 1", // unregistered subcommands pass through
+        ] {
+            let a = parse(cmd);
+            assert!(validate_known(&a).is_ok(), "rejected {cmd:?}");
+        }
+    }
+
+    #[test]
+    fn every_subcommand_has_a_known_options_row() {
+        for (name, _) in SUBCOMMANDS {
+            assert!(
+                KNOWN_OPTIONS.iter().any(|(n, _)| n == name),
+                "KNOWN_OPTIONS missing a row for {name:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn edit_distance_basics() {
+        assert_eq!(edit_distance("", "abc"), 3);
+        assert_eq!(edit_distance("abc", "abc"), 0);
+        assert_eq!(edit_distance("replcas", "replicas"), 1);
+        assert_eq!(edit_distance("kitten", "sitting"), 3);
     }
 
     #[test]

@@ -37,6 +37,10 @@ pub struct ClockDomain {
     pub min: Freq,
     pub max: Freq,
     pub step_mhz: u64,
+    /// Injected stuck-actuator fault windows (sorted, disjoint):
+    /// `request_freq` fails inside a window. Empty outside chaos runs
+    /// ([`crate::fault`]).
+    stuck_windows: Vec<(Ps, Ps)>,
 }
 
 impl ClockDomain {
@@ -50,6 +54,7 @@ impl ClockDomain {
             min: freq,
             max: freq,
             step_mhz: 5,
+            stuck_windows: Vec::new(),
         }
     }
 
@@ -70,7 +75,15 @@ impl ClockDomain {
             min,
             max,
             step_mhz,
+            stuck_windows: Vec::new(),
         }
+    }
+
+    /// Install stuck-actuator fault windows ([`crate::fault`]);
+    /// merged with any already present.
+    pub fn add_stuck_windows(&mut self, windows: &[(Ps, Ps)]) {
+        self.stuck_windows.extend_from_slice(windows);
+        crate::fault::normalize_windows(&mut self.stuck_windows);
     }
 
     /// DFS-capable islands accept run-time frequency requests.
@@ -97,6 +110,9 @@ impl ClockDomain {
     /// or the frequency violates the island's configured range/step.
     /// On success returns the time the change takes effect.
     pub fn request_freq(&mut self, target: Freq, now: Ps) -> Result<Ps, FreqError> {
+        if let Some(until) = crate::fault::window_until(&self.stuck_windows, now) {
+            return Err(FreqError::ActuatorStuck { until });
+        }
         if target < self.min || target > self.max {
             return Err(FreqError::OutOfRange {
                 target,
@@ -203,6 +219,8 @@ pub enum FreqError {
     OutOfRange { target: Freq, min: Freq, max: Freq },
     #[error("target {target} not on the {step_mhz}MHz step grid")]
     OffGrid { target: Freq, step_mhz: u64 },
+    #[error("DFS actuator stuck (injected fault) until {until} ps")]
+    ActuatorStuck { until: Ps },
 }
 
 #[cfg(test)]
@@ -312,6 +330,25 @@ mod tests {
         assert_eq!(d.pending_retime(), Some(eff));
         d.edge_delivered(eff);
         assert_eq!(d.pending_retime(), None);
+    }
+
+    #[test]
+    fn stuck_actuator_rejects_requests_inside_window() {
+        let mut d = ClockDomain::dfs(
+            IslandId(1),
+            "a1",
+            Freq::mhz(50),
+            Freq::mhz(10),
+            Freq::mhz(50),
+            5,
+        );
+        d.add_stuck_windows(&[(1_000, 2_000)]);
+        assert!(d.request_freq(Freq::mhz(30), 500).is_ok());
+        assert!(matches!(
+            d.request_freq(Freq::mhz(20), 1_500),
+            Err(FreqError::ActuatorStuck { until: 2_000 })
+        ));
+        assert!(d.request_freq(Freq::mhz(20), 2_000).is_ok(), "window is half-open");
     }
 
     #[test]

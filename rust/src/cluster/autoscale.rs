@@ -7,6 +7,7 @@
 //! draining). Keeping the decision pure makes it unit-testable without
 //! a fleet.
 
+use crate::fault::HealthSpec;
 use crate::util::{Percentiles, Ps};
 
 use super::spec::AutoscaleSpec;
@@ -111,6 +112,63 @@ impl Autoscaler {
     }
 }
 
+/// Per-slot health-check state for the cluster engine: a slot is
+/// *wedged* when a sample window closes with a non-empty backlog and
+/// zero new completions; [`HealthSpec::evict_after`] consecutive wedged
+/// windows trigger eviction. Pure decisions, like [`Autoscaler`] — the
+/// engine realizes them (requeue the queue, drop the session, activate
+/// a warm standby).
+#[derive(Debug, Clone)]
+pub struct HealthMonitor {
+    spec: HealthSpec,
+    /// Cumulative completions per slot at the previous health sample
+    /// (for the current activation).
+    last_completed: Vec<u64>,
+    /// Consecutive wedged windows per slot.
+    streaks: Vec<u32>,
+}
+
+impl HealthMonitor {
+    pub fn new(spec: HealthSpec, slots: usize) -> Self {
+        Self {
+            spec,
+            last_completed: vec![0; slots],
+            streaks: vec![0; slots],
+        }
+    }
+
+    /// Judge one sample window for an active `slot`. Returns `true`
+    /// when the wedged streak reaches the eviction threshold (and
+    /// resets it — the engine evicts exactly once per trigger).
+    pub fn observe(&mut self, slot: usize, backlog: usize, completed: u64) -> bool {
+        let wedged = backlog > 0 && completed == self.last_completed[slot];
+        self.last_completed[slot] = completed;
+        if !wedged {
+            self.streaks[slot] = 0;
+            return false;
+        }
+        self.streaks[slot] += 1;
+        if self.spec.evict_after > 0 && self.streaks[slot] >= self.spec.evict_after {
+            self.streaks[slot] = 0;
+            return true;
+        }
+        false
+    }
+
+    /// Forget a slot's history (crashed, evicted, or reactivated — its
+    /// completion counter restarts with the new activation).
+    pub fn reset(&mut self, slot: usize) {
+        self.streaks[slot] = 0;
+        self.last_completed[slot] = 0;
+    }
+
+    /// Whether crashed/evicted replicas should be replaced from warm
+    /// standby.
+    pub fn replace(&self) -> bool {
+        self.spec.replace
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -181,6 +239,34 @@ mod tests {
         assert_eq!(a.decide(2, 2.0), ScaleDecision::Hold);
         // Empty window + empty queue is calm.
         assert_eq!(a.decide(2, 0.0), ScaleDecision::Down);
+    }
+
+    #[test]
+    fn health_monitor_needs_consecutive_wedged_windows() {
+        let mut h = HealthMonitor::new(HealthSpec::new().evict_after(3), 2);
+        // Progress (completions advanced) always resets the streak.
+        assert!(!h.observe(0, 5, 10));
+        assert!(!h.observe(0, 5, 10), "wedged x1");
+        assert!(!h.observe(0, 5, 12), "progress resets");
+        assert!(!h.observe(0, 5, 12));
+        assert!(!h.observe(0, 5, 12));
+        assert!(h.observe(0, 5, 12), "third consecutive wedged window evicts");
+        assert!(!h.observe(0, 5, 12), "trigger resets the streak");
+        // An empty backlog is never wedged, and slots are independent.
+        for _ in 0..10 {
+            assert!(!h.observe(1, 0, 0));
+        }
+    }
+
+    #[test]
+    fn health_monitor_evict_after_zero_never_evicts() {
+        let mut h = HealthMonitor::new(HealthSpec::new().evict_after(0), 1);
+        for _ in 0..20 {
+            assert!(!h.observe(0, 9, 0));
+        }
+        assert!(h.replace());
+        h.reset(0);
+        assert!(!h.observe(0, 9, 0));
     }
 
     #[test]

@@ -49,23 +49,32 @@
 //! [`ClusterSpec`] + config reproduces a bit-identical
 //! [`ClusterReport`] for every thread count.
 
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
 use std::sync::{Mutex, MutexGuard};
 
 use crate::config::SocConfig;
+use crate::fault::{CompFault, FaultLedger, ResolvedPlan};
 use crate::monitor::TimeSeries;
 use crate::policy::DfsPolicy;
 use crate::scenario::set::{resolve_threads, with_round_pool, RoundPool};
 use crate::scenario::{Session, SocSnapshot};
-use crate::serve::dispatch::{DispatchPolicy, Dispatcher};
+use crate::serve::dispatch::{DispatchPolicy, Dispatcher, Req};
 use crate::serve::engine::{prepare_serve_tiles, resolve_tiles, tile_queues};
 use crate::serve::governor::QueueGovernor;
 use crate::serve::report::LatencyStats;
 use crate::serve::ServeSpec;
 use crate::util::{Percentiles, Ps};
 
-use super::autoscale::{Autoscaler, ScaleDecision};
+use super::autoscale::{Autoscaler, HealthMonitor, ScaleDecision};
 use super::report::{ClusterReport, ReplicaReport};
 use super::spec::ClusterSpec;
+
+/// A pending admission retry: `(due, original arrival, attempt,
+/// readmit)`, all in cluster time. `readmit` marks a request that was
+/// already admitted once (its replica crashed or was evicted) so the
+/// fleet-level `admitted` counter isn't double-incremented.
+type Retry = Reverse<(Ps, Ps, u32, bool)>;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 enum SlotState {
@@ -75,6 +84,10 @@ enum SlotState {
     Draining,
     /// No live SoC; costs nothing until reactivated from the warm base.
     Standby,
+    /// Crashed by an injected fault: session gone, in-flight work
+    /// requeued or lost. Invisible to the balancer; becomes standby
+    /// when a health check notices (no health checks = dead forever).
+    Failed,
 }
 
 /// One worker assignment for a barrier round, parked on its replica.
@@ -111,6 +124,12 @@ struct Replica {
     /// hasn't advanced past this can't have completed anything new, so
     /// the O(tiles) gate peek is skipped.
     drained_at: Ps,
+    /// Cluster time this slot entered [`SlotState::Draining`] (for the
+    /// drain deadline).
+    draining_since: Ps,
+    /// Completions of retried requests (attempt > 0) — summed into the
+    /// fleet [`FaultLedger`] at the end.
+    rescued: u64,
     /// Work parked for the next pool round (taken by a worker).
     task: Option<Task>,
     // Counters carried over from finished activations (live ones are on
@@ -124,7 +143,10 @@ struct Replica {
 }
 
 fn lock(m: &Mutex<Replica>) -> MutexGuard<'_, Replica> {
-    m.lock().expect("replica mutex poisoned")
+    // A poisoned mutex means a worker panicked mid-round; the panic
+    // itself already unwound through the pool, so recover the guard
+    // rather than turning the report path into a second panic.
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
 }
 
 impl Replica {
@@ -202,12 +224,17 @@ impl Replica {
                 }
             }
             for &t_local in scratch.iter() {
-                let Some(t_arr) = self.disp.complete(ti) else {
+                let Some(req) = self.disp.complete_req(ti) else {
                     debug_assert!(false, "completion without an outstanding request");
                     continue;
                 };
                 let t_c = self.cluster_base + (t_local - self.local_base);
-                let lat = t_c - t_arr;
+                // `extra` folds earlier attempts' wait back in, so the
+                // latency spans the original arrival (zero fault-free).
+                let lat = t_c - req.t_arr + req.extra;
+                if req.attempt > 0 {
+                    self.rescued += 1;
+                }
                 self.latencies.push(lat as f64);
                 if let Some(slo) = slo {
                     if lat <= slo {
@@ -281,7 +308,7 @@ fn activate(
     slot.disp = Dispatcher::new(
         spec.policy,
         spec.queue_capacity,
-        tile_queues(&session, tiles),
+        tile_queues(&session, tiles)?,
     );
     slot.governor = spec
         .governor
@@ -294,8 +321,90 @@ fn activate(
     slot.state = SlotState::Active;
     slot.session = Some(session);
     slot.drained_at = 0;
+    slot.draining_since = 0;
     slot.task = None;
     Ok(())
+}
+
+/// Install the fault plan's still-relevant windows for fleet slot
+/// `slot` on a freshly activated replica, translated from cluster time
+/// to this activation's local clock. Windows already fully past are
+/// skipped; one straddling the activation instant is clipped to its
+/// remainder — the replica rejoins the same wall-clock fault schedule
+/// every other replica sees, regardless of when it was (re)activated.
+fn install_slot_faults(rep: &mut Replica, plan: &ResolvedPlan, slot: usize) -> crate::Result<()> {
+    if plan.comps.is_empty() {
+        return Ok(());
+    }
+    let tc = rep.cluster_base;
+    let local_base = rep.local_base;
+    let session = rep.session.as_mut().expect("just activated");
+    for f in plan.for_replica(slot) {
+        let windows: Vec<(Ps, Ps)> = f
+            .windows
+            .iter()
+            .filter(|&&(_, e)| e > tc)
+            .map(|&(s, e)| (s.max(tc) - tc, e - tc))
+            .collect();
+        if windows.is_empty() {
+            continue;
+        }
+        let clipped = CompFault {
+            replica: f.replica,
+            target: f.target,
+            windows,
+        };
+        session.soc_mut().install_fault(&clipped, local_base)?;
+    }
+    Ok(())
+}
+
+/// Kill a live replica at cluster time `tc`: roll its activation
+/// counters exactly like a retirement, then requeue (with retry) or
+/// lose its in-flight requests and drop the session. Shared by
+/// injected crashes, health evictions, and drain-deadline
+/// force-retires; the caller sets the final [`SlotState`]. Returns the
+/// number of requests lost for good (not requeued).
+fn kill_replica(
+    rep: &mut Replica,
+    spec: &ServeSpec,
+    tc: Ps,
+    retries: &mut BinaryHeap<Retry>,
+    ledger: &mut FaultLedger,
+) -> u64 {
+    rep.active_ps += tc - rep.activated_at;
+    rep.done_admitted += rep.disp.tiles.iter().map(|q| q.admitted).sum::<u64>();
+    rep.done_completed += rep.disp.tiles.iter().map(|q| q.completed).sum::<u64>();
+    rep.done_dropped += rep.disp.dropped;
+    let mut lost = 0u64;
+    let reqs: Vec<Req> = rep
+        .disp
+        .tiles
+        .iter_mut()
+        .flat_map(|q| q.in_flight.drain(..))
+        .collect();
+    for req in reqs {
+        let orig = req.t_arr - req.extra;
+        match spec
+            .retry
+            .as_ref()
+            .and_then(|rs| rs.next_retry(tc, orig, req.attempt))
+        {
+            Some(at) => {
+                ledger.retried += 1;
+                retries.push(Reverse((at, orig, req.attempt + 1, true)));
+            }
+            None => {
+                ledger.lost += 1;
+                lost += 1;
+            }
+        }
+    }
+    rep.disp = Dispatcher::new(spec.policy, spec.queue_capacity, Vec::new());
+    rep.governor = None;
+    rep.session = None;
+    rep.task = None;
+    lost
 }
 
 /// The front-end balancer: pick an active replica with queue space, or
@@ -361,6 +470,19 @@ struct ClusterEngine<'a> {
     /// through the pool).
     err: &'a Mutex<Option<anyhow::Error>>,
     scaler: Option<Autoscaler>,
+    /// Resolved fault plan: component windows install at activation,
+    /// crashes apply coordinator-side at their barrier instants.
+    plan: &'a ResolvedPlan,
+    /// Next unapplied entry of `plan.crashes`.
+    next_crash: usize,
+    health: Option<HealthMonitor>,
+    /// Fleet size the resilience layer restores toward after a
+    /// crash/eviction: tracks the autoscaler's realized actions, or
+    /// stays at the initial active count without one.
+    desired_active: usize,
+    /// Pending admission retries (min-heap on due time).
+    retries: BinaryHeap<Retry>,
+    ledger: FaultLedger,
     arrivals: Vec<Ps>,
     next_arr: usize,
     admitted: u64,
@@ -384,10 +506,16 @@ impl ClusterEngine<'_> {
         // A round-robin front end that never sees a full replica is a
         // pure modular function of the arrival index — wide spans
         // replay it per slot. Autoscaling changes slot eligibility at
-        // arbitrary barriers, so it forces narrow mode.
+        // arbitrary barriers, so it forces narrow mode — as does the
+        // whole fault/resilience layer (crashes, retries, and health
+        // checks all touch slot eligibility at coordinator barriers).
         let wide_ok = pool.is_some()
             && self.cspec.balancer == DispatchPolicy::RoundRobin
-            && self.cspec.autoscale.is_none();
+            && self.cspec.autoscale.is_none()
+            && self.cspec.health.is_none()
+            && self.spec.retry.is_none()
+            && self.plan.comps.is_empty()
+            && self.plan.crashes.is_empty();
         loop {
             let slots = self.slots;
             let mut pending = 0usize;
@@ -402,7 +530,9 @@ impl ClusterEngine<'_> {
                 || (self.tc >= self.duration
                     && next_arrival.is_none()
                     && pending == 0
-                    && !draining)
+                    && !draining
+                    && self.retries.is_empty()
+                    && self.next_crash >= self.plan.crashes.len())
             {
                 break;
             }
@@ -417,15 +547,103 @@ impl ClusterEngine<'_> {
 
             // Narrow barrier: the serial reference choreography, with
             // step 1 (advance) optionally fanned across the pool.
+            // Injected crash instants and retry due times bound the
+            // barrier target so both apply at their exact cluster time
+            // on every thread count.
             let mut target = self.next_sample.min(self.deadline);
             if let Some(a) = next_arrival {
                 target = target.min(a);
             }
+            if let Some(&(t, _)) = self.plan.crashes.get(self.next_crash) {
+                target = target.min(t);
+            }
+            if let Some(Reverse((t, _, _, _))) = self.retries.peek() {
+                target = target.min(*t);
+            }
             let target = target.max(self.tc);
             self.narrow_barrier(pool, target)?;
+            self.apply_crashes();
             self.retire_drained()?;
+            self.admit_retries()?;
             self.admit_due()?;
             self.sample()?;
+        }
+        Ok(())
+    }
+
+    /// Apply every injected replica crash due at the current cluster
+    /// time: the slot's SoC dies with its in-flight work (requeued
+    /// through the retry path when one is configured, lost otherwise).
+    /// Detection is the health check's job — without one the slot is
+    /// simply dead for the rest of the run.
+    fn apply_crashes(&mut self) {
+        let slots = self.slots;
+        while let Some(&(at, si)) = self.plan.crashes.get(self.next_crash) {
+            if at > self.tc {
+                break;
+            }
+            self.next_crash += 1;
+            let mut s = lock(&slots[si]);
+            if s.session.is_none() {
+                continue; // already standby/failed: nothing to kill
+            }
+            kill_replica(&mut s, self.spec, self.tc, &mut self.retries, &mut self.ledger);
+            s.state = SlotState::Failed;
+        }
+    }
+
+    /// Admit due retries through the balancer (older requests go before
+    /// this barrier's fresh arrivals). A retry that finds the fleet
+    /// full backs off again; one past its deadline or out of attempts
+    /// is lost.
+    fn admit_retries(&mut self) -> crate::Result<()> {
+        if self.retries.is_empty() {
+            return Ok(());
+        }
+        let spec = self.spec;
+        let rs = spec.retry.as_ref().expect("retries exist only with a retry policy");
+        let slots = self.slots;
+        while self.retries.peek().is_some_and(|Reverse((t, _, _, _))| *t <= self.tc) {
+            let Reverse((t_due, orig, attempt, readmit)) = self.retries.pop().expect("peeked");
+            if rs.expired(self.tc, orig) {
+                self.ledger.detected += 1;
+                self.ledger.lost += 1;
+                if !readmit {
+                    self.spilled += 1;
+                }
+                continue;
+            }
+            match pick_slot(self.cspec.balancer, slots, &mut self.rr_cursor, self.tc) {
+                Some(si) => {
+                    let mut s = lock(&slots[si]);
+                    let local_now = s.to_local(self.tc);
+                    let rep = &mut *s;
+                    let session =
+                        rep.session.as_mut().expect("active slot has a live session");
+                    let ti = rep
+                        .disp
+                        .pick(session.soc(), local_now)
+                        .expect("picked replica has queue space");
+                    rep.disp.bind_attempt(ti, t_due, t_due - orig, attempt);
+                    let tile = rep.disp.tiles[ti].tile;
+                    session.soc_mut().try_mra_mut(tile)?.serve_grant(1);
+                    if !readmit {
+                        self.admitted += 1;
+                    }
+                }
+                None => match rs.next_retry(self.tc, orig, attempt) {
+                    Some(at) => {
+                        self.ledger.retried += 1;
+                        self.retries.push(Reverse((at, orig, attempt + 1, readmit)));
+                    }
+                    None => {
+                        self.ledger.lost += 1;
+                        if !readmit {
+                            self.spilled += 1;
+                        }
+                    }
+                },
+            }
         }
         Ok(())
     }
@@ -443,7 +661,12 @@ impl ClusterEngine<'_> {
                 }
             }
         }
-        if let Some(e) = self.err.lock().expect("error slot poisoned").take() {
+        if let Some(e) = self
+            .err
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner)
+            .take()
+        {
             return Err(e);
         }
         Ok(())
@@ -518,11 +741,40 @@ impl ClusterEngine<'_> {
 
     /// Step 3: drained replicas retire to standby — queue empty and
     /// every pipeline idle. Their session is dropped; a standby replica
-    /// costs nothing until the warm base revives it.
+    /// costs nothing until the warm base revives it. With a
+    /// [`ClusterSpec::drain_deadline`], a replica that still holds a
+    /// backlog past the deadline is *force-retired* — its queue drops
+    /// (counted on the replica, requeued when a retry policy exists) —
+    /// so a wedged replica can never block scale-down forever.
     fn retire_drained(&mut self) -> crate::Result<()> {
-        for m in self.slots {
+        for (i, m) in self.slots.iter().enumerate() {
             let mut s = lock(m);
-            if s.state != SlotState::Draining || s.disp.backlog > 0 {
+            if s.state != SlotState::Draining {
+                continue;
+            }
+            if s.disp.backlog > 0 {
+                let overdue = self
+                    .cspec
+                    .drain_deadline
+                    .is_some_and(|d| self.tc >= s.draining_since.saturating_add(d));
+                if overdue {
+                    let lost = kill_replica(
+                        &mut s,
+                        self.spec,
+                        self.tc,
+                        &mut self.retries,
+                        &mut self.ledger,
+                    );
+                    // Force-dropped requests are an explicit decision,
+                    // so they count as replica drops, unlike crash
+                    // losses (which surface as `unfinished`).
+                    s.done_dropped += lost;
+                    self.ledger.evicted += 1;
+                    s.state = SlotState::Standby;
+                    if let Some(h) = &mut self.health {
+                        h.reset(i);
+                    }
+                }
                 continue;
             }
             let idle = s
@@ -568,7 +820,25 @@ impl ClusterEngine<'_> {
                     session.soc_mut().try_mra_mut(tile)?.serve_grant(1);
                     self.admitted += 1;
                 }
-                None => self.spilled += 1,
+                None => {
+                    // With a retry policy a front-end spill backs off
+                    // instead of being final; it only counts as spilled
+                    // once attempts or the deadline run out.
+                    let retry =
+                        self.spec.retry.as_ref().and_then(|rs| rs.next_retry(self.tc, t_arr, 0));
+                    match retry {
+                        Some(at) => {
+                            self.ledger.retried += 1;
+                            self.retries.push(Reverse((at, t_arr, 1, false)));
+                        }
+                        None => {
+                            self.spilled += 1;
+                            if self.spec.retry.is_some() {
+                                self.ledger.lost += 1;
+                            }
+                        }
+                    }
+                }
             }
         }
         Ok(())
@@ -589,7 +859,7 @@ impl ClusterEngine<'_> {
             let state = match s.state {
                 SlotState::Active => 1.0,
                 SlotState::Draining => 0.5,
-                SlotState::Standby => 0.0,
+                SlotState::Standby | SlotState::Failed => 0.0,
             };
             s.active_state.push(tc, state);
             let isl = s.disp.tiles.first().map(|q| q.island);
@@ -604,6 +874,66 @@ impl ClusterEngine<'_> {
                     }
                 }
                 _ => rep.freq_mhz.push(tc, 0.0),
+            }
+        }
+        // Health checks ride the sample cadence: notice crashed slots,
+        // evict wedged ones (backlog held with zero completions for
+        // `evict_after` consecutive windows), then restore the fleet to
+        // its desired size from warm standby.
+        if self.health.is_some() {
+            for (i, m) in slots.iter().enumerate() {
+                let mut s = lock(m);
+                match s.state {
+                    SlotState::Failed => {
+                        // The probe notices the dead replica; its slot
+                        // becomes schedulable standby capacity again.
+                        self.ledger.detected += 1;
+                        s.state = SlotState::Standby;
+                        self.health.as_mut().expect("checked").reset(i);
+                    }
+                    SlotState::Active => {
+                        let completed: u64 =
+                            s.disp.tiles.iter().map(|q| q.completed).sum();
+                        let backlog = s.disp.backlog;
+                        let h = self.health.as_mut().expect("checked");
+                        if h.observe(i, backlog, completed) {
+                            self.ledger.detected += 1;
+                            self.ledger.evicted += 1;
+                            kill_replica(
+                                &mut s,
+                                self.spec,
+                                tc,
+                                &mut self.retries,
+                                &mut self.ledger,
+                            );
+                            s.state = SlotState::Standby;
+                            h.reset(i);
+                        }
+                    }
+                    _ => {}
+                }
+            }
+            if self.health.as_ref().expect("checked").replace() && tc < self.duration {
+                loop {
+                    let active = slots
+                        .iter()
+                        .filter(|m| lock(m).state == SlotState::Active)
+                        .count();
+                    if active >= self.desired_active {
+                        break;
+                    }
+                    let Some(i) = slots
+                        .iter()
+                        .position(|m| lock(m).state == SlotState::Standby)
+                    else {
+                        break;
+                    };
+                    let mut s = lock(&slots[i]);
+                    activate(&mut s, self.snap, self.spec, self.tiles, tc)?;
+                    install_slot_faults(&mut s, self.plan, i)?;
+                    self.health.as_mut().expect("checked").reset(i);
+                    self.ledger.failed_over += 1;
+                }
             }
         }
         let active = slots
@@ -644,7 +974,12 @@ impl ClusterEngine<'_> {
                             s.state = SlotState::Active;
                         } else {
                             activate(&mut s, self.snap, self.spec, self.tiles, tc)?;
+                            install_slot_faults(&mut s, self.plan, i)?;
+                            if let Some(h) = &mut self.health {
+                                h.reset(i);
+                            }
                         }
+                        self.desired_active = active + 1;
                         a.record(tc, active + 1);
                     }
                 }
@@ -662,7 +997,10 @@ impl ClusterEngine<'_> {
                         .min()
                         .map(|(_, _, i)| i);
                     if let Some(i) = victim {
-                        lock(&slots[i]).state = SlotState::Draining;
+                        let mut s = lock(&slots[i]);
+                        s.state = SlotState::Draining;
+                        s.draining_since = tc;
+                        self.desired_active = active - 1;
                         a.record(tc, active - 1);
                     }
                 }
@@ -682,6 +1020,10 @@ impl ClusterEngine<'_> {
 pub fn serve_cluster(cfg: SocConfig, cspec: &ClusterSpec) -> crate::Result<ClusterReport> {
     cspec.validate()?;
     let spec = &cspec.spec;
+    // Resolve the fault plan once against fleet size: component windows
+    // install at each activation, crashes apply at their barrier
+    // instants. An empty plan resolves to nothing and costs nothing.
+    let plan = spec.faults.compile(spec.duration, cspec.replicas)?;
 
     // Warm base: build, stage, gate, and settle one session, then
     // snapshot it. Every activation forks this (the engine mode and any
@@ -728,6 +1070,8 @@ pub fn serve_cluster(cfg: SocConfig, cspec: &ClusterSpec) -> crate::Result<Clust
                 latencies: Vec::new(),
                 within_slo: 0,
                 drained_at: 0,
+                draining_since: 0,
+                rescued: 0,
                 task: None,
                 done_admitted: 0,
                 done_completed: 0,
@@ -738,8 +1082,10 @@ pub fn serve_cluster(cfg: SocConfig, cspec: &ClusterSpec) -> crate::Result<Clust
             })
         })
         .collect();
-    for m in slots.iter().take(initial_active) {
-        activate(&mut lock(m), &snap, spec, &tiles, 0)?;
+    for (i, m) in slots.iter().enumerate().take(initial_active) {
+        let mut s = lock(m);
+        activate(&mut s, &snap, spec, &tiles, 0)?;
+        install_slot_faults(&mut s, &plan, i)?;
     }
 
     // The cluster-level arrival schedule: exactly what a lone SoC would
@@ -765,6 +1111,18 @@ pub fn serve_cluster(cfg: SocConfig, cspec: &ClusterSpec) -> crate::Result<Clust
         slots: &slots,
         err: &err,
         scaler,
+        plan: &plan,
+        next_crash: 0,
+        health: cspec
+            .health
+            .clone()
+            .map(|h| HealthMonitor::new(h, cspec.replicas)),
+        desired_active: initial_active,
+        retries: BinaryHeap::new(),
+        ledger: FaultLedger {
+            injected: plan.injected,
+            ..FaultLedger::default()
+        },
         arrivals,
         next_arr: 0,
         admitted: 0,
@@ -791,9 +1149,13 @@ pub fn serve_cluster(cfg: SocConfig, cspec: &ClusterSpec) -> crate::Result<Clust
         let work = move |wid: usize, k: usize| {
             let mut rep = lock(&slots_ref[k]);
             let Some(task) = rep.task.take() else { return };
-            let mut scratch = scratches[wid].lock().expect("scratch buffer poisoned");
+            let mut scratch = scratches[wid]
+                .lock()
+                .unwrap_or_else(std::sync::PoisonError::into_inner);
             if let Err(e) = run_task(&mut rep, task, slo, &mut scratch) {
-                let mut first = err_ref.lock().expect("error slot poisoned");
+                let mut first = err_ref
+                    .lock()
+                    .unwrap_or_else(std::sync::PoisonError::into_inner);
                 if first.is_none() {
                     *first = Some(e);
                 }
@@ -802,12 +1164,23 @@ pub fn serve_cluster(cfg: SocConfig, cspec: &ClusterSpec) -> crate::Result<Clust
         with_round_pool(workers, work, |pool| eng.run(Some(pool)))?;
     }
 
+    // Requests still parked on the retry heap at the hard deadline never
+    // completed: they count as lost (and as fleet spills unless they
+    // were admitted once before their replica died).
+    while let Some(Reverse((_, _, _, readmit))) = eng.retries.pop() {
+        eng.ledger.lost += 1;
+        if !readmit {
+            eng.spilled += 1;
+        }
+    }
+
     let ClusterEngine {
         scaler,
         admitted,
         spilled,
         tc,
         active_series,
+        mut ledger,
         ..
     } = eng;
 
@@ -821,7 +1194,8 @@ pub fn serve_cluster(cfg: SocConfig, cspec: &ClusterSpec) -> crate::Result<Clust
                 session.soc_mut().try_mra_mut(t)?.serve_end();
             }
         }
-        if rep.state != SlotState::Standby {
+        // A killed slot already rolled its span in `kill_replica`.
+        if !matches!(rep.state, SlotState::Standby | SlotState::Failed) {
             rep.active_ps += tc - rep.activated_at;
         }
     }
@@ -840,11 +1214,12 @@ pub fn serve_cluster(cfg: SocConfig, cspec: &ClusterSpec) -> crate::Result<Clust
     let replica_seconds =
         slots.iter().map(|m| lock(m).active_ps).sum::<Ps>() as f64 / 1e12;
     for (i, m) in slots.into_iter().enumerate() {
-        let slot = m.into_inner().expect("replica mutex poisoned");
+        let slot = m.into_inner().unwrap_or_else(std::sync::PoisonError::into_inner);
         let p = Percentiles::from_samples(&slot.latencies)?;
         merged = merged.merge(&p);
         completed += slot.latencies.len() as u64;
         within_slo += slot.within_slo;
+        ledger.rescued += slot.rescued;
         let live_admitted: u64 = slot.disp.tiles.iter().map(|q| q.admitted).sum();
         let live_completed: u64 = slot.disp.tiles.iter().map(|q| q.completed).sum();
         let unfinished: u64 = slot.disp.tiles.iter().map(|q| q.in_flight.len() as u64).sum();
@@ -898,5 +1273,6 @@ pub fn serve_cluster(cfg: SocConfig, cspec: &ClusterSpec) -> crate::Result<Clust
         replica_seconds,
         autoscale_actions: scaler.map(|a| a.actions).unwrap_or_default(),
         final_active,
+        faults: ledger,
     })
 }

@@ -53,7 +53,7 @@ pub mod engine;
 pub mod report;
 pub mod spec;
 
-pub use autoscale::{Autoscaler, ScaleDecision};
+pub use autoscale::{Autoscaler, HealthMonitor, ScaleDecision};
 pub use engine::serve_cluster;
 pub use report::{ClusterReport, ReplicaReport};
 pub use spec::{AutoscaleSpec, ClusterSpec};

@@ -1,5 +1,6 @@
 //! [`ClusterSpec`]: one serving workload across a fleet of SoC replicas.
 
+use crate::fault::HealthSpec;
 use crate::serve::{Arrival, DispatchPolicy, ServeSpec};
 use crate::sim::EngineMode;
 use crate::util::Ps;
@@ -106,6 +107,16 @@ pub struct ClusterSpec {
     /// replica inherits the schedule through the snapshot fork, so a
     /// mid-run retune hits each activation at the same local offset.
     pub freq_schedule: Vec<(Ps, usize, u64)>,
+    /// Optional health checks on the sample cadence: evict wedged
+    /// replicas and replace crashed/evicted ones from warm standby
+    /// (see [`HealthSpec`]). `None` = no resilience, bit-identical to
+    /// the pre-fault engine.
+    pub health: Option<HealthSpec>,
+    /// Maximum time a draining replica may hold a non-empty queue
+    /// before it is force-retired with its queue dropped (counted on
+    /// the replica). `None` = drain forever — a wedged replica then
+    /// blocks scale-down indefinitely.
+    pub drain_deadline: Option<Ps>,
 }
 
 impl ClusterSpec {
@@ -118,7 +129,22 @@ impl ClusterSpec {
             engine: EngineMode::default(),
             threads: 1,
             freq_schedule: Vec::new(),
+            health: None,
+            drain_deadline: None,
         }
+    }
+
+    /// Enable health-check-driven eviction + warm-standby replacement.
+    pub fn health(mut self, spec: HealthSpec) -> Self {
+        self.health = Some(spec);
+        self
+    }
+
+    /// Bound how long a draining replica may hold a non-empty queue
+    /// before being force-retired (queue dropped, counted).
+    pub fn drain_deadline(mut self, d: Ps) -> Self {
+        self.drain_deadline = Some(d);
+        self
     }
 
     pub fn balancer(mut self, policy: DispatchPolicy) -> Self {
@@ -182,6 +208,10 @@ impl ClusterSpec {
                 "cluster: autoscaling needs an SLO to judge against (set spec.slo)"
             );
         }
+        anyhow::ensure!(
+            self.drain_deadline.is_none_or(|d| d > 0),
+            "cluster: drain_deadline must be positive when set"
+        );
         Ok(())
     }
 }

@@ -31,6 +31,7 @@ use std::sync::{Mutex, OnceLock};
 use crate::clock::domain::FreqError;
 use crate::cluster::{serve_cluster, AutoscaleSpec, ClusterSpec};
 use crate::config::presets::ISL_NOC;
+use crate::fault::HealthSpec;
 use crate::resources::{mra_area, AccelArea, Utilization, XC7V2000T};
 use crate::scenario::{ScenarioSet, ScenarioSpec, Session, SocSnapshot};
 use crate::serve::{DispatchPolicy, ServeSpec};
@@ -76,6 +77,27 @@ pub enum Objective {
         /// `0` = all cores, `1` = serial.
         /// Reports are bit-identical for every value, so this does NOT
         /// key the memo fingerprint.
+        threads: usize,
+    },
+    /// Resilience: every design point serves `serve`'s arrivals as a
+    /// `fleet`-replica cluster *while the spec's fault plan runs*
+    /// (`serve.faults` + `serve.retry`, plus cluster-side health
+    /// checks), and is ranked by p99-under-SLO
+    /// ([`rank_by_p99_under_slo`]) — the design that rides through the
+    /// fault schedule with the best tail wins. Always evaluates cold,
+    /// like the other serving objectives.
+    Robust {
+        /// Serving phase (with its fault plan and retry policy) run at
+        /// every point; `tiles` is overridden per point.
+        serve: ServeSpec,
+        /// Front-end balancer across replicas.
+        balancer: DispatchPolicy,
+        /// Health-check policy (eviction + warm-standby replacement).
+        health: HealthSpec,
+        /// Fleet size each point is evaluated at.
+        fleet: usize,
+        /// Worker threads per cluster; bit-identical reports, so NOT in
+        /// the memo fingerprint.
         threads: usize,
     },
 }
@@ -248,6 +270,13 @@ fn objective_fingerprint(objective: &Objective) -> String {
             fleets: _,
             threads: _,
         } => format!("cluster:{serve:?}/{balancer:?}/{autoscale:?}"),
+        Objective::Robust {
+            serve,
+            balancer,
+            health,
+            fleet,
+            threads: _,
+        } => format!("robust:{serve:?}/{balancer:?}/{health:?}/fleet={fleet}"),
     }
 }
 
@@ -287,24 +316,32 @@ fn memo_key(
     ))
 }
 
+/// The memo only ever holds fully-evaluated points, so a panic while
+/// some *other* thread held the lock cannot leave a half-written entry
+/// — recover from poisoning instead of cascading the panic into every
+/// later sweep in the process.
+fn memo_lock() -> std::sync::MutexGuard<'static, HashMap<MemoKey, DsePoint>> {
+    memo().lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
 fn memo_get(key: &MemoKey) -> Option<DsePoint> {
-    memo().lock().expect("dse memo poisoned").get(key).cloned()
+    memo_lock().get(key).cloned()
 }
 
 fn memo_put(key: MemoKey, pt: &DsePoint) {
-    memo().lock().expect("dse memo poisoned").insert(key, pt.clone());
+    memo_lock().insert(key, pt.clone());
 }
 
 /// Number of memoized design points in this process.
 pub fn memo_len() -> usize {
-    memo().lock().expect("dse memo poisoned").len()
+    memo_lock().len()
 }
 
 /// Drop every memoized design point (benches do this between timed
 /// runs; sweeps after a simulator change in the same process should
 /// too).
 pub fn clear_memo() {
-    memo().lock().expect("dse memo poisoned").clear();
+    memo_lock().clear();
 }
 
 // ---------------------------------------------------------------------
@@ -383,6 +420,43 @@ pub fn evaluate_point_cluster(
         a.min_replicas = a.min_replicas.clamp(1, fleet.max(1));
         cspec = cspec.autoscale(a);
     }
+    let report = serve_cluster(cfg, &cspec)?;
+
+    let timing = AccelTiming::lookup(&spec.accel)?;
+    let dur_s = report.duration as f64 / 1e12;
+    let throughput_mbs =
+        report.completed as f64 * timing.credit_bytes as f64 / 1e6 / dur_s;
+    let mut pt = point_from_report(spec, 0, report.elapsed, throughput_mbs)?;
+    pt.p99_latency_ps = (report.completed > 0).then_some(report.latency.p99_ps);
+    pt.achieved_rps = Some(report.achieved_rps);
+    pt.slo_met = report.slo_met;
+    pt.fleet = Some(fleet);
+    pt.replica_seconds = Some(report.replica_seconds);
+    Ok(pt)
+}
+
+/// Evaluate one design point under [`Objective::Robust`]: a
+/// `fleet`-replica cluster serves `serve`'s arrivals with the spec's
+/// fault plan injected and the full resilience stack on (admission
+/// retry from `serve.retry`, cluster health checks from `health`).
+/// Scored like a cluster point — p99, achieved rps, SLO,
+/// replica-seconds.
+pub fn evaluate_point_robust(
+    spec: &ScenarioSpec,
+    serve: &ServeSpec,
+    balancer: DispatchPolicy,
+    health: &HealthSpec,
+    fleet: usize,
+    threads: usize,
+) -> crate::Result<DsePoint> {
+    let cfg = spec.to_config()?;
+    let pos = spec.position();
+    let mut sspec = serve.clone();
+    sspec.tiles = vec![cfg.node_of(pos.0, pos.1)];
+    let cspec = ClusterSpec::new(fleet, sspec)
+        .balancer(balancer)
+        .health(health.clone())
+        .threads(threads);
     let report = serve_cluster(cfg, &cspec)?;
 
     let timing = AccelTiming::lookup(&spec.accel)?;
@@ -607,10 +681,14 @@ fn sweep_warm_fork(specs: &[ScenarioSpec], threads: usize) -> crate::Result<Vec<
     for (i, pt) in evaluated {
         out[i] = Some(pt);
     }
-    Ok(out
-        .into_iter()
-        .map(|pt| pt.expect("every spec index is memoized or evaluated"))
-        .collect())
+    out.into_iter()
+        .enumerate()
+        .map(|(i, pt)| {
+            pt.ok_or_else(|| {
+                anyhow::anyhow!("warm-fork sweep lost point {i}: neither memoized nor evaluated")
+            })
+        })
+        .collect()
 }
 
 // ---------------------------------------------------------------------
@@ -642,6 +720,24 @@ pub fn sweep_replication(p: &SweepParams) -> crate::Result<Vec<DsePoint>> {
                 Ok(pt)
             })
         }
+        (
+            Objective::Robust {
+                serve,
+                balancer,
+                health,
+                fleet,
+                threads,
+            },
+            _,
+        ) => ScenarioSet::new(specs).run_with_threads(p.threads, |spec| {
+            let key = memo_key(spec, SweepMode::Cold, &p.objective)?;
+            if let Some(hit) = memo_get(&key) {
+                return Ok(hit);
+            }
+            let pt = evaluate_point_robust(spec, serve, *balancer, health, *fleet, *threads)?;
+            memo_put(key, &pt);
+            Ok(pt)
+        }),
         (Objective::Throughput, SweepMode::Cold) => {
             ScenarioSet::new(specs).run_with_threads(p.threads, |spec| {
                 let key = memo_key(spec, SweepMode::Cold, &Objective::Throughput)?;
@@ -716,6 +812,15 @@ pub fn sweep_replication_serial(p: &SweepParams) -> crate::Result<Vec<DsePoint>>
                 evaluate_point_cluster(spec, serve, *balancer, autoscale.as_ref(), *fleet, *threads)
             })
         }
+        Objective::Robust {
+            serve,
+            balancer,
+            health,
+            fleet,
+            threads,
+        } => ScenarioSet::new(p.specs()).run_serial(|spec| {
+            evaluate_point_robust(spec, serve, *balancer, health, *fleet, *threads)
+        }),
     }
 }
 
@@ -961,6 +1066,39 @@ mod tests {
             objective_fingerprint(&threaded),
             "threads must NOT key the cache"
         );
+    }
+
+    #[test]
+    fn memo_fingerprints_distinguish_robust_objectives() {
+        use crate::fault::{Fault, FaultPlan, RetrySpec};
+        use crate::serve::Arrival;
+        let serve = ServeSpec::new(Arrival::Poisson { rps: 1000.0 }, 50_000_000_000);
+        let robust = |serve: ServeSpec, fleet: usize| Objective::Robust {
+            serve,
+            balancer: DispatchPolicy::JoinShortestQueue,
+            health: HealthSpec::default(),
+            fleet,
+            threads: 1,
+        };
+        let plain = robust(serve.clone(), 2);
+        let faulted = robust(
+            serve.clone().faults(FaultPlan::new().with(Fault::ReplicaCrash {
+                slot: 0,
+                at: 1_000_000_000,
+            })),
+            2,
+        );
+        let retried = robust(serve.clone().retry(RetrySpec::new(3, 500_000_000)), 2);
+        let bigger = robust(serve, 4);
+        let fp = objective_fingerprint;
+        assert_ne!(fp(&plain), fp(&faulted), "fault plan must key the cache");
+        assert_ne!(fp(&plain), fp(&retried), "retry policy must key the cache");
+        assert_ne!(fp(&plain), fp(&bigger), "fleet size must key the cache");
+        assert_ne!(fp(&plain), fp(&Objective::Throughput));
+        assert_eq!(fp(&plain), fp(&robust(
+            ServeSpec::new(Arrival::Poisson { rps: 1000.0 }, 50_000_000_000),
+            2,
+        )));
     }
 
     #[test]

@@ -1,0 +1,835 @@
+//! Deterministic fault injection and serving-layer resilience.
+//!
+//! A [`FaultPlan`] is a list of typed fault events — accelerator
+//! hang/slowdown ([`Fault::TileHang`]/[`Fault::TileSlow`]), link
+//! flap/degrade ([`Fault::LinkFlap`]/[`Fault::LinkDegrade`]),
+//! stuck DFS actuator ([`Fault::ActuatorStuck`]), and whole-replica
+//! crash ([`Fault::ReplicaCrash`], cluster only) — at scheduled or
+//! seed-drawn instants ([`Fault::RandomCrashes`], via
+//! [`util::rng`](crate::util::rng)). Plans compile to per-component
+//! *stall windows* that are installed into the simulated hardware
+//! **before** the run starts (tiles, link FIFOs, clock domains), so a
+//! fault fires at an exact simulated instant regardless of the host
+//! loop's engine mode or worker-thread count: same seed + spec + plan
+//! ⇒ bit-identical reports, and an empty plan is bit-identical to a
+//! build without faults at all.
+//!
+//! The resilience half lives next to the machinery it protects:
+//!
+//! * [`RetrySpec`] — per-request deadlines with bounded retry +
+//!   exponential backoff at the serve admission gate
+//!   ([`ServeSpec::retry`](crate::serve::ServeSpec));
+//! * [`HealthSpec`] — health-check-driven eviction of wedged replicas
+//!   and warm-standby replacement of crashed ones in the cluster
+//!   engine ([`ClusterSpec::health`](crate::cluster::ClusterSpec)),
+//!   reusing the shared snapshot warm base;
+//! * [`FaultLedger`] — injected/detected/retried/failed-over/evicted
+//!   and requests lost vs. rescued, threaded into
+//!   [`ServeReport`](crate::serve::ServeReport) and
+//!   [`ClusterReport`](crate::cluster::ClusterReport).
+//!
+//! See `docs/API.md` ("Fault injection & resilience") for the textual
+//! `--faults` grammar and the retry/backoff semantics, and
+//! `docs/PERF.md` for the chaos-bench notes.
+
+use crate::util::rng::SplitMix64;
+use crate::util::Ps;
+
+/// Seed salt for randomly drawn fault instants, so a plan's draws are
+/// decorrelated from the arrival stream built from the same user seed.
+const FAULT_SEED_SALT: u64 = 0x9A3C_F0D6_5EBA_11ED;
+
+/// Most pulses a slowdown/degrade window compiles to — bounds the
+/// per-component window lists (and the per-tick binary search).
+const MAX_PULSES: u64 = 200;
+
+/// Shortest pulse slice a slowdown compiles to.
+const MIN_SLICE: Ps = 100_000; // 100 ns
+
+/// One typed fault event. Times are picoseconds **relative to serve
+/// start** (after warmup/settle); `replica: None` applies the fault to
+/// every fleet slot (and to the single SoC under `vespa serve`).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Fault {
+    /// Accelerator hang: the tile does no work inside the window.
+    TileHang {
+        tile: usize,
+        replica: Option<usize>,
+        at: Ps,
+        dur: Ps,
+    },
+    /// Accelerator slowdown: the tile runs at `1/factor` duty inside
+    /// the window (compiled to periodic stall pulses).
+    TileSlow {
+        tile: usize,
+        replica: Option<usize>,
+        at: Ps,
+        dur: Ps,
+        factor: u64,
+    },
+    /// Link flap: flits crossing the tile's inject/eject links become
+    /// visible only after the window ends.
+    LinkFlap {
+        tile: usize,
+        replica: Option<usize>,
+        at: Ps,
+        dur: Ps,
+    },
+    /// Link degrade: the tile's links deliver at `1/factor` duty
+    /// inside the window (periodic short flaps).
+    LinkDegrade {
+        tile: usize,
+        replica: Option<usize>,
+        at: Ps,
+        dur: Ps,
+        factor: u64,
+    },
+    /// Stuck DFS actuator: frequency requests on the island fail
+    /// inside the window (governor/schedule writes do not actuate).
+    ActuatorStuck {
+        island: usize,
+        replica: Option<usize>,
+        at: Ps,
+        dur: Ps,
+    },
+    /// Whole-replica crash at `at` (cluster only): the slot's session
+    /// dies, in-flight requests are lost (or retried, see
+    /// [`RetrySpec`]).
+    ReplicaCrash { slot: usize, at: Ps },
+    /// `n` replica crashes at seed-drawn instants and slots.
+    RandomCrashes { n: usize, seed: u64 },
+}
+
+/// A deterministic, seed-driven fault schedule.
+///
+/// Build programmatically with [`FaultPlan::with`] or parse the
+/// textual CLI grammar with [`FaultPlan::parse`]; [`compile`]
+/// resolves it (drawing any random instants) against a run horizon
+/// and fleet size.
+///
+/// [`compile`]: FaultPlan::compile
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct FaultPlan {
+    pub events: Vec<Fault>,
+}
+
+impl FaultPlan {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Append an event (builder style).
+    pub fn with(mut self, f: Fault) -> Self {
+        self.events.push(f);
+        self
+    }
+
+    /// Parse the textual plan grammar used by `--faults`:
+    ///
+    /// ```text
+    /// spec    := event (';' event)*
+    /// event   := kind ('@' target)* [':' kv (',' kv)*]
+    /// kind    := hang | slow | flap | degrade | stuck | crash | rand-crash
+    /// target  := t<N> (tile node) | i<N> (island) | r<N> (replica slot)
+    /// kv      := at=<time> | dur=<time> | factor=<int> | n=<int> | seed=<int>
+    /// time    := float with optional ns|us|ms|s suffix (default ms)
+    /// ```
+    ///
+    /// Examples: `hang@t5:at=10ms,dur=5ms`, `crash@r1:at=20ms`,
+    /// `slow@t5@r0:at=10ms,dur=30ms,factor=4`, `rand-crash:n=2,seed=7`.
+    pub fn parse(s: &str) -> crate::Result<Self> {
+        let mut plan = FaultPlan::new();
+        for raw in s.split(';') {
+            let ev = raw.trim();
+            if ev.is_empty() {
+                continue;
+            }
+            plan.events.push(parse_event(ev)?);
+        }
+        anyhow::ensure!(!plan.is_empty(), "fault spec {s:?} contains no events");
+        Ok(plan)
+    }
+
+    /// Resolve the plan against a run: draw random instants, expand
+    /// slowdowns into pulse windows, and validate targets. `horizon`
+    /// is the serve duration + drain; `slots` the fleet size (1 for
+    /// single-SoC serving).
+    pub fn compile(&self, horizon: Ps, slots: usize) -> crate::Result<ResolvedPlan> {
+        let mut r = ResolvedPlan::default();
+        for ev in &self.events {
+            match *ev {
+                Fault::TileHang {
+                    tile,
+                    replica,
+                    at,
+                    dur,
+                } => {
+                    anyhow::ensure!(dur > 0, "hang@t{tile}: dur must be > 0");
+                    r.push_comp(replica, CompTarget::Tile(tile), vec![(at, at + dur)]);
+                }
+                Fault::TileSlow {
+                    tile,
+                    replica,
+                    at,
+                    dur,
+                    factor,
+                } => {
+                    anyhow::ensure!(dur > 0, "slow@t{tile}: dur must be > 0");
+                    anyhow::ensure!(factor >= 2, "slow@t{tile}: factor must be >= 2");
+                    r.push_comp(replica, CompTarget::Tile(tile), pulse_windows(at, dur, factor));
+                }
+                Fault::LinkFlap {
+                    tile,
+                    replica,
+                    at,
+                    dur,
+                } => {
+                    anyhow::ensure!(dur > 0, "flap@t{tile}: dur must be > 0");
+                    r.push_comp(replica, CompTarget::Link(tile), vec![(at, at + dur)]);
+                }
+                Fault::LinkDegrade {
+                    tile,
+                    replica,
+                    at,
+                    dur,
+                    factor,
+                } => {
+                    anyhow::ensure!(dur > 0, "degrade@t{tile}: dur must be > 0");
+                    anyhow::ensure!(factor >= 2, "degrade@t{tile}: factor must be >= 2");
+                    r.push_comp(replica, CompTarget::Link(tile), pulse_windows(at, dur, factor));
+                }
+                Fault::ActuatorStuck {
+                    island,
+                    replica,
+                    at,
+                    dur,
+                } => {
+                    anyhow::ensure!(dur > 0, "stuck@i{island}: dur must be > 0");
+                    r.push_comp(replica, CompTarget::Island(island), vec![(at, at + dur)]);
+                }
+                Fault::ReplicaCrash { slot, at } => {
+                    anyhow::ensure!(
+                        slot < slots,
+                        "crash@r{slot}: slot out of range (fleet of {slots})"
+                    );
+                    r.crashes.push((at, slot));
+                    r.injected += 1;
+                }
+                Fault::RandomCrashes { n, seed } => {
+                    anyhow::ensure!(n > 0, "rand-crash: n must be > 0");
+                    anyhow::ensure!(horizon > 0, "rand-crash: empty horizon");
+                    let mut rng = SplitMix64::new(seed ^ FAULT_SEED_SALT);
+                    for _ in 0..n {
+                        // Land inside the middle 80% of the run so a
+                        // drawn crash neither pre-empts warm start nor
+                        // vanishes into the drain tail.
+                        let at = horizon / 10 + rng.next_below(horizon / 10 * 8);
+                        let slot = rng.index(slots);
+                        r.crashes.push((at, slot));
+                        r.injected += 1;
+                    }
+                }
+            }
+        }
+        r.crashes.sort_unstable();
+        Ok(r)
+    }
+}
+
+/// Component a resolved fault targets.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CompTarget {
+    /// An accelerator tile (stall windows in `MraTile`).
+    Tile(usize),
+    /// The inject/eject link FIFOs at a tile's NoC node.
+    Link(usize),
+    /// A frequency island's DFS actuator.
+    Island(usize),
+}
+
+/// One resolved component fault: windows (relative to serve start,
+/// half-open `[start, end)`, sorted and disjoint) on one target.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CompFault {
+    pub replica: Option<usize>,
+    pub target: CompTarget,
+    pub windows: Vec<(Ps, Ps)>,
+}
+
+/// A [`FaultPlan`] resolved against a concrete run.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct ResolvedPlan {
+    pub comps: Vec<CompFault>,
+    /// Replica crashes as `(at, slot)`, sorted by time.
+    pub crashes: Vec<(Ps, usize)>,
+    /// Fault events resolved from the plan (one per event or draw).
+    pub injected: u64,
+}
+
+impl ResolvedPlan {
+    fn push_comp(&mut self, replica: Option<usize>, target: CompTarget, mut windows: Vec<(Ps, Ps)>) {
+        normalize_windows(&mut windows);
+        if !windows.is_empty() {
+            self.comps.push(CompFault {
+                replica,
+                target,
+                windows,
+            });
+            self.injected += 1;
+        }
+    }
+
+    /// Component faults that apply to fleet slot `slot`.
+    pub fn for_replica(&self, slot: usize) -> impl Iterator<Item = &CompFault> {
+        self.comps
+            .iter()
+            .filter(move |c| c.replica.is_none_or(|r| r == slot))
+    }
+}
+
+/// Sort windows by start and merge overlapping/adjacent ones so
+/// lookups can binary-search a disjoint list.
+pub fn normalize_windows(windows: &mut Vec<(Ps, Ps)>) {
+    windows.retain(|&(s, e)| e > s);
+    windows.sort_unstable();
+    let mut merged: Vec<(Ps, Ps)> = Vec::with_capacity(windows.len());
+    for &(s, e) in windows.iter() {
+        match merged.last_mut() {
+            Some(last) if s <= last.1 => last.1 = last.1.max(e),
+            _ => merged.push((s, e)),
+        }
+    }
+    *windows = merged;
+}
+
+/// If `now` falls inside a window of the sorted disjoint list, return
+/// the window's end (the instant the component resumes).
+#[inline]
+pub fn window_until(windows: &[(Ps, Ps)], now: Ps) -> Option<Ps> {
+    if windows.is_empty() {
+        return None;
+    }
+    // Last window with start <= now.
+    let i = windows.partition_point(|&(s, _)| s <= now);
+    if i == 0 {
+        return None;
+    }
+    let (_, e) = windows[i - 1];
+    (now < e).then_some(e)
+}
+
+/// Defer a link-FIFO ready time out of any fault window: a flit that
+/// would become visible inside `[s, e)` becomes visible at `e`. The
+/// mapping is monotone non-decreasing, so FIFO ready-time ordering is
+/// preserved.
+#[inline]
+pub fn deferred_ready(windows: &[(Ps, Ps)], ready_at: Ps) -> Ps {
+    match window_until(windows, ready_at) {
+        Some(e) => e,
+        None => ready_at,
+    }
+}
+
+/// Compile a `1/factor`-duty slowdown into periodic stall pulses:
+/// one active slice followed by `factor - 1` stalled slices, repeated
+/// across `[at, at + dur)`.
+fn pulse_windows(at: Ps, dur: Ps, factor: u64) -> Vec<(Ps, Ps)> {
+    let slice = (dur / (factor * MAX_PULSES)).max(MIN_SLICE);
+    let end = at + dur;
+    let mut v = Vec::new();
+    let mut t = at + slice;
+    while t < end {
+        let stop = (t + (factor - 1) * slice).min(end);
+        v.push((t, stop));
+        t = stop + slice;
+    }
+    v
+}
+
+// ---------------------------------------------------------------------
+// Resilience specs.
+// ---------------------------------------------------------------------
+
+/// Per-request deadline + bounded retry with exponential backoff at
+/// the serve admission gate.
+///
+/// A request that cannot be admitted (every queue full, or its
+/// replica crashed while it was in flight) is re-enqueued
+/// `backoff << attempt` after the failure instead of being dropped,
+/// up to `max_attempts` total admission attempts and never past its
+/// deadline. Latency is always measured from the *original* arrival.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RetrySpec {
+    /// Total admission attempts, including the first (`1` = no retry).
+    pub max_attempts: u32,
+    /// Base backoff; attempt `k` waits `backoff << (k - 1)`.
+    pub backoff: Ps,
+    /// Optional per-request deadline from the original arrival; no
+    /// retry is scheduled past it.
+    pub deadline: Option<Ps>,
+}
+
+impl RetrySpec {
+    pub fn new(max_attempts: u32, backoff: Ps) -> Self {
+        Self {
+            max_attempts,
+            backoff,
+            deadline: None,
+        }
+    }
+
+    pub fn deadline(mut self, d: Ps) -> Self {
+        self.deadline = Some(d);
+        self
+    }
+
+    /// Schedule the next attempt after a failure at `now`, or `None`
+    /// when attempts are exhausted or the deadline would pass.
+    /// `attempt` is the 0-based attempt that just failed.
+    pub fn next_retry(&self, now: Ps, t_orig: Ps, attempt: u32) -> Option<Ps> {
+        if attempt + 1 >= self.max_attempts {
+            return None;
+        }
+        let at = now + (self.backoff << attempt.min(20));
+        if let Some(d) = self.deadline {
+            if at > t_orig.saturating_add(d) {
+                return None;
+            }
+        }
+        Some(at)
+    }
+
+    /// Whether a request that originally arrived at `t_orig` is past
+    /// its deadline at `now`.
+    pub fn expired(&self, now: Ps, t_orig: Ps) -> bool {
+        self.deadline.is_some_and(|d| now > t_orig.saturating_add(d))
+    }
+}
+
+/// Health-check policy for the cluster engine: evict wedged replicas,
+/// replace dead ones from the warm-standby pool.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HealthSpec {
+    /// Evict an active replica after this many consecutive sample
+    /// windows with a non-empty backlog and zero completions
+    /// (`0` = never evict).
+    pub evict_after: u32,
+    /// Replace crashed/evicted replicas by activating a warm standby
+    /// (from the shared snapshot base) at the next health check.
+    pub replace: bool,
+}
+
+impl Default for HealthSpec {
+    fn default() -> Self {
+        Self {
+            evict_after: 3,
+            replace: true,
+        }
+    }
+}
+
+impl HealthSpec {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn evict_after(mut self, windows: u32) -> Self {
+        self.evict_after = windows;
+        self
+    }
+
+    pub fn replace(mut self, yes: bool) -> Self {
+        self.replace = yes;
+        self
+    }
+}
+
+// ---------------------------------------------------------------------
+// Accounting.
+// ---------------------------------------------------------------------
+
+/// Fault/retry/eviction accounting, threaded into
+/// [`ServeReport`](crate::serve::ServeReport) and
+/// [`ClusterReport`](crate::cluster::ClusterReport). All-zero (and
+/// omitted from `render()`) for fault-free, retry-free runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct FaultLedger {
+    /// Fault events resolved from the plan for this run.
+    pub injected: u64,
+    /// Faults the resilience layer observed: crashed/wedged replicas
+    /// seen by a health check, requests expired at the admission gate.
+    pub detected: u64,
+    /// Retry attempts scheduled at the admission gate.
+    pub retried: u64,
+    /// Warm-standby activations replacing crashed/evicted replicas.
+    pub failed_over: u64,
+    /// Replicas force-retired by a health check or drain deadline.
+    pub evicted: u64,
+    /// Requests lost for good (crash/eviction victims past retry,
+    /// expired deadlines, retries still pending at run end).
+    pub lost: u64,
+    /// Requests that survived a failed attempt and still completed.
+    pub rescued: u64,
+}
+
+impl FaultLedger {
+    pub fn is_empty(&self) -> bool {
+        *self == Self::default()
+    }
+
+    /// Fraction of at-risk requests (lost or rescued) that completed;
+    /// `1.0` when nothing was ever at risk.
+    pub fn rescued_fraction(&self) -> f64 {
+        let at_risk = self.lost + self.rescued;
+        if at_risk == 0 {
+            1.0
+        } else {
+            self.rescued as f64 / at_risk as f64
+        }
+    }
+
+    pub(crate) fn to_json(&self) -> String {
+        format!(
+            "{{\"injected\":{},\"detected\":{},\"retried\":{},\"failed_over\":{},\"evicted\":{},\"lost\":{},\"rescued\":{}}}",
+            self.injected,
+            self.detected,
+            self.retried,
+            self.failed_over,
+            self.evicted,
+            self.lost,
+            self.rescued
+        )
+    }
+
+    pub(crate) fn render_line(&self) -> String {
+        format!(
+            "faults     : {} injected, {} detected, {} retried, {} failed-over, {} evicted, {} lost / {} rescued",
+            self.injected,
+            self.detected,
+            self.retried,
+            self.failed_over,
+            self.evicted,
+            self.lost,
+            self.rescued
+        )
+    }
+}
+
+// ---------------------------------------------------------------------
+// Textual grammar.
+// ---------------------------------------------------------------------
+
+struct EventTargets {
+    tile: Option<usize>,
+    island: Option<usize>,
+    replica: Option<usize>,
+}
+
+fn parse_event(ev: &str) -> crate::Result<Fault> {
+    let (head, kvs) = match ev.split_once(':') {
+        Some((h, k)) => (h, k),
+        None => (ev, ""),
+    };
+    let mut parts = head.split('@');
+    let kind = parts.next().unwrap_or_default().trim();
+    let mut tg = EventTargets {
+        tile: None,
+        island: None,
+        replica: None,
+    };
+    for t in parts {
+        let t = t.trim();
+        let (tag, num) = t.split_at(1.min(t.len()));
+        let idx: usize = num
+            .parse()
+            .map_err(|_| anyhow::anyhow!("fault target {t:?}: expected t<N>, i<N> or r<N>"))?;
+        match tag {
+            "t" => tg.tile = Some(idx),
+            "i" => tg.island = Some(idx),
+            "r" => tg.replica = Some(idx),
+            _ => anyhow::bail!("fault target {t:?}: expected t<N>, i<N> or r<N>"),
+        }
+    }
+
+    let mut at = None;
+    let mut dur = None;
+    let mut factor = None;
+    let mut n = None;
+    let mut seed = None;
+    for kv in kvs.split(',') {
+        let kv = kv.trim();
+        if kv.is_empty() {
+            continue;
+        }
+        let (k, v) = kv
+            .split_once('=')
+            .ok_or_else(|| anyhow::anyhow!("fault param {kv:?}: expected key=value"))?;
+        match k.trim() {
+            "at" => at = Some(parse_time(v)?),
+            "dur" => dur = Some(parse_time(v)?),
+            "factor" => factor = Some(parse_int(v, "factor")?),
+            "n" => n = Some(parse_int(v, "n")? as usize),
+            "seed" => seed = Some(parse_int(v, "seed")?),
+            other => anyhow::bail!("fault param {other:?}: unknown key (at/dur/factor/n/seed)"),
+        }
+    }
+
+    let need_at = || at.ok_or_else(|| anyhow::anyhow!("fault {kind:?}: missing at=<time>"));
+    let need_dur = || dur.ok_or_else(|| anyhow::anyhow!("fault {kind:?}: missing dur=<time>"));
+    let need_tile =
+        || tg.tile.ok_or_else(|| anyhow::anyhow!("fault {kind:?}: missing @t<tile> target"));
+    match kind {
+        "hang" => Ok(Fault::TileHang {
+            tile: need_tile()?,
+            replica: tg.replica,
+            at: need_at()?,
+            dur: need_dur()?,
+        }),
+        "slow" => Ok(Fault::TileSlow {
+            tile: need_tile()?,
+            replica: tg.replica,
+            at: need_at()?,
+            dur: need_dur()?,
+            factor: factor.unwrap_or(2),
+        }),
+        "flap" => Ok(Fault::LinkFlap {
+            tile: need_tile()?,
+            replica: tg.replica,
+            at: need_at()?,
+            dur: need_dur()?,
+        }),
+        "degrade" => Ok(Fault::LinkDegrade {
+            tile: need_tile()?,
+            replica: tg.replica,
+            at: need_at()?,
+            dur: need_dur()?,
+            factor: factor.unwrap_or(2),
+        }),
+        "stuck" => Ok(Fault::ActuatorStuck {
+            island: tg
+                .island
+                .ok_or_else(|| anyhow::anyhow!("fault \"stuck\": missing @i<island> target"))?,
+            replica: tg.replica,
+            at: need_at()?,
+            dur: need_dur()?,
+        }),
+        "crash" => Ok(Fault::ReplicaCrash {
+            slot: tg
+                .replica
+                .ok_or_else(|| anyhow::anyhow!("fault \"crash\": missing @r<slot> target"))?,
+            at: need_at()?,
+        }),
+        "rand-crash" => Ok(Fault::RandomCrashes {
+            n: n.ok_or_else(|| anyhow::anyhow!("fault \"rand-crash\": missing n=<count>"))?,
+            seed: seed.unwrap_or(0xC4A5),
+        }),
+        other => anyhow::bail!(
+            "unknown fault kind {other:?} (hang/slow/flap/degrade/stuck/crash/rand-crash)"
+        ),
+    }
+}
+
+fn parse_int(v: &str, key: &str) -> crate::Result<u64> {
+    v.trim()
+        .parse()
+        .map_err(|_| anyhow::anyhow!("fault param {key}={v:?}: expected an integer"))
+}
+
+/// Parse a time value: float with optional `ns`/`us`/`ms`/`s` suffix,
+/// defaulting to milliseconds.
+fn parse_time(v: &str) -> crate::Result<Ps> {
+    let v = v.trim();
+    let (num, scale) = if let Some(n) = v.strip_suffix("ns") {
+        (n, 1e3)
+    } else if let Some(n) = v.strip_suffix("us") {
+        (n, 1e6)
+    } else if let Some(n) = v.strip_suffix("ms") {
+        (n, 1e9)
+    } else if let Some(n) = v.strip_suffix('s') {
+        (n, 1e12)
+    } else {
+        (v, 1e9)
+    };
+    let x: f64 = num
+        .trim()
+        .parse()
+        .map_err(|_| anyhow::anyhow!("fault time {v:?}: expected a number (ns/us/ms/s)"))?;
+    anyhow::ensure!(x >= 0.0 && x.is_finite(), "fault time {v:?}: must be >= 0");
+    Ok((x * scale) as Ps)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_full_grammar() {
+        let plan = FaultPlan::parse(
+            "hang@t5:at=10ms,dur=5ms; slow@t5@r0:at=1ms,dur=2ms,factor=4; \
+             flap@t2:at=3ms,dur=500us; degrade@t2:at=0ms,dur=1ms; \
+             stuck@i1:at=0ms,dur=20ms; crash@r1:at=20ms; rand-crash:n=2,seed=7",
+        )
+        .unwrap();
+        assert_eq!(plan.events.len(), 7);
+        assert_eq!(
+            plan.events[0],
+            Fault::TileHang {
+                tile: 5,
+                replica: None,
+                at: 10_000_000_000,
+                dur: 5_000_000_000
+            }
+        );
+        assert_eq!(
+            plan.events[1],
+            Fault::TileSlow {
+                tile: 5,
+                replica: Some(0),
+                at: 1_000_000_000,
+                dur: 2_000_000_000,
+                factor: 4
+            }
+        );
+        assert_eq!(
+            plan.events[3],
+            Fault::LinkDegrade {
+                tile: 2,
+                replica: None,
+                at: 0,
+                dur: 1_000_000_000,
+                factor: 2
+            }
+        );
+        assert_eq!(plan.events[5], Fault::ReplicaCrash { slot: 1, at: 20_000_000_000 });
+    }
+
+    #[test]
+    fn parse_rejects_malformed_specs() {
+        for bad in [
+            "",
+            "explode@t1:at=1ms",
+            "hang@t1",               // missing at/dur
+            "hang:at=1ms,dur=1ms",   // missing tile target
+            "crash:at=1ms",          // missing replica target
+            "stuck@t1:at=1ms,dur=1", // stuck needs an island
+            "hang@t1:at=x,dur=1ms",
+            "hang@q1:at=1ms,dur=1ms",
+            "hang@t1:at=1ms,dur=1ms,bogus=3",
+            "rand-crash:seed=7", // missing n
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "{bad:?} should fail");
+        }
+    }
+
+    #[test]
+    fn compile_resolves_random_crashes_deterministically() {
+        let plan = FaultPlan::new().with(Fault::RandomCrashes { n: 3, seed: 9 });
+        let a = plan.compile(1_000_000, 4).unwrap();
+        let b = plan.compile(1_000_000, 4).unwrap();
+        assert_eq!(a, b, "same seed => same draws");
+        assert_eq!(a.crashes.len(), 3);
+        assert_eq!(a.injected, 3);
+        for &(at, slot) in &a.crashes {
+            assert!((100_000..900_000).contains(&at));
+            assert!(slot < 4);
+        }
+        let c = plan.compile(1_000_000, 2).unwrap();
+        assert!(c.crashes.iter().all(|&(_, s)| s < 2));
+    }
+
+    #[test]
+    fn compile_validates_targets() {
+        let plan = FaultPlan::new().with(Fault::ReplicaCrash { slot: 5, at: 10 });
+        assert!(plan.compile(100, 4).is_err());
+        let plan = FaultPlan::new().with(Fault::TileSlow {
+            tile: 1,
+            replica: None,
+            at: 0,
+            dur: 100,
+            factor: 1,
+        });
+        assert!(plan.compile(100, 1).is_err(), "factor < 2 rejected");
+    }
+
+    #[test]
+    fn window_lookup_and_merge() {
+        let mut w = vec![(50, 60), (10, 20), (18, 30), (30, 40)];
+        normalize_windows(&mut w);
+        assert_eq!(w, vec![(10, 40), (50, 60)]);
+        assert_eq!(window_until(&w, 5), None);
+        assert_eq!(window_until(&w, 10), Some(40));
+        assert_eq!(window_until(&w, 39), Some(40));
+        assert_eq!(window_until(&w, 40), None);
+        assert_eq!(window_until(&w, 55), Some(60));
+        assert_eq!(window_until(&w, 60), None);
+        assert_eq!(window_until(&[], 55), None);
+    }
+
+    #[test]
+    fn deferred_ready_is_monotone() {
+        let w = vec![(100u64, 200u64), (300, 350)];
+        let mut prev = 0;
+        for t in 0..400 {
+            let d = deferred_ready(&w, t);
+            assert!(d >= prev, "monotone at {t}");
+            assert!(d >= t);
+            prev = d;
+        }
+        assert_eq!(deferred_ready(&w, 99), 99);
+        assert_eq!(deferred_ready(&w, 100), 200);
+        assert_eq!(deferred_ready(&w, 199), 200);
+        assert_eq!(deferred_ready(&w, 200), 200);
+    }
+
+    #[test]
+    fn pulse_windows_cover_requested_duty() {
+        let at = 1_000_000;
+        let dur = 80_000_000;
+        let w = pulse_windows(at, dur, 4);
+        assert!(!w.is_empty() && w.len() <= 2 * MAX_PULSES as usize);
+        let stalled: Ps = w.iter().map(|&(s, e)| e - s).sum();
+        let duty = stalled as f64 / dur as f64;
+        assert!(
+            (duty - 0.75).abs() < 0.05,
+            "factor 4 => ~75% stalled, got {duty}"
+        );
+        for win in w.windows(2) {
+            assert!(win[0].1 < win[1].0, "windows disjoint and sorted");
+        }
+        assert!(w.last().unwrap().1 <= at + dur);
+    }
+
+    #[test]
+    fn retry_backoff_and_deadline() {
+        let rs = RetrySpec::new(3, 1000).deadline(10_000);
+        assert_eq!(rs.next_retry(5_000, 5_000, 0), Some(6_000));
+        assert_eq!(rs.next_retry(6_000, 5_000, 1), Some(8_000), "backoff doubles");
+        assert_eq!(rs.next_retry(8_000, 5_000, 2), None, "attempts exhausted");
+        assert_eq!(
+            rs.next_retry(14_500, 5_000, 0),
+            None,
+            "retry would land past the deadline"
+        );
+        assert!(!rs.expired(15_000, 5_000));
+        assert!(rs.expired(15_001, 5_000));
+        let no_retry = RetrySpec::new(1, 1000);
+        assert_eq!(no_retry.next_retry(0, 0, 0), None);
+    }
+
+    #[test]
+    fn ledger_accounting_helpers() {
+        let mut l = FaultLedger::default();
+        assert!(l.is_empty());
+        assert_eq!(l.rescued_fraction(), 1.0);
+        l.rescued = 9;
+        l.lost = 1;
+        assert!(!l.is_empty());
+        assert!((l.rescued_fraction() - 0.9).abs() < 1e-12);
+        let json = l.to_json();
+        assert!(json.contains("\"rescued\":9") && json.contains("\"lost\":1"));
+    }
+}

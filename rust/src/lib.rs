@@ -94,6 +94,23 @@
 //! `vespa cluster` or [`cluster::serve_cluster`]. See `docs/API.md`
 //! ("Cluster serving").
 //!
+//! ## Fault injection & resilience
+//!
+//! [`fault`] turns the serving stack into a resilience testbed: a
+//! deterministic, seed-driven [`fault::FaultPlan`] injects typed
+//! faults — accelerator hang/slowdown, link flap/degrade, stuck DFS
+//! actuators, whole-replica crashes — as pre-installed stall windows
+//! in the simulated hardware, so the same seed + spec + plan is
+//! bit-identical across engines and `--threads` counts (and an empty
+//! plan is bit-identical to no fault subsystem at all). The
+//! resilience half — [`fault::RetrySpec`] deadlines/backoff at the
+//! admission gate, [`fault::HealthSpec`] eviction + warm-standby
+//! replacement in the cluster engine — is accounted in a
+//! [`fault::FaultLedger`] on every report. Drive it with
+//! `--faults <spec>` on `vespa serve`/`vespa cluster`, rank designs
+//! under chaos with [`dse::Objective::Robust`], and see `docs/API.md`
+//! ("Fault injection & resilience") + `docs/PERF.md` (chaos bench).
+//!
 //! ## The engine core
 //!
 //! Simulation runs on an activity-tracking multi-clock engine
@@ -131,6 +148,7 @@ pub mod cluster;
 pub mod config;
 pub mod dse;
 pub mod experiments;
+pub mod fault;
 pub mod mem;
 pub mod monitor;
 pub mod noc;

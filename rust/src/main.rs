@@ -13,6 +13,7 @@
 
 use vespa::cli::Args;
 use vespa::cluster::{AutoscaleSpec, ClusterSpec};
+use vespa::fault::{FaultPlan, HealthSpec, RetrySpec};
 use vespa::config::presets::{A1_POS, A2_POS};
 use vespa::config::SocConfig;
 use vespa::dse::{
@@ -73,6 +74,11 @@ fn usage() {
            --governor          queue-driven DFS governor on the A1 island\n\
            --seed N            arrival seed (default 0xE5B)\n\
            --json PATH         also write the report as JSON to PATH\n\
+           --faults SPEC       deterministic fault plan, e.g.\n\
+                               'hang@t5:at=10ms,dur=5ms;crash@r0:at=20ms'\n\
+           --retry N           admission retries: N total attempts\n\
+           --retry-backoff-us N  base retry backoff (default 500, doubles)\n\
+           --deadline-ms N     per-request retry deadline from arrival\n\
          serve options:\n\
            --replicas K        replicas per accelerator tile (default 2)\n\
            --tile T            serve one tile only: a1 | a2 (default both)\n\
@@ -83,7 +89,10 @@ fn usage() {
            --autoscale         SLO-driven autoscaler (defaults --slo-ms to 5)\n\
            --min-replicas N    autoscale floor (default 1)\n\
            --threads N         worker threads for replica stepping:\n\
-                               0 = all cores, 1 = serial (default; same report)",
+                               0 = all cores, 1 = serial (default; same report)\n\
+           --health            evict wedged replicas + replace from warm standby\n\
+           --evict-after N     wedged sample windows before eviction (default 3)\n\
+           --drain-deadline-ms N  force-retire a draining replica after N ms",
         header = vespa::cli::usage_header(),
         subs = vespa::cli::subcommand_lines()
     );
@@ -105,7 +114,39 @@ fn engine_arg(args: &Args) -> vespa::Result<vespa::sim::EngineMode> {
     }
 }
 
+/// `--faults <spec>` — deterministic fault plan for `serve`/`cluster`
+/// (see [`FaultPlan::parse`] for the grammar). Empty without the flag.
+fn faults_arg(args: &Args) -> vespa::Result<FaultPlan> {
+    match args.opt("faults") {
+        Some(s) => FaultPlan::parse(s),
+        None => Ok(FaultPlan::new()),
+    }
+}
+
+/// `--retry N` (+ `--retry-backoff-us`, `--deadline-ms`) — admission
+/// retry policy for `serve`/`cluster`: N total attempts with
+/// exponential backoff, optionally bounded by a per-request deadline.
+fn retry_arg(args: &Args) -> vespa::Result<Option<RetrySpec>> {
+    let attempts = args.opt_u64("retry", 0)? as u32;
+    let deadline_ms = args.opt_u64("deadline-ms", 0)?;
+    if attempts == 0 {
+        anyhow::ensure!(
+            args.opt("retry-backoff-us").is_none() && deadline_ms == 0,
+            "--retry-backoff-us/--deadline-ms need --retry N"
+        );
+        return Ok(None);
+    }
+    let backoff = args.opt_u64("retry-backoff-us", 500)? * 1_000_000;
+    anyhow::ensure!(backoff > 0, "--retry-backoff-us must be positive");
+    let mut rs = RetrySpec::new(attempts, backoff);
+    if deadline_ms > 0 {
+        rs = rs.deadline(deadline_ms * 1_000_000_000);
+    }
+    Ok(Some(rs))
+}
+
 fn dispatch(args: &Args) -> vespa::Result<()> {
+    vespa::cli::validate_known(args)?;
     match args.subcommand.as_deref() {
         Some("run") => cmd_run(args),
         Some("serve") => cmd_serve(args),
@@ -280,7 +321,11 @@ fn cmd_serve(args: &Args) -> vespa::Result<()> {
         .tiles(tiles)
         .policy(policy)
         .queue_capacity(queue)
-        .seed(seed);
+        .seed(seed)
+        .faults(faults_arg(args)?);
+    if let Some(rs) = retry_arg(args)? {
+        spec = spec.retry(rs);
+    }
     if slo_ms > 0 {
         spec = spec.slo(slo_ms * 1_000_000_000);
     }
@@ -337,7 +382,11 @@ fn cmd_cluster(args: &Args) -> vespa::Result<()> {
     let mut spec = ServeSpec::new(Arrival::Poisson { rps }, duration)
         .policy(policy)
         .queue_capacity(queue)
-        .seed(seed);
+        .seed(seed)
+        .faults(faults_arg(args)?);
+    if let Some(rs) = retry_arg(args)? {
+        spec = spec.retry(rs);
+    }
     // The autoscaler and the governor both need a latency target;
     // default the SLO to 5 ms when either is on without --slo-ms.
     let slo_eff = if slo_ms > 0 { slo_ms } else { 5 } * 1_000_000_000;
@@ -354,6 +403,14 @@ fn cmd_cluster(args: &Args) -> vespa::Result<()> {
         .threads(args.opt_usize("threads", 1)?);
     if autoscale {
         cspec = cspec.autoscale(AutoscaleSpec::new(args.opt_usize("min-replicas", 1)?));
+    }
+    if args.flag("health") || args.opt("evict-after").is_some() {
+        cspec = cspec
+            .health(HealthSpec::new().evict_after(args.opt_u64("evict-after", 3)? as u32));
+    }
+    let drain_deadline_ms = args.opt_u64("drain-deadline-ms", 0)?;
+    if drain_deadline_ms > 0 {
+        cspec = cspec.drain_deadline(drain_deadline_ms * 1_000_000_000);
     }
 
     let cfg = paper_soc((accel.as_str(), tile_replicas), (accel.as_str(), tile_replicas));
@@ -431,7 +488,26 @@ fn cmd_dse(args: &Args) -> vespa::Result<()> {
         )
         .policy(DispatchPolicy::JoinShortestQueue)
         .slo(slo);
-        p.objective = if fleets.is_empty() {
+        let faults = faults_arg(args)?;
+        p.objective = if !faults.is_empty() {
+            // Robust: serve through the fault plan with the resilience
+            // stack on, rank by p99-under-SLO at one fleet size.
+            anyhow::ensure!(
+                fleets.len() <= 1,
+                "--faults evaluates one fleet size (pass at most one --fleets entry)"
+            );
+            let mut serve = spec.faults(faults);
+            if let Some(rs) = retry_arg(args)? {
+                serve = serve.retry(rs);
+            }
+            Objective::Robust {
+                serve,
+                balancer: DispatchPolicy::JoinShortestQueue,
+                health: HealthSpec::default(),
+                fleet: fleets.first().copied().unwrap_or(2),
+                threads: args.opt_usize("threads", 1)?,
+            }
+        } else if fleets.is_empty() {
             Objective::TailLatency { spec }
         } else {
             Objective::Cluster {
@@ -446,6 +522,10 @@ fn cmd_dse(args: &Args) -> vespa::Result<()> {
         anyhow::ensure!(
             fleets.is_empty(),
             "--fleets requires --serve-rps N (cluster sweeps serve traffic)"
+        );
+        anyhow::ensure!(
+            args.opt("faults").is_none(),
+            "--faults requires --serve-rps N (robust sweeps serve traffic)"
         );
     }
     // Parallel across cores by default; --serial for the reference path
@@ -477,7 +557,10 @@ fn cmd_dse(args: &Args) -> vespa::Result<()> {
         ]);
     }
     println!("{}", t.render());
-    if matches!(p.objective, Objective::TailLatency { .. }) {
+    if matches!(
+        p.objective,
+        Objective::TailLatency { .. } | Objective::Robust { .. }
+    ) {
         let order = rank_by_p99_under_slo(&pts);
         let mut t2 = Table::new(
             "serving rank — p99 under SLO",

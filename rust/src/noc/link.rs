@@ -26,6 +26,11 @@ pub struct LinkFifo {
     q: VecDeque<(Ps, Flit)>,
     /// Total flits ever pushed (stats).
     pub pushed: u64,
+    /// Injected fault windows (sorted, disjoint): a flit whose
+    /// `ready_at` lands inside a window is deferred to the window's
+    /// end — the link "flaps" without reordering the FIFO (the
+    /// deferral map is monotone). Empty outside chaos runs.
+    fault_windows: Vec<(Ps, Ps)>,
 }
 
 impl LinkFifo {
@@ -35,7 +40,15 @@ impl LinkFifo {
             cap,
             q: VecDeque::with_capacity(cap),
             pushed: 0,
+            fault_windows: Vec::new(),
         }
+    }
+
+    /// Install fault windows ([`crate::fault`]); merged with any
+    /// already present.
+    pub fn add_fault_windows(&mut self, windows: &[(Ps, Ps)]) {
+        self.fault_windows.extend_from_slice(windows);
+        crate::fault::normalize_windows(&mut self.fault_windows);
     }
 
     pub fn capacity(&self) -> usize {
@@ -59,6 +72,11 @@ impl LinkFifo {
     /// (callers must check `can_push`, as hardware checks credits).
     pub fn push(&mut self, flit: Flit, ready_at: Ps) {
         assert!(self.can_push(), "link overflow: credit protocol violated");
+        let ready_at = if self.fault_windows.is_empty() {
+            ready_at
+        } else {
+            crate::fault::deferred_ready(&self.fault_windows, ready_at)
+        };
         debug_assert!(
             self.q.back().map_or(true, |(t, _)| *t <= ready_at),
             "FIFO ordering violated"
@@ -154,6 +172,20 @@ mod tests {
         assert_eq!(l.head_ready_at(), Some(70));
         l.pop(100);
         assert_eq!(l.head_ready_at(), Some(90));
+    }
+
+    #[test]
+    fn fault_window_defers_but_never_reorders() {
+        let mut l = LinkFifo::new(8);
+        l.add_fault_windows(&[(100, 200)]);
+        l.push(flit(0), 90); // before the flap: untouched
+        l.push(flit(1), 120); // inside: deferred to window end
+        l.push(flit(2), 250); // after: untouched
+        assert_eq!(l.pop(90).unwrap().seq, 0);
+        assert!(l.pop(199).is_none(), "flapped flit hidden until 200");
+        assert_eq!(l.head_ready_at(), Some(200));
+        assert_eq!(l.pop(200).unwrap().seq, 1);
+        assert_eq!(l.pop(250).unwrap().seq, 2);
     }
 
     #[test]

@@ -54,6 +54,22 @@ impl DispatchPolicy {
     }
 }
 
+/// One granted-but-uncompleted request in a tile queue.
+///
+/// `extra` carries latency already accrued by earlier attempts of the
+/// same request (retry backoff, queueing before a replica crash), so
+/// end-to-end latency always spans the *original* arrival:
+/// `t_complete - t_arr + extra`. Both are zero on the fault-free path.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) struct Req {
+    /// Arrival (or retry-due) time of this attempt.
+    pub t_arr: Ps,
+    /// Latency accrued before this attempt started.
+    pub extra: Ps,
+    /// 0-based attempt index (0 = first try).
+    pub attempt: u32,
+}
+
 /// Per-tile dispatch state.
 #[derive(Debug, Clone)]
 pub(crate) struct TileQueue {
@@ -72,7 +88,7 @@ pub(crate) struct TileQueue {
     /// into a shared request table — keeps latency attribution local to
     /// the dispatcher, so cluster replicas can drain completions on
     /// worker threads without sharing state.
-    pub in_flight: VecDeque<Ps>,
+    pub in_flight: VecDeque<Req>,
     pub admitted: u64,
     pub completed: u64,
     /// Peak queue depth observed.
@@ -166,8 +182,14 @@ impl Dispatcher {
     /// Record that a request that arrived at `t_arr` was granted to
     /// queue slot `slot`.
     pub fn bind(&mut self, slot: usize, t_arr: Ps) {
+        self.bind_attempt(slot, t_arr, 0, 0);
+    }
+
+    /// [`Dispatcher::bind`] for a retried request: carries the latency
+    /// already accrued by earlier attempts and the attempt index.
+    pub fn bind_attempt(&mut self, slot: usize, t_arr: Ps, extra: Ps, attempt: u32) {
         let q = &mut self.tiles[slot];
-        q.in_flight.push_back(t_arr);
+        q.in_flight.push_back(Req { t_arr, extra, attempt });
         q.admitted += 1;
         q.max_depth = q.max_depth.max(q.in_flight.len());
         self.backlog += 1;
@@ -176,13 +198,33 @@ impl Dispatcher {
     /// Attribute one completion on queue slot `slot` to the oldest
     /// outstanding request there (FIFO); returns its arrival time.
     pub fn complete(&mut self, slot: usize) -> Option<Ps> {
+        self.complete_req(slot).map(|r| r.t_arr)
+    }
+
+    /// [`Dispatcher::complete`], returning the full request record
+    /// (arrival, accrued latency, attempt index).
+    pub fn complete_req(&mut self, slot: usize) -> Option<Req> {
         let q = &mut self.tiles[slot];
-        let t_arr = q.in_flight.pop_front();
-        if t_arr.is_some() {
+        let req = q.in_flight.pop_front();
+        if req.is_some() {
             q.completed += 1;
             self.backlog -= 1;
         }
-        t_arr
+        req
+    }
+
+    /// Undo the drop [`Dispatcher::pick`] just counted: the caller is
+    /// scheduling a retry instead of losing the request.
+    pub fn undrop(&mut self) {
+        debug_assert!(self.dropped > 0, "undrop without a preceding drop");
+        self.dropped = self.dropped.saturating_sub(1);
+    }
+
+    /// Count one drop outside [`Dispatcher::pick`] — a deadline-expired
+    /// request or a retry still pending when serving stopped — so
+    /// `offered == admitted + dropped` stays exact under faults.
+    pub fn drop_one(&mut self) {
+        self.dropped += 1;
     }
 }
 
@@ -298,6 +340,27 @@ mod tests {
         assert_eq!(d.complete(0), None);
         assert_eq!(d.backlog, 0, "complete maintains the backlog counter");
         assert_eq!(d.tiles[0].max_depth, 2);
+    }
+
+    #[test]
+    fn retry_attempt_metadata_rides_the_queue() {
+        let soc = mini_soc();
+        let mut d = Dispatcher::new(DispatchPolicy::RoundRobin, 8, queues(&soc));
+        d.bind(0, 10);
+        d.bind_attempt(0, 500, 490, 2);
+        assert_eq!(
+            d.complete_req(0),
+            Some(Req { t_arr: 10, extra: 0, attempt: 0 }),
+            "bind is bind_attempt with zero extra/attempt"
+        );
+        assert_eq!(d.complete_req(0), Some(Req { t_arr: 500, extra: 490, attempt: 2 }));
+        assert_eq!(d.complete_req(0), None);
+        // undrop/drop_one adjust the drop counter symmetrically.
+        d.drop_one();
+        d.drop_one();
+        assert_eq!(d.dropped, 2);
+        d.undrop();
+        assert_eq!(d.dropped, 1);
     }
 
     #[test]

@@ -11,6 +11,7 @@
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 
+use crate::fault::{FaultLedger, FaultPlan, RetrySpec};
 use crate::monitor::TimeSeries;
 use crate::policy::DfsPolicy;
 use crate::scenario::Session;
@@ -49,6 +50,12 @@ pub struct ServeSpec {
     /// Run the functional datapath on every invocation (default off:
     /// serving measures timing, like Table I's perf mode).
     pub functional: bool,
+    /// Deterministic fault plan injected before the first request
+    /// (empty = bit-identical to a run without the fault subsystem).
+    pub faults: FaultPlan,
+    /// Per-request deadline + retry/backoff at the admission gate
+    /// (`None` = legacy drop-on-full semantics, bit-identical).
+    pub retry: Option<RetrySpec>,
 }
 
 impl ServeSpec {
@@ -65,6 +72,8 @@ impl ServeSpec {
             sample_interval: 0,
             governor: None,
             functional: false,
+            faults: FaultPlan::new(),
+            retry: None,
         }
     }
 
@@ -110,6 +119,16 @@ impl ServeSpec {
 
     pub fn functional(mut self, on: bool) -> Self {
         self.functional = on;
+        self
+    }
+
+    pub fn faults(mut self, plan: FaultPlan) -> Self {
+        self.faults = plan;
+        self
+    }
+
+    pub fn retry(mut self, retry: RetrySpec) -> Self {
+        self.retry = Some(retry);
         self
     }
 }
@@ -162,7 +181,9 @@ pub(crate) fn prepare_serve_tiles(
 
 /// Dispatcher state for `tiles`: one bounded queue per tile, seeded
 /// with the tile's island, invocation cycles, and replica count.
-pub(crate) fn tile_queues(session: &Session, tiles: &[usize]) -> Vec<TileQueue> {
+/// Errors on a node with no tile spec (a malformed config that slipped
+/// past resolution) rather than panicking mid-serve.
+pub(crate) fn tile_queues(session: &Session, tiles: &[usize]) -> crate::Result<Vec<TileQueue>> {
     tiles
         .iter()
         .map(|&tile| {
@@ -173,9 +194,11 @@ pub(crate) fn tile_queues(session: &Session, tiles: &[usize]) -> Vec<TileQueue> 
                 .iter()
                 .find(|t| soc.cfg.node_of(t.x, t.y) == tile)
                 .map(|t| t.island)
-                .expect("every node has a tile spec");
+                .ok_or_else(|| {
+                    anyhow::anyhow!("serve: node {tile} has no tile spec in the config")
+                })?;
             let m = soc.mra(tile);
-            TileQueue {
+            Ok(TileQueue {
                 tile,
                 island,
                 compute_cycles: m.timing.compute_cycles,
@@ -184,7 +207,7 @@ pub(crate) fn tile_queues(session: &Session, tiles: &[usize]) -> Vec<TileQueue> 
                 admitted: 0,
                 completed: 0,
                 max_depth: 0,
-            }
+            })
         })
         .collect()
 }
@@ -198,7 +221,8 @@ fn serve_session(session: &mut Session, spec: &ServeSpec) -> crate::Result<Serve
 
     let tiles = resolve_tiles(session, spec)?;
     prepare_serve_tiles(session, spec, &tiles)?;
-    let mut disp = Dispatcher::new(spec.policy, spec.queue_capacity, tile_queues(session, &tiles));
+    let mut disp =
+        Dispatcher::new(spec.policy, spec.queue_capacity, tile_queues(session, &tiles)?);
 
     let mut governor = spec
         .governor
@@ -210,11 +234,30 @@ fn serve_session(session: &mut Session, spec: &ServeSpec) -> crate::Result<Serve
     let t0 = session.soc().now;
     let horizon = t0 + spec.duration;
     let deadline = horizon + spec.drain;
-    let mut arrivals: BinaryHeap<Reverse<Ps>> = spec
+
+    // Compile and pre-install the fault plan: windows become part of the
+    // simulated hardware before the first request, so injection timing
+    // is engine- and thread-invariant (see [`crate::fault`]). An empty
+    // plan installs nothing and the run is bit-identical to one without
+    // the fault subsystem.
+    let resolved = spec.faults.compile(spec.duration, 1)?;
+    anyhow::ensure!(
+        resolved.crashes.is_empty(),
+        "serve: replica-crash faults need the cluster layer (`vespa cluster --faults`)"
+    );
+    for f in resolved.for_replica(0) {
+        session.soc_mut().install_fault(f, t0)?;
+    }
+    let mut ledger = FaultLedger { injected: resolved.injected, ..FaultLedger::default() };
+
+    // Heap entries are `(due time, original arrival, attempt)`: first
+    // attempts are due at their arrival, retries keep the original
+    // arrival so deadlines and latency span the whole request.
+    let mut arrivals: BinaryHeap<Reverse<(Ps, Ps, u32)>> = spec
         .arrival
         .times(spec.seed, spec.duration)
         .into_iter()
-        .map(|rel| Reverse(t0 + rel))
+        .map(|rel| Reverse((t0 + rel, t0 + rel, 0)))
         .collect();
     let think = spec.arrival.think_time();
     let mut offered = arrivals.len() as u64;
@@ -247,7 +290,7 @@ fn serve_session(session: &mut Session, spec: &ServeSpec) -> crate::Result<Serve
 
     loop {
         let now = session.soc().now;
-        let next_arrival = arrivals.peek().map(|Reverse(t)| *t);
+        let next_arrival = arrivals.peek().map(|Reverse((t, _, _))| *t);
         if now >= deadline || (now >= horizon && next_arrival.is_none() && disp.backlog == 0) {
             break;
         }
@@ -281,19 +324,24 @@ fn serve_session(session: &mut Session, spec: &ServeSpec) -> crate::Result<Serve
                 }
             }
             for &t_c in &log {
-                let Some(t_arr) = disp.complete(slot) else {
+                let Some(req) = disp.complete_req(slot) else {
                     debug_assert!(false, "completion without an outstanding request");
                     continue;
                 };
-                let lat = t_c - t_arr;
+                // `extra` folds earlier attempts' wait back in, so the
+                // latency spans the original arrival (zero fault-free).
+                let lat = t_c - req.t_arr + req.extra;
                 latencies.push(lat as f64);
+                if req.attempt > 0 {
+                    ledger.rescued += 1;
+                }
                 if let Some(g) = &mut governor {
                     g.observe_latency(lat);
                 }
                 if let Some(think) = think {
                     let next = t_c + think;
                     if next < horizon {
-                        arrivals.push(Reverse(next));
+                        arrivals.push(Reverse((next, next, 0)));
                         offered += 1;
                     }
                 }
@@ -301,13 +349,36 @@ fn serve_session(session: &mut Session, spec: &ServeSpec) -> crate::Result<Serve
         }
 
         // 2) Admit due arrivals: bind to a tile and grant one credit.
-        while arrivals.peek().is_some_and(|Reverse(t)| *t <= now) {
-            let Reverse(t_arr) = arrivals.pop().expect("peeked");
+        while arrivals.peek().is_some_and(|Reverse((t, _, _))| *t <= now) {
+            let Reverse((t_due, t_orig, attempt)) = arrivals.pop().expect("peeked");
+            if let Some(rs) = &spec.retry {
+                if rs.expired(now, t_orig) {
+                    // The per-request deadline passed while waiting for
+                    // a retry slot: the request is lost, not served
+                    // stale. Counted as a drop to keep
+                    // `offered == admitted + dropped` exact.
+                    disp.drop_one();
+                    ledger.detected += 1;
+                    ledger.lost += 1;
+                    continue;
+                }
+            }
             if let Some(slot) = disp.pick(session.soc(), now) {
                 admitted += 1;
-                disp.bind(slot, t_arr);
+                disp.bind_attempt(slot, t_due, t_due - t_orig, attempt);
                 let tile = disp.tiles[slot].tile;
                 session.soc_mut().try_mra_mut(tile)?.serve_grant(1);
+            } else if let Some(rs) = &spec.retry {
+                // Queue-full with a retry policy: exponential backoff
+                // instead of a final drop, while the deadline allows.
+                match rs.next_retry(now, t_orig, attempt) {
+                    Some(at) => {
+                        disp.undrop(); // retrying, not dropping
+                        ledger.retried += 1;
+                        arrivals.push(Reverse((at, t_orig, attempt + 1)));
+                    }
+                    None => ledger.lost += 1, // pick counted the drop
+                }
             } else if let Some(think) = think {
                 // A full system drops the request (the dispatcher
                 // counted it) — but a closed-loop *client* lives on:
@@ -316,7 +387,7 @@ fn serve_session(session: &mut Session, spec: &ServeSpec) -> crate::Result<Serve
                 // of the run.
                 let retry = now + think;
                 if retry < horizon {
-                    arrivals.push(Reverse(retry));
+                    arrivals.push(Reverse((retry, retry, 0)));
                     offered += 1;
                 }
             }
@@ -337,6 +408,17 @@ fn serve_session(session: &mut Session, spec: &ServeSpec) -> crate::Result<Serve
             while next_sample <= now {
                 next_sample += sample_interval;
             }
+        }
+    }
+
+    // A retry still pending when serving stopped is a lost request:
+    // count it as a drop so `offered == admitted + dropped` stays exact.
+    // (Without a retry policy the heap is empty here; the gate keeps the
+    // legacy closed-loop accounting untouched.)
+    if spec.retry.is_some() {
+        while arrivals.pop().is_some() {
+            disp.drop_one();
+            ledger.lost += 1;
         }
     }
 
@@ -399,6 +481,7 @@ fn serve_session(session: &mut Session, spec: &ServeSpec) -> crate::Result<Serve
             .iter()
             .map(|d| d.freq(soc.now).as_mhz())
             .collect(),
+        faults: ledger,
     })
 }
 

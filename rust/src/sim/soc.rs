@@ -414,6 +414,54 @@ impl Soc {
         self.schedule_next = 0;
     }
 
+    /// Install one resolved fault ([`crate::fault`]), shifting its
+    /// windows by `base` into this SoC's absolute local time. Tile
+    /// faults stall the MRA tile, link faults flap the inject/eject
+    /// FIFOs at the tile's NoC node, island faults wedge the DFS
+    /// actuator. Invalid targets surface as errors, never panics.
+    pub fn install_fault(
+        &mut self,
+        fault: &crate::fault::CompFault,
+        base: Ps,
+    ) -> crate::Result<()> {
+        let windows: Vec<(Ps, Ps)> = fault
+            .windows
+            .iter()
+            .map(|&(s, e)| (base.saturating_add(s), base.saturating_add(e)))
+            .collect();
+        match fault.target {
+            crate::fault::CompTarget::Tile(t) => {
+                self.try_mra_mut(t)
+                    .context("tile fault target")?
+                    .add_stall_windows(&windows);
+            }
+            crate::fault::CompTarget::Link(t) => {
+                if t >= self.fabric.inject.len() {
+                    bail!(
+                        "link fault target t{t} out of range ({} nodes)",
+                        self.fabric.inject.len()
+                    );
+                }
+                let ids: Vec<_> = self.fabric.inject[t]
+                    .iter()
+                    .chain(self.fabric.eject[t].iter())
+                    .copied()
+                    .collect();
+                for id in ids {
+                    self.fabric.links[id.0 as usize].add_fault_windows(&windows);
+                }
+            }
+            crate::fault::CompTarget::Island(i) => {
+                let n = self.islands.len();
+                self.islands
+                    .get_mut(i)
+                    .with_context(|| format!("island fault target i{i} out of range ({n} islands)"))?
+                    .add_stuck_windows(&windows);
+            }
+        }
+        Ok(())
+    }
+
     /// Enable the first `n` TG tiles (Fig. 3's X axis), disable the rest.
     pub fn host_set_tg_active(&mut self, n: usize) {
         let mut seen = 0;

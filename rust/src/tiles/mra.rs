@@ -177,6 +177,14 @@ pub struct MraTile {
     /// Admission gate for traffic serving; `None` (the default) is the
     /// classic free-running throughput mode.
     pub serve: Option<ServeGate>,
+
+    // -- fault injection -----------------------------------------------
+    /// Injected hang/slowdown windows (absolute local time, sorted,
+    /// disjoint): inside a window the tile ticks as a provable no-op
+    /// and promises its wake for the window end, which is identical
+    /// across all engine modes. Empty outside chaos runs
+    /// ([`crate::fault`]).
+    stall_windows: Vec<(Ps, Ps)>,
 }
 
 impl MraTile {
@@ -214,7 +222,15 @@ impl MraTile {
             cached_outputs: Vec::new(),
             functional_calls: 0,
             serve: None,
+            stall_windows: Vec::new(),
         }
+    }
+
+    /// Install hang/slowdown fault windows in absolute local time
+    /// ([`crate::fault`]); merged with any already present.
+    pub fn add_stall_windows(&mut self, windows: &[(Ps, Ps)]) {
+        self.stall_windows.extend_from_slice(windows);
+        crate::fault::normalize_windows(&mut self.stall_windows);
     }
 
     pub fn replica_count(&self) -> usize {
@@ -295,6 +311,15 @@ impl MraTile {
 
     /// One tile-clock cycle.
     pub fn tick(&mut self, ctx: &mut TileCtx<'_>) -> Outcome {
+        // An injected hang freezes the whole tile: no rx/compute/tx
+        // progress until the window ends. Every engine mode sees the
+        // same no-op ticks (an early fire simply re-arms), so fault
+        // timing is exact and engine-invariant.
+        if !self.stall_windows.is_empty() {
+            if let Some(until) = crate::fault::window_until(&self.stall_windows, ctx.now) {
+                return Outcome::at(false, until);
+            }
+        }
         // Credit exec-time for skipped cycles: the engine only skips a
         // computing tile while every other engine is frozen, so each
         // missed cycle would have counted exactly one exec cycle.

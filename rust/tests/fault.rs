@@ -1,0 +1,288 @@
+//! System tests for the fault-injection + resilience subsystem — the
+//! ISSUE's acceptance criteria: (a) a faulted cluster run is
+//! bit-identical across `--threads {1,2,0}`, (b) an empty
+//! [`FaultPlan`] (and idle resilience machinery) is bit-identical to
+//! the pre-fault engine across all three [`EngineMode`]s, (c) a
+//! mid-run replica crash under retry + health checks ends SLO-met
+//! with >= 90% of interrupted requests rescued while the
+//! no-resilience baseline misses the SLO — plus the drain-deadline
+//! force-retire regression.
+
+use vespa::cluster::{AutoscaleSpec, ClusterSpec};
+use vespa::config::SocConfig;
+use vespa::fault::{Fault, FaultPlan, HealthSpec, RetrySpec};
+use vespa::scenario::{ms, Scenario, Session};
+use vespa::serve::{Arrival, DispatchPolicy, ServeSpec};
+use vespa::sim::EngineMode;
+use vespa::util::Ps;
+
+const US: Ps = 1_000_000;
+
+/// One 2-replica dfmul tile on a governable island — the same
+/// per-replica SoC as the cluster suite (~4250 req/s at 50 MHz), so
+/// capacity math carries over.
+fn fleet_cfg(accel_mhz: u64) -> SocConfig {
+    Scenario::grid(2, 2)
+        .name("fault-2x2")
+        .seed(0xE5B)
+        .island("noc", 100)
+        .island_dfs("acc", accel_mhz, 10..=50, 5)
+        .noc_island("noc")
+        .mem_at(0, 0)
+        .accel_at(1, 0, "dfmul", 2, "acc")
+        .io_at_on(0, 1, "noc")
+        .build()
+        .unwrap()
+}
+
+/// Node index of the accelerator tile (the fault plans' `t<N>` target).
+fn accel_tile() -> usize {
+    Session::new(fleet_cfg(50)).unwrap().mra_tiles()[0]
+}
+
+// ---------------------------------------------------------------------
+// (a) Thread invariance: the faulted cluster path is bit-identical on
+//     the serial reference, a small pool, and all cores.
+// ---------------------------------------------------------------------
+
+#[test]
+fn faulted_cluster_is_thread_invariant() {
+    let t = accel_tile();
+    // Every fault kind that survives to the cluster layer: a hang, a
+    // replica-targeted slowdown, a stuck DFS actuator, and an injected
+    // crash — under retry, health checks, and the autoscaler at once.
+    let plan = FaultPlan::parse(&format!(
+        "hang@t{t}:at=10ms,dur=4ms;slow@t{t}@r1:at=20ms,dur=10ms,factor=4;\
+         stuck@i1:at=5ms,dur=30ms;crash@r0:at=40ms"
+    ))
+    .unwrap();
+    let spec = ServeSpec::new(Arrival::Poisson { rps: 6000.0 }, ms(100))
+        .policy(DispatchPolicy::JoinShortestQueue)
+        .slo(ms(5))
+        .sample_interval(ms(2))
+        .seed(0xFA17)
+        .faults(plan)
+        .retry(RetrySpec::new(4, 500 * US));
+    let cspec = ClusterSpec::new(3, spec)
+        .balancer(DispatchPolicy::JoinShortestQueue)
+        .autoscale(AutoscaleSpec::new(2))
+        .health(HealthSpec::new())
+        .drain_deadline(ms(20));
+
+    let r1 = cspec.clone().threads(1).run(fleet_cfg(50)).unwrap();
+    let r2 = cspec.clone().threads(2).run(fleet_cfg(50)).unwrap();
+    let r0 = cspec.threads(0).run(fleet_cfg(50)).unwrap();
+
+    assert!(r1.completed > 100, "enough traffic to be meaningful");
+    assert!(r1.faults.injected >= 4, "the whole plan resolved: {:?}", r1.faults);
+    assert_eq!(r1, r2, "2 workers drifted from the serial reference");
+    assert_eq!(r1, r0, "all-cores drifted from the serial reference");
+}
+
+// ---------------------------------------------------------------------
+// (b) Empty plan + idle resilience = bit-identical to the pre-fault
+//     engine, on every engine mode.
+// ---------------------------------------------------------------------
+
+#[test]
+fn empty_plan_is_bit_identical_across_engine_modes() {
+    // 800 rps against a ~4250 req/s SoC: nothing drops, so an armed
+    // retry policy and an empty fault plan must leave no trace — the
+    // report (ledger included) matches a run without either, on the
+    // reference, idle-aware, and event-driven engines alike.
+    let base = ServeSpec::new(Arrival::Poisson { rps: 800.0 }, ms(40))
+        .policy(DispatchPolicy::JoinShortestQueue)
+        .slo(ms(5))
+        .seed(0xBA5E);
+    let run = |spec: &ServeSpec, mode: EngineMode| {
+        let mut s = Session::new(fleet_cfg(50)).unwrap();
+        s.engine(mode);
+        s.serve(spec).unwrap()
+    };
+    let baseline = run(&base, EngineMode::default());
+    assert!(baseline.completed > 20, "enough traffic to be meaningful");
+    assert!(baseline.faults.is_empty(), "fault-free ledger stays zero");
+
+    let armed = base
+        .clone()
+        .faults(FaultPlan::new())
+        .retry(RetrySpec::new(3, 500 * US).deadline(ms(50)));
+    for mode in [
+        EngineMode::Reference,
+        EngineMode::IdleAware,
+        EngineMode::EventDriven,
+    ] {
+        assert_eq!(
+            run(&armed, mode),
+            baseline,
+            "empty plan + idle retry drifted on {mode:?}"
+        );
+    }
+}
+
+#[test]
+fn idle_health_checks_leave_cluster_reports_unchanged() {
+    let spec = ServeSpec::new(Arrival::Poisson { rps: 5000.0 }, ms(60))
+        .policy(DispatchPolicy::JoinShortestQueue)
+        .slo(ms(5))
+        .sample_interval(ms(2))
+        .seed(0x1D1E);
+    let plain = ClusterSpec::new(2, spec.clone())
+        .balancer(DispatchPolicy::JoinShortestQueue)
+        .run(fleet_cfg(50))
+        .unwrap();
+    // Health checks watch a healthy fleet; the drain deadline bounds a
+    // drain that never happens. Bit-identical, ledger and all.
+    let armed = ClusterSpec::new(2, spec)
+        .balancer(DispatchPolicy::JoinShortestQueue)
+        .health(HealthSpec::new())
+        .drain_deadline(ms(10))
+        .run(fleet_cfg(50))
+        .unwrap();
+    assert!(plain.completed > 100, "enough traffic to be meaningful");
+    assert_eq!(plain, armed, "idle resilience machinery left a trace");
+}
+
+// ---------------------------------------------------------------------
+// (c) Mid-run crash: retry + health checks rescue the interrupted
+//     requests and keep the SLO; the bare fleet misses it.
+// ---------------------------------------------------------------------
+
+#[test]
+fn crash_with_retry_and_health_meets_slo_where_baseline_misses() {
+    let t = accel_tile();
+    // Slot 0's tile wedges at 36 ms (so its queue is provably
+    // non-empty), then the whole replica crashes at 40 ms. 6000 rps is
+    // comfortable for two ~4250 req/s replicas and hopeless for one.
+    let plan = FaultPlan::parse(&format!("hang@t{t}@r0:at=36ms,dur=4ms;crash@r0:at=40ms")).unwrap();
+    let spec = |resilient: bool| {
+        let s = ServeSpec::new(Arrival::Poisson { rps: 6000.0 }, ms(200))
+            .policy(DispatchPolicy::JoinShortestQueue)
+            .slo(ms(5))
+            .sample_interval(ms(2))
+            .seed(0x5AFE)
+            .faults(plan.clone());
+        if resilient {
+            s.retry(RetrySpec::new(4, 500 * US))
+        } else {
+            s
+        }
+    };
+
+    let resilient = ClusterSpec::new(2, spec(true))
+        .balancer(DispatchPolicy::RoundRobin)
+        .health(HealthSpec::new())
+        .run(fleet_cfg(50))
+        .unwrap();
+    assert_eq!(
+        resilient.slo_met,
+        Some(true),
+        "resilient p95 {:.3} ms ({:?})",
+        resilient.latency.p95_ms(),
+        resilient.faults
+    );
+    assert!(resilient.faults.retried > 0, "{:?}", resilient.faults);
+    assert!(resilient.faults.detected >= 1, "{:?}", resilient.faults);
+    assert!(
+        resilient.faults.failed_over >= 1,
+        "warm standby replaced the crashed slot: {:?}",
+        resilient.faults
+    );
+    assert!(
+        resilient.faults.rescued_fraction() >= 0.9,
+        "rescued {:.3}: {:?}",
+        resilient.faults.rescued_fraction(),
+        resilient.faults
+    );
+    // The crashed slot came back: two activations on slot 0.
+    assert!(
+        resilient.per_replica[0].activations >= 2,
+        "{:#?}",
+        resilient.per_replica[0]
+    );
+
+    let baseline = ClusterSpec::new(2, spec(false))
+        .balancer(DispatchPolicy::RoundRobin)
+        .run(fleet_cfg(50))
+        .unwrap();
+    assert_eq!(
+        baseline.slo_met,
+        Some(false),
+        "baseline p95 {:.3} ms",
+        baseline.latency.p95_ms()
+    );
+    assert!(baseline.faults.lost > 0, "{:?}", baseline.faults);
+    assert_eq!(baseline.faults.rescued, 0, "{:?}", baseline.faults);
+    assert!(
+        resilient.completed > baseline.completed,
+        "resilient {} vs baseline {}",
+        resilient.completed,
+        baseline.completed
+    );
+}
+
+// ---------------------------------------------------------------------
+// Drain deadline: a wedged draining replica is force-retired instead
+// of blocking scale-down forever.
+// ---------------------------------------------------------------------
+
+#[test]
+fn drain_deadline_force_retires_wedged_replica() {
+    let t = accel_tile();
+    // A 15 ms burst at 16000 rps pegs both queues, then every tile
+    // hangs for the rest of the load window: the post-burst calm makes
+    // the autoscaler drain a victim whose queue can never empty.
+    let plan = FaultPlan::new().with(Fault::TileHang {
+        tile: t,
+        replica: None,
+        at: ms(15),
+        dur: ms(45),
+    });
+    let spec = ServeSpec::new(
+        Arrival::Burst {
+            base_rps: 400.0,
+            burst_rps: 16_000.0,
+            period: ms(60),
+            duty: 0.25,
+        },
+        ms(60),
+    )
+    .policy(DispatchPolicy::JoinShortestQueue)
+    .slo(ms(5))
+    .sample_interval(ms(2))
+    .seed(0xD0A1)
+    .faults(plan);
+    // Judge calm purely on the latency window so the wedged backlog
+    // cannot veto the scale-down this test needs.
+    let auto = AutoscaleSpec {
+        down_windows: 1,
+        backlog_high: f64::INFINITY,
+        backlog_low: f64::INFINITY,
+        ..AutoscaleSpec::new(1)
+    };
+
+    let bounded = ClusterSpec::new(2, spec.clone())
+        .balancer(DispatchPolicy::JoinShortestQueue)
+        .autoscale(auto.clone())
+        .drain_deadline(ms(10))
+        .run(fleet_cfg(50))
+        .unwrap();
+    assert!(
+        bounded.faults.evicted >= 1,
+        "wedged drain must force-retire: {:?} (actions {:?})",
+        bounded.faults,
+        bounded.autoscale_actions
+    );
+    assert!(bounded.faults.lost > 0, "{:?}", bounded.faults);
+    let forced: u64 = bounded.per_replica.iter().map(|r| r.dropped).sum();
+    assert!(forced > 0, "force-dropped queue counts as replica drops");
+
+    // Without a deadline the victim just keeps draining until the hang
+    // lifts — no eviction, nothing force-dropped.
+    let unbounded = ClusterSpec::new(2, spec)
+        .balancer(DispatchPolicy::JoinShortestQueue)
+        .autoscale(auto)
+        .run(fleet_cfg(50))
+        .unwrap();
+    assert_eq!(unbounded.faults.evicted, 0, "{:?}", unbounded.faults);
+}
