@@ -17,10 +17,11 @@
 //! all cores). Writes `BENCH_cluster_scale.json` for the CI bench gate.
 
 use vespa::bench_harness::{Bench, BenchArgs, BenchReport};
-use vespa::cluster::{AutoscaleSpec, ClusterSpec};
+use vespa::cluster::{serve_cluster_with_profile, AutoscaleSpec, ClusterSpec};
 use vespa::config::SocConfig;
 use vespa::scenario::{ms, Scenario};
 use vespa::serve::{Arrival, DispatchPolicy, ServeSpec};
+use vespa::telemetry::HostProfile;
 
 /// One 2-replica dfmul tile at 50 MHz — ~4250 req/s per replica SoC,
 /// so fleet size is the only capacity knob under test.
@@ -167,6 +168,29 @@ fn main() {
         r_f8s.mean, r_f8p.mean, serial.completed
     );
 
+    // ---- Host self-profiling: barrier rounds and worker busy/wait. ----
+    // The profile is host wall-clock (non-deterministic by design), so
+    // it feeds the bench JSON only — the report itself must stay
+    // bit-identical to the unprofiled run.
+    let profile = HostProfile::new();
+    let profiled = serve_cluster_with_profile(fleet_cfg(), &fleet8_parallel, Some(&profile))
+        .expect("profiled fleet-8 run");
+    assert_eq!(profiled, parallel, "profiling must not perturb the run");
+    let workers = match par_threads {
+        0 => std::thread::available_parallelism().map_or(1, |n| n.get()),
+        n => n,
+    }
+    .min(8);
+    println!(
+        "profile: {} rounds ({:.1} us mean), {} tasks, busy {:.1} ms, est wait {:.1} ms on {workers} workers",
+        profile.rounds(),
+        profile.mean_round_ns() / 1e3,
+        profile.tasks(),
+        profile.task_busy_ns() as f64 / 1e6,
+        profile.est_wait_ns(workers) / 1e6,
+    );
+    assert!(profile.rounds() > 0, "the profiled run must count rounds");
+
     report.metric("cluster4_rps_over_single", rps_ratio);
     report.metric("single_achieved_rps", single.achieved_rps);
     report.metric("fleet4_achieved_rps", fleet4.achieved_rps);
@@ -178,6 +202,11 @@ fn main() {
     report.metric("autoscale_actions", r_auto.autoscale_actions.len() as f64);
     report.metric("parallel_speedup_vs_serial", speedup);
     report.metric("fleet8_completed", serial.completed as f64);
+    report.metric("profile_rounds", profile.rounds() as f64);
+    report.metric("profile_mean_round_us", profile.mean_round_ns() / 1e3);
+    report.metric("profile_tasks", profile.tasks() as f64);
+    report.metric("profile_task_busy_ms", profile.task_busy_ns() as f64 / 1e6);
+    report.metric("profile_est_wait_ms", profile.est_wait_ns(workers) / 1e6);
     report.push(r_single);
     report.push(r_fleet);
     report.push(r_auto_t);

@@ -99,6 +99,27 @@ fn main() {
         b.edges, b.engine_stats.coalesced_edges, b.engine_stats.tile_ticks
     );
 
+    // Engine self-profiling counters from the 8x8 runs: how much work
+    // each engine actually did (ticks executed/skipped, quiescent spans
+    // coalesced, event-heap traffic). Deterministic, so they double as
+    // a drift tripwire in the bench JSON (schema: docs/PERF.md).
+    report.metric("idle8_tile_ticks", a.engine_stats.tile_ticks as f64);
+    report.metric(
+        "idle8_skipped_tile_ticks",
+        a.engine_stats.skipped_tile_ticks as f64,
+    );
+    report.metric("event8_tile_ticks", b.engine_stats.tile_ticks as f64);
+    report.metric("event8_router_ticks", b.engine_stats.router_ticks as f64);
+    report.metric(
+        "event8_coalesced_spans",
+        b.engine_stats.coalesced_spans as f64,
+    );
+    report.metric(
+        "event8_coalesced_edges",
+        b.engine_stats.coalesced_edges as f64,
+    );
+    report.metric("event8_heap_ops", b.heap_ops() as f64);
+
     // Headline: the 16x16 ratio, where dead silicon dominates the grid.
     let headline = speedups[1];
     report.metric("sparse_event_speedup_vs_idle", headline);

@@ -14,6 +14,7 @@
 use vespa::bench_harness::{Bench, BenchArgs, BenchReport};
 use vespa::scenario::{ms, Scenario, Session};
 use vespa::serve::{Arrival, DispatchPolicy, GovernorSpec, ServeReport, ServeSpec};
+use vespa::telemetry::TraceSpec;
 
 /// Two single-replica dfmul tiles at 50 / 15 MHz (replica-aware
 /// dispatch across tiles; heterogeneity makes policy quality visible).
@@ -85,6 +86,26 @@ fn main() {
     });
     println!("{}", r_jsq.report());
 
+    // Tracing overhead: the same JSQ soak with the flight recorder on
+    // (1-in-8 sampling, a production-style setting). Spans piggyback on
+    // gate logs the engine already keeps, so the soak must not slow
+    // down measurably; `trace_overhead` uses min-over-min to shed
+    // shared-runner noise and is CI-gated at <= 1.02.
+    let traced_spec =
+        soak_spec(DispatchPolicy::JoinShortestQueue, duration_ms).trace(TraceSpec::new().sample(8));
+    let r_traced = bench.run("serve/jsq-soak-traced", |_| {
+        two_tile_session().serve(&traced_spec).expect("traced serve run")
+    });
+    println!("{}", r_traced.report());
+    let trace_overhead = r_traced.min.as_secs_f64() / r_jsq.min.as_secs_f64();
+    let traced = two_tile_session().serve(&traced_spec).expect("traced serve run");
+    let trace = traced.trace.as_ref().expect("tracing was enabled");
+    println!(
+        "tracing: {trace_overhead:.4}x overhead (min/min), {} of {} requests recorded",
+        trace.recorded, trace.total_requests
+    );
+    assert!(trace.recorded > 0, "the traced soak must record spans");
+
     // Untimed runs for the gated tail-latency claims.
     let rr = run_policy(DispatchPolicy::RoundRobin, duration_ms);
     let jsq = run_policy(DispatchPolicy::JoinShortestQueue, duration_ms);
@@ -146,8 +167,11 @@ fn main() {
     report.metric("static_low_p95_ms", r_low.latency.p95_ms());
     report.metric("governor_final_mhz", r_gov.final_freq_mhz[1] as f64);
     report.metric("dropped_jsq", jsq.dropped as f64);
+    report.metric("trace_overhead", trace_overhead);
+    report.metric("trace_recorded", trace.recorded as f64);
     report.push(r_rr);
     report.push(r_jsq);
+    report.push(r_traced);
 
     let path = report.write(args.json_path()).expect("write bench report");
     println!("wrote {}", path.display());

@@ -51,6 +51,9 @@ pub const KNOWN_OPTIONS: &[(&str, &[&str])] = &[
             "retry",
             "retry-backoff-us",
             "deadline-ms",
+            "trace",
+            "trace-sample",
+            "metrics",
         ],
     ),
     (
@@ -80,6 +83,9 @@ pub const KNOWN_OPTIONS: &[(&str, &[&str])] = &[
             "health",
             "evict-after",
             "drain-deadline-ms",
+            "trace",
+            "trace-sample",
+            "metrics",
         ],
     ),
     ("table1", &["invocations"]),

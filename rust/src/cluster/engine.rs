@@ -64,6 +64,7 @@ use crate::serve::engine::{prepare_serve_tiles, resolve_tiles, tile_queues};
 use crate::serve::governor::QueueGovernor;
 use crate::serve::report::LatencyStats;
 use crate::serve::ServeSpec;
+use crate::telemetry::{HostProfile, Tracer};
 use crate::util::{Percentiles, Ps};
 
 use super::autoscale::{Autoscaler, HealthMonitor, ScaleDecision};
@@ -187,11 +188,15 @@ impl Replica {
     /// actually completed something. `scratch` is the reused
     /// completion-log buffer; `scaler` is fed per completion on the
     /// serial/narrow path (wide spans never run with an autoscaler).
+    /// `tracer` (with this slot's base track index) records exec-start /
+    /// complete span events; tracing disables wide spans, so every drain
+    /// that can see a tracer runs coordinator-side in slot order.
     fn drain_completions(
         &mut self,
         slo: Option<Ps>,
         mut scaler: Option<&mut Autoscaler>,
         scratch: &mut Vec<Ps>,
+        mut tracer: Option<(&mut Tracer, u16)>,
     ) -> crate::Result<()> {
         // O(1) skips: no outstanding request means no undrained
         // completion (every granted credit holds a queue entry until
@@ -217,10 +222,23 @@ impl Replica {
                 continue;
             }
             scratch.clear();
+            let mut starts: Vec<(Ps, u8)> = Vec::new();
             {
                 let m = session.soc_mut().try_mra_mut(tile)?;
                 if let Some(g) = &mut m.serve {
+                    if tracer.is_some() {
+                        starts.extend(g.starts.drain(..));
+                    }
                     scratch.extend(g.completions.drain(..).map(|(t, _replica)| t));
+                }
+            }
+            // Exec starts strictly precede their completions in the gate
+            // logs, so recording all pending starts first keeps each
+            // span's event order arrival -> start -> complete.
+            if let Some((tr, base)) = tracer.as_mut() {
+                for &(t_s, r) in &starts {
+                    let t_c = self.cluster_base + (t_s - self.local_base);
+                    tr.exec_start(*base + ti as u16, t_c, r);
                 }
             }
             for &t_local in scratch.iter() {
@@ -236,6 +254,9 @@ impl Replica {
                     self.rescued += 1;
                 }
                 self.latencies.push(lat as f64);
+                if let Some((tr, base)) = tracer.as_mut() {
+                    tr.complete(*base + ti as u16, t_c, lat);
+                }
                 if let Some(slo) = slo {
                     if lat <= slo {
                         self.within_slo += 1;
@@ -277,7 +298,7 @@ fn run_task(
             .as_mut()
             .expect("wide-span replicas are live")
             .run_until(local_arr);
-        rep.drain_completions(slo, None, scratch)?;
+        rep.drain_completions(slo, None, scratch, None)?;
         let session = rep.session.as_mut().expect("wide-span replicas are live");
         let ti = rep.disp.pick(session.soc(), local_arr).ok_or_else(|| {
             anyhow::anyhow!("cluster: wide-span precheck failed to guarantee queue space")
@@ -290,7 +311,7 @@ fn run_task(
         .as_mut()
         .expect("wide-span replicas are live")
         .run_until(task.local);
-    rep.drain_completions(slo, None, scratch)?;
+    rep.drain_completions(slo, None, scratch, None)?;
     Ok(())
 }
 
@@ -364,26 +385,36 @@ fn install_slot_faults(rep: &mut Replica, plan: &ResolvedPlan, slot: usize) -> c
 /// lose its in-flight requests and drop the session. Shared by
 /// injected crashes, health evictions, and drain-deadline
 /// force-retires; the caller sets the final [`SlotState`]. Returns the
-/// number of requests lost for good (not requeued).
+/// number of requests lost for good (not requeued). `tracer` (with this
+/// slot's base track index) annotates every in-flight span as crashed,
+/// then parks requeued spans so the rescue attempt rejoins them.
 fn kill_replica(
     rep: &mut Replica,
     spec: &ServeSpec,
     tc: Ps,
     retries: &mut BinaryHeap<Retry>,
     ledger: &mut FaultLedger,
+    mut tracer: Option<(&mut Tracer, u16)>,
 ) -> u64 {
     rep.active_ps += tc - rep.activated_at;
     rep.done_admitted += rep.disp.tiles.iter().map(|q| q.admitted).sum::<u64>();
     rep.done_completed += rep.disp.tiles.iter().map(|q| q.completed).sum::<u64>();
     rep.done_dropped += rep.disp.dropped;
     let mut lost = 0u64;
-    let reqs: Vec<Req> = rep
-        .disp
-        .tiles
-        .iter_mut()
-        .flat_map(|q| q.in_flight.drain(..))
-        .collect();
-    for req in reqs {
+    let mut reqs: Vec<Req> = Vec::new();
+    let mut spans: Vec<Option<u64>> = Vec::new();
+    for (ti, q) in rep.disp.tiles.iter_mut().enumerate() {
+        let n = q.in_flight.len();
+        reqs.extend(q.in_flight.drain(..));
+        if let Some((tr, base)) = tracer.as_mut() {
+            let ids = tr.crash_track(*base + ti as u16, tc);
+            debug_assert_eq!(ids.len(), n, "tracer FIFO diverged from in_flight");
+            spans.extend(ids);
+        }
+    }
+    for (i, req) in reqs.into_iter().enumerate() {
+        // `None` both without a tracer and for unsampled requests.
+        let span = spans.get(i).copied().flatten();
         let orig = req.t_arr - req.extra;
         match spec
             .retry
@@ -393,10 +424,18 @@ fn kill_replica(
             Some(at) => {
                 ledger.retried += 1;
                 retries.push(Reverse((at, orig, req.attempt + 1, true)));
+                if let Some((tr, _)) = tracer.as_mut() {
+                    // Park even unsampled spans: the parked FIFO must
+                    // mirror the retry heap entry-for-entry.
+                    tr.retry(span, tc, orig, at, req.attempt + 1, true);
+                }
             }
             None => {
                 ledger.lost += 1;
                 lost += 1;
+                if let Some((tr, _)) = tracer.as_mut() {
+                    tr.expired(span, tc);
+                }
             }
         }
     }
@@ -496,6 +535,13 @@ struct ClusterEngine<'a> {
     active_series: TimeSeries,
     /// Serial-path completion-log buffer (workers carry their own).
     scratch: Vec<Ps>,
+    /// Deterministic request tracer — all mutation happens
+    /// coordinator-side in slot order (tracing disables wide spans), so
+    /// the trace is bit-identical for every thread count.
+    tracer: Option<Tracer>,
+    /// Host-side self-profiling sink (wall-clock, non-deterministic;
+    /// never feeds back into the simulation or the report).
+    profile: Option<&'a HostProfile>,
 }
 
 impl ClusterEngine<'_> {
@@ -509,13 +555,16 @@ impl ClusterEngine<'_> {
         // arbitrary barriers, so it forces narrow mode — as does the
         // whole fault/resilience layer (crashes, retries, and health
         // checks all touch slot eligibility at coordinator barriers).
+        // Tracing also forces narrow mode: span events must be recorded
+        // coordinator-side in slot order to stay thread-invariant.
         let wide_ok = pool.is_some()
             && self.cspec.balancer == DispatchPolicy::RoundRobin
             && self.cspec.autoscale.is_none()
             && self.cspec.health.is_none()
             && self.spec.retry.is_none()
             && self.plan.comps.is_empty()
-            && self.plan.crashes.is_empty();
+            && self.plan.crashes.is_empty()
+            && self.spec.trace.is_none();
         loop {
             let slots = self.slots;
             let mut pending = 0usize;
@@ -587,7 +636,15 @@ impl ClusterEngine<'_> {
             if s.session.is_none() {
                 continue; // already standby/failed: nothing to kill
             }
-            kill_replica(&mut s, self.spec, self.tc, &mut self.retries, &mut self.ledger);
+            let ntiles = self.tiles.len();
+            kill_replica(
+                &mut s,
+                self.spec,
+                self.tc,
+                &mut self.retries,
+                &mut self.ledger,
+                self.tracer.as_mut().map(|t| (t, (si * ntiles) as u16)),
+            );
             s.state = SlotState::Failed;
         }
     }
@@ -605,11 +662,21 @@ impl ClusterEngine<'_> {
         let slots = self.slots;
         while self.retries.peek().is_some_and(|Reverse((t, _, _, _))| *t <= self.tc) {
             let Reverse((t_due, orig, attempt, readmit)) = self.retries.pop().expect("peeked");
+            // Re-pair this heap entry with its parked span (FIFO per
+            // `(orig, attempt, readmit)` — identical keys mean
+            // interchangeable requests, so pairing stays deterministic).
+            let span = match self.tracer.as_mut() {
+                Some(tr) => tr.retry_pop(orig, attempt, readmit),
+                None => None,
+            };
             if rs.expired(self.tc, orig) {
                 self.ledger.detected += 1;
                 self.ledger.lost += 1;
                 if !readmit {
                     self.spilled += 1;
+                }
+                if let Some(tr) = self.tracer.as_mut() {
+                    tr.expired(span, self.tc);
                 }
                 continue;
             }
@@ -630,16 +697,26 @@ impl ClusterEngine<'_> {
                     if !readmit {
                         self.admitted += 1;
                     }
+                    let ntiles = self.tiles.len();
+                    if let Some(tr) = self.tracer.as_mut() {
+                        tr.admit(span, self.tc, (si * ntiles + ti) as u16, attempt);
+                    }
                 }
                 None => match rs.next_retry(self.tc, orig, attempt) {
                     Some(at) => {
                         self.ledger.retried += 1;
                         self.retries.push(Reverse((at, orig, attempt + 1, readmit)));
+                        if let Some(tr) = self.tracer.as_mut() {
+                            tr.retry(span, self.tc, orig, at, attempt + 1, readmit);
+                        }
                     }
                     None => {
                         self.ledger.lost += 1;
                         if !readmit {
                             self.spilled += 1;
+                        }
+                        if let Some(tr) = self.tracer.as_mut() {
+                            tr.dropped(span, self.tc);
                         }
                     }
                 },
@@ -649,17 +726,27 @@ impl ClusterEngine<'_> {
     }
 
     /// Run one pool round over every parked task (inline when no pool
-    /// is live), then surface the first worker error.
+    /// is live), then surface the first worker error. With a profile
+    /// attached, the whole round is timed on the host clock (and inline
+    /// tasks individually) — observation only, nothing feeds back.
     fn exec_round(&mut self, pool: Option<&RoundPool>) -> crate::Result<()> {
+        let round_t0 = self.profile.map(|_| std::time::Instant::now());
         match pool {
             Some(p) => p.round(self.slots.len()),
             None => {
                 for m in self.slots {
                     let mut rep = lock(m);
                     let Some(task) = rep.task.take() else { continue };
+                    let task_t0 = self.profile.map(|_| std::time::Instant::now());
                     run_task(&mut rep, task, self.spec.slo, &mut self.scratch)?;
+                    if let (Some(p), Some(t0)) = (self.profile, task_t0) {
+                        p.add_task(t0.elapsed().as_nanos() as u64);
+                    }
                 }
             }
+        }
+        if let (Some(p), Some(t0)) = (self.profile, round_t0) {
+            p.add_round(t0.elapsed().as_nanos() as u64);
         }
         if let Some(e) = self
             .err
@@ -732,9 +819,11 @@ impl ClusterEngine<'_> {
         }
         self.exec_round(pool)?;
         self.tc = target;
-        for m in slots {
+        let ntiles = self.tiles.len();
+        for (i, m) in slots.iter().enumerate() {
             let mut s = lock(m);
-            s.drain_completions(self.spec.slo, self.scaler.as_mut(), &mut self.scratch)?;
+            let tr = self.tracer.as_mut().map(|t| (t, (i * ntiles) as u16));
+            s.drain_completions(self.spec.slo, self.scaler.as_mut(), &mut self.scratch, tr)?;
         }
         Ok(())
     }
@@ -758,12 +847,14 @@ impl ClusterEngine<'_> {
                     .drain_deadline
                     .is_some_and(|d| self.tc >= s.draining_since.saturating_add(d));
                 if overdue {
+                    let ntiles = self.tiles.len();
                     let lost = kill_replica(
                         &mut s,
                         self.spec,
                         self.tc,
                         &mut self.retries,
                         &mut self.ledger,
+                        self.tracer.as_mut().map(|t| (t, (i * ntiles) as u16)),
                     );
                     // Force-dropped requests are an explicit decision,
                     // so they count as replica drops, unlike crash
@@ -804,6 +895,12 @@ impl ClusterEngine<'_> {
         while self.next_arr < self.arrivals.len() && self.arrivals[self.next_arr] <= self.tc {
             let t_arr = self.arrivals[self.next_arr];
             self.next_arr += 1;
+            // Arrival ordinals drive trace sampling; arrivals pop in
+            // schedule order, so span ids are engine/thread-invariant.
+            let span = match self.tracer.as_mut() {
+                Some(tr) => tr.arrive(t_arr),
+                None => None,
+            };
             match pick_slot(self.cspec.balancer, slots, &mut self.rr_cursor, self.tc) {
                 Some(si) => {
                     let mut s = lock(&slots[si]);
@@ -819,6 +916,10 @@ impl ClusterEngine<'_> {
                     let tile = rep.disp.tiles[ti].tile;
                     session.soc_mut().try_mra_mut(tile)?.serve_grant(1);
                     self.admitted += 1;
+                    let ntiles = self.tiles.len();
+                    if let Some(tr) = self.tracer.as_mut() {
+                        tr.admit(span, self.tc, (si * ntiles + ti) as u16, 0);
+                    }
                 }
                 None => {
                     // With a retry policy a front-end spill backs off
@@ -830,11 +931,17 @@ impl ClusterEngine<'_> {
                         Some(at) => {
                             self.ledger.retried += 1;
                             self.retries.push(Reverse((at, t_arr, 1, false)));
+                            if let Some(tr) = self.tracer.as_mut() {
+                                tr.retry(span, self.tc, t_arr, at, 1, false);
+                            }
                         }
                         None => {
                             self.spilled += 1;
                             if self.spec.retry.is_some() {
                                 self.ledger.lost += 1;
+                            }
+                            if let Some(tr) = self.tracer.as_mut() {
+                                tr.dropped(span, self.tc);
                             }
                         }
                     }
@@ -899,12 +1006,14 @@ impl ClusterEngine<'_> {
                         if h.observe(i, backlog, completed) {
                             self.ledger.detected += 1;
                             self.ledger.evicted += 1;
+                            let ntiles = self.tiles.len();
                             kill_replica(
                                 &mut s,
                                 self.spec,
                                 tc,
                                 &mut self.retries,
                                 &mut self.ledger,
+                                self.tracer.as_mut().map(|t| (t, (i * ntiles) as u16)),
                             );
                             s.state = SlotState::Standby;
                             h.reset(i);
@@ -1018,6 +1127,19 @@ impl ClusterEngine<'_> {
 /// [`ClusterReport`]. See the [module docs](self) for the model and the
 /// parallel-execution contract.
 pub fn serve_cluster(cfg: SocConfig, cspec: &ClusterSpec) -> crate::Result<ClusterReport> {
+    serve_cluster_with_profile(cfg, cspec, None)
+}
+
+/// [`serve_cluster`] with optional host-side self-profiling: wall-clock
+/// barrier-round and per-task timings accumulate into `profile`
+/// (see [`HostProfile`]). Host-clock readings never touch the
+/// simulation, so the report stays bit-identical with or without a
+/// profile attached.
+pub fn serve_cluster_with_profile(
+    cfg: SocConfig,
+    cspec: &ClusterSpec,
+    profile: Option<&HostProfile>,
+) -> crate::Result<ClusterReport> {
     cspec.validate()?;
     let spec = &cspec.spec;
     // Resolve the fault plan once against fleet size: component windows
@@ -1102,6 +1224,18 @@ pub fn serve_cluster(cfg: SocConfig, cspec: &ClusterSpec) -> crate::Result<Clust
         (duration / 100).max(1_000_000)
     };
 
+    // One trace track per (slot, tile) pair, laid out slot-major so a
+    // slot's base track index is `slot * tiles.len()`.
+    let tracer = spec.trace.map(|ts| {
+        let mut tr = Tracer::new(ts);
+        for slot in 0..cspec.replicas {
+            for &t in &tiles {
+                tr.add_track(format!("r{slot}/tile {t}"), slot, t);
+            }
+        }
+        tr
+    });
+
     let err: Mutex<Option<anyhow::Error>> = Mutex::new(None);
     let mut eng = ClusterEngine {
         cspec,
@@ -1135,6 +1269,8 @@ pub fn serve_cluster(cfg: SocConfig, cspec: &ClusterSpec) -> crate::Result<Clust
         deadline,
         active_series: TimeSeries::new("active_replicas"),
         scratch: Vec::new(),
+        tracer,
+        profile,
     };
 
     let workers = resolve_threads(cspec.threads, cspec.replicas);
@@ -1152,6 +1288,7 @@ pub fn serve_cluster(cfg: SocConfig, cspec: &ClusterSpec) -> crate::Result<Clust
             let mut scratch = scratches[wid]
                 .lock()
                 .unwrap_or_else(std::sync::PoisonError::into_inner);
+            let task_t0 = profile.map(|_| std::time::Instant::now());
             if let Err(e) = run_task(&mut rep, task, slo, &mut scratch) {
                 let mut first = err_ref
                     .lock()
@@ -1160,6 +1297,9 @@ pub fn serve_cluster(cfg: SocConfig, cspec: &ClusterSpec) -> crate::Result<Clust
                     *first = Some(e);
                 }
             }
+            if let (Some(p), Some(t0)) = (profile, task_t0) {
+                p.add_task(t0.elapsed().as_nanos() as u64);
+            }
         };
         with_round_pool(workers, work, |pool| eng.run(Some(pool)))?;
     }
@@ -1167,7 +1307,11 @@ pub fn serve_cluster(cfg: SocConfig, cspec: &ClusterSpec) -> crate::Result<Clust
     // Requests still parked on the retry heap at the hard deadline never
     // completed: they count as lost (and as fleet spills unless they
     // were admitted once before their replica died).
-    while let Some(Reverse((_, _, _, readmit))) = eng.retries.pop() {
+    while let Some(Reverse((_, orig, attempt, readmit))) = eng.retries.pop() {
+        if let Some(tr) = eng.tracer.as_mut() {
+            let span = tr.retry_pop(orig, attempt, readmit);
+            tr.expired(span, eng.tc);
+        }
         eng.ledger.lost += 1;
         if !readmit {
             eng.spilled += 1;
@@ -1181,17 +1325,29 @@ pub fn serve_cluster(cfg: SocConfig, cspec: &ClusterSpec) -> crate::Result<Clust
         tc,
         active_series,
         mut ledger,
+        mut tracer,
         ..
     } = eng;
 
-    // Close out live replicas: ungate their tiles and count their final
-    // activation span into the cost proxy.
-    for m in &slots {
+    // Close out live replicas: drain any exec starts whose invocations
+    // never finished (the waterfall shows them cut off at run end), then
+    // ungate the tiles and count the final activation span into the
+    // cost proxy.
+    for (si, m) in slots.iter().enumerate() {
         let mut s = lock(m);
         let rep = &mut *s;
         if let Some(session) = rep.session.as_mut() {
-            for &t in &tiles {
-                session.soc_mut().try_mra_mut(t)?.serve_end();
+            let (cb, lb) = (rep.cluster_base, rep.local_base);
+            for (ti, &t) in tiles.iter().enumerate() {
+                let mra = session.soc_mut().try_mra_mut(t)?;
+                if let Some(tr) = tracer.as_mut() {
+                    if let Some(g) = &mut mra.serve {
+                        while let Some((t_s, r)) = g.starts.pop_front() {
+                            tr.exec_start((si * tiles.len() + ti) as u16, cb + (t_s - lb), r);
+                        }
+                    }
+                }
+                mra.serve_end();
             }
         }
         // A killed slot already rolled its span in `kill_replica`.
@@ -1251,7 +1407,7 @@ pub fn serve_cluster(cfg: SocConfig, cspec: &ClusterSpec) -> crate::Result<Clust
         (None, _) => 1.0,
     };
 
-    Ok(ClusterReport {
+    let report = ClusterReport {
         fleet: cspec.replicas,
         balancer: cspec.balancer,
         offered,
@@ -1274,5 +1430,12 @@ pub fn serve_cluster(cfg: SocConfig, cspec: &ClusterSpec) -> crate::Result<Clust
         autoscale_actions: scaler.map(|a| a.actions).unwrap_or_default(),
         final_active,
         faults: ledger,
-    })
+        trace: tracer.map(Tracer::finish),
+    };
+    debug_assert!(
+        report.verify_accounting().is_ok(),
+        "cluster accounting diverged: {:?}",
+        report.verify_accounting()
+    );
+    Ok(report)
 }

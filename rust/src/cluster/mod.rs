@@ -54,6 +54,6 @@ pub mod report;
 pub mod spec;
 
 pub use autoscale::{Autoscaler, HealthMonitor, ScaleDecision};
-pub use engine::serve_cluster;
+pub use engine::{serve_cluster, serve_cluster_with_profile};
 pub use report::{ClusterReport, ReplicaReport};
 pub use spec::{AutoscaleSpec, ClusterSpec};

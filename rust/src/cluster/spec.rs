@@ -176,6 +176,17 @@ impl ClusterSpec {
         self
     }
 
+    /// Record a deterministic request trace (rides on the inner
+    /// [`ServeSpec`]; see
+    /// [`TraceSpec`](crate::telemetry::TraceSpec)). The resulting
+    /// [`ClusterReport::trace`](super::ClusterReport::trace) is
+    /// bit-identical across engine modes and thread counts; tracing
+    /// forces narrow barriers, so wide-span fast paths are disabled.
+    pub fn trace(mut self, ts: crate::telemetry::TraceSpec) -> Self {
+        self.spec.trace = Some(ts);
+        self
+    }
+
     pub(crate) fn validate(&self) -> crate::Result<()> {
         anyhow::ensure!(
             (1..=64).contains(&self.replicas),

@@ -111,6 +111,21 @@
 //! under chaos with [`dse::Objective::Robust`], and see `docs/API.md`
 //! ("Fault injection & resilience") + `docs/PERF.md` (chaos bench).
 //!
+//! ## Observability
+//!
+//! [`telemetry`] makes the monitoring story a debugging surface:
+//! [`telemetry::TraceSpec`] on a serve/cluster spec records
+//! deterministic per-request spans (arrival → admission/retry → queue →
+//! exec → completion, with fault annotations) into a bounded flight
+//! recorder, exported as Chrome/Perfetto `trace_event` JSON
+//! ([`telemetry::to_perfetto`]) and rendered as an ASCII waterfall
+//! ([`report::waterfall`]); [`telemetry::MetricsRegistry`] snapshots
+//! every report counter behind stable metric names (Prometheus text +
+//! JSON); and [`telemetry::HostProfile`] exposes host-side engine
+//! self-profiling through the benches. Traces are bit-identical across
+//! engines and thread counts; `--trace/--trace-sample/--metrics` on
+//! `vespa serve`/`vespa cluster`. See `docs/API.md` ("Observability").
+//!
 //! ## The engine core
 //!
 //! Simulation runs on an activity-tracking multi-clock engine
@@ -159,6 +174,7 @@ pub mod runtime;
 pub mod scenario;
 pub mod serve;
 pub mod sim;
+pub mod telemetry;
 pub mod tiles;
 pub mod util;
 

@@ -79,6 +79,11 @@ fn usage() {
            --retry N           admission retries: N total attempts\n\
            --retry-backoff-us N  base retry backoff (default 500, doubles)\n\
            --deadline-ms N     per-request retry deadline from arrival\n\
+           --trace PATH        write a Perfetto trace of sampled requests\n\
+                               (+ ASCII span waterfall on stdout)\n\
+           --trace-sample N    trace every Nth request (default 1 = all)\n\
+           --metrics PATH      metrics snapshot: Prometheus text, or JSON\n\
+                               when PATH ends in .json\n\
          serve options:\n\
            --replicas K        replicas per accelerator tile (default 2)\n\
            --tile T            serve one tile only: a1 | a2 (default both)\n\
@@ -121,6 +126,52 @@ fn faults_arg(args: &Args) -> vespa::Result<FaultPlan> {
         Some(s) => FaultPlan::parse(s),
         None => Ok(FaultPlan::new()),
     }
+}
+
+/// `--trace PATH` (+ `--trace-sample N`) — deterministic request
+/// tracing for `serve`/`cluster`. Returns the spec to set; the caller
+/// writes the Perfetto export to PATH after the run.
+fn trace_arg(args: &Args) -> vespa::Result<Option<vespa::telemetry::TraceSpec>> {
+    if args.opt("trace").is_none() {
+        anyhow::ensure!(
+            args.opt("trace-sample").is_none(),
+            "--trace-sample needs --trace PATH"
+        );
+        return Ok(None);
+    }
+    let sample = args.opt_u64("trace-sample", 1)?;
+    anyhow::ensure!(sample >= 1, "--trace-sample must be at least 1");
+    Ok(Some(vespa::telemetry::TraceSpec::new().sample(sample)))
+}
+
+/// Write the traced spans (Perfetto JSON to `--trace PATH`) and print
+/// the span waterfall.
+fn write_trace(args: &Args, trace: Option<&vespa::telemetry::Trace>) -> vespa::Result<()> {
+    let Some(path) = args.opt("trace") else {
+        return Ok(());
+    };
+    let trace = trace.expect("report carries a trace when --trace is set");
+    std::fs::write(path, vespa::telemetry::to_perfetto(trace))
+        .map_err(|e| anyhow::anyhow!("--trace {path}: {e}"))?;
+    println!("wrote {path} (open in ui.perfetto.dev)");
+    print!("{}", vespa::report::waterfall(trace, 70, 0));
+    Ok(())
+}
+
+/// Write a metrics snapshot to `--metrics PATH`: JSON when the path
+/// ends in `.json`, Prometheus text exposition otherwise.
+fn write_metrics(args: &Args, reg: &vespa::telemetry::MetricsRegistry) -> vespa::Result<()> {
+    let Some(path) = args.opt("metrics") else {
+        return Ok(());
+    };
+    let body = if path.ends_with(".json") {
+        reg.to_json()
+    } else {
+        reg.to_prometheus()
+    };
+    std::fs::write(path, body).map_err(|e| anyhow::anyhow!("--metrics {path}: {e}"))?;
+    println!("wrote {path}");
+    Ok(())
 }
 
 /// `--retry N` (+ `--retry-backoff-us`, `--deadline-ms`) — admission
@@ -338,6 +389,9 @@ fn cmd_serve(args: &Args) -> vespa::Result<()> {
         }
         spec = spec.governor(GovernorSpec::new(gov_island, slo));
     }
+    if let Some(ts) = trace_arg(args)? {
+        spec = spec.trace(ts);
+    }
 
     let report = session.serve(&spec)?;
     println!("{}", report.render());
@@ -350,6 +404,12 @@ fn cmd_serve(args: &Args) -> vespa::Result<()> {
         std::fs::write(path, report.to_json())
             .map_err(|e| anyhow::anyhow!("--json {path}: {e}"))?;
         println!("wrote {path}");
+    }
+    write_trace(args, report.trace.as_ref())?;
+    if args.opt("metrics").is_some() {
+        let mut reg = vespa::telemetry::MetricsRegistry::from_serve(&report);
+        reg.add_soc(session.soc());
+        write_metrics(args, &reg)?;
     }
     Ok(())
 }
@@ -412,6 +472,9 @@ fn cmd_cluster(args: &Args) -> vespa::Result<()> {
     if drain_deadline_ms > 0 {
         cspec = cspec.drain_deadline(drain_deadline_ms * 1_000_000_000);
     }
+    if let Some(ts) = trace_arg(args)? {
+        cspec = cspec.trace(ts);
+    }
 
     let cfg = paper_soc((accel.as_str(), tile_replicas), (accel.as_str(), tile_replicas));
     let report = cspec.run(cfg)?;
@@ -424,6 +487,10 @@ fn cmd_cluster(args: &Args) -> vespa::Result<()> {
         std::fs::write(path, report.to_json())
             .map_err(|e| anyhow::anyhow!("--json {path}: {e}"))?;
         println!("wrote {path}");
+    }
+    write_trace(args, report.trace.as_ref())?;
+    if args.opt("metrics").is_some() {
+        write_metrics(args, &vespa::telemetry::MetricsRegistry::from_cluster(&report))?;
     }
     Ok(())
 }

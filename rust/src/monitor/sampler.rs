@@ -30,11 +30,16 @@ impl TimeSeries {
     }
 
     /// Convert a cumulative-counter series into a rate series
-    /// (delta value / delta time, per second).
+    /// (delta value / delta time, per second). Empty and single-sample
+    /// series have no deltas and convert to an empty series; pairs with
+    /// a non-increasing timestamp contribute nothing (never NaN/inf).
     pub fn to_rate(&self) -> TimeSeries {
         let mut out = TimeSeries::new(format!("{}_rate", self.name));
+        if self.samples.len() < 2 {
+            return out;
+        }
         for w in self.samples.windows(2) {
-            let dt = (w[1].t - w[0].t) as f64 / 1e12; // ps -> s
+            let dt = w[1].t.saturating_sub(w[0].t) as f64 / 1e12; // ps -> s
             if dt > 0.0 {
                 out.push(w[1].t, (w[1].value - w[0].value) / dt);
             }
@@ -42,8 +47,9 @@ impl TimeSeries {
         out
     }
 
+    /// Largest sample value (0.0 for an empty series).
     pub fn max(&self) -> f64 {
-        self.samples.iter().map(|s| s.value).fold(f64::MIN, f64::max)
+        self.samples.iter().map(|s| s.value).fold(0.0, f64::max)
     }
 
     pub fn mean(&self) -> f64 {
@@ -174,6 +180,44 @@ mod tests {
         let out = s.fire(99, &mut ctx);
         assert!(!out.did_work);
         assert_eq!(s.series("a").unwrap().samples.len(), 1);
+    }
+
+    #[test]
+    fn rate_of_empty_and_single_sample_series_is_empty() {
+        let ts = TimeSeries::new("x");
+        assert!(ts.to_rate().samples.is_empty());
+        let mut ts = TimeSeries::new("x");
+        ts.push(1_000, 42.0);
+        assert!(ts.to_rate().samples.is_empty());
+        // Duplicate/inverted timestamps contribute no sample (no NaN).
+        let mut ts = TimeSeries::new("x");
+        ts.push(1_000, 1.0);
+        ts.push(1_000, 2.0);
+        ts.push(500, 3.0);
+        let rate = ts.to_rate();
+        assert!(rate.samples.iter().all(|s| s.value.is_finite()));
+        assert!(rate.samples.is_empty());
+    }
+
+    #[test]
+    fn max_of_empty_series_is_zero() {
+        let ts = TimeSeries::new("x");
+        assert_eq!(ts.max(), 0.0);
+        let mut ts = TimeSeries::new("x");
+        ts.push(0, 3.0);
+        ts.push(10, 7.0);
+        assert_eq!(ts.max(), 7.0);
+    }
+
+    #[test]
+    fn mean_in_empty_or_inverted_window_is_zero() {
+        let ts = TimeSeries::new("x");
+        assert_eq!(ts.mean_in(0, 100), 0.0);
+        let mut ts = TimeSeries::new("x");
+        ts.push(10, 5.0);
+        assert_eq!(ts.mean_in(20, 30), 0.0, "empty window");
+        assert_eq!(ts.mean_in(30, 20), 0.0, "inverted window");
+        assert_eq!(ts.mean_in(0, 20), 5.0);
     }
 
     #[test]

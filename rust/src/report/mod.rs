@@ -4,6 +4,8 @@
 
 pub mod ascii_plot;
 pub mod table;
+pub mod waterfall;
 
 pub use ascii_plot::plot;
 pub use table::Table;
+pub use waterfall::waterfall;

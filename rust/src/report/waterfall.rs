@@ -1,0 +1,191 @@
+//! ASCII span waterfall: the slowest traced requests rendered as one
+//! timeline row each, so a terminal shows *where* tail latency went
+//! (queueing, retry backoff, or execution) without opening Perfetto.
+//!
+//! Glyph legend (also printed under the chart):
+//!
+//! | glyph | phase |
+//! |-------|-------|
+//! | `.`   | arrived, not yet admitted |
+//! | `=`   | queued on a tile |
+//! | `#`   | executing on an accelerator replica |
+//! | `~`   | retry backoff |
+//! | `X`   | in flight on a crashed replica |
+//! | `!`   | terminal drop/expiry |
+//!
+//! Deterministic: rendering only reads the [`Trace`], which is itself
+//! bit-identical across engines and thread counts.
+
+use crate::telemetry::{SpanEvent, Trace};
+use crate::util::Ps;
+
+/// Render the `k` slowest finished spans of `trace` (`k = 0` = the
+/// spec's `slowest`; unfinished spans fill in when too few finished) as
+/// an ASCII waterfall `width` columns wide. Returns a note instead of a
+/// chart when the trace holds no spans.
+pub fn waterfall(trace: &Trace, width: usize, k: usize) -> String {
+    let width = width.clamp(20, 400);
+    let mut picked: Vec<&crate::telemetry::RequestSpan> = trace.slowest(k);
+    let k = if k == 0 { trace.spec.slowest.max(1) } else { k };
+    if picked.len() < k {
+        // Not enough finished spans: pad with unfinished ones in id
+        // order (crashed/expired/still-queued requests are often
+        // exactly what the reader is hunting).
+        for s in trace.spans.iter().filter(|s| s.latency.is_none()) {
+            if picked.len() >= k {
+                break;
+            }
+            picked.push(s);
+        }
+    }
+    if picked.is_empty() {
+        return "trace: no spans retained (nothing sampled?)\n".to_string();
+    }
+
+    let t0 = picked.iter().map(|s| s.t_arr).min().unwrap_or(0);
+    let t1 = picked
+        .iter()
+        .map(|s| s.t_last())
+        .max()
+        .unwrap_or(t0)
+        .max(t0 + 1);
+    let range = (t1 - t0) as f64;
+    let cell = |t: Ps| -> usize {
+        let c = ((t.saturating_sub(t0)) as f64 / range * width as f64) as usize;
+        c.min(width - 1)
+    };
+
+    let mut out = format!(
+        "span waterfall — {} span(s), {:.3} ms window ({} of {} requests recorded)\n",
+        picked.len(),
+        range / 1e9,
+        trace.recorded,
+        trace.total_requests,
+    );
+    for span in &picked {
+        let mut row = vec![' '; width];
+        // Walk the event list as a phase machine: each interval up to
+        // the next event is filled with the current phase's glyph.
+        let mut phase = '.';
+        let mut t_prev = span.t_arr;
+        let fill = |row: &mut Vec<char>, a: Ps, b: Ps, g: char| {
+            for c in row.iter_mut().take(cell(b) + 1).skip(cell(a)) {
+                if *c == ' ' {
+                    *c = g;
+                }
+            }
+        };
+        for &(t, ev) in &span.events {
+            fill(&mut row, t_prev, t, phase);
+            t_prev = t;
+            match ev {
+                SpanEvent::Admit { .. } => phase = '=',
+                SpanEvent::ExecStart { .. } => phase = '#',
+                SpanEvent::Retry { .. } => phase = '~',
+                SpanEvent::Crashed { .. } => {
+                    row[cell(t)] = 'X';
+                    phase = '~';
+                }
+                SpanEvent::Complete { .. } => {
+                    fill(&mut row, t, t, phase);
+                }
+                SpanEvent::Dropped | SpanEvent::Expired => {
+                    row[cell(t)] = '!';
+                }
+            }
+        }
+        if span.latency.is_none() && !matches!(
+            span.events.last(),
+            Some((_, SpanEvent::Dropped | SpanEvent::Expired))
+        ) {
+            // Still live at drain: extend its last phase to the edge.
+            fill(&mut row, t_prev, t1, phase);
+        }
+        let tail = match span.latency {
+            Some(l) => format!("{:9.3} ms", l as f64 / 1e9),
+            None => "  unfinished".to_string(),
+        };
+        out.push_str(&format!(
+            "{:>8} |{}| {tail}\n",
+            format!("#{}", span.id),
+            row.iter().collect::<String>(),
+        ));
+    }
+    out.push_str(&format!(
+        "{:>8} |{:<w$}| t0 = {:.3} ms\n",
+        "",
+        "legend: .=wait ==queued #=exec ~=backoff X=crash !=lost",
+        t0 as f64 / 1e9,
+        w = width,
+    ));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::{TraceSpec, Tracer};
+
+    fn traced_happy_path() -> Trace {
+        let mut tr = Tracer::new(TraceSpec::new());
+        tr.add_track("tile 4 (acc)".into(), 0, 4);
+        let id = tr.arrive(0);
+        tr.admit(id, 0, 0, 0);
+        tr.exec_start(0, 500_000_000, 0);
+        tr.complete(0, 2_000_000_000, 2_000_000_000);
+        tr.finish()
+    }
+
+    #[test]
+    fn renders_phases_in_order() {
+        let t = traced_happy_path();
+        let s = waterfall(&t, 40, 4);
+        assert!(s.contains("#0"), "row labelled by span id:\n{s}");
+        assert!(s.contains("2.000 ms"), "latency annotated:\n{s}");
+        let row = s.lines().nth(1).unwrap();
+        let chart = &row[row.find('|').unwrap()..]; // skip the "#0" label
+        let queued = chart.find('=').expect("queued glyph");
+        let exec = chart.find('#').expect("exec glyph");
+        assert!(queued < exec, "queueing precedes exec: {row}");
+    }
+
+    #[test]
+    fn crashed_span_shows_crash_and_rescue() {
+        let mut tr = Tracer::new(TraceSpec::new());
+        tr.add_track("t0".into(), 0, 0);
+        let id = tr.arrive(0);
+        tr.admit(id, 0, 0, 0);
+        for got in tr.crash_track(0, 1_000_000_000) {
+            tr.retry(got, 1_000_000_000, 0, 2_000_000_000, 1, true);
+        }
+        let back = tr.retry_pop(0, 1, true);
+        assert_eq!(back, id);
+        tr.admit(back, 2_000_000_000, 0, 1);
+        tr.exec_start(0, 2_100_000_000, 0);
+        tr.complete(0, 3_000_000_000, 3_000_000_000);
+        let t = tr.finish();
+        let s = waterfall(&t, 60, 1);
+        assert!(s.contains('X'), "crash glyph rendered:\n{s}");
+        assert!(s.contains('~'), "backoff rendered:\n{s}");
+        assert!(s.contains("3.000 ms"), "rescued latency spans arrival:\n{s}");
+    }
+
+    #[test]
+    fn empty_trace_degrades_gracefully() {
+        let t = Tracer::new(TraceSpec::new()).finish();
+        let s = waterfall(&t, 80, 0);
+        assert!(s.contains("no spans"));
+    }
+
+    #[test]
+    fn unfinished_span_marked() {
+        let mut tr = Tracer::new(TraceSpec::new());
+        tr.add_track("t0".into(), 0, 0);
+        let id = tr.arrive(0);
+        tr.admit(id, 0, 0, 0);
+        tr.exec_start(0, 1_000_000_000, 0);
+        let t = tr.finish();
+        let s = waterfall(&t, 40, 2);
+        assert!(s.contains("unfinished"), "{s}");
+    }
+}

@@ -15,6 +15,7 @@ use crate::fault::{FaultLedger, FaultPlan, RetrySpec};
 use crate::monitor::TimeSeries;
 use crate::policy::DfsPolicy;
 use crate::scenario::Session;
+use crate::telemetry::{TraceSpec, Tracer};
 use crate::util::Ps;
 
 use super::arrival::Arrival;
@@ -56,6 +57,9 @@ pub struct ServeSpec {
     /// Per-request deadline + retry/backoff at the admission gate
     /// (`None` = legacy drop-on-full semantics, bit-identical).
     pub retry: Option<RetrySpec>,
+    /// Deterministic request tracing into a bounded flight recorder
+    /// (`None` = no tracing, zero overhead on the hot path).
+    pub trace: Option<TraceSpec>,
 }
 
 impl ServeSpec {
@@ -74,6 +78,7 @@ impl ServeSpec {
             functional: false,
             faults: FaultPlan::new(),
             retry: None,
+            trace: None,
         }
     }
 
@@ -131,6 +136,11 @@ impl ServeSpec {
         self.retry = Some(retry);
         self
     }
+
+    pub fn trace(mut self, trace: TraceSpec) -> Self {
+        self.trace = Some(trace);
+        self
+    }
 }
 
 impl Session {
@@ -176,7 +186,17 @@ pub(crate) fn prepare_serve_tiles(
         m.functional_every_invocation = spec.functional;
         m.serve_begin();
     }
-    settle_gated_tiles(session, tiles)
+    settle_gated_tiles(session, tiles)?;
+    // After the settle pass (whose trailing `serve_begin` resets the
+    // gates): with tracing on, log invocation starts so spans get their
+    // exec-start stamps. The flag rides the gate into any snapshot the
+    // cluster engine takes of this prepared session.
+    if spec.trace.is_some() {
+        for &t in tiles {
+            session.soc_mut().try_mra_mut(t)?.serve_record_starts(true);
+        }
+    }
+    Ok(())
 }
 
 /// Dispatcher state for `tiles`: one bounded queue per tile, seeded
@@ -228,6 +248,15 @@ fn serve_session(session: &mut Session, spec: &ServeSpec) -> crate::Result<Serve
         .governor
         .as_ref()
         .map(|g| QueueGovernor::new(g, tiles.clone()));
+
+    // One trace track per serving tile, indexed by dispatch slot.
+    let mut tracer = spec.trace.map(Tracer::new);
+    if let Some(tr) = &mut tracer {
+        for q in &disp.tiles {
+            let island = &session.soc().islands[q.island].name;
+            tr.add_track(format!("tile {} ({island})", q.tile), 0, q.tile);
+        }
+    }
 
     // Arrival schedule (absolute times). Closed-loop respawns are pushed
     // as completions drain.
@@ -287,6 +316,8 @@ fn serve_session(session: &mut Session, spec: &ServeSpec) -> crate::Result<Serve
     // Reused completion-log buffer — drained tiles fill it in place
     // instead of collecting a fresh Vec every barrier.
     let mut log: Vec<Ps> = Vec::new();
+    // Reused invocation-start buffer (tracing only).
+    let mut starts: Vec<(Ps, u8)> = Vec::new();
 
     loop {
         let now = session.soc().now;
@@ -317,10 +348,19 @@ fn serve_session(session: &mut Session, spec: &ServeSpec) -> crate::Result<Serve
                 continue;
             }
             log.clear();
+            starts.clear();
             {
                 let m = session.soc_mut().try_mra_mut(tile)?;
                 if let Some(g) = &mut m.serve {
+                    starts.extend(g.starts.drain(..));
                     log.extend(g.completions.drain(..).map(|(t, _replica)| t));
+                }
+            }
+            // Exec starts precede their completions in sim time, so
+            // record them first to keep span events time-ordered.
+            if let Some(tr) = &mut tracer {
+                for &(t_s, r) in &starts {
+                    tr.exec_start(slot as u16, t_s, r);
                 }
             }
             for &t_c in &log {
@@ -332,6 +372,9 @@ fn serve_session(session: &mut Session, spec: &ServeSpec) -> crate::Result<Serve
                 // latency spans the original arrival (zero fault-free).
                 let lat = t_c - req.t_arr + req.extra;
                 latencies.push(lat as f64);
+                if let Some(tr) = &mut tracer {
+                    tr.complete(slot as u16, t_c, lat);
+                }
                 if req.attempt > 0 {
                     ledger.rescued += 1;
                 }
@@ -351,6 +394,15 @@ fn serve_session(session: &mut Session, spec: &ServeSpec) -> crate::Result<Serve
         // 2) Admit due arrivals: bind to a tile and grant one credit.
         while arrivals.peek().is_some_and(|Reverse((t, _, _))| *t <= now) {
             let Reverse((t_due, t_orig, attempt)) = arrivals.pop().expect("peeked");
+            // Resolve the span handle for *every* pop (sampled or not)
+            // so tracer ordinals and parked retries stay aligned with
+            // the heap: attempt 0 is a fresh arrival, anything else
+            // recovers the span parked under the heap tuple's identity.
+            let span = match &mut tracer {
+                Some(tr) if attempt == 0 => tr.arrive(t_orig),
+                Some(tr) => tr.retry_pop(t_orig, attempt, false),
+                None => None,
+            };
             if let Some(rs) = &spec.retry {
                 if rs.expired(now, t_orig) {
                     // The per-request deadline passed while waiting for
@@ -360,6 +412,9 @@ fn serve_session(session: &mut Session, spec: &ServeSpec) -> crate::Result<Serve
                     disp.drop_one();
                     ledger.detected += 1;
                     ledger.lost += 1;
+                    if let Some(tr) = &mut tracer {
+                        tr.expired(span, now);
+                    }
                     continue;
                 }
             }
@@ -368,6 +423,9 @@ fn serve_session(session: &mut Session, spec: &ServeSpec) -> crate::Result<Serve
                 disp.bind_attempt(slot, t_due, t_due - t_orig, attempt);
                 let tile = disp.tiles[slot].tile;
                 session.soc_mut().try_mra_mut(tile)?.serve_grant(1);
+                if let Some(tr) = &mut tracer {
+                    tr.admit(span, now, slot as u16, attempt);
+                }
             } else if let Some(rs) = &spec.retry {
                 // Queue-full with a retry policy: exponential backoff
                 // instead of a final drop, while the deadline allows.
@@ -376,22 +434,36 @@ fn serve_session(session: &mut Session, spec: &ServeSpec) -> crate::Result<Serve
                         disp.undrop(); // retrying, not dropping
                         ledger.retried += 1;
                         arrivals.push(Reverse((at, t_orig, attempt + 1)));
+                        if let Some(tr) = &mut tracer {
+                            tr.retry(span, now, t_orig, at, attempt + 1, false);
+                        }
                     }
-                    None => ledger.lost += 1, // pick counted the drop
+                    None => {
+                        ledger.lost += 1; // pick counted the drop
+                        if let Some(tr) = &mut tracer {
+                            tr.dropped(span, now);
+                        }
+                    }
                 }
-            } else if let Some(think) = think {
-                // A full system drops the request (the dispatcher
-                // counted it) — but a closed-loop *client* lives on:
-                // it thinks and retries, otherwise every drop would
-                // silently shrink the client population for the rest
-                // of the run.
-                let retry = now + think;
-                if retry < horizon {
-                    arrivals.push(Reverse((retry, retry, 0)));
-                    offered += 1;
+            } else {
+                if let Some(think) = think {
+                    // A full system drops the request (the dispatcher
+                    // counted it) — but a closed-loop *client* lives on:
+                    // it thinks and retries, otherwise every drop would
+                    // silently shrink the client population for the rest
+                    // of the run.
+                    let retry = now + think;
+                    if retry < horizon {
+                        arrivals.push(Reverse((retry, retry, 0)));
+                        offered += 1;
+                    }
+                }
+                // The drop itself is final either way (the respawned
+                // closed-loop client is a *new* request).
+                if let Some(tr) = &mut tracer {
+                    tr.dropped(span, now);
                 }
             }
-            // Open loop: a drop is final; the dispatcher counted it.
         }
 
         // 3) Sample queue depths and frequencies; let the governor act.
@@ -416,15 +488,36 @@ fn serve_session(session: &mut Session, spec: &ServeSpec) -> crate::Result<Serve
     // (Without a retry policy the heap is empty here; the gate keeps the
     // legacy closed-loop accounting untouched.)
     if spec.retry.is_some() {
-        while arrivals.pop().is_some() {
+        let t_end = session.soc().now;
+        while let Some(Reverse((_, t_orig, attempt))) = arrivals.pop() {
             disp.drop_one();
             ledger.lost += 1;
+            if let Some(tr) = &mut tracer {
+                let span = if attempt == 0 {
+                    tr.arrive(t_orig)
+                } else {
+                    tr.retry_pop(t_orig, attempt, false)
+                };
+                tr.expired(span, t_end);
+            }
         }
     }
 
-    // Restore free-running mode for any later phases on this session.
-    for &t in &tiles {
-        session.soc_mut().try_mra_mut(t)?.serve_end();
+    // Drain invocation starts still queued on the gates, so unfinished
+    // spans keep their exec-start stamps, then restore free-running mode
+    // for any later phases on this session.
+    for (slot, q) in disp.tiles.iter().enumerate() {
+        if let Some(tr) = &mut tracer {
+            let m = session.soc_mut().try_mra_mut(q.tile)?;
+            if let Some(g) = &mut m.serve {
+                starts.clear();
+                starts.extend(g.starts.drain(..));
+                for &(t_s, r) in &starts {
+                    tr.exec_start(slot as u16, t_s, r);
+                }
+            }
+        }
+        session.soc_mut().try_mra_mut(q.tile)?.serve_end();
     }
 
     // Assemble the report.
@@ -457,7 +550,7 @@ fn serve_session(session: &mut Session, spec: &ServeSpec) -> crate::Result<Serve
         })
         .collect();
     let soc = session.soc();
-    Ok(ServeReport {
+    let report = ServeReport {
         policy: spec.policy,
         offered,
         admitted,
@@ -482,7 +575,14 @@ fn serve_session(session: &mut Session, spec: &ServeSpec) -> crate::Result<Serve
             .map(|d| d.freq(soc.now).as_mhz())
             .collect(),
         faults: ledger,
-    })
+        trace: tracer.map(Tracer::finish),
+    };
+    debug_assert!(
+        report.verify_accounting().is_ok(),
+        "serve accounting diverged: {:?}",
+        report.verify_accounting()
+    );
+    Ok(report)
 }
 
 /// Run the SoC forward until every gated tile's pipeline is empty, so

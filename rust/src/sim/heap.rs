@@ -26,6 +26,9 @@ pub struct UpdateableMinHeap<K> {
     entries: Vec<(K, u32)>,
     /// `pos[comp]` = index of that component's entry, or [`ABSENT`].
     pos: Vec<u32>,
+    /// Lifetime count of mutating operations (set / pop / remove) —
+    /// self-profiling only, never consulted by the engine.
+    ops: u64,
 }
 
 impl<K: Copy + Ord> UpdateableMinHeap<K> {
@@ -34,7 +37,13 @@ impl<K: Copy + Ord> UpdateableMinHeap<K> {
         Self {
             entries: Vec::with_capacity(n_comps),
             pos: vec![ABSENT; n_comps],
+            ops: 0,
         }
+    }
+
+    /// Mutating-operation count since construction (set/pop/remove).
+    pub fn ops(&self) -> u64 {
+        self.ops
     }
 
     pub fn len(&self) -> usize {
@@ -68,11 +77,13 @@ impl<K: Copy + Ord> UpdateableMinHeap<K> {
     pub fn pop(&mut self) -> Option<(K, u32)> {
         let top = *self.entries.first()?;
         self.remove_index(0);
+        self.ops += 1;
         Some(top)
     }
 
     /// Update-or-push: (re)key `comp`, inserting it if absent.
     pub fn set(&mut self, comp: u32, key: K) {
+        self.ops += 1;
         let i = self.pos[comp as usize];
         if i == ABSENT {
             self.entries.push((key, comp));
@@ -112,6 +123,7 @@ impl<K: Copy + Ord> UpdateableMinHeap<K> {
             return false;
         }
         self.remove_index(i as usize);
+        self.ops += 1;
         true
     }
 

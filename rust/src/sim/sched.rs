@@ -121,6 +121,15 @@ impl EventSched {
         }
     }
 
+    /// Total mutating heap operations across every island heap —
+    /// self-profiling counter surfaced through [`Soc::heap_ops`].
+    ///
+    /// [`Soc::heap_ops`]: super::soc::Soc::heap_ops
+    pub fn heap_ops(&self) -> u64 {
+        self.cycle.iter().map(|h| h.ops()).sum::<u64>()
+            + self.at.iter().map(|h| h.ops()).sum::<u64>()
+    }
+
     /// Component id of tile `ti`.
     pub fn tile_comp(&self, tile: usize) -> u32 {
         (self.n_routers + tile) as u32

@@ -95,6 +95,9 @@ pub struct EngineStats {
     pub tile_ticks: u64,
     /// Tile ticks skipped because the tile was asleep with no input.
     pub skipped_tile_ticks: u64,
+    /// Router ticks actually executed (event-driven engine only; the
+    /// other engines tick routers unconditionally and leave this 0).
+    pub router_ticks: u64,
 }
 
 /// The simulated SoC.
@@ -528,6 +531,13 @@ impl Soc {
         self.quiet_edge = false;
     }
 
+    /// Total mutating scheduler-heap operations so far — a self-profiling
+    /// counter (zero outside [`EngineMode::EventDriven`]); it never feeds
+    /// back into simulation behaviour.
+    pub fn heap_ops(&self) -> u64 {
+        self.sched.heap_ops()
+    }
+
     /// Process one clock edge; returns the new simulation time.
     pub fn step(&mut self) -> Ps {
         match self.engine {
@@ -784,6 +794,7 @@ impl Soc {
                 let out;
                 if (comp as usize) < sched.n_routers {
                     let r = comp as usize;
+                    engine_stats.router_ticks += 1;
                     let mut rctx = RouterCtx {
                         cycle,
                         mesh: &fabric.mesh,

@@ -1,0 +1,305 @@
+//! Metrics registry snapshot: one flat, stably-named view over the
+//! serve/cluster counters, latency distribution, fault ledger, island
+//! frequencies, and per-tile accelerator counters.
+//!
+//! Metric names are a **stability contract** (documented in
+//! `docs/API.md`): names ending in `_total` are monotonic counters over
+//! the run, everything else is a point-in-time gauge. Exports are
+//! deterministic byte-for-byte — values render through
+//! [`fmt_f64`](crate::bench_harness::json::fmt_f64) and metrics keep
+//! their registration order.
+
+use crate::bench_harness::json::{fmt_f64, fmt_str};
+use crate::sim::Soc;
+
+/// One sample: a name, optional `(key, value)` labels, and a value.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Metric {
+    pub name: &'static str,
+    pub labels: Vec<(&'static str, String)>,
+    pub value: f64,
+    /// `# HELP` line (shared by every sample of the same name).
+    pub help: &'static str,
+}
+
+/// An ordered collection of [`Metric`]s with Prometheus-text and JSON
+/// exporters.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct MetricsRegistry {
+    pub metrics: Vec<Metric>,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register one sample. Call order is export order.
+    pub fn push(
+        &mut self,
+        name: &'static str,
+        labels: Vec<(&'static str, String)>,
+        value: f64,
+        help: &'static str,
+    ) {
+        self.metrics.push(Metric {
+            name,
+            labels,
+            value,
+            help,
+        });
+    }
+
+    /// First sample with this name (and, when given, this label value).
+    pub fn get(&self, name: &str, label: Option<(&str, &str)>) -> Option<f64> {
+        self.metrics
+            .iter()
+            .find(|m| {
+                m.name == name
+                    && match label {
+                        None => true,
+                        Some((k, v)) => m.labels.iter().any(|(lk, lv)| *lk == k && lv == v),
+                    }
+            })
+            .map(|m| m.value)
+    }
+
+    /// Snapshot a single-SoC [`ServeReport`](crate::serve::ServeReport).
+    pub fn from_serve(r: &crate::serve::ServeReport) -> Self {
+        let mut reg = Self::new();
+        reg.requests(r.offered, r.admitted, r.dropped, r.completed, r.unfinished);
+        reg.push("vespa_offered_rps", vec![], r.offered_rps, "Offered request rate over the load horizon");
+        reg.push("vespa_achieved_rps", vec![], r.achieved_rps, "Completed request rate over the load horizon");
+        reg.latency(&r.latency);
+        reg.push("vespa_slo_attainment", vec![], r.slo_attainment, "Fraction of completed requests within the SLO (1 when unset)");
+        for t in &r.per_tile {
+            let l = vec![("tile", t.tile.to_string())];
+            reg.push("vespa_tile_admitted_total", l.clone(), t.admitted as f64, "Requests admitted to a serving tile's queue");
+            reg.push("vespa_tile_completed_total", l.clone(), t.completed as f64, "Requests completed by a serving tile");
+            reg.push("vespa_tile_queue_depth_max", l, t.max_depth as f64, "Peak granted-but-uncompleted depth of a serving tile");
+        }
+        for (i, &mhz) in r.final_freq_mhz.iter().enumerate() {
+            reg.push(
+                "vespa_island_freq_mhz",
+                vec![("island", i.to_string())],
+                mhz as f64,
+                "Island clock frequency when serving stopped",
+            );
+        }
+        reg.faults(&r.faults);
+        reg.trace(r.trace.as_ref());
+        reg
+    }
+
+    /// Snapshot a fleet [`ClusterReport`](crate::cluster::ClusterReport).
+    pub fn from_cluster(r: &crate::cluster::ClusterReport) -> Self {
+        let mut reg = Self::new();
+        reg.requests(r.offered, r.admitted, r.dropped, r.completed, r.unfinished);
+        reg.push("vespa_offered_rps", vec![], r.offered_rps, "Offered request rate over the load horizon");
+        reg.push("vespa_achieved_rps", vec![], r.achieved_rps, "Completed request rate over the load horizon");
+        reg.latency(&r.latency);
+        reg.push("vespa_slo_attainment", vec![], r.slo_attainment, "Fraction of completed requests within the SLO (1 when unset)");
+        reg.push("vespa_cluster_fleet_size", vec![], r.fleet as f64, "Configured fleet size (autoscale ceiling)");
+        reg.push("vespa_cluster_active_replicas", vec![], r.final_active as f64, "Replicas active when serving stopped");
+        reg.push("vespa_cluster_spilled_total", vec![], r.spilled as f64, "Requests rejected at the front-end balancer");
+        reg.push("vespa_cluster_replica_seconds", vec![], r.replica_seconds, "Cost proxy: summed active replica time");
+        for p in &r.per_replica {
+            let l = vec![("slot", p.slot.to_string())];
+            reg.push("vespa_replica_admitted_total", l.clone(), p.admitted as f64, "Requests admitted by a fleet slot across its activations");
+            reg.push("vespa_replica_completed_total", l.clone(), p.completed as f64, "Requests completed by a fleet slot across its activations");
+            reg.push("vespa_replica_dropped_total", l, p.dropped as f64, "Requests dropped by a fleet slot across its activations");
+        }
+        reg.faults(&r.faults);
+        reg.trace(r.trace.as_ref());
+        reg
+    }
+
+    /// Add per-tile accelerator counters, MEM-tile traffic, and engine
+    /// statistics from a live [`Soc`] (tiles with zero invocations are
+    /// skipped).
+    pub fn add_soc(&mut self, soc: &Soc) {
+        for (i, c) in soc.mon.tiles.iter().enumerate() {
+            if c.invocations == 0 {
+                continue;
+            }
+            let l = vec![("tile", i.to_string())];
+            self.push("vespa_accel_invocations_total", l.clone(), c.invocations as f64, "Completed accelerator invocations");
+            self.push("vespa_accel_pkts_in_total", l.clone(), c.pkts_in as f64, "NoC packets into the accelerator tile");
+            self.push("vespa_accel_pkts_out_total", l.clone(), c.pkts_out as f64, "NoC packets out of the accelerator tile");
+            self.push("vespa_accel_rtt_mean_ps", l, c.rtt_mean(), "Mean DMA read round-trip time");
+        }
+        self.push("vespa_mem_pkts_in_total", vec![], soc.mon.mem_pkts_in as f64, "NoC packets delivered to the MEM tile");
+        let es = &soc.engine_stats;
+        self.push("vespa_engine_tile_ticks_total", vec![], es.tile_ticks as f64, "Tile ticks the engine executed");
+        self.push("vespa_engine_router_ticks_total", vec![], es.router_ticks as f64, "Router ticks the engine executed");
+        self.push("vespa_engine_skipped_tile_ticks_total", vec![], es.skipped_tile_ticks as f64, "Tile ticks skipped by idle-aware gating");
+        self.push("vespa_engine_coalesced_spans_total", vec![], es.coalesced_spans as f64, "Quiescent spans the engine jumped");
+        self.push("vespa_engine_heap_ops_total", vec![], soc.heap_ops() as f64, "Event-scheduler heap operations");
+    }
+
+    fn requests(&mut self, offered: u64, admitted: u64, dropped: u64, completed: u64, unfinished: u64) {
+        self.push("vespa_requests_offered_total", vec![], offered as f64, "Requests generated by the arrival process");
+        self.push("vespa_requests_admitted_total", vec![], admitted as f64, "Requests admitted into a serving queue");
+        self.push("vespa_requests_dropped_total", vec![], dropped as f64, "Requests rejected with every candidate queue full");
+        self.push("vespa_requests_completed_total", vec![], completed as f64, "Requests completed end to end");
+        self.push("vespa_requests_unfinished", vec![], unfinished as f64, "Requests still in flight at the drain deadline");
+    }
+
+    fn latency(&mut self, l: &crate::serve::LatencyStats) {
+        const HELP: &str = "End-to-end latency of completed requests (ms)";
+        for (q, v) in [
+            ("mean", l.mean_ms()),
+            ("0.5", l.p50_ms()),
+            ("0.95", l.p95_ms()),
+            ("0.99", l.p99_ms()),
+            ("max", l.max_ms()),
+        ] {
+            self.push("vespa_latency_ms", vec![("quantile", q.to_string())], v, HELP);
+        }
+    }
+
+    fn faults(&mut self, f: &crate::fault::FaultLedger) {
+        for (name, v, help) in [
+            ("vespa_fault_injected_total", f.injected, "Fault windows + crashes the plan resolved"),
+            ("vespa_fault_detected_total", f.detected, "Faults noticed by deadline or health probe"),
+            ("vespa_fault_retried_total", f.retried, "Retry attempts scheduled"),
+            ("vespa_fault_failed_over_total", f.failed_over, "Standby replicas activated to replace failed ones"),
+            ("vespa_fault_evicted_total", f.evicted, "Replicas force-retired or evicted as wedged"),
+            ("vespa_fault_lost_total", f.lost, "Requests lost after exhausting their retry budget"),
+            ("vespa_fault_rescued_total", f.rescued, "Requests completed on a retry attempt"),
+        ] {
+            self.push(name, vec![], v as f64, help);
+        }
+    }
+
+    fn trace(&mut self, t: Option<&super::Trace>) {
+        let Some(t) = t else { return };
+        self.push("vespa_trace_requests_total", vec![], t.total_requests as f64, "Requests seen by the tracer (sampled or not)");
+        self.push("vespa_trace_recorded_total", vec![], t.recorded as f64, "Request spans recorded (passed the 1-in-N sample)");
+        self.push("vespa_trace_evicted_total", vec![], t.evicted as f64, "Finished spans evicted by the flight-recorder bound");
+    }
+
+    /// Prometheus text exposition: one `# HELP`/`# TYPE` block per
+    /// metric name (first-appearance order), `_total` names typed as
+    /// counters, everything else as gauges.
+    pub fn to_prometheus(&self) -> String {
+        let mut out = String::new();
+        let mut seen: Vec<&str> = Vec::new();
+        for m in &self.metrics {
+            if !seen.contains(&m.name) {
+                seen.push(m.name);
+                let ty = if m.name.ends_with("_total") { "counter" } else { "gauge" };
+                out.push_str(&format!("# HELP {} {}\n# TYPE {} {ty}\n", m.name, m.help, m.name));
+                for s in self.metrics.iter().filter(|s| s.name == m.name) {
+                    let labels = if s.labels.is_empty() {
+                        String::new()
+                    } else {
+                        format!(
+                            "{{{}}}",
+                            s.labels
+                                .iter()
+                                .map(|(k, v)| format!("{k}={}", fmt_str(v)))
+                                .collect::<Vec<_>>()
+                                .join(",")
+                        )
+                    };
+                    out.push_str(&format!("{}{labels} {}\n", s.name, fmt_f64(s.value)));
+                }
+            }
+        }
+        out
+    }
+
+    /// JSON snapshot, parseable by
+    /// [`json::parse`](crate::bench_harness::json::parse).
+    pub fn to_json(&self) -> String {
+        let items: Vec<String> = self
+            .metrics
+            .iter()
+            .map(|m| {
+                let labels = m
+                    .labels
+                    .iter()
+                    .map(|(k, v)| format!("{}:{}", fmt_str(k), fmt_str(v)))
+                    .collect::<Vec<_>>()
+                    .join(",");
+                format!(
+                    "{{\"name\":{},\"labels\":{{{labels}}},\"value\":{}}}",
+                    fmt_str(m.name),
+                    fmt_f64(m.value),
+                )
+            })
+            .collect();
+        format!("{{\"kind\":\"metrics\",\"metrics\":[{}]}}\n", items.join(","))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench_harness::json::{self, Json};
+
+    fn sample() -> MetricsRegistry {
+        let mut reg = MetricsRegistry::new();
+        reg.requests(100, 90, 10, 85, 5);
+        reg.push(
+            "vespa_tile_queue_depth_max",
+            vec![("tile", "4".to_string())],
+            7.0,
+            "Peak depth",
+        );
+        reg.push(
+            "vespa_tile_queue_depth_max",
+            vec![("tile", "5".to_string())],
+            3.0,
+            "Peak depth",
+        );
+        reg
+    }
+
+    #[test]
+    fn prometheus_text_shape() {
+        let text = sample().to_prometheus();
+        assert_eq!(
+            text.matches("# TYPE vespa_tile_queue_depth_max gauge").count(),
+            1,
+            "one TYPE line per name:\n{text}"
+        );
+        assert!(text.contains("# TYPE vespa_requests_offered_total counter"));
+        assert!(text.contains("vespa_requests_offered_total 100"));
+        assert!(text.contains("vespa_tile_queue_depth_max{tile=\"4\"} 7"));
+        assert!(text.contains("vespa_tile_queue_depth_max{tile=\"5\"} 3"));
+    }
+
+    #[test]
+    fn json_roundtrips() {
+        let reg = sample();
+        let v = json::parse(&reg.to_json()).unwrap();
+        assert_eq!(v.get("kind").and_then(Json::as_str), Some("metrics"));
+        let ms = v.get("metrics").and_then(Json::as_array).unwrap();
+        assert_eq!(ms.len(), reg.metrics.len());
+        let depth = ms
+            .iter()
+            .find(|m| {
+                m.get("name").and_then(Json::as_str) == Some("vespa_tile_queue_depth_max")
+            })
+            .unwrap();
+        assert_eq!(
+            depth.get("labels").unwrap().get("tile").and_then(Json::as_str),
+            Some("4")
+        );
+        assert_eq!(depth.get("value").and_then(Json::as_f64), Some(7.0));
+    }
+
+    #[test]
+    fn get_filters_by_label() {
+        let reg = sample();
+        assert_eq!(reg.get("vespa_requests_dropped_total", None), Some(10.0));
+        assert_eq!(
+            reg.get("vespa_tile_queue_depth_max", Some(("tile", "5"))),
+            Some(3.0)
+        );
+        assert_eq!(reg.get("vespa_tile_queue_depth_max", Some(("tile", "9"))), None);
+        assert_eq!(reg.get("nope", None), None);
+    }
+}

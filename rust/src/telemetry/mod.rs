@@ -1,0 +1,29 @@
+//! Observability: deterministic request tracing, metrics export, and
+//! host-side engine self-profiling.
+//!
+//! Three layers with very different determinism contracts:
+//!
+//! - [`trace`] — per-request [`RequestSpan`]s recorded by a [`Tracer`]
+//!   into a bounded flight recorder. Stamps are **simulation time**
+//!   only, so a [`Trace`] (and its [`to_perfetto`] export) is
+//!   bit-identical across [`EngineMode`](crate::sim::EngineMode)s and
+//!   `--threads {1,2,0}`. Enabled with a [`TraceSpec`] on
+//!   [`ServeSpec`](crate::serve::ServeSpec) /
+//!   [`ClusterSpec`](crate::cluster::ClusterSpec), or `--trace` on
+//!   `vespa serve` / `vespa cluster`.
+//! - [`metrics`] — a [`MetricsRegistry`] snapshot of the report
+//!   counters behind stable names (Prometheus text + JSON). Also
+//!   deterministic.
+//! - [`profile`] — [`HostProfile`]: host wall-clock engine
+//!   self-profiling. **Non-deterministic by design**, excluded from
+//!   reports, surfaced only through bench JSON.
+
+pub mod metrics;
+pub mod perfetto;
+pub mod profile;
+pub mod trace;
+
+pub use metrics::{Metric, MetricsRegistry};
+pub use perfetto::to_perfetto;
+pub use profile::HostProfile;
+pub use trace::{RequestSpan, SpanEvent, Trace, TraceSpec, Track, Tracer};

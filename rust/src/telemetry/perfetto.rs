@@ -1,0 +1,202 @@
+//! Chrome/Perfetto `trace_event` JSON export of a [`Trace`].
+//!
+//! One process (pid 0), one thread per [`Track`](super::Track) (tid =
+//! track index, named via `"M"` metadata events). Each span renders as
+//! up to three `"X"` duration slices on its serving track — `wait`
+//! (arrival/backoff until admission), `queue` (admission until exec
+//! start), `exec` (exec start until completion) — plus `"i"` instant
+//! events for retries, crashes, drops and expiries. Timestamps are
+//! microseconds (`ps / 1e6`), formatted with the deterministic
+//! [`fmt_f64`](crate::bench_harness::json::fmt_f64), with the exact
+//! picosecond stamps preserved in `args`. Load the file in
+//! <https://ui.perfetto.dev> or `chrome://tracing`.
+
+use crate::bench_harness::json::{fmt_f64, fmt_str};
+use crate::util::Ps;
+
+use super::{SpanEvent, Trace};
+
+fn us(ps: Ps) -> String {
+    fmt_f64(ps as f64 / 1e6)
+}
+
+/// One `"X"` duration slice.
+fn slice(out: &mut Vec<String>, name: &str, cat: &str, tid: u16, t0: Ps, t1: Ps, id: u64) {
+    out.push(format!(
+        "{{\"name\":{},\"cat\":{},\"ph\":\"X\",\"pid\":0,\"tid\":{},\"ts\":{},\"dur\":{},\"args\":{{\"span\":{},\"t0_ps\":{},\"t1_ps\":{}}}}}",
+        fmt_str(name),
+        fmt_str(cat),
+        tid,
+        us(t0),
+        us(t1.saturating_sub(t0)),
+        id,
+        t0,
+        t1,
+    ));
+}
+
+/// One `"i"` instant marker (thread-scoped).
+fn instant(out: &mut Vec<String>, name: &str, tid: u16, t: Ps, id: u64) {
+    out.push(format!(
+        "{{\"name\":{},\"cat\":\"mark\",\"ph\":\"i\",\"s\":\"t\",\"pid\":0,\"tid\":{},\"ts\":{},\"args\":{{\"span\":{},\"t_ps\":{}}}}}",
+        fmt_str(name),
+        tid,
+        us(t),
+        id,
+        t,
+    ));
+}
+
+/// Render `trace` as Chrome `trace_event` JSON.
+pub fn to_perfetto(trace: &Trace) -> String {
+    let mut ev: Vec<String> = Vec::new();
+    for (tid, track) in trace.tracks.iter().enumerate() {
+        ev.push(format!(
+            "{{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":0,\"tid\":{},\"args\":{{\"name\":{}}}}}",
+            tid,
+            fmt_str(&track.name),
+        ));
+        ev.push(format!(
+            "{{\"name\":\"thread_sort_index\",\"ph\":\"M\",\"pid\":0,\"tid\":{tid},\"args\":{{\"sort_index\":{tid}}}}}"
+        ));
+    }
+
+    for span in &trace.spans {
+        let id = span.id;
+        // (since, track) of the segment currently open on a track.
+        let mut queued: Option<(Ps, u16)> = None;
+        let mut exec: Option<(Ps, u16)> = None;
+        // Where the request has been waiting (arrival or last backoff).
+        let mut waiting_since = span.t_arr;
+        for &(t, e) in &span.events {
+            match e {
+                SpanEvent::Admit { track, attempt } => {
+                    if t > waiting_since {
+                        let cat = if attempt == 0 { "wait" } else { "backoff" };
+                        slice(&mut ev, &format!("req {id} {cat}"), cat, track, waiting_since, t, id);
+                    }
+                    queued = Some((t, track));
+                }
+                SpanEvent::ExecStart { track, .. } => {
+                    if let Some((t0, tid)) = queued.take() {
+                        slice(&mut ev, &format!("req {id} queue"), "queue", tid, t0, t, id);
+                    }
+                    exec = Some((t, track));
+                }
+                SpanEvent::Complete { track, .. } => {
+                    if let Some((t0, tid)) = exec.take() {
+                        slice(&mut ev, &format!("req {id} exec"), "exec", tid, t0, t, id);
+                    } else if let Some((t0, tid)) = queued.take() {
+                        // Exec start not observed (e.g. pre-trace credit):
+                        // render the whole residency as queue time.
+                        slice(&mut ev, &format!("req {id} queue"), "queue", tid, t0, t, id);
+                    }
+                    instant(&mut ev, &format!("req {id} done"), track, t, id);
+                }
+                SpanEvent::Retry { attempt, .. } => {
+                    if let Some((_, tid)) = queued.or(exec) {
+                        instant(&mut ev, &format!("req {id} retry #{attempt}"), tid, t, id);
+                    } else if let Some(track) = span.events.iter().find_map(|&(_, e)| match e {
+                        SpanEvent::Admit { track, .. } => Some(track),
+                        _ => None,
+                    }) {
+                        instant(&mut ev, &format!("req {id} retry #{attempt}"), track, t, id);
+                    } else {
+                        instant(&mut ev, &format!("req {id} retry #{attempt}"), 0, t, id);
+                    }
+                    waiting_since = t;
+                }
+                SpanEvent::Crashed { track } => {
+                    if let Some((t0, tid)) = exec.take() {
+                        slice(&mut ev, &format!("req {id} exec"), "exec", tid, t0, t, id);
+                    }
+                    if let Some((t0, tid)) = queued.take() {
+                        slice(&mut ev, &format!("req {id} queue"), "queue", tid, t0, t, id);
+                    }
+                    instant(&mut ev, &format!("req {id} crashed"), track, t, id);
+                    waiting_since = t;
+                }
+                SpanEvent::Dropped => instant(&mut ev, &format!("req {id} dropped"), 0, t, id),
+                SpanEvent::Expired => instant(&mut ev, &format!("req {id} expired"), 0, t, id),
+            }
+        }
+        // Unfinished at drain: close open segments at the last stamp so
+        // the slice is visible (zero-length if nothing happened since).
+        let t_end = span.t_last();
+        if let Some((t0, tid)) = exec {
+            slice(&mut ev, &format!("req {id} exec (unfinished)"), "exec", tid, t0, t_end, id);
+        } else if let Some((t0, tid)) = queued {
+            slice(&mut ev, &format!("req {id} queue (unfinished)"), "queue", tid, t0, t_end, id);
+        }
+    }
+
+    format!(
+        "{{\"displayTimeUnit\":\"ms\",\"otherData\":{{\"total_requests\":{},\"recorded\":{},\"evicted\":{}}},\"traceEvents\":[{}]}}\n",
+        trace.total_requests,
+        trace.recorded,
+        trace.evicted,
+        ev.join(",")
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{TraceSpec, Tracer};
+    use super::*;
+    use crate::bench_harness::json;
+
+    fn sample_trace() -> Trace {
+        let mut tr = Tracer::new(TraceSpec::new());
+        tr.add_track("tile 4 (acc)".into(), 0, 4);
+        tr.add_track("tile 5 (acc)".into(), 0, 5);
+        let a = tr.arrive(1_000_000);
+        tr.admit(a, 1_000_000, 0, 0);
+        tr.exec_start(0, 2_000_000, 0);
+        tr.complete(0, 5_000_000, 4_000_000);
+        let b = tr.arrive(1_500_000);
+        tr.retry(b, 1_500_000, 1_500_000, 3_000_000, 1, false);
+        assert_eq!(tr.retry_pop(1_500_000, 1, false), b);
+        tr.admit(b, 3_000_000, 1, 1);
+        let c = tr.arrive(2_000_000);
+        tr.admit(c, 2_000_000, 1, 0);
+        tr.finish()
+    }
+
+    #[test]
+    fn export_parses_and_names_tracks() {
+        let out = to_perfetto(&sample_trace());
+        let v = json::parse(&out).expect("valid JSON");
+        let evs = v.get("traceEvents").unwrap().as_array().unwrap();
+        // 2 metadata pairs + slices/instants.
+        assert!(evs.len() > 4, "expected events, got {}", evs.len());
+        let names: Vec<&str> = evs
+            .iter()
+            .filter(|e| e.get("ph").and_then(|p| p.as_str()) == Some("M"))
+            .filter(|e| e.get("name").and_then(|n| n.as_str()) == Some("thread_name"))
+            .map(|e| e.get("args").unwrap().get("name").unwrap().as_str().unwrap())
+            .collect();
+        assert_eq!(names, vec!["tile 4 (acc)", "tile 5 (acc)"]);
+    }
+
+    #[test]
+    fn slices_cover_queue_and_exec() {
+        let out = to_perfetto(&sample_trace());
+        let v = json::parse(&out).expect("valid JSON");
+        let evs = v.get("traceEvents").unwrap().as_array().unwrap();
+        let cat = |c: &str| {
+            evs.iter()
+                .filter(|e| e.get("cat").and_then(|x| x.as_str()) == Some(c))
+                .count()
+        };
+        assert_eq!(cat("queue"), 3, "req 0 queue + reqs 1/2 unfinished queue");
+        assert_eq!(cat("exec"), 1);
+        assert_eq!(cat("backoff"), 1, "req 1 waited out its retry backoff");
+        // Span 0 queued from 1e6 ps to 2e6 ps = ts 1.0 us, dur 1.0 us.
+        let q = evs
+            .iter()
+            .find(|e| e.get("cat").and_then(|x| x.as_str()) == Some("queue"))
+            .unwrap();
+        assert_eq!(q.get("ts").unwrap().as_f64().unwrap(), 1.0);
+        assert_eq!(q.get("dur").unwrap().as_f64().unwrap(), 1.0);
+    }
+}

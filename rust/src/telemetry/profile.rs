@@ -1,0 +1,108 @@
+//! Host-side engine self-profiling.
+//!
+//! Unlike [`Trace`](super::Trace) and the metrics registry, everything
+//! here measures the **host machine** — wall-clock nanoseconds, barrier
+//! counts, per-worker busy time — so it is explicitly non-deterministic
+//! and never appears in a report or a determinism-gated export. It is
+//! surfaced only through the `bench_harness` JSON of `grid_scale` /
+//! `cluster_scale` (see `docs/PERF.md`).
+
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+
+/// Shared accumulator for the parallel cluster engine: the coordinator
+/// adds one round per barrier, workers add their per-task busy time.
+/// Atomic so the worker closures can write without locking; `Relaxed`
+/// is enough because the totals are only read after the run joins.
+#[derive(Debug, Default)]
+pub struct HostProfile {
+    /// Execution rounds (barriers) the coordinator ran.
+    pub rounds: AtomicU64,
+    /// Coordinator wall time spent inside execution rounds (ns).
+    pub round_wall_ns: AtomicU64,
+    /// Summed per-task worker busy time (ns).
+    pub task_busy_ns: AtomicU64,
+    /// Replica tasks executed.
+    pub tasks: AtomicU64,
+}
+
+impl HostProfile {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// One execution round completed, `wall_ns` of coordinator time.
+    pub fn add_round(&self, wall_ns: u64) {
+        self.rounds.fetch_add(1, Relaxed);
+        self.round_wall_ns.fetch_add(wall_ns, Relaxed);
+    }
+
+    /// One replica task completed, `busy_ns` of worker time.
+    pub fn add_task(&self, busy_ns: u64) {
+        self.tasks.fetch_add(1, Relaxed);
+        self.task_busy_ns.fetch_add(busy_ns, Relaxed);
+    }
+
+    pub fn rounds(&self) -> u64 {
+        self.rounds.load(Relaxed)
+    }
+
+    pub fn round_wall_ns(&self) -> u64 {
+        self.round_wall_ns.load(Relaxed)
+    }
+
+    pub fn task_busy_ns(&self) -> u64 {
+        self.task_busy_ns.load(Relaxed)
+    }
+
+    pub fn tasks(&self) -> u64 {
+        self.tasks.load(Relaxed)
+    }
+
+    /// Mean wall time per barrier round (ns), 0 with no rounds.
+    pub fn mean_round_ns(&self) -> f64 {
+        let r = self.rounds();
+        if r == 0 {
+            0.0
+        } else {
+            self.round_wall_ns() as f64 / r as f64
+        }
+    }
+
+    /// Worker wait estimate: with `workers` lanes, the barrier "buys"
+    /// `rounds * workers` lane-slots of wall time; busy time fills part
+    /// of it, the rest is waiting (plus coordinator overhead). 0 when
+    /// nothing ran or the estimate would go negative.
+    pub fn est_wait_ns(&self, workers: usize) -> f64 {
+        let capacity = self.round_wall_ns() as f64 * workers as f64;
+        (capacity - self.task_busy_ns() as f64).max(0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates_rounds_and_tasks() {
+        let p = HostProfile::new();
+        p.add_round(100);
+        p.add_round(300);
+        p.add_task(50);
+        p.add_task(70);
+        p.add_task(30);
+        assert_eq!(p.rounds(), 2);
+        assert_eq!(p.round_wall_ns(), 400);
+        assert_eq!(p.tasks(), 3);
+        assert_eq!(p.task_busy_ns(), 150);
+        assert_eq!(p.mean_round_ns(), 200.0);
+        // 2 workers * 400 ns wall = 800 lane-ns; 150 busy => 650 waiting.
+        assert_eq!(p.est_wait_ns(2), 650.0);
+    }
+
+    #[test]
+    fn empty_profile_is_all_zero() {
+        let p = HostProfile::new();
+        assert_eq!(p.mean_round_ns(), 0.0);
+        assert_eq!(p.est_wait_ns(8), 0.0);
+    }
+}

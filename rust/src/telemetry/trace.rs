@@ -1,0 +1,529 @@
+//! Deterministic request spans and the bounded flight recorder.
+//!
+//! Every sampled request carries a [`RequestSpan`]: its original arrival
+//! time plus a time-ordered list of [`SpanEvent`] phase transitions
+//! (admission, accelerator exec start, completion, retries, crashes,
+//! drops). All timestamps are **simulation time** ([`Ps`]), recorded at
+//! the serve/cluster host loop's deterministic barriers — never host
+//! wall clock — so a [`Trace`] is bit-identical across
+//! [`EngineMode`](crate::sim::EngineMode)s and worker-thread counts.
+//!
+//! The [`Tracer`] is host-side bookkeeping that mirrors the dispatcher's
+//! per-tile FIFOs with span ids (`None` sentinels keep unsampled
+//! requests aligned), parks spans across retry backoffs keyed by the
+//! retry heap's own `(orig, attempt, readmit)` identity, and bounds
+//! memory with a flight-recorder ring of the most recent finished spans
+//! plus a "slowest K" set that survives eviction.
+
+use std::collections::{BTreeMap, VecDeque};
+
+use crate::util::Ps;
+
+/// Tracing configuration, carried on
+/// [`ServeSpec`](crate::serve::ServeSpec) (and through it on
+/// [`ClusterSpec`](crate::cluster::ClusterSpec)).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceSpec {
+    /// Record every `sample`-th request (1 = trace everything). Requests
+    /// that fall outside the sample still occupy sentinel slots in the
+    /// tracer's FIFOs, so sampling never perturbs attribution.
+    pub sample: u64,
+    /// Always retain the `slowest` finished spans by latency, even after
+    /// the ring evicts them.
+    pub slowest: usize,
+    /// Flight-recorder ring capacity (finished spans retained).
+    pub capacity: usize,
+}
+
+impl Default for TraceSpec {
+    fn default() -> Self {
+        Self {
+            sample: 1,
+            slowest: 8,
+            capacity: 4096,
+        }
+    }
+}
+
+impl TraceSpec {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one request in `n` (clamped to at least 1).
+    pub fn sample(mut self, n: u64) -> Self {
+        self.sample = n.max(1);
+        self
+    }
+
+    /// Always retain the `k` slowest finished spans.
+    pub fn slowest(mut self, k: usize) -> Self {
+        self.slowest = k;
+        self
+    }
+
+    /// Flight-recorder ring capacity (clamped to at least 1).
+    pub fn capacity(mut self, n: usize) -> Self {
+        self.capacity = n.max(1);
+        self
+    }
+}
+
+/// One phase transition in a request's life, stamped with sim time by
+/// the recording site.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpanEvent {
+    /// Bound into a track's queue (`attempt` 0 = first admission).
+    Admit { track: u16, attempt: u32 },
+    /// An accelerator replica consumed this request's serve credit and
+    /// began prefetching its inputs.
+    ExecStart { track: u16, replica: u8 },
+    /// Completion drained; `latency` is end-to-end from the *original*
+    /// arrival, retries included.
+    Complete { track: u16, latency: Ps },
+    /// Rejected or crashed with retry budget left; readmission due at
+    /// `due` as attempt `attempt`.
+    Retry { due: Ps, attempt: u32 },
+    /// In flight on a replica that was killed.
+    Crashed { track: u16 },
+    /// Rejected at admission with no retry budget — terminal.
+    Dropped,
+    /// Retry deadline expired (or the session drained) before
+    /// readmission — terminal.
+    Expired,
+}
+
+/// The recorded life of one request.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RequestSpan {
+    /// Arrival ordinal (0-based, in arrival order) — stable across
+    /// engines and thread counts.
+    pub id: u64,
+    /// Original arrival time (sim).
+    pub t_arr: Ps,
+    /// Phase transitions in recording order (non-decreasing time).
+    pub events: Vec<(Ps, SpanEvent)>,
+    /// End-to-end latency when the request completed.
+    pub latency: Option<Ps>,
+}
+
+impl RequestSpan {
+    /// Completion time, if the span finished successfully.
+    pub fn t_done(&self) -> Option<Ps> {
+        self.events.iter().rev().find_map(|&(t, e)| match e {
+            SpanEvent::Complete { .. } => Some(t),
+            _ => None,
+        })
+    }
+
+    /// Last recorded timestamp (== `t_arr` for an empty span).
+    pub fn t_last(&self) -> Ps {
+        self.events.last().map_or(self.t_arr, |&(t, _)| t)
+    }
+}
+
+/// One Perfetto track: a serving tile, qualified by cluster slot.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Track {
+    /// Display name (`"tile 4 (a1)"`, or `"r2/tile 4"` in a cluster).
+    pub name: String,
+    /// Cluster slot (0 for single-SoC serve).
+    pub slot: usize,
+    /// Node id of the serving tile.
+    pub tile: usize,
+}
+
+/// The exported artifact: tracks plus the retained spans, ordered by
+/// span id. Attached to [`ServeReport`](crate::serve::ServeReport) /
+/// [`ClusterReport`](crate::cluster::ClusterReport) when tracing is on.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Trace {
+    pub spec: TraceSpec,
+    pub tracks: Vec<Track>,
+    /// Retained spans, ascending by id: the ring, the slowest-K set, and
+    /// any spans still unfinished at drain.
+    pub spans: Vec<RequestSpan>,
+    /// Requests seen (sampled or not).
+    pub total_requests: u64,
+    /// Spans recorded (passed the 1-in-N sample).
+    pub recorded: u64,
+    /// Finished spans evicted by the ring bound (and not retained as
+    /// slowest).
+    pub evicted: u64,
+}
+
+impl Trace {
+    /// The `k` slowest finished spans, slowest first (ties broken by
+    /// id). `k = 0` means the spec's `slowest`.
+    pub fn slowest(&self, k: usize) -> Vec<&RequestSpan> {
+        let k = if k == 0 { self.spec.slowest } else { k };
+        let mut done: Vec<&RequestSpan> =
+            self.spans.iter().filter(|s| s.latency.is_some()).collect();
+        done.sort_by_key(|s| (std::cmp::Reverse(s.latency.unwrap_or(0)), s.id));
+        done.truncate(k);
+        done
+    }
+}
+
+/// Host-side recorder. All mutation happens at the serve/cluster host
+/// loop's deterministic points (coordinator-side only in the parallel
+/// cluster engine), so the finished [`Trace`] is engine- and
+/// thread-count-invariant.
+#[derive(Debug)]
+pub struct Tracer {
+    spec: TraceSpec,
+    tracks: Vec<Track>,
+    /// Per-track FIFO mirroring the dispatcher's `in_flight` queue.
+    /// `None` = unsampled request holding its slot.
+    fifo: Vec<VecDeque<Option<u64>>>,
+    /// Per-track index of the next queued request to start exec.
+    exec_cursor: Vec<usize>,
+    /// Live spans by id (admitted or awaiting retry).
+    live: BTreeMap<u64, RequestSpan>,
+    /// Spans parked across a retry backoff, keyed by the retry heap's
+    /// own identity. Tied keys pop FIFO — interchangeable requests, so
+    /// the pairing is deterministic.
+    parked: BTreeMap<(Ps, u32, bool), VecDeque<Option<u64>>>,
+    /// Finished spans, oldest first (bounded by `spec.capacity`).
+    ring: VecDeque<RequestSpan>,
+    /// Evicted-but-retained slowest spans, ascending `(latency, id)`.
+    slow: Vec<RequestSpan>,
+    total: u64,
+    recorded: u64,
+    evicted: u64,
+}
+
+impl Tracer {
+    pub fn new(spec: TraceSpec) -> Self {
+        Self {
+            spec,
+            tracks: Vec::new(),
+            fifo: Vec::new(),
+            exec_cursor: Vec::new(),
+            live: BTreeMap::new(),
+            parked: BTreeMap::new(),
+            ring: VecDeque::new(),
+            slow: Vec::new(),
+            total: 0,
+            recorded: 0,
+            evicted: 0,
+        }
+    }
+
+    /// Register a track; returns its index (the Perfetto `tid`).
+    pub fn add_track(&mut self, name: String, slot: usize, tile: usize) -> u16 {
+        self.tracks.push(Track { name, slot, tile });
+        self.fifo.push(VecDeque::new());
+        self.exec_cursor.push(0);
+        (self.tracks.len() - 1) as u16
+    }
+
+    /// A fresh request (attempt 0) arrived at `t_arr`. Returns its span
+    /// handle — `None` when outside the 1-in-N sample (callers must
+    /// still thread the `None` through admit/complete so FIFO slots stay
+    /// aligned).
+    pub fn arrive(&mut self, t_arr: Ps) -> Option<u64> {
+        let ordinal = self.total;
+        self.total += 1;
+        if ordinal % self.spec.sample != 0 {
+            return None;
+        }
+        self.recorded += 1;
+        self.live.insert(
+            ordinal,
+            RequestSpan {
+                id: ordinal,
+                t_arr,
+                events: Vec::new(),
+                latency: None,
+            },
+        );
+        Some(ordinal)
+    }
+
+    /// Recover the span parked for a retry popped with this identity.
+    pub fn retry_pop(&mut self, orig: Ps, attempt: u32, readmit: bool) -> Option<u64> {
+        let key = (orig, attempt, readmit);
+        let id = self.parked.get_mut(&key).and_then(VecDeque::pop_front);
+        if self.parked.get(&key).is_some_and(VecDeque::is_empty) {
+            self.parked.remove(&key);
+        }
+        id.flatten()
+    }
+
+    /// The request was bound into `track`'s queue at `t`.
+    pub fn admit(&mut self, id: Option<u64>, t: Ps, track: u16, attempt: u32) {
+        self.record(id, t, SpanEvent::Admit { track, attempt });
+        self.fifo[track as usize].push_back(id);
+    }
+
+    /// `track`'s accelerator consumed a serve credit at `t` on `replica`
+    /// — attributed FIFO to the next queued request not yet executing.
+    pub fn exec_start(&mut self, track: u16, t: Ps, replica: u8) {
+        let ti = track as usize;
+        let cur = self.exec_cursor[ti];
+        if cur < self.fifo[ti].len() {
+            let id = self.fifo[ti][cur];
+            self.exec_cursor[ti] = cur + 1;
+            self.record(id, t, SpanEvent::ExecStart { track, replica });
+        }
+    }
+
+    /// `track`'s queue head completed at `t` with end-to-end `latency`.
+    pub fn complete(&mut self, track: u16, t: Ps, latency: Ps) {
+        let ti = track as usize;
+        let id = self.fifo[ti].pop_front().flatten();
+        self.exec_cursor[ti] = self.exec_cursor[ti].saturating_sub(1);
+        self.record(id, t, SpanEvent::Complete { track, latency });
+        if let Some(id) = id {
+            if let Some(mut span) = self.live.remove(&id) {
+                span.latency = Some(latency);
+                self.retire(span);
+            }
+        }
+    }
+
+    /// A retry was scheduled at `t`, due at `due` as attempt `attempt`;
+    /// the span parks under the retry heap's `(orig, attempt, readmit)`
+    /// identity until [`Tracer::retry_pop`] recovers it.
+    pub fn retry(&mut self, id: Option<u64>, t: Ps, orig: Ps, due: Ps, attempt: u32, readmit: bool) {
+        self.record(id, t, SpanEvent::Retry { due, attempt });
+        self.parked
+            .entry((orig, attempt, readmit))
+            .or_default()
+            .push_back(id);
+    }
+
+    /// Rejected at admission with no retry budget — terminal.
+    pub fn dropped(&mut self, id: Option<u64>, t: Ps) {
+        self.finish_with(id, t, SpanEvent::Dropped);
+    }
+
+    /// Retry deadline expired (or drained unserved) — terminal.
+    pub fn expired(&mut self, id: Option<u64>, t: Ps) {
+        self.finish_with(id, t, SpanEvent::Expired);
+    }
+
+    /// A replica was killed: drain `track`'s whole queue in FIFO order,
+    /// handing each parked-or-lost decision back to the caller (which
+    /// mirrors the engine's own requeue loop). Returns the drained span
+    /// handles.
+    pub fn crash_track(&mut self, track: u16, t: Ps) -> Vec<Option<u64>> {
+        let ti = track as usize;
+        let ids: Vec<Option<u64>> = self.fifo[ti].drain(..).collect();
+        self.exec_cursor[ti] = 0;
+        for &id in &ids {
+            self.record(id, t, SpanEvent::Crashed { track });
+        }
+        ids
+    }
+
+    fn record(&mut self, id: Option<u64>, t: Ps, ev: SpanEvent) {
+        if let Some(id) = id {
+            if let Some(span) = self.live.get_mut(&id) {
+                span.events.push((t, ev));
+            }
+        }
+    }
+
+    fn finish_with(&mut self, id: Option<u64>, t: Ps, ev: SpanEvent) {
+        self.record(id, t, ev);
+        if let Some(id) = id {
+            if let Some(span) = self.live.remove(&id) {
+                self.retire(span);
+            }
+        }
+    }
+
+    /// Push a finished span into the ring, spilling the oldest into the
+    /// slowest-K retention set (or the evicted count) when full.
+    fn retire(&mut self, span: RequestSpan) {
+        self.ring.push_back(span);
+        if self.ring.len() > self.spec.capacity {
+            let old = self.ring.pop_front().expect("ring non-empty");
+            self.retain_slow(old);
+        }
+    }
+
+    fn retain_slow(&mut self, span: RequestSpan) {
+        let Some(lat) = span.latency.filter(|_| self.spec.slowest > 0) else {
+            self.evicted += 1;
+            return;
+        };
+        // Ascending (latency, Reverse-free id): index 0 is the fastest
+        // retained span, the one a slower newcomer displaces.
+        let key = |s: &RequestSpan| (s.latency.unwrap_or(0), u64::MAX - s.id);
+        let pos = self
+            .slow
+            .binary_search_by_key(&(lat, u64::MAX - span.id), key)
+            .unwrap_or_else(|p| p);
+        self.slow.insert(pos, span);
+        if self.slow.len() > self.spec.slowest {
+            self.slow.remove(0);
+            self.evicted += 1;
+        }
+    }
+
+    /// Finish recording: unfinished spans are kept as-is (no synthetic
+    /// terminal event), and everything retained is merged in id order.
+    pub fn finish(mut self) -> Trace {
+        let mut spans: Vec<RequestSpan> = Vec::with_capacity(
+            self.ring.len() + self.slow.len() + self.live.len() + self.parked.len(),
+        );
+        spans.extend(self.ring.drain(..));
+        spans.extend(self.slow.drain(..));
+        // Parked spans whose retry never fired and queue residents at
+        // drain: export them unfinished.
+        for (_, ids) in std::mem::take(&mut self.parked) {
+            for id in ids.into_iter().flatten() {
+                if let Some(span) = self.live.remove(&id) {
+                    spans.push(span);
+                }
+            }
+        }
+        spans.extend(std::mem::take(&mut self.live).into_values());
+        spans.sort_by_key(|s| s.id);
+        Trace {
+            spec: self.spec,
+            tracks: self.tracks,
+            spans,
+            total_requests: self.total,
+            recorded: self.recorded,
+            evicted: self.evicted,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn one_track() -> Tracer {
+        let mut tr = Tracer::new(TraceSpec::new());
+        tr.add_track("tile 4 (acc)".into(), 0, 4);
+        tr
+    }
+
+    #[test]
+    fn records_the_happy_path() {
+        let mut tr = one_track();
+        let id = tr.arrive(100);
+        tr.admit(id, 100, 0, 0);
+        tr.exec_start(0, 150, 1);
+        tr.complete(0, 400, 300);
+        let t = tr.finish();
+        assert_eq!(t.total_requests, 1);
+        assert_eq!(t.recorded, 1);
+        assert_eq!(t.spans.len(), 1);
+        let s = &t.spans[0];
+        assert_eq!(s.t_arr, 100);
+        assert_eq!(s.latency, Some(300));
+        assert_eq!(
+            s.events,
+            vec![
+                (100, SpanEvent::Admit { track: 0, attempt: 0 }),
+                (150, SpanEvent::ExecStart { track: 0, replica: 1 }),
+                (400, SpanEvent::Complete { track: 0, latency: 300 }),
+            ]
+        );
+    }
+
+    #[test]
+    fn sampling_keeps_fifo_slots_aligned() {
+        let mut tr = Tracer::new(TraceSpec::new().sample(2));
+        tr.add_track("t".into(), 0, 0);
+        let a = tr.arrive(10); // sampled (ordinal 0)
+        let b = tr.arrive(20); // skipped (ordinal 1)
+        assert!(a.is_some() && b.is_none());
+        // Admit in arrival order, complete in the same order: the
+        // sentinel must absorb b's completion, not a's.
+        tr.admit(a, 10, 0, 0);
+        tr.admit(b, 20, 0, 0);
+        tr.complete(0, 50, 40);
+        tr.complete(0, 60, 40);
+        let t = tr.finish();
+        assert_eq!(t.total_requests, 2);
+        assert_eq!(t.recorded, 1);
+        assert_eq!(t.spans.len(), 1);
+        assert_eq!(t.spans[0].latency, Some(40));
+        assert_eq!(t.spans[0].t_done(), Some(50));
+    }
+
+    #[test]
+    fn retry_parks_and_recovers_by_heap_identity() {
+        let mut tr = one_track();
+        let id = tr.arrive(100);
+        tr.retry(id, 100, 100, 300, 1, false);
+        assert_eq!(tr.retry_pop(100, 1, false), id);
+        tr.admit(id, 300, 0, 1);
+        tr.complete(0, 500, 400);
+        let t = tr.finish();
+        let s = &t.spans[0];
+        assert_eq!(s.t_arr, 100, "rescued span keeps its original arrival");
+        assert_eq!(s.latency, Some(400));
+        assert!(matches!(s.events[0].1, SpanEvent::Retry { due: 300, attempt: 1 }));
+    }
+
+    #[test]
+    fn tied_retry_keys_pop_fifo() {
+        let mut tr = one_track();
+        let a = tr.arrive(100);
+        let b = tr.arrive(100);
+        tr.retry(a, 100, 100, 200, 1, false);
+        tr.retry(b, 100, 100, 200, 1, false);
+        assert_eq!(tr.retry_pop(100, 1, false), a);
+        assert_eq!(tr.retry_pop(100, 1, false), b);
+        assert_eq!(tr.retry_pop(100, 1, false), None);
+    }
+
+    #[test]
+    fn crash_drains_the_track_fifo() {
+        let mut tr = one_track();
+        let a = tr.arrive(10);
+        let b = tr.arrive(20);
+        tr.admit(a, 10, 0, 0);
+        tr.admit(b, 20, 0, 0);
+        tr.exec_start(0, 15, 0);
+        let drained = tr.crash_track(0, 50);
+        assert_eq!(drained, vec![a, b]);
+        // Caller decides: a requeues, b is lost.
+        tr.retry(a, 50, 10, 90, 1, true);
+        tr.expired(b, 50);
+        assert_eq!(tr.retry_pop(10, 1, true), a);
+        tr.admit(a, 90, 0, 1);
+        tr.complete(0, 120, 110);
+        let t = tr.finish();
+        assert_eq!(t.spans.len(), 2);
+        assert_eq!(t.spans[0].latency, Some(110));
+        assert_eq!(t.spans[1].latency, None);
+        assert!(matches!(t.spans[1].events.last().unwrap().1, SpanEvent::Expired));
+    }
+
+    #[test]
+    fn ring_bounds_memory_and_retains_slowest() {
+        let mut tr = Tracer::new(TraceSpec::new().capacity(2).slowest(1));
+        tr.add_track("t".into(), 0, 0);
+        for (t_arr, lat) in [(0u64, 10u64), (1, 900), (2, 20), (3, 30), (4, 40)] {
+            let id = tr.arrive(t_arr);
+            tr.admit(id, t_arr, 0, 0);
+            tr.complete(0, t_arr + lat, lat);
+        }
+        let t = tr.finish();
+        // Ring holds the last 2 finished; span 1 (latency 900) survives
+        // eviction via the slowest-1 set; spans 0 and 2 are evicted.
+        let ids: Vec<u64> = t.spans.iter().map(|s| s.id).collect();
+        assert_eq!(ids, vec![1, 3, 4]);
+        assert_eq!(t.evicted, 2);
+        assert_eq!(t.slowest(1)[0].id, 1);
+    }
+
+    #[test]
+    fn unfinished_spans_survive_finish() {
+        let mut tr = one_track();
+        let id = tr.arrive(5);
+        tr.admit(id, 5, 0, 0);
+        let t = tr.finish();
+        assert_eq!(t.spans.len(), 1);
+        assert_eq!(t.spans[0].latency, None);
+    }
+}

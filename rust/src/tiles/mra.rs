@@ -52,6 +52,13 @@ pub struct ServeGate {
     /// Completion log: `(time, replica)` per finished credited
     /// invocation, in completion order. Drained by the host.
     pub completions: VecDeque<(Ps, u8)>,
+    /// Log `(time, replica)` into [`ServeGate::starts`] each time a
+    /// replica consumes a credit. Off by default (zero cost); enabled by
+    /// the serve engine when request tracing is on.
+    pub record_starts: bool,
+    /// Credit-consumption log (invocation starts), in consumption
+    /// order. Drained by the host tracer.
+    pub starts: VecDeque<(Ps, u8)>,
 }
 
 /// Snapshot of a replica's pipeline occupancy (debug/reporting).
@@ -251,6 +258,17 @@ impl MraTile {
     /// throughput mode.
     pub fn serve_end(&mut self) {
         self.serve = None;
+    }
+
+    /// Enable or disable invocation-start logging on the serving gate
+    /// (no-op unless serving). Disabling clears any pending entries.
+    pub fn serve_record_starts(&mut self, on: bool) {
+        if let Some(g) = &mut self.serve {
+            g.record_starts = on;
+            if !on {
+                g.starts.clear();
+            }
+        }
     }
 
     /// Grant `n` invocation credits (no-op unless serving).
@@ -515,6 +533,9 @@ impl MraTile {
                     if starting {
                         if let Some(g) = &mut self.serve {
                             g.credits -= 1;
+                            if g.record_starts {
+                                g.starts.push_back((ctx.now, r as u8));
+                            }
                         }
                     }
                     let rep = &mut self.replicas[r];

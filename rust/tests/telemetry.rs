@@ -1,0 +1,320 @@
+//! System tests for the telemetry subsystem — the ISSUE's acceptance
+//! criteria: (a) with the same seed and spec, the exported trace is
+//! **byte-identical** across all three [`EngineMode`]s and across
+//! `threads {1, 2, 0}` on the cluster path; (b) a request in flight on
+//! a crashed replica keeps one span whose rescued completion is timed
+//! from the *original* arrival; (c) `verify_accounting()` holds on
+//! real serve and cluster reports, trace counters included; (d) the
+//! metrics snapshot parses (JSON) and exposes the stable names
+//! (Prometheus text).
+
+use vespa::cluster::ClusterSpec;
+use vespa::config::SocConfig;
+use vespa::fault::{FaultPlan, HealthSpec, RetrySpec};
+use vespa::scenario::{ms, Scenario, Session};
+use vespa::serve::{Arrival, DispatchPolicy, ServeSpec};
+use vespa::sim::EngineMode;
+use vespa::telemetry::{to_perfetto, MetricsRegistry, SpanEvent, Trace, TraceSpec};
+use vespa::util::Ps;
+
+const US: Ps = 1_000_000;
+
+/// One 2-replica dfmul tile on a governable island — the same
+/// per-replica SoC as the cluster and fault suites (~4250 req/s at
+/// 50 MHz).
+fn fleet_cfg() -> SocConfig {
+    Scenario::grid(2, 2)
+        .name("telemetry-2x2")
+        .seed(0xE5B)
+        .island("noc", 100)
+        .island_dfs("acc", 50, 10..=50, 5)
+        .noc_island("noc")
+        .mem_at(0, 0)
+        .accel_at(1, 0, "dfmul", 2, "acc")
+        .io_at_on(0, 1, "noc")
+        .build()
+        .unwrap()
+}
+
+/// Node index of the accelerator tile (the fault plans' `t<N>` target).
+fn accel_tile() -> usize {
+    Session::new(fleet_cfg()).unwrap().mra_tiles()[0]
+}
+
+const ALL_ENGINES: [EngineMode; 3] = [
+    EngineMode::Reference,
+    EngineMode::IdleAware,
+    EngineMode::EventDriven,
+];
+
+// ---------------------------------------------------------------------
+// (a) Serve: byte-identical Perfetto export across engine modes, with
+//     faults and retries in the mix.
+// ---------------------------------------------------------------------
+
+#[test]
+fn serve_trace_is_byte_identical_across_engine_modes() {
+    let t = accel_tile();
+    let plan = FaultPlan::parse(&format!("hang@t{t}:at=10ms,dur=3ms")).unwrap();
+    let spec = ServeSpec::new(Arrival::Poisson { rps: 5000.0 }, ms(40))
+        .policy(DispatchPolicy::JoinShortestQueue)
+        .slo(ms(5))
+        .seed(0x7AC3)
+        .faults(plan)
+        .retry(RetrySpec::new(3, 500 * US))
+        .trace(TraceSpec::new());
+
+    let exports: Vec<String> = ALL_ENGINES
+        .iter()
+        .map(|&mode| {
+            let mut s = Session::new(fleet_cfg()).unwrap();
+            s.engine(mode);
+            let report = s.serve(&spec).unwrap();
+            report.verify_accounting().unwrap();
+            let trace = report.trace.as_ref().expect("tracing was enabled");
+            assert!(trace.recorded > 100, "{mode:?}: enough spans recorded");
+            assert_eq!(
+                trace.total_requests, report.offered,
+                "{mode:?}: every request is counted"
+            );
+            to_perfetto(trace)
+        })
+        .collect();
+    for (i, e) in exports.iter().enumerate().skip(1) {
+        assert_eq!(
+            &exports[0], e,
+            "{:?} trace diverged from {:?}",
+            ALL_ENGINES[i], ALL_ENGINES[0]
+        );
+    }
+}
+
+// ---------------------------------------------------------------------
+// (a) Cluster: byte-identical export across engines x threads {1,2,0},
+//     with a ReplicaCrash + retry in the plan — the hardest ordering
+//     case (crash rebinding crosses replica boundaries).
+// ---------------------------------------------------------------------
+
+/// A traced cluster spec with a mid-run crash of slot 0 under retry +
+/// health checks: interrupted requests are rescued onto the survivor.
+fn crashy_cluster() -> ClusterSpec {
+    let t = accel_tile();
+    let plan =
+        FaultPlan::parse(&format!("hang@t{t}@r0:at=16ms,dur=3ms;crash@r0:at=20ms")).unwrap();
+    let spec = ServeSpec::new(Arrival::Poisson { rps: 6000.0 }, ms(60))
+        .policy(DispatchPolicy::JoinShortestQueue)
+        .slo(ms(5))
+        .sample_interval(ms(2))
+        .seed(0x5AFE)
+        .faults(plan)
+        .retry(RetrySpec::new(4, 500 * US));
+    ClusterSpec::new(2, spec)
+        .balancer(DispatchPolicy::RoundRobin)
+        .health(HealthSpec::new())
+        .trace(TraceSpec::new().capacity(100_000))
+}
+
+#[test]
+fn cluster_trace_is_byte_identical_across_engines_and_threads() {
+    let cspec = crashy_cluster();
+    let mut exports: Vec<(String, String)> = Vec::new();
+    for mode in ALL_ENGINES {
+        for threads in [1usize, 2, 0] {
+            let report = cspec
+                .clone()
+                .engine(mode)
+                .threads(threads)
+                .run(fleet_cfg())
+                .unwrap_or_else(|e| panic!("{mode:?} threads={threads}: {e}"));
+            report.verify_accounting().unwrap();
+            assert!(report.faults.rescued > 0, "{mode:?}: crash rescued work");
+            let trace = report.trace.as_ref().expect("tracing was enabled");
+            assert!(trace.recorded > 100, "{mode:?}: enough spans recorded");
+            exports.push((format!("{mode:?}/threads={threads}"), to_perfetto(trace)));
+        }
+    }
+    let (base_name, base) = &exports[0];
+    for (name, e) in &exports[1..] {
+        assert_eq!(base, e, "{name} trace diverged from {base_name}");
+    }
+}
+
+// ---------------------------------------------------------------------
+// (b) The rescued span: crash -> retry -> readmit -> complete, all in
+//     ONE span whose latency covers the original arrival.
+// ---------------------------------------------------------------------
+
+#[test]
+fn crashed_request_keeps_one_span_covering_original_arrival() {
+    let report = crashy_cluster().run(fleet_cfg()).unwrap();
+    let trace = report.trace.as_ref().unwrap();
+    let crashed: Vec<_> = trace
+        .spans
+        .iter()
+        .filter(|s| {
+            s.events
+                .iter()
+                .any(|(_, e)| matches!(e, SpanEvent::Crashed { .. }))
+        })
+        .collect();
+    assert!(!crashed.is_empty(), "the crash caught requests in flight");
+
+    let rescued: Vec<_> = crashed
+        .iter()
+        .filter(|s| s.latency.is_some())
+        .copied()
+        .collect();
+    assert!(!rescued.is_empty(), "some crashed spans completed via retry");
+    for s in &rescued {
+        // The span is one life: admitted, crashed, parked for retry,
+        // readmitted (attempt > 0), and completed — in that order.
+        let t_crash = s
+            .events
+            .iter()
+            .find(|(_, e)| matches!(e, SpanEvent::Crashed { .. }))
+            .map(|&(t, _)| t)
+            .unwrap();
+        assert!(
+            s.events.iter().any(|(t, e)| {
+                *t >= t_crash && matches!(e, SpanEvent::Admit { attempt, .. } if *attempt > 0)
+            }),
+            "span {} readmitted after the crash: {:?}",
+            s.id,
+            s.events
+        );
+        let (t_done, lat) = s
+            .events
+            .iter()
+            .find_map(|&(t, e)| match e {
+                SpanEvent::Complete { latency, .. } => Some((t, latency)),
+                _ => None,
+            })
+            .unwrap();
+        assert_eq!(
+            lat,
+            t_done - s.t_arr,
+            "span {}: rescued latency is timed from the original arrival",
+            s.id
+        );
+        assert!(t_done > t_crash, "completion follows the crash");
+    }
+}
+
+// ---------------------------------------------------------------------
+// Sampling: 1-in-N records ~total/N spans and never perturbs the
+// simulation itself (the report minus the trace is unchanged).
+// ---------------------------------------------------------------------
+
+#[test]
+fn sampling_thins_the_trace_without_perturbing_the_run() {
+    let spec = ServeSpec::new(Arrival::Poisson { rps: 4000.0 }, ms(40))
+        .policy(DispatchPolicy::JoinShortestQueue)
+        .slo(ms(5))
+        .seed(0x5A3D);
+    let run = |ts: Option<TraceSpec>| {
+        let mut s = Session::new(fleet_cfg()).unwrap();
+        let spec = match ts {
+            Some(ts) => spec.clone().trace(ts),
+            None => spec.clone(),
+        };
+        s.serve(&spec).unwrap()
+    };
+    let untraced = run(None);
+    let full = run(Some(TraceSpec::new()));
+    let sampled = run(Some(TraceSpec::new().sample(10)));
+
+    let t_full = full.trace.as_ref().unwrap();
+    let t_thin = sampled.trace.as_ref().unwrap();
+    assert_eq!(t_full.recorded, t_full.total_requests);
+    assert_eq!(t_thin.total_requests, t_full.total_requests);
+    assert_eq!(t_thin.recorded, t_full.total_requests.div_ceil(10));
+
+    // Tracing observes; it must not steer. Strip the trace and the
+    // reports are bit-identical to the untraced run.
+    let strip = |mut r: vespa::serve::ServeReport| {
+        r.trace = None;
+        r
+    };
+    assert_eq!(strip(full), untraced, "full tracing perturbed the run");
+    assert_eq!(strip(sampled), untraced, "sampling perturbed the run");
+}
+
+// ---------------------------------------------------------------------
+// (d) Metrics: the JSON snapshot parses with the repo's own reader and
+//     matches the report; the Prometheus text carries the stable names.
+// ---------------------------------------------------------------------
+
+#[test]
+fn metrics_snapshot_parses_and_matches_the_report() {
+    let spec = ServeSpec::new(Arrival::Poisson { rps: 5000.0 }, ms(30))
+        .policy(DispatchPolicy::JoinShortestQueue)
+        .slo(ms(5))
+        .seed(0x3E7)
+        .trace(TraceSpec::new());
+    let mut session = Session::new(fleet_cfg()).unwrap();
+    let report = session.serve(&spec).unwrap();
+    let mut reg = MetricsRegistry::from_serve(&report);
+    reg.add_soc(session.soc());
+
+    let json = vespa::bench_harness::json::parse(&reg.to_json()).unwrap();
+    let metrics = json.get("metrics").and_then(|m| m.as_array()).unwrap();
+    assert!(!metrics.is_empty());
+    let find = |name: &str| {
+        metrics
+            .iter()
+            .find(|m| m.get("name").and_then(|n| n.as_str()) == Some(name))
+            .unwrap_or_else(|| panic!("{name} missing from the JSON snapshot"))
+    };
+    assert_eq!(
+        find("vespa_requests_completed_total")
+            .get("value")
+            .and_then(|v| v.as_f64()),
+        Some(report.completed as f64)
+    );
+    assert_eq!(
+        find("vespa_trace_requests_total")
+            .get("value")
+            .and_then(|v| v.as_f64()),
+        Some(report.offered as f64)
+    );
+
+    let text = reg.to_prometheus();
+    for name in [
+        "vespa_requests_offered_total",
+        "vespa_requests_completed_total",
+        "vespa_latency_ms",
+        "vespa_tile_queue_depth_max",
+        "vespa_engine_tile_ticks_total",
+        "vespa_trace_recorded_total",
+    ] {
+        assert!(text.contains(name), "{name} missing from Prometheus text");
+    }
+    assert!(
+        text.contains("# TYPE vespa_requests_offered_total counter"),
+        "_total names are typed as counters"
+    );
+}
+
+// ---------------------------------------------------------------------
+// The CLI's export path end to end: a traced cluster run renders a
+// waterfall and a valid Perfetto document.
+// ---------------------------------------------------------------------
+
+#[test]
+fn perfetto_export_and_waterfall_render_from_a_real_run() {
+    let report = crashy_cluster().run(fleet_cfg()).unwrap();
+    let trace: &Trace = report.trace.as_ref().unwrap();
+
+    let doc = vespa::bench_harness::json::parse(&to_perfetto(trace)).unwrap();
+    let events = doc.get("traceEvents").and_then(|e| e.as_array()).unwrap();
+    assert!(events.len() > 100, "one event per span transition");
+
+    let chart = vespa::report::waterfall(trace, 70, 0);
+    assert!(chart.contains("span waterfall"), "{chart}");
+    assert!(chart.contains("ms"), "{chart}");
+
+    let metrics = MetricsRegistry::from_cluster(&report);
+    assert!(metrics
+        .to_prometheus()
+        .contains("vespa_cluster_fleet_size"));
+}
